@@ -1,0 +1,8 @@
+"""Repo-root pytest config: make `python/` importable so
+`pytest python/tests/` works from the repository root as well as from
+inside `python/` (the Makefile's working directory)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

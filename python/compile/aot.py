@@ -1,0 +1,110 @@
+"""AOT-lower the L2 programs to HLO text artifacts for the rust runtime.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the XLA
+behind the published `xla` 0.1.6 crate) rejects (`proto.id() <= INT_MAX`).
+The text parser reassigns ids, so text round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+
+Writes one ``<program>_<shape>.hlo.txt`` per entry in SHAPES plus a
+``manifest.json`` the rust artifact registry (rust/src/runtime/registry.rs)
+reads at startup.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the rust
+    side unwraps a single tuple result)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+# ---------------------------------------------------------------------------
+# Shape set (DESIGN.md §5): a small test set exercised by the rust
+# integration tests, plus the end-to-end example / bench shapes.
+# products is also compiled at width l (= k + ρ) because RRF power
+# iterations reuse it for X·Q with Q ∈ R^{m×l}.
+# ---------------------------------------------------------------------------
+
+PRODUCTS = [(64, 8), (64, 24), (1024, 7), (1024, 21)]
+LAI_PRODUCTS = [(64, 24, 8), (1024, 21, 7)]
+HALS_SWEEP = [(64, 8), (1024, 7)]
+
+
+def build_entries():
+    entries = []
+    for m, k in PRODUCTS:
+        entries.append(dict(
+            program="products", name=f"products_m{m}_k{k}",
+            fn=model.products, args=[spec(m, m), spec(m, k)],
+            dims=dict(m=m, k=k),
+            inputs=[[m, m], [m, k]], outputs=[[m, k], [k, k]],
+        ))
+    for m, l, k in LAI_PRODUCTS:
+        entries.append(dict(
+            program="lai_products", name=f"lai_products_m{m}_l{l}_k{k}",
+            fn=model.lai_products, args=[spec(m, l), spec(m, l), spec(m, k)],
+            dims=dict(m=m, l=l, k=k),
+            inputs=[[m, l], [m, l], [m, k]], outputs=[[m, k], [k, k]],
+        ))
+    for m, k in HALS_SWEEP:
+        entries.append(dict(
+            program="hals_sweep", name=f"hals_sweep_m{m}_k{k}",
+            fn=model.hals_sweep,
+            args=[spec(m, k), spec(k, k), spec(m, k), spec(m, k), spec()],
+            dims=dict(m=m, k=k),
+            inputs=[[m, k], [k, k], [m, k], [m, k], []], outputs=[[m, k]],
+        ))
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for e in build_entries():
+        lowered = jax.jit(e["fn"]).lower(*e["args"])
+        text = to_hlo_text(lowered)
+        fname = e["name"] + ".hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(dict(
+            program=e["program"], file=fname, dims=e["dims"],
+            inputs=e["inputs"], outputs=e["outputs"], dtype="f32",
+        ))
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump({"version": 1, "artifacts": manifest}, f, indent=1)
+    print(f"wrote manifest with {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""L1 Pallas kernels: tiled dense matmul and Gram product.
+
+These are the compute hot spots of every SymNMF iteration (paper §4.1.1):
+the products X·F (m×m · m×k) and FᵀF (k×k) dominate the per-iteration cost
+of ANLS/HALS/PGNCG and of the RRF power iterations.
+
+TPU-style structure (DESIGN.md §Hardware-Adaptation):
+  * the (M, K) output is produced one (bm, K) VMEM block at a time,
+  * the contraction dimension is streamed HBM→VMEM in bk-sized slabs via
+    BlockSpec index maps (the grid's minor-most axis), and
+  * partial sums accumulate in the output block across grid steps — the
+    classic "revisiting output tile" Pallas accumulation pattern that maps
+    onto the MXU systolic array when compiled for real TPU.
+
+On this image the kernels MUST run with interpret=True: CPU PJRT cannot
+execute Mosaic custom-calls.  interpret=True lowers the same schedule to
+plain HLO (while-loops + dynamic slices), which the rust PJRT client runs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tile(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is ≤ cap (tile sizes must divide the
+    dimension exactly; no padding logic is needed for our shape set)."""
+    if n <= cap:
+        return n
+    for t in range(cap, 0, -1):
+        if n % t == 0:
+            return t
+    return 1
+
+
+def _matmul_kernel(x_ref, f_ref, o_ref):
+    """One grid step: o[i, :] += x[i, s] @ f[s, :].
+
+    Grid is (M/bm, N/bn, K/bk) with the contraction axis minor-most, so the
+    output block is revisited K/bk times; zero it on the first visit.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], f_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x: jax.Array, f: jax.Array, *, bm: int = 0, bn: int = 0, bk: int = 0):
+    """Tiled Pallas matmul ``x @ f`` with x: (M, K), f: (K, N).
+
+    Tile sizes default to the largest divisors ≤ (64, 128, 64) — multiples
+    of the (8, 128) TPU register tile whenever the shape allows it.
+    """
+    m, kc = x.shape
+    kc2, n = f.shape
+    assert kc == kc2, f"contraction mismatch {x.shape} @ {f.shape}"
+    bm = bm or _tile(m, 64)
+    bn = bn or _tile(n, 128)
+    bk = bk or _tile(kc, 64)
+    grid = (m // bm, n // bn, kc // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, f)
+
+
+def _gram_kernel(f_ref, o_ref):
+    """One grid step: o += f[s, :]ᵀ @ f[s, :] (SYRK-style accumulation)."""
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    blk = f_ref[...]
+    o_ref[...] += jnp.dot(blk.T, blk, preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def gram(f: jax.Array, *, bm: int = 0):
+    """Pallas Gram product ``fᵀ @ f`` with f: (M, K) → (K, K).
+
+    The M axis is streamed through VMEM in bm-row slabs; the (K, K) output
+    block lives in VMEM for the whole pass (K ≤ 128 in all our workloads).
+    """
+    m, k = f.shape
+    bm = bm or _tile(m, 128)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, k), lambda s: (s, 0))],
+        out_specs=pl.BlockSpec((k, k), lambda s: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, k), f.dtype),
+        interpret=True,
+    )(f)

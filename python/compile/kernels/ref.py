@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness reference.
+
+Every kernel in this package must match its oracle to float32 tolerance
+across the hypothesis shape sweep in ``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x: jax.Array, f: jax.Array) -> jax.Array:
+    """Reference for kernels.matmul: plain x @ f."""
+    return jnp.dot(x, f, preferred_element_type=x.dtype)
+
+
+def gram(f: jax.Array) -> jax.Array:
+    """Reference for kernels.gram: fᵀ @ f."""
+    return jnp.dot(f.T, f, preferred_element_type=f.dtype)
+
+
+def products(x: jax.Array, f: jax.Array):
+    """Reference for model.products."""
+    return matmul(x, f), gram(f)
+
+
+def lai_products(u: jax.Array, v: jax.Array, f: jax.Array):
+    """Reference for model.lai_products: (U(VᵀF), FᵀF)."""
+    return jnp.dot(u, jnp.dot(v.T, f)), gram(f)
+
+
+def hals_sweep(xh: jax.Array, g: jax.Array, w: jax.Array, h: jax.Array,
+               alpha: jax.Array) -> jax.Array:
+    """Reference for model.hals_sweep — literal sequential loop over columns
+    of the regularized symmetric HALS update (paper Eq. 2.6):
+
+        w_i ← [ ((XH)_i − W·G_i + α h_i) / (G_ii + α)
+                + (G_ii / (G_ii + α)) w_i ]_+
+    """
+    k = w.shape[1]
+    w = jnp.asarray(w)
+    for i in range(k):
+        denom = g[i, i] + alpha
+        numer = xh[:, i] - w @ g[:, i] + alpha * h[:, i]
+        wi = numer / denom + (g[i, i] / denom) * w[:, i]
+        w = w.at[:, i].set(jnp.maximum(wi, 0.0))
+    return w

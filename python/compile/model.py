@@ -1,0 +1,72 @@
+"""L2: the JAX compute graphs AOT-compiled for the rust coordinator.
+
+Three programs (DESIGN.md §5), each calling the L1 Pallas kernels so that
+the kernels lower into the same HLO module:
+
+  products(x, f)          → (X·F, FᵀF)        — one half-iteration of
+                             ANLS/HALS/PGNCG, and one RRF power step.
+  lai_products(u, v, f)   → (U·(Vᵀ·F), FᵀF)   — one half-iteration of
+                             LAI-SymNMF against the factored input UVᵀ≈X.
+  hals_sweep(xh,g,w,h,α)  → W′                 — a full fused column sweep
+                             of the regularized symmetric HALS update
+                             (paper Eq. 2.6) via lax.fori_loop.
+
+Python runs only at build time (`make artifacts`); the rust runtime loads
+the lowered HLO text and executes it through PJRT.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import matmul as kmatmul
+
+
+def products(x: jax.Array, f: jax.Array):
+    """(X·F, FᵀF) with both products computed by Pallas kernels.
+
+    X is the (m, m) symmetric data matrix, F an (m, k) factor (H or W, or
+    an (m, l) sketch block during RRF power iterations).
+    """
+    xf = kmatmul.matmul(x, f)
+    g = kmatmul.gram(f)
+    return xf, g
+
+
+def lai_products(u: jax.Array, v: jax.Array, f: jax.Array):
+    """(U·(Vᵀ·F), FᵀF) — the LAI replacement for X·F (paper Alg. LAI-SymNMF
+    lines 7/10): with X ≈ U·Vᵀ (V = UΛ from Apx-EVD), X·F ≈ U(VᵀF) costs
+    O(mlk) instead of O(m²k)."""
+    vtf = kmatmul.matmul(v.transpose(), f)   # (l, k) — small
+    uvtf = kmatmul.matmul(u, vtf)            # (m, k)
+    g = kmatmul.gram(f)
+    return uvtf, g
+
+
+def hals_sweep(xh: jax.Array, g: jax.Array, w: jax.Array, h: jax.Array,
+               alpha: jax.Array):
+    """One full sweep of the modified regularized HALS update (Eq. 2.6):
+
+        w_i ← [ ((XH)_i − W·G_i + α h_i)/(G_ii + α) + (G_ii/(G_ii+α)) w_i ]_+
+
+    sequentially over i = 1..k (columns updated in place — later columns see
+    earlier updates through W·G_i).  XH and G = HᵀH are computed once by
+    `products`; this sweep is O(mk²) and fuses the whole inner loop into a
+    single XLA while-loop so the rust hot path makes one PJRT call per sweep.
+    """
+    k = w.shape[1]
+
+    def body(i, w):
+        gcol = lax.dynamic_slice_in_dim(g, i, 1, axis=1)[:, 0]       # (k,)
+        gii = gcol[i]
+        denom = gii + alpha
+        xh_i = lax.dynamic_slice_in_dim(xh, i, 1, axis=1)[:, 0]      # (m,)
+        h_i = lax.dynamic_slice_in_dim(h, i, 1, axis=1)[:, 0]
+        w_i = lax.dynamic_slice_in_dim(w, i, 1, axis=1)[:, 0]
+        numer = xh_i - w @ gcol + alpha * h_i
+        wi_new = jnp.maximum(numer / denom + (gii / denom) * w_i, 0.0)
+        return lax.dynamic_update_slice_in_dim(w, wi_new[:, None], i, axis=1)
+
+    return lax.fori_loop(0, k, body, w)

@@ -1,0 +1,78 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes (including tile-unfriendly odd/prime sizes, which
+exercise the divisor-based tile picker) and both float dtypes the kernels
+support. These tests are the CORE correctness signal for the compute layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as K
+from compile.kernels import ref
+
+DIMS = st.integers(min_value=1, max_value=40)
+
+
+def rand(rng, *shape, dtype=jnp.float32):
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, f = rand(rng, m, k), rand(rng, k, n)
+    got = K.matmul(x, f)
+    want = ref.matmul(x, f)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_gram_matches_ref(m, k, seed):
+    rng = np.random.default_rng(seed)
+    f = rand(rng, m, k)
+    got = K.gram(f)
+    want = ref.gram(f)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_matmul_dtypes(dtype):
+    if dtype == jnp.float64 and not jax.config.read("jax_enable_x64"):
+        pytest.skip("x64 disabled")
+    rng = np.random.default_rng(0)
+    x, f = rand(rng, 16, 12, dtype=dtype), rand(rng, 12, 5, dtype=dtype)
+    np.testing.assert_allclose(K.matmul(x, f), ref.matmul(x, f),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gram_is_symmetric_psd():
+    rng = np.random.default_rng(1)
+    f = rand(rng, 33, 7)
+    g = np.asarray(K.gram(f))
+    np.testing.assert_allclose(g, g.T, atol=1e-6)
+    eigs = np.linalg.eigvalsh(g)
+    assert (eigs > -1e-4).all()
+
+
+def test_matmul_explicit_tiles():
+    """Explicit tile sizes must not change the result (different grid)."""
+    rng = np.random.default_rng(2)
+    x, f = rand(rng, 64, 64), rand(rng, 64, 8)
+    base = np.asarray(K.matmul(x, f))
+    for bm, bk in [(8, 8), (16, 64), (64, 16), (32, 32)]:
+        got = np.asarray(K.matmul(x, f, bm=bm, bk=bk))
+        np.testing.assert_allclose(got, base, rtol=1e-5, atol=1e-5)
+
+
+def test_tile_picker():
+    assert K._tile(64, 64) == 64
+    assert K._tile(1024, 64) == 64
+    assert K._tile(7, 64) == 7
+    assert K._tile(97, 64) == 1          # prime > cap
+    assert K._tile(96, 64) == 48

@@ -1,0 +1,83 @@
+"""L2 correctness: model programs vs oracles, shape contracts, and the
+mathematical invariants the rust coordinator relies on."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+DIM = st.integers(min_value=2, max_value=24)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=DIM, k=DIM, seed=st.integers(0, 2**31 - 1))
+def test_products(m, k, seed):
+    rng = np.random.default_rng(seed)
+    x, f = rand(rng, m, m), rand(rng, m, k)
+    xf, g = model.products(x, f)
+    rxf, rg = ref.products(x, f)
+    np.testing.assert_allclose(xf, rxf, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(g, rg, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=DIM, l=DIM, k=DIM, seed=st.integers(0, 2**31 - 1))
+def test_lai_products(m, l, k, seed):
+    rng = np.random.default_rng(seed)
+    u, v, f = rand(rng, m, l), rand(rng, m, l), rand(rng, m, k)
+    y, g = model.lai_products(u, v, f)
+    ry, rg = ref.lai_products(u, v, f)
+    np.testing.assert_allclose(y, ry, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(g, rg, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=DIM, k=st.integers(2, 10), seed=st.integers(0, 2**31 - 1))
+def test_hals_sweep_matches_sequential_ref(m, k, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, m, m)
+    x = (x + x.T) / 2
+    h = jnp.abs(rand(rng, m, k))
+    w = jnp.abs(rand(rng, m, k))
+    alpha = jnp.float32(1.5)
+    xh, g = ref.products(x, h)
+    got = model.hals_sweep(xh, g, w, h, alpha)
+    want = ref.hals_sweep(xh, g, w, h, alpha)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_hals_sweep_nonnegative_output():
+    rng = np.random.default_rng(3)
+    m, k = 20, 5
+    x = rand(rng, m, m)
+    h = jnp.abs(rand(rng, m, k))
+    w = jnp.abs(rand(rng, m, k))
+    xh, g = ref.products(x, h)
+    out = np.asarray(model.hals_sweep(xh, g, w, h, jnp.float32(0.5)))
+    assert (out >= 0).all()
+
+
+def test_hals_sweep_decreases_regularized_objective():
+    """A full W-sweep must not increase ‖X − WHᵀ‖² + α‖W − H‖² (HALS is
+    exact coordinate minimization per column)."""
+    rng = np.random.default_rng(7)
+    m, k = 30, 4
+    a = np.abs(rng.standard_normal((m, m)))
+    x = jnp.asarray((a + a.T) / 2, dtype=jnp.float32)
+    h = jnp.abs(rand(rng, m, k))
+    w = jnp.abs(rand(rng, m, k))
+    alpha = jnp.float32(1.0)
+
+    def obj(wm):
+        return (jnp.linalg.norm(x - wm @ h.T) ** 2
+                + alpha * jnp.linalg.norm(wm - h) ** 2)
+
+    xh, g = ref.products(x, h)
+    w2 = model.hals_sweep(xh, g, w, h, alpha)
+    assert float(obj(w2)) <= float(obj(w)) + 1e-3

@@ -1,0 +1,77 @@
+//! Regenerates paper **Figure 1 + Table 2** (§5.1): convergence curves
+//! and summary statistics of {BPP, HALS, PGNCG} × {plain, LAI, LAI-IR,
+//! Comp} on the dense WoS-substitute workload, plus the spectral-
+//! clustering comparison paragraph.
+//!
+//! Paper setup: 46,985 docs, 10–20 trials. Testbed scaling: 1,024 docs
+//! (matching the AOT artifact shapes), 3 trials (DESIGN.md §3). The
+//! *shape* to reproduce: randomized variants 3–7.5× faster at equal
+//! Avg-Min-Res / ARI; Comp ≈ LAI; spectral ARI below every SymNMF row.
+//!
+//!     cargo bench --bench bench_fig1_table2
+//! writes results/fig1_convergence.csv and results/table2.txt
+
+use symnmf::clustering::ari::adjusted_rand_index;
+use symnmf::coordinator::driver::run_trials;
+use symnmf::coordinator::experiments::{fig1_table2_methods, wos_options, wos_workload};
+use symnmf::coordinator::report;
+use symnmf::util::rng::Pcg64;
+use symnmf::util::timer::Stopwatch;
+
+fn main() {
+    let docs = std::env::var("SYMNMF_BENCH_DOCS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1024);
+    let trials = std::env::var("SYMNMF_BENCH_TRIALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+
+    println!("== Fig. 1 / Table 2 bench: WoS dense workload ({docs} docs, {trials} trials) ==");
+    let w = wos_workload(docs, 1);
+    let mut opts = wos_options().with_seed(10);
+    opts.max_iters = 150;
+
+    let mut all = Vec::new();
+    for method in fig1_table2_methods() {
+        let t = Stopwatch::start();
+        let stats = run_trials(method, &w.adjacency, &opts, Some(&w.labels), trials);
+        println!(
+            "  {:<14} mean {:5.1} iters  {:7.3}s  min-res {:.4}  ARI {:.3}  [bench wall {:.1}s]",
+            stats.label,
+            stats.mean_iters,
+            stats.mean_time,
+            stats.min_res,
+            stats.mean_ari,
+            t.elapsed_secs()
+        );
+        all.push(stats);
+    }
+
+    // spectral comparison (§5.1.1 ¶)
+    let mut rng = Pcg64::seed_from_u64(99);
+    let t = Stopwatch::start();
+    let mut aris = Vec::new();
+    for _ in 0..trials {
+        let assign =
+            symnmf::clustering::spectral::spectral_cluster(&w.adjacency, 7, &mut rng);
+        aris.push(adjusted_rand_index(&assign, &w.labels));
+    }
+    let spectral_ari = aris.iter().sum::<f64>() / aris.len() as f64;
+    let spectral_secs = t.elapsed_secs() / trials as f64;
+
+    let table = report::stats_table(&all);
+    let speedups = report::speedups_vs(&all, "BPP");
+    let summary = format!(
+        "{table}\n{speedups}\nSpectral clustering: mean ARI {spectral_ari:.4} in {spectral_secs:.2}s/run \
+         (paper: 0.293, worse than all SymNMF rows)\n"
+    );
+    println!("\n{summary}");
+
+    std::fs::create_dir_all("results").ok();
+    report::write_convergence_csv(std::path::Path::new("results/fig1_convergence.csv"), &all)
+        .unwrap();
+    std::fs::write("results/table2.txt", &summary).unwrap();
+    println!("wrote results/fig1_convergence.csv, results/table2.txt");
+}

@@ -1,0 +1,41 @@
+//! Regenerates paper **Figure 3** (§5.2): per-iteration time breakdown —
+//! Matrix Multiplication / Solve / Sampling — for HALS, LvS-HALS and
+//! LvS-BPP on the sparse workload.
+//!
+//! Shape to reproduce: leverage-score sampling collapses the MM bar while
+//! adding an acceptable Sampling bar; for BPP the Solve bar dominates and
+//! caps the end-to-end gain at ~50% (§5.2).
+//!
+//!     cargo bench --bench bench_fig3
+//! writes results/fig3_breakdown.txt
+
+use symnmf::coordinator::driver::Method;
+use symnmf::coordinator::experiments::{fig3_methods, oag_options, oag_workload};
+use symnmf::coordinator::report;
+
+fn main() {
+    let m = std::env::var("SYMNMF_BENCH_M")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(20_000);
+    println!("== Fig. 3 bench: time breakdown on OAG sparse workload (m={m}) ==");
+    let g = oag_workload(m, 3);
+    let mut opts = oag_options().with_seed(30);
+    opts.max_iters = 25;
+    opts.patience = 1000; // plot the full horizon (paper's Figs. show complete curves)
+
+    let methods: Vec<Method> = fig3_methods();
+    let mut results = Vec::new();
+    for method in methods {
+        let res = method.run(&g.adj, &opts);
+        println!("  {:<22} {} iters in {:.2}s", res.label, res.iters(), res.total_secs());
+        results.push(res);
+    }
+    let refs: Vec<&symnmf::symnmf::SymNmfResult> = results.iter().collect();
+    let table = report::time_breakdown_table(&refs);
+    println!("\n{table}");
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/fig3_breakdown.txt", &table).unwrap();
+    println!("wrote results/fig3_breakdown.txt");
+}

@@ -1,0 +1,47 @@
+//! Regenerates paper **Figure 4 + Tables 4–5** (App. G.1): the ρ
+//! (column-oversampling) sweep on the WoS workload — ρ ∈ {2k, 40, 80}.
+//!
+//! Shape to reproduce: increasing ρ does NOT improve final residual or
+//! ARI but DOES increase run time (Tables 4 vs 5 vs 2).
+//!
+//!     cargo bench --bench bench_fig4_rho
+//! writes results/table4_5.txt
+
+use symnmf::coordinator::driver::run_trials;
+use symnmf::coordinator::experiments::{rho_sweep_methods, wos_options, wos_workload};
+use symnmf::coordinator::report;
+
+fn main() {
+    let docs = std::env::var("SYMNMF_BENCH_DOCS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1024);
+    let trials = 2;
+    println!("== Fig. 4 / Tables 4–5 bench: ρ sweep on WoS ({docs} docs) ==");
+    let w = wos_workload(docs, 1);
+
+    let mut out = String::new();
+    for rho in [14usize, 40, 80] {
+        // 14 = 2k for k=7 — the Table 2 default
+        let mut opts = wos_options().with_seed(40);
+        opts.rho = rho;
+        opts.max_iters = 150;
+        println!("--- ρ = {rho} (l = {}) ---", opts.sketch_width());
+        let mut all = Vec::new();
+        for method in rho_sweep_methods() {
+            // deterministic rows don't depend on ρ; keep them for table parity
+            let stats = run_trials(method, &w.adjacency, &opts, Some(&w.labels), trials);
+            println!(
+                "  {:<14} {:7.3}s  min-res {:.4}  ARI {:.3}",
+                stats.label, stats.mean_time, stats.min_res, stats.mean_ari
+            );
+            all.push(stats);
+        }
+        out.push_str(&format!("ρ = {rho}\n"));
+        out.push_str(&report::stats_table(&all));
+        out.push('\n');
+    }
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/table4_5.txt", &out).unwrap();
+    println!("\nwrote results/table4_5.txt");
+}

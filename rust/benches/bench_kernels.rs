@@ -1,0 +1,122 @@
+//! Micro-benchmarks of the hot-path kernels (the §Perf tool, DESIGN.md
+//! §6): dense matmul X·F, Gram, SpMM, CholeskyQR + leverage scores, BPP
+//! multi-RHS solve, sampled SpMM, and the PJRT round-trip for the same
+//! product — with achieved GF/s against the 1-core f64 roofline.
+//!
+//!     cargo bench --bench bench_kernels
+
+use std::rc::Rc;
+use symnmf::linalg::{blas, qr, DenseMat};
+use symnmf::nls::bpp;
+use symnmf::randnla::leverage::sample_hybrid;
+
+use symnmf::runtime::{PjrtRuntime, PjrtSymOp};
+use symnmf::sparse::CsrMat;
+use symnmf::util::bench::{bench, gflops};
+use symnmf::util::rng::Pcg64;
+
+fn main() {
+    let mut rng = Pcg64::seed_from_u64(1);
+    let m = 1024;
+    let k = 16;
+
+    // --- dense X·F (the dominant per-iteration product) ---
+    let mut x = DenseMat::gaussian(m, m, &mut rng);
+    x.symmetrize();
+    let f = DenseMat::gaussian(m, k, &mut rng);
+    let mut out = DenseMat::zeros(m, k);
+    let r = bench(&format!("dense X·F  ({m}x{m} · {m}x{k})"), 2, 9, || {
+        blas::symm_tall_into(&x, &f, &mut out);
+    });
+    let flops = 2.0 * (m * m * k) as f64;
+    println!("{}   {:.2} GF/s", r.report(), gflops(flops, r.median));
+
+    // --- Gram FᵀF ---
+    let tall = DenseMat::gaussian(100_000, k, &mut rng);
+    let r = bench("gram FᵀF   (100000x16)", 2, 9, || {
+        std::hint::black_box(blas::gram(&tall));
+    });
+    println!(
+        "{}   {:.2} GF/s",
+        r.report(),
+        gflops((100_000 * k * k) as f64, r.median)
+    );
+
+    // --- sparse SpMM ---
+    let n = 50_000;
+    let mut trips = Vec::new();
+    for i in 0..n {
+        for _ in 0..20 {
+            let j = rng.below(n);
+            trips.push((i, j, 1.0));
+        }
+    }
+    let sp = CsrMat::from_coo(n, n, trips);
+    let fs = DenseMat::gaussian(n, k, &mut rng);
+    let mut spout = DenseMat::zeros(n, k);
+    let r = bench(&format!("spmm       ({n}x{n}, {} nnz, k={k})", sp.nnz()), 2, 9, || {
+        sp.spmm_into(&fs, &mut spout);
+    });
+    println!(
+        "{}   {:.2} GF/s",
+        r.report(),
+        gflops(2.0 * (sp.nnz() * k) as f64, r.median)
+    );
+
+    // --- sampled SpMM (LvS inner product, s = 0.05·n) ---
+    let h = DenseMat::gaussian(n, k, &mut rng);
+    let lev = qr::leverage_scores(&h);
+    let s = n / 20;
+    let sm = sample_hybrid(&lev, s, 1.0 / s as f64, &mut rng);
+    let w_sq = sm.weights_sq();
+    let r = bench(&format!("sampled spmm (s={s})"), 2, 9, || {
+        std::hint::black_box(sp.sampled_spmm_sym(&fs, &sm.indices, &w_sq));
+    });
+    println!("{}", r.report());
+
+    // --- CholeskyQR leverage scores (the per-iteration sampling cost) ---
+    let r = bench(&format!("choleskyQR + leverage ({n}x{k})"), 2, 9, || {
+        std::hint::black_box(qr::leverage_scores(&h));
+    });
+    println!("{}", r.report());
+
+    // --- BPP multi-RHS (the Solve bar of Fig. 3) ---
+    let g = {
+        let a = DenseMat::gaussian(k + 8, k, &mut rng);
+        let mut g = blas::gram(&a);
+        for i in 0..k {
+            *g.at_mut(i, i) += 0.1;
+        }
+        g
+    };
+    let y = DenseMat::gaussian(20_000, k, &mut rng);
+    let r = bench("BPP multi-RHS (20000 rows, k=16)", 1, 5, || {
+        std::hint::black_box(bpp::solve_multi(&g, &y, None));
+    });
+    println!("{}", r.report());
+
+    // --- PJRT round-trip for the same X·F (AOT Pallas path) ---
+    match PjrtRuntime::from_default_dir() {
+        Ok(rt) => {
+            let f7 = DenseMat::gaussian(m, 7, &mut rng);
+            let op = PjrtSymOp::new(x.clone(), Rc::new(rt));
+            if op.products_pjrt(&f7).is_some() {
+                let r = bench("PJRT products (1024x1024·1024x7 + gram)", 2, 9, || {
+                    std::hint::black_box(op.products_pjrt(&f7));
+                });
+                let flops = 2.0 * (m * m * 7) as f64;
+                println!("{}   {:.2} GF/s", r.report(), gflops(flops, r.median));
+                // native same-shape comparison
+                let mut o7 = DenseMat::zeros(m, 7);
+                let r = bench("native products (same shapes)", 2, 9, || {
+                    blas::symm_tall_into(&x, &f7, &mut o7);
+                    std::hint::black_box(blas::gram(&f7));
+                });
+                println!("{}   {:.2} GF/s", r.report(), gflops(flops, r.median));
+            } else {
+                println!("PJRT products artifact for m=1024,k=7 not found — run `make artifacts`");
+            }
+        }
+        Err(e) => println!("PJRT unavailable: {e:#}"),
+    }
+}

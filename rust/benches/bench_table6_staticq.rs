@@ -1,0 +1,39 @@
+//! Regenerates paper **Figure 5 + Table 6** (App. G.1): the same WoS
+//! suite but with a STATIC q=2 power-iteration count instead of Ada-RRF.
+//!
+//! Shape to reproduce: without Ada-RRF the plain randomized variants land
+//! on worse residual/ARI; IR repairs quality at extra cost; Ada-RRF
+//! (Table 2) dominates the static choice overall.
+//!
+//!     cargo bench --bench bench_table6_staticq
+//! writes results/table6.txt
+
+use symnmf::coordinator::driver::run_trials;
+use symnmf::coordinator::experiments::{fig1_table2_methods, static_q_options, wos_workload};
+use symnmf::coordinator::report;
+
+fn main() {
+    let docs = std::env::var("SYMNMF_BENCH_DOCS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1024);
+    let trials = 2;
+    println!("== Table 6 bench: static q=2 (no Ada-RRF) on WoS ({docs} docs) ==");
+    let w = wos_workload(docs, 1);
+    let mut opts = static_q_options().with_seed(60);
+    opts.max_iters = 150;
+
+    let mut all = Vec::new();
+    for method in fig1_table2_methods() {
+        let stats = run_trials(method, &w.adjacency, &opts, Some(&w.labels), trials);
+        println!(
+            "  {:<14} {:7.3}s  min-res {:.4}  ARI {:.3}",
+            stats.label, stats.mean_time, stats.min_res, stats.mean_ari
+        );
+        all.push(stats);
+    }
+    let table = report::stats_table(&all);
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/table6.txt", &table).unwrap();
+    println!("\n{table}\nwrote results/table6.txt (compare against results/table2.txt)");
+}

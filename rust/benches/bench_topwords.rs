@@ -1,0 +1,100 @@
+//! Regenerates paper **Table 3 / Tables 7–8** (§5.2.1, App. G.2):
+//! top-10 key words per cluster (tf-idf association) for HALS vs
+//! LvS-HALS output, plus cluster sizes and silhouette scores.
+//!
+//! The OAG has no redistributable text; per DESIGN.md §3 each SBM vertex
+//! carries a synthetic abstract drawn from a 16-topic corpus aligned
+//! with its block, so the tf-idf/topword pipeline runs unchanged. Shape
+//! to reproduce: LvS-HALS's small clusters map onto coherent topics
+//! (Table 3/8) while the giant core cluster is mixed (Table 7's
+//! repetitive rows); silhouettes high for small clusters, low for the
+//! core.
+//!
+//!     cargo bench --bench bench_topwords
+//! writes results/table3_7_8.txt
+
+use symnmf::clustering::silhouette::cluster_silhouettes;
+use symnmf::coordinator::driver::Method;
+use symnmf::coordinator::experiments::{oag_options, oag_workload};
+use symnmf::coordinator::report;
+use symnmf::data::corpus::{self, CorpusParams};
+use symnmf::nls::UpdateRule;
+use symnmf::symnmf::options::Tau;
+
+fn main() {
+    let m = std::env::var("SYMNMF_BENCH_M")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8_000);
+    println!("== Tables 3/7/8 bench: topwords on OAG (m={m}, k=16) ==");
+    let g = oag_workload(m, 5);
+
+    // synthetic per-vertex abstracts aligned with the SBM blocks: doc d's
+    // topic is the vertex's planted block.
+    let cp = CorpusParams {
+        num_docs: m,
+        num_terms: 4_000,
+        num_topics: 16,
+        doc_len: 40,
+        noise: 0.4,
+        topic_mix: 0.1,
+        seed: 77,
+    };
+    // generate() assigns topics round-robin; re-map to the SBM labels by
+    // generating per-vertex docs directly: easiest is to reuse generate()
+    // and permute docs so labels match the graph blocks.
+    let mut corpus = corpus::generate(&cp);
+    {
+        // permutation: for each vertex with block b, pick an unused doc
+        // with label b (labels are balanced mod 16; blocks are skewed, so
+        // recycle docs when a label runs dry — acceptable for text).
+        let mut pools: Vec<Vec<usize>> = vec![Vec::new(); 16];
+        for (d, &l) in corpus.labels.iter().enumerate() {
+            pools[l].push(d);
+        }
+        let mut cursor = vec![0usize; 16];
+        let mut trips = Vec::new();
+        for v in 0..m {
+            let b = g.labels[v] % 16;
+            let pool = &pools[b];
+            let d = pool[cursor[b] % pool.len()];
+            cursor[b] += 1;
+            let (cols, vals) = corpus.counts.row(d);
+            for (&t, &val) in cols.iter().zip(vals) {
+                trips.push((v, t, val));
+            }
+        }
+        corpus.counts = symnmf::sparse::CsrMat::from_coo(m, 4_000, trips);
+        corpus.labels = g.labels.clone();
+    }
+    let weights = corpus::tfidf(&corpus.counts);
+
+    let mut opts = oag_options().with_seed(50);
+    opts.max_iters = 30;
+
+    let mut out = String::new();
+    for method in [
+        Method::Exact(UpdateRule::Hals),
+        Method::Lvs { rule: UpdateRule::Hals, tau: Tau::OneOverS },
+    ] {
+        let res = method.run(&g.adj, &opts);
+        let assign = res.cluster_assignments();
+        let sizes = symnmf::clustering::assign::cluster_sizes(&assign, 16);
+        let (sil, _) = cluster_silhouettes(&g.adj, &assign, 16);
+        let words = corpus::topwords(&weights, &corpus.vocab, &assign, 16, 10);
+        let table = report::topwords_table(&words, 10);
+
+        out.push_str(&format!("=== {} ===\ncluster sizes: {:?}\n", res.label, sizes));
+        out.push_str("silhouettes: ");
+        for s in &sil {
+            out.push_str(&format!("{s:.2} "));
+        }
+        out.push('\n');
+        out.push_str(&table);
+        out.push('\n');
+        println!("{} done: sizes {:?}", res.label, sizes);
+    }
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/table3_7_8.txt", &out).unwrap();
+    println!("wrote results/table3_7_8.txt");
+}

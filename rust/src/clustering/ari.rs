@@ -1,0 +1,79 @@
+//! Adjusted Rand Index — the clustering-quality metric of the WoS
+//! experiments (paper §5.1, Table 2 "Mean-ARI").
+
+/// ARI between two labelings (arbitrary label values).
+pub fn adjusted_rand_index(a: &[usize], b: &[usize]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n == 0 {
+        return 1.0;
+    }
+    let ka = a.iter().max().map(|&m| m + 1).unwrap_or(0);
+    let kb = b.iter().max().map(|&m| m + 1).unwrap_or(0);
+    // contingency table
+    let mut table = vec![0usize; ka * kb];
+    let mut rows = vec![0usize; ka];
+    let mut cols = vec![0usize; kb];
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        table[x * kb + y] += 1;
+        rows[x] += 1;
+        cols[y] += 1;
+    }
+    let c2 = |x: usize| (x * x.saturating_sub(1)) as f64 / 2.0;
+    let sum_ij: f64 = table.iter().map(|&x| c2(x)).sum();
+    let sum_a: f64 = rows.iter().map(|&x| c2(x)).sum();
+    let sum_b: f64 = cols.iter().map(|&x| c2(x)).sum();
+    let total = c2(n);
+    let expected = sum_a * sum_b / total;
+    let max_index = 0.5 * (sum_a + sum_b);
+    if (max_index - expected).abs() < 1e-300 {
+        return 1.0; // degenerate: identical trivial partitions
+    }
+    (sum_ij - expected) / (max_index - expected)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn identical_partitions_score_one() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        assert!((adjusted_rand_index(&a, &a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn permuted_labels_score_one() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        let b = vec![2, 2, 0, 0, 1, 1];
+        assert!((adjusted_rand_index(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_labels_score_near_zero() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let n = 5000;
+        let a: Vec<usize> = (0..n).map(|_| rng.below(5)).collect();
+        let b: Vec<usize> = (0..n).map(|_| rng.below(5)).collect();
+        let ari = adjusted_rand_index(&a, &b);
+        assert!(ari.abs() < 0.02, "ari={ari}");
+    }
+
+    #[test]
+    fn known_value() {
+        // classic example: ARI of these partitions ≈ 0.24242424
+        let a = vec![0, 0, 0, 1, 1, 1, 2, 2, 2];
+        let b = vec![0, 0, 1, 1, 2, 2, 2, 0, 1];
+        let ari = adjusted_rand_index(&a, &b);
+        assert!((ari - (-1.0 / 27.0)).abs() < 1e-9, "ari={ari}");
+    }
+
+    #[test]
+    fn partial_agreement_between_zero_and_one() {
+        let a = vec![0, 0, 0, 0, 1, 1, 1, 1];
+        let b = vec![0, 0, 0, 1, 1, 1, 1, 1];
+        let ari = adjusted_rand_index(&a, &b);
+        assert!(ari > 0.3 && ari < 1.0, "ari={ari}");
+    }
+}

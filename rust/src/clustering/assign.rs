@@ -1,0 +1,53 @@
+//! Hard cluster assignment from the SymNMF factor: vertex i joins the
+//! cluster argmax_j H[i, j] (paper §5, methodology of [35]).
+
+use crate::linalg::DenseMat;
+
+/// Row-wise argmax.
+pub fn argmax_rows(h: &DenseMat) -> Vec<usize> {
+    (0..h.rows())
+        .map(|i| {
+            let row = h.row(i);
+            let mut best = 0;
+            let mut bv = row[0];
+            for (j, &v) in row.iter().enumerate().skip(1) {
+                if v > bv {
+                    bv = v;
+                    best = j;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// Cluster sizes given assignments and cluster count.
+pub fn cluster_sizes(assign: &[usize], k: usize) -> Vec<usize> {
+    let mut sizes = vec![0usize; k];
+    for &a in assign {
+        sizes[a] += 1;
+    }
+    sizes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_max_per_row() {
+        let h = DenseMat::from_vec(3, 3, vec![
+            0.1, 0.9, 0.0, //
+            0.5, 0.2, 0.3, //
+            0.0, 0.0, 1.0,
+        ]);
+        assert_eq!(argmax_rows(&h), vec![1, 0, 2]);
+        assert_eq!(cluster_sizes(&argmax_rows(&h), 3), vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn ties_go_to_first() {
+        let h = DenseMat::from_vec(1, 3, vec![0.5, 0.5, 0.5]);
+        assert_eq!(argmax_rows(&h), vec![0]);
+    }
+}

@@ -1,0 +1,171 @@
+//! Lloyd's k-means with k-means++ seeding — the clustering stage of the
+//! spectral baseline (paper §5.1.1 compares against eigs()+kmeans()).
+
+use crate::linalg::DenseMat;
+use crate::util::rng::Pcg64;
+
+fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// k-means++ initial centers (row indices of `data`).
+fn kmeanspp_centers(data: &DenseMat, k: usize, rng: &mut Pcg64) -> DenseMat {
+    let m = data.rows();
+    let mut centers = DenseMat::zeros(k, data.cols());
+    let first = rng.below(m);
+    centers.row_mut(0).copy_from_slice(data.row(first));
+    let mut d2: Vec<f64> = (0..m)
+        .map(|i| sq_dist(data.row(i), centers.row(0)))
+        .collect();
+    for c in 1..k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 0.0 {
+            rng.below(m)
+        } else {
+            // sample proportional to squared distance
+            let mut target = rng.uniform() * total;
+            let mut pick = m - 1;
+            for (i, &d) in d2.iter().enumerate() {
+                if target < d {
+                    pick = i;
+                    break;
+                }
+                target -= d;
+            }
+            pick
+        };
+        centers.row_mut(c).copy_from_slice(data.row(next));
+        for i in 0..m {
+            d2[i] = d2[i].min(sq_dist(data.row(i), centers.row(c)));
+        }
+    }
+    centers
+}
+
+/// Run k-means; returns (assignments, total within-cluster SSE).
+pub fn kmeans(
+    data: &DenseMat,
+    k: usize,
+    max_iters: usize,
+    rng: &mut Pcg64,
+) -> (Vec<usize>, f64) {
+    let m = data.rows();
+    let d = data.cols();
+    assert!(k >= 1 && m >= k);
+    let mut centers = kmeanspp_centers(data, k, rng);
+    let mut assign = vec![0usize; m];
+    let mut sse = f64::INFINITY;
+    for _ in 0..max_iters {
+        // assignment step
+        let mut changed = false;
+        let mut new_sse = 0.0;
+        for i in 0..m {
+            let row = data.row(i);
+            let mut best = 0;
+            let mut bd = f64::INFINITY;
+            for c in 0..k {
+                let dist = sq_dist(row, centers.row(c));
+                if dist < bd {
+                    bd = dist;
+                    best = c;
+                }
+            }
+            if assign[i] != best {
+                assign[i] = best;
+                changed = true;
+            }
+            new_sse += bd;
+        }
+        sse = new_sse;
+        if !changed {
+            break;
+        }
+        // update step
+        let mut sums = DenseMat::zeros(k, d);
+        let mut counts = vec![0usize; k];
+        for i in 0..m {
+            let c = assign[i];
+            counts[c] += 1;
+            crate::linalg::blas::axpy(1.0, data.row(i), sums.row_mut(c));
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                let inv = 1.0 / counts[c] as f64;
+                for v in sums.row_mut(c) {
+                    *v *= inv;
+                }
+                centers.row_mut(c).copy_from_slice(sums.row(c));
+            } else {
+                // dead center: reseed at the farthest point
+                let far = (0..m)
+                    .max_by(|&a, &b| {
+                        sq_dist(data.row(a), centers.row(assign[a]))
+                            .partial_cmp(&sq_dist(data.row(b), centers.row(assign[b])))
+                            .unwrap()
+                    })
+                    .unwrap();
+                centers.row_mut(c).copy_from_slice(data.row(far));
+            }
+        }
+    }
+    (assign, sse)
+}
+
+/// Best of `restarts` k-means runs by SSE.
+pub fn kmeans_restarts(
+    data: &DenseMat,
+    k: usize,
+    max_iters: usize,
+    restarts: usize,
+    rng: &mut Pcg64,
+) -> (Vec<usize>, f64) {
+    let mut best: Option<(Vec<usize>, f64)> = None;
+    for _ in 0..restarts {
+        let (a, sse) = kmeans(data, k, max_iters, rng);
+        if best.as_ref().map(|(_, b)| sse < *b).unwrap_or(true) {
+            best = Some((a, sse));
+        }
+    }
+    best.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::ari::adjusted_rand_index;
+
+    #[test]
+    fn separates_well_separated_blobs() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let mut rows = Vec::new();
+        let mut truth = Vec::new();
+        for c in 0..3usize {
+            for _ in 0..30 {
+                rows.push(10.0 * c as f64 + 0.1 * rng.gaussian());
+                rows.push(-5.0 * c as f64 + 0.1 * rng.gaussian());
+                truth.push(c);
+            }
+        }
+        let data = DenseMat::from_vec(90, 2, rows);
+        let (assign, sse) = kmeans_restarts(&data, 3, 50, 3, &mut rng);
+        let ari = adjusted_rand_index(&assign, &truth);
+        assert!(ari > 0.99, "ari={ari}, sse={sse}");
+    }
+
+    #[test]
+    fn sse_decreases_with_k() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let data = DenseMat::gaussian(60, 3, &mut rng);
+        let (_, sse2) = kmeans_restarts(&data, 2, 40, 3, &mut rng);
+        let (_, sse5) = kmeans_restarts(&data, 5, 40, 3, &mut rng);
+        assert!(sse5 < sse2);
+    }
+
+    #[test]
+    fn k_equals_m_gives_zero_sse() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let data = DenseMat::gaussian(8, 2, &mut rng);
+        let (_, sse) = kmeans(&data, 8, 30, &mut rng);
+        assert!(sse < 1e-9);
+    }
+}

@@ -1,0 +1,10 @@
+//! Clustering evaluation stack for the paper's §5 experiments: hard
+//! assignments from the H factor, Adjusted Rand Index (WoS, Table 2),
+//! similarity-based silhouette scores (OAG, §5.2.1), k-means and the
+//! spectral-clustering comparison baseline (§5.1.1).
+
+pub mod ari;
+pub mod assign;
+pub mod kmeans;
+pub mod silhouette;
+pub mod spectral;

@@ -1,0 +1,142 @@
+//! Similarity-based Silhouette Scores — the paper's §5.2.1 cluster-quality
+//! metric for the unlabeled OAG graph. NOTE this is the *similarity*
+//! variant defined in the paper (higher adjacency = closer), not the
+//! classic dissimilarity form:
+//!
+//! ```text
+//!     a(v) = (1/(|C_l|−1)) Σ_{j∈C_l, j≠v} A_vj
+//!     b(v) = max_{t≠l} (1/|C_t|) Σ_{j∈C_t} A_vj
+//!     s(v) = (a(v) − b(v)) / max(a(v), b(v))
+//! ```
+//!
+//! Per-vertex scores are averaged per cluster. The per-vertex cluster
+//! sums Σ_{j∈C_t} A_vj for all t are one block product A·M with M the
+//! one-hot membership matrix — a single [`SymOp::apply`], so the metric
+//! scales to sparse graphs.
+
+use crate::linalg::DenseMat;
+use crate::randnla::SymOp;
+
+/// Mean silhouette per cluster; clusters with < 2 vertices get NaN.
+/// Returns (per-cluster mean score, per-cluster size).
+pub fn cluster_silhouettes<X: SymOp>(
+    a: &X,
+    assign: &[usize],
+    k: usize,
+) -> (Vec<f64>, Vec<usize>) {
+    let m = a.dim();
+    assert_eq!(assign.len(), m);
+    let sizes = crate::clustering::assign::cluster_sizes(assign, k);
+    // membership matrix M (m×k)
+    let mut mem = DenseMat::zeros(m, k);
+    for (i, &c) in assign.iter().enumerate() {
+        mem.set(i, c, 1.0);
+    }
+    let sums = a.apply(&mem); // sums[v][t] = Σ_{j∈C_t} A_vj
+    let mut acc = vec![0.0f64; k];
+    let mut cnt = vec![0usize; k];
+    for v in 0..m {
+        let l = assign[v];
+        if sizes[l] < 2 {
+            continue;
+        }
+        // own-cluster similarity excludes the (zeroed-diagonal) self term;
+        // if A has a nonzero diagonal the caller should zero it first.
+        let av = sums.at(v, l) / (sizes[l] - 1) as f64;
+        let mut bv = f64::NEG_INFINITY;
+        for t in 0..k {
+            if t != l && sizes[t] > 0 {
+                bv = bv.max(sums.at(v, t) / sizes[t] as f64);
+            }
+        }
+        if !bv.is_finite() {
+            continue;
+        }
+        let denom = av.max(bv);
+        let s = if denom.abs() < 1e-300 {
+            0.0
+        } else {
+            (av - bv) / denom
+        };
+        acc[l] += s;
+        cnt[l] += 1;
+    }
+    let means = acc
+        .iter()
+        .zip(&cnt)
+        .map(|(&a, &c)| if c > 0 { a / c as f64 } else { f64::NAN })
+        .collect();
+    (means, sizes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CsrMat;
+
+    /// Two perfect cliques, no cross edges → silhouettes = 1.
+    #[test]
+    fn perfect_clusters_score_one() {
+        let mut trips = Vec::new();
+        for block in 0..2usize {
+            let off = block * 4;
+            for i in 0..4 {
+                for j in 0..4 {
+                    if i != j {
+                        trips.push((off + i, off + j, 1.0));
+                    }
+                }
+            }
+        }
+        let a = CsrMat::from_coo(8, 8, trips);
+        let assign = vec![0, 0, 0, 0, 1, 1, 1, 1];
+        let (scores, sizes) = cluster_silhouettes(&a, &assign, 2);
+        assert_eq!(sizes, vec![4, 4]);
+        for s in scores {
+            assert!((s - 1.0).abs() < 1e-12, "s={s}");
+        }
+    }
+
+    /// Vertex assigned to the wrong clique scores negative.
+    #[test]
+    fn misassigned_vertex_drags_score_negative() {
+        let mut trips = Vec::new();
+        for block in 0..2usize {
+            let off = block * 4;
+            for i in 0..4 {
+                for j in 0..4 {
+                    if i != j {
+                        trips.push((off + i, off + j, 1.0));
+                    }
+                }
+            }
+        }
+        let a = CsrMat::from_coo(8, 8, trips);
+        // vertex 0 wrongly assigned to cluster 1
+        let assign = vec![1, 0, 0, 0, 1, 1, 1, 1];
+        let (scores, _) = cluster_silhouettes(&a, &assign, 2);
+        // cluster 1 contains the misassigned vertex → mean dips below 1
+        assert!(scores[1] < 1.0);
+    }
+
+    /// Uniform graph (all pairs equal) → a(v) == b(v) → score 0.
+    #[test]
+    fn uniform_graph_scores_zero() {
+        let n = 6;
+        let mut trips = Vec::new();
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    trips.push((i, j, 1.0));
+                }
+            }
+        }
+        let a = CsrMat::from_coo(n, n, trips);
+        let assign = vec![0, 0, 0, 1, 1, 1];
+        let (scores, _) = cluster_silhouettes(&a, &assign, 2);
+        for s in scores {
+            // a(v) = 2/2 = 1, b(v) = 3/3 = 1 → 0
+            assert!(s.abs() < 1e-12, "s={s}");
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! Spectral clustering baseline (paper §5.1.1, methodology of Ng–Jordan–
+//! Weiss [45] as used in [27]): embed vertices with the leading k
+//! eigenvectors of the (already symmetrically normalized) adjacency,
+//! row-normalize, k-means. Eigenvectors come from the same randomized
+//! Apx-EVD used elsewhere in the crate.
+
+use crate::linalg::DenseMat;
+use crate::randnla::evd::apx_evd;
+use crate::randnla::SymOp;
+use crate::util::rng::Pcg64;
+
+/// Spectral clustering into k groups; returns assignments.
+pub fn spectral_cluster<X: SymOp>(x: &X, k: usize, rng: &mut Pcg64) -> Vec<usize> {
+    // oversampled randomized EVD, then keep the k leading eigenvectors
+    let l = (2 * k).min(x.dim());
+    let evd = apx_evd(x, l, 2, rng);
+    let m = x.dim();
+    let mut embed = DenseMat::zeros(m, k);
+    for i in 0..m {
+        for j in 0..k {
+            embed.set(i, j, evd.u.at(i, j));
+        }
+    }
+    // row-normalize (NJW step)
+    for i in 0..m {
+        let row = embed.row_mut(i);
+        let norm: f64 = row.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if norm > 1e-300 {
+            for v in row {
+                *v /= norm;
+            }
+        }
+    }
+    crate::clustering::kmeans::kmeans_restarts(&embed, k, 100, 5, rng).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::ari::adjusted_rand_index;
+    use crate::sparse::CsrMat;
+
+    #[test]
+    fn recovers_planted_blocks() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let m = 90;
+        let k = 3;
+        let bs = m / k;
+        let mut trips = Vec::new();
+        for i in 0..m {
+            for j in (i + 1)..m {
+                let p = if i / bs == j / bs { 0.5 } else { 0.02 };
+                if rng.uniform() < p {
+                    trips.push((i, j, 1.0));
+                    trips.push((j, i, 1.0));
+                }
+            }
+        }
+        let mut a = CsrMat::from_coo(m, m, trips);
+        crate::sparse::sym::normalize_sym(&mut a);
+        let assign = spectral_cluster(&a, k, &mut rng);
+        let truth: Vec<usize> = (0..m).map(|i| i / bs).collect();
+        let ari = adjusted_rand_index(&assign, &truth);
+        assert!(ari > 0.8, "ari={ari}");
+    }
+}

@@ -1,0 +1,249 @@
+//! Method dispatch and multi-trial experiment driving.
+//!
+//! [`Method`] enumerates every algorithm variant of the paper's §5
+//! labeling scheme ("a combination of these labels indicates the method
+//! used": update rule × {plain, LAI, Comp} × {-IR} plus PGNCG variants
+//! and LvS with its τ policy). [`run_trials`] repeats a method with
+//! different seeds and aggregates the Table-2 statistics.
+
+use crate::clustering::ari::adjusted_rand_index;
+use crate::nls::UpdateRule;
+use crate::randnla::SymOp;
+use crate::symnmf::anls::symnmf_anls;
+use crate::symnmf::compressed::compressed_symnmf;
+use crate::symnmf::lai::lai_symnmf;
+use crate::symnmf::lvs::lvs_symnmf;
+use crate::symnmf::options::{SymNmfOptions, Tau};
+use crate::symnmf::pgncg::{lai_pgncg_symnmf, pgncg_symnmf};
+use crate::symnmf::SymNmfResult;
+
+/// Every §5 algorithm variant.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    /// deterministic regularized ANLS/HALS/MU ("BPP", "HALS")
+    Exact(UpdateRule),
+    /// LAI-SymNMF ("LAI-BPP", "LAI-HALS-IR", …)
+    Lai { rule: UpdateRule, refine: bool },
+    /// Compressed-NMF baseline ("Comp-BPP", "Comp-HALS")
+    Comp(UpdateRule),
+    /// PGNCG baseline
+    Pgncg,
+    /// LAI-PGNCG (+ IR)
+    LaiPgncg { refine: bool },
+    /// LvS-SymNMF with a τ policy ("LvS-HALS (τ=1/s)", …)
+    Lvs { rule: UpdateRule, tau: Tau },
+}
+
+impl Method {
+    /// §5 label.
+    pub fn label(&self) -> String {
+        match self {
+            Method::Exact(r) => r.label().to_string(),
+            Method::Lai { rule, refine } => {
+                if *refine {
+                    format!("LAI-{}-IR", rule.label())
+                } else {
+                    format!("LAI-{}", rule.label())
+                }
+            }
+            Method::Comp(r) => format!("Comp-{}", r.label()),
+            Method::Pgncg => "PGNCG".to_string(),
+            Method::LaiPgncg { refine } => {
+                if *refine {
+                    "LAI-PGNCG-IR".to_string()
+                } else {
+                    "LAI-PGNCG".to_string()
+                }
+            }
+            Method::Lvs { rule, tau } => {
+                let t = match tau {
+                    Tau::OneOverS => "τ=1/s".to_string(),
+                    Tau::Fixed(v) if (*v - 1.0).abs() < 1e-12 => "τ=1".to_string(),
+                    Tau::Fixed(v) => format!("τ={v}"),
+                };
+                format!("LvS-{} ({t})", rule.label())
+            }
+        }
+    }
+
+    /// Run once on `x` with the given base options (rule/τ/refine fields
+    /// are overridden by the method variant).
+    pub fn run<X: SymOp>(&self, x: &X, base: &SymNmfOptions) -> SymNmfResult {
+        let mut opts = base.clone();
+        match *self {
+            Method::Exact(rule) => {
+                opts.rule = rule;
+                symnmf_anls(x, &opts)
+            }
+            Method::Lai { rule, refine } => {
+                opts.rule = rule;
+                opts.refine = refine;
+                lai_symnmf(x, &opts)
+            }
+            Method::Comp(rule) => {
+                opts.rule = rule;
+                compressed_symnmf(x, &opts)
+            }
+            Method::Pgncg => pgncg_symnmf(x, &opts),
+            Method::LaiPgncg { refine } => {
+                opts.refine = refine;
+                lai_pgncg_symnmf(x, &opts)
+            }
+            Method::Lvs { rule, tau } => {
+                opts.rule = rule;
+                opts.tau = tau;
+                lvs_symnmf(x, &opts)
+            }
+        }
+    }
+}
+
+/// Aggregated multi-trial statistics — the columns of the paper's
+/// Table 2 / Tables 4–6.
+#[derive(Clone, Debug)]
+pub struct MethodStats {
+    pub label: String,
+    /// mean iterations until the stopping rule fired
+    pub mean_iters: f64,
+    /// mean total algorithm time (s)
+    pub mean_time: f64,
+    /// mean over trials of each trial's minimum residual
+    pub avg_min_res: f64,
+    /// overall minimum residual across trials
+    pub min_res: f64,
+    /// mean ARI vs ground truth (NaN when no labels)
+    pub mean_ari: f64,
+    /// the per-trial results (for convergence-curve CSVs)
+    pub trials: Vec<SymNmfResult>,
+}
+
+/// Run `trials` independent seeded runs and aggregate.
+pub fn run_trials<X: SymOp>(
+    method: Method,
+    x: &X,
+    base: &SymNmfOptions,
+    labels: Option<&[usize]>,
+    trials: usize,
+) -> MethodStats {
+    assert!(trials >= 1);
+    let mut results = Vec::with_capacity(trials);
+    for t in 0..trials {
+        let mut opts = base.clone();
+        opts.seed = base.seed.wrapping_add(1000 * t as u64 + 1);
+        results.push(method.run(x, &opts));
+    }
+    let mean_iters =
+        results.iter().map(|r| r.iters() as f64).sum::<f64>() / trials as f64;
+    let mean_time =
+        results.iter().map(|r| r.total_secs()).sum::<f64>() / trials as f64;
+    let avg_min_res =
+        results.iter().map(|r| r.min_residual()).sum::<f64>() / trials as f64;
+    let min_res = results
+        .iter()
+        .map(|r| r.min_residual())
+        .fold(f64::INFINITY, f64::min);
+    let mean_ari = match labels {
+        Some(truth) => {
+            results
+                .iter()
+                .map(|r| adjusted_rand_index(&r.cluster_assignments(), truth))
+                .sum::<f64>()
+                / trials as f64
+        }
+        None => f64::NAN,
+    };
+    MethodStats {
+        label: method.label(),
+        mean_iters,
+        mean_time,
+        avg_min_res,
+        min_res,
+        mean_ari,
+        trials: results,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{blas, DenseMat};
+    use crate::util::rng::Pcg64;
+
+    fn planted(m: usize, k: usize, seed: u64) -> (DenseMat, Vec<usize>) {
+        // block-structured similarity with ground truth labels
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let bs = m / k;
+        let mut h = DenseMat::zeros(m, k);
+        for i in 0..m {
+            let c = (i / bs).min(k - 1);
+            h.set(i, c, 1.0 + 0.2 * rng.uniform());
+        }
+        let mut x = blas::matmul_nt(&h, &h);
+        x.symmetrize();
+        let labels = (0..m).map(|i| (i / bs).min(k - 1)).collect();
+        (x, labels)
+    }
+
+    #[test]
+    fn labels_match_paper_scheme() {
+        assert_eq!(Method::Exact(UpdateRule::Bpp).label(), "BPP");
+        assert_eq!(
+            Method::Lai { rule: UpdateRule::Hals, refine: true }.label(),
+            "LAI-HALS-IR"
+        );
+        assert_eq!(Method::Comp(UpdateRule::Bpp).label(), "Comp-BPP");
+        assert_eq!(Method::LaiPgncg { refine: false }.label(), "LAI-PGNCG");
+        assert_eq!(
+            Method::Lvs { rule: UpdateRule::Hals, tau: Tau::OneOverS }.label(),
+            "LvS-HALS (τ=1/s)"
+        );
+        assert_eq!(
+            Method::Lvs { rule: UpdateRule::Bpp, tau: Tau::Fixed(1.0) }.label(),
+            "LvS-BPP (τ=1)"
+        );
+    }
+
+    #[test]
+    fn trials_aggregate_and_cluster() {
+        let (x, labels) = planted(60, 3, 1);
+        let mut opts = SymNmfOptions::new(3);
+        opts.max_iters = 40;
+        let stats = run_trials(
+            Method::Exact(UpdateRule::Hals),
+            &x,
+            &opts,
+            Some(&labels),
+            3,
+        );
+        assert_eq!(stats.trials.len(), 3);
+        assert!(stats.mean_iters >= 1.0);
+        assert!(stats.mean_time > 0.0);
+        assert!(stats.min_res <= stats.avg_min_res + 1e-12);
+        assert!(
+            stats.mean_ari > 0.9,
+            "block-perfect input should cluster: ARI {}",
+            stats.mean_ari
+        );
+    }
+
+    #[test]
+    fn all_methods_run_one_iteration() {
+        let (x, _) = planted(40, 2, 2);
+        let mut opts = SymNmfOptions::new(2);
+        opts.max_iters = 2;
+        opts.samples = Some(20);
+        for m in [
+            Method::Exact(UpdateRule::Bpp),
+            Method::Lai { rule: UpdateRule::Hals, refine: false },
+            Method::Lai { rule: UpdateRule::Bpp, refine: true },
+            Method::Comp(UpdateRule::Hals),
+            Method::Pgncg,
+            Method::LaiPgncg { refine: false },
+            Method::Lvs { rule: UpdateRule::Hals, tau: Tau::OneOverS },
+        ] {
+            let res = m.run(&x, &opts);
+            assert!(!res.records.is_empty(), "{}", m.label());
+            assert!(res.h.is_nonneg(), "{}", m.label());
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Per-figure experiment definitions (the DESIGN.md §4 index): each
+//! function returns the method list + options matching one table/figure
+//! of the paper's §5, scaled to this testbed (DESIGN.md §3).
+
+use crate::coordinator::driver::Method;
+use crate::data::corpus::{generate, tfidf, Corpus, CorpusParams};
+use crate::data::edvw::edvw_adjacency;
+use crate::data::sbm::{generate as sbm_generate, SbmGraph, SbmParams};
+use crate::linalg::DenseMat;
+use crate::nls::UpdateRule;
+use crate::sparse::CsrMat;
+use crate::symnmf::options::{PowerIter, SymNmfOptions, Tau};
+
+/// The WoS-substitute workload (§5.1): planted-topic corpus → tf-idf →
+/// EDVW hypergraph expansion → dense symmetric adjacency. k = 7 topics.
+pub struct WosWorkload {
+    pub adjacency: DenseMat,
+    pub labels: Vec<usize>,
+    pub corpus: Corpus,
+    pub tfidf: CsrMat,
+}
+
+pub fn wos_workload(num_docs: usize, seed: u64) -> WosWorkload {
+    // Noise level chosen so clustering is non-trivial (the paper's WoS
+    // ARIs sit around 0.31): most tokens are shared background, documents
+    // are short, and anchor vocabularies overlap through the background.
+    let params = CorpusParams {
+        num_docs,
+        num_terms: (2 * num_docs).max(500),
+        num_topics: 7,
+        doc_len: 30,
+        noise: 0.65,
+        topic_mix: 0.45,
+        seed,
+    };
+    let corpus = generate(&params);
+    let w = tfidf(&corpus.counts);
+    let adjacency = edvw_adjacency(&w);
+    WosWorkload { adjacency, labels: corpus.labels.clone(), corpus, tfidf: w }
+}
+
+/// The OAG-substitute workload (§5.2): skewed SBM, symmetrically
+/// normalized, zeroed diagonal. k = 16. The core block holds ~93% of the
+/// vertices, mirroring the paper's finding that HALS on the OAG produces
+/// one giant cluster plus 15 small ones (§5.2.1); the small clusters are
+/// what give rows high leverage and feed the hybrid sampler (Fig. 6).
+pub fn oag_workload(m: usize, seed: u64) -> SbmGraph {
+    // Calibration (DESIGN.md §3):
+    // * core_frac 0.96 mirrors the paper's finding of one giant cluster +
+    //   15 small ones (§5.2.1) AND puts the small clusters' row leverage
+    //   (≈ 1/cluster_size) above the τ·k = k/s hybrid threshold, so the
+    //   deterministic sampler captures them (Fig. 6's θ/k → 1).
+    // * the dense core (degree 45) vs sparse small blocks (degree 8):
+    //   symmetric normalization then gives small-block edges ~5× the
+    //   per-edge weight, so the planted signal carries ~15% of ‖X‖² —
+    //   large enough to sit above the sampled-product noise floor at
+    //   s = 0.05·m, which at the paper's scale (m = 37.7M) holds
+    //   automatically because absolute sample counts are 1,900× larger.
+    let params = SbmParams::skewed(m, 16, 0.96, seed)
+        .with_degrees(8.0, 1.5)
+        .with_core_degree(45.0);
+    let mut g = sbm_generate(&params);
+    crate::sparse::sym::prepare_adjacency(&mut g.adj);
+    g
+}
+
+/// Base options for the WoS experiments (§5.1): k=7, α=max(X), Ada-RRF,
+/// ρ=2k, stopping 1e-4×4.
+pub fn wos_options() -> SymNmfOptions {
+    SymNmfOptions::new(7)
+}
+
+/// Base options for the OAG experiments (§5.2): k=16, s=⌈0.05 m⌉.
+pub fn oag_options() -> SymNmfOptions {
+    SymNmfOptions::new(16)
+}
+
+/// Fig. 1 + Table 2 method list: {BPP, HALS, PGNCG} × {plain, LAI,
+/// LAI-IR, Comp}.
+pub fn fig1_table2_methods() -> Vec<Method> {
+    vec![
+        Method::Pgncg,
+        Method::LaiPgncg { refine: false },
+        Method::LaiPgncg { refine: true },
+        Method::Exact(UpdateRule::Bpp),
+        Method::Lai { rule: UpdateRule::Bpp, refine: false },
+        Method::Lai { rule: UpdateRule::Bpp, refine: true },
+        Method::Comp(UpdateRule::Bpp),
+        Method::Exact(UpdateRule::Hals),
+        Method::Lai { rule: UpdateRule::Hals, refine: false },
+        Method::Lai { rule: UpdateRule::Hals, refine: true },
+        Method::Comp(UpdateRule::Hals),
+    ]
+}
+
+/// Fig. 2 method list: HALS/BPP × {plain, LvS τ=1, LvS τ=1/s, LAI}.
+pub fn fig2_methods() -> Vec<Method> {
+    vec![
+        Method::Exact(UpdateRule::Hals),
+        Method::Lvs { rule: UpdateRule::Hals, tau: Tau::Fixed(1.0) },
+        Method::Lvs { rule: UpdateRule::Hals, tau: Tau::OneOverS },
+        Method::Lai { rule: UpdateRule::Hals, refine: false },
+        Method::Exact(UpdateRule::Bpp),
+        Method::Lvs { rule: UpdateRule::Bpp, tau: Tau::Fixed(1.0) },
+        Method::Lvs { rule: UpdateRule::Bpp, tau: Tau::OneOverS },
+        Method::Lai { rule: UpdateRule::Bpp, refine: false },
+    ]
+}
+
+/// Fig. 3 method list: HALS, LvS-HALS, LvS-BPP (time breakdown).
+pub fn fig3_methods() -> Vec<Method> {
+    vec![
+        Method::Exact(UpdateRule::Hals),
+        Method::Lvs { rule: UpdateRule::Hals, tau: Tau::OneOverS },
+        Method::Lvs { rule: UpdateRule::Bpp, tau: Tau::OneOverS },
+    ]
+}
+
+/// Fig. 4 / Tables 4–5: the randomized-method subset rerun with fixed ρ.
+pub fn rho_sweep_methods() -> Vec<Method> {
+    vec![
+        Method::Exact(UpdateRule::Bpp),
+        Method::Lai { rule: UpdateRule::Bpp, refine: false },
+        Method::Lai { rule: UpdateRule::Bpp, refine: true },
+        Method::Lai { rule: UpdateRule::Hals, refine: false },
+        Method::Lai { rule: UpdateRule::Hals, refine: true },
+        Method::Exact(UpdateRule::Hals),
+        Method::Pgncg,
+        Method::LaiPgncg { refine: false },
+        Method::Comp(UpdateRule::Bpp),
+        Method::LaiPgncg { refine: true },
+        Method::Comp(UpdateRule::Hals),
+    ]
+}
+
+/// Table 6: same list as Fig. 1/Table 2 but with static q=2 (no Ada-RRF).
+pub fn static_q_options() -> SymNmfOptions {
+    let mut o = wos_options();
+    o.power = PowerIter::Static(2);
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::randnla::SymOp;
+
+    #[test]
+    fn wos_workload_is_symmetric_dense_with_7_topics() {
+        let w = wos_workload(70, 1);
+        assert_eq!(w.adjacency.rows(), 70);
+        assert!(w.adjacency.is_nonneg());
+        assert_eq!(w.labels.iter().max().unwrap() + 1, 7);
+        for i in 0..70 {
+            assert_eq!(w.adjacency.at(i, i), 0.0);
+        }
+    }
+
+    #[test]
+    fn oag_workload_normalized_sparse() {
+        let g = oag_workload(400, 2);
+        assert!(g.adj.is_symmetric(1e-12));
+        assert!(g.adj.nnz() > 400, "should have edges");
+        assert!(SymOp::max_value(&g.adj) <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn method_lists_cover_the_paper() {
+        assert_eq!(fig1_table2_methods().len(), 11, "Table 2 has 11 rows");
+        assert_eq!(fig2_methods().len(), 8);
+        assert_eq!(fig3_methods().len(), 3);
+        assert_eq!(rho_sweep_methods().len(), 11);
+    }
+}

@@ -1,0 +1,9 @@
+//! Experiment coordination: method dispatch ([`driver::Method`]),
+//! multi-trial aggregation, per-figure experiment definitions matching
+//! the paper's §5 evaluation, and table/CSV reporting.
+
+pub mod driver;
+pub mod experiments;
+pub mod report;
+
+pub use driver::{Method, MethodStats};

@@ -1,0 +1,179 @@
+//! Rendering: Table-2-style summaries, convergence-curve CSVs (Figs. 1,
+//! 2, 5), time-breakdown reports (Fig. 3), hybrid-sampling stats CSVs
+//! (Fig. 6) and topword tables (Tables 3/7/8).
+
+use crate::coordinator::driver::MethodStats;
+use crate::symnmf::SymNmfResult;
+use crate::util::table::{f4, secs, Table};
+use crate::util::timer::{PHASE_MM, PHASE_SAMPLING, PHASE_SOLVE};
+use std::io::Write;
+use std::path::Path;
+
+/// Table 2 layout: Alg. | Iters | Time | Avg. Min-Res | Min-Res | Mean-ARI.
+pub fn stats_table(stats: &[MethodStats]) -> String {
+    let mut t = Table::new(&["Alg.", "Iters", "Time", "Avg. Min-Res", "Min-Res", "Mean-ARI"]);
+    for s in stats {
+        let ari = if s.mean_ari.is_nan() {
+            "-".to_string()
+        } else {
+            f4(s.mean_ari)
+        };
+        t.row(&[
+            s.label.clone(),
+            format!("{:.1}", s.mean_iters),
+            secs(s.mean_time),
+            f4(s.avg_min_res),
+            f4(s.min_res),
+            ari,
+        ]);
+    }
+    t.render()
+}
+
+/// Convergence-curve CSV: one row per (trial, iteration) with time,
+/// residual and projected gradient — the raw series behind Figs. 1/2/5.
+pub fn write_convergence_csv(path: &Path, stats: &[MethodStats]) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "method,trial,iter,time_secs,residual,proj_grad")?;
+    for s in stats {
+        for (t, run) in s.trials.iter().enumerate() {
+            for r in &run.records {
+                writeln!(
+                    f,
+                    "{},{},{},{:.6},{:.8},{}",
+                    s.label,
+                    t,
+                    r.iter,
+                    r.time_secs,
+                    r.residual,
+                    r.proj_grad.map(|p| format!("{p:.6}")).unwrap_or_default()
+                )?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Fig. 3: per-iteration time breakdown (MM / Solve / Sampling).
+pub fn time_breakdown_table(results: &[&SymNmfResult]) -> String {
+    let mut t = Table::new(&[
+        "Alg.",
+        "MM s/iter",
+        "Solve s/iter",
+        "Sampling s/iter",
+        "Total s/iter",
+    ]);
+    for r in results {
+        let iters = r.iters().max(1) as f64;
+        let mm = r.phases.get_secs(PHASE_MM) / iters;
+        let so = r.phases.get_secs(PHASE_SOLVE) / iters;
+        let sa = r.phases.get_secs(PHASE_SAMPLING) / iters;
+        t.row(&[
+            r.label.clone(),
+            format!("{mm:.4}"),
+            format!("{so:.4}"),
+            format!("{sa:.4}"),
+            format!("{:.4}", mm + so + sa),
+        ]);
+    }
+    t.render()
+}
+
+/// Fig. 6: hybrid-sampling per-iteration stats CSV.
+pub fn write_hybrid_stats_csv(path: &Path, run: &SymNmfResult) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "iter,det_fraction,theta_over_k")?;
+    for r in &run.records {
+        if let Some((frac, theta)) = r.hybrid_stats {
+            writeln!(f, "{},{:.6},{:.6}", r.iter, frac, theta)?;
+        }
+    }
+    Ok(())
+}
+
+/// Tables 3/7/8 layout: topics as rows, top words as columns.
+pub fn topwords_table(words: &[Vec<String>], topn: usize) -> String {
+    let mut headers: Vec<String> = vec!["Topic".to_string()];
+    for i in 0..topn {
+        headers.push(format!("TW{}", i + 1));
+    }
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr_refs);
+    for (topic, list) in words.iter().enumerate() {
+        let mut row = vec![topic.to_string()];
+        for i in 0..topn {
+            row.push(list.get(i).cloned().unwrap_or_default());
+        }
+        t.row(&row);
+    }
+    t.render()
+}
+
+/// Speedup summary vs a baseline label (the paper's headline numbers).
+pub fn speedups_vs(stats: &[MethodStats], baseline_label: &str) -> String {
+    let base = stats
+        .iter()
+        .find(|s| s.label == baseline_label)
+        .map(|s| s.mean_time);
+    let mut t = Table::new(&["Alg.", "Time (s)", "Speedup"]);
+    for s in stats {
+        let sp = base
+            .map(|b| format!("{:.2}x", b / s.mean_time.max(1e-12)))
+            .unwrap_or_else(|| "-".into());
+        t.row(&[s.label.clone(), secs(s.mean_time), sp]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::driver::{run_trials, Method};
+    use crate::linalg::{blas, DenseMat};
+    use crate::nls::UpdateRule;
+    use crate::symnmf::SymNmfOptions;
+    use crate::util::rng::Pcg64;
+
+    fn small_stats() -> Vec<MethodStats> {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let h = DenseMat::uniform(30, 3, 1.0, &mut rng);
+        let mut x = blas::matmul_nt(&h, &h);
+        x.symmetrize();
+        let mut opts = SymNmfOptions::new(3);
+        opts.max_iters = 5;
+        vec![run_trials(Method::Exact(UpdateRule::Hals), &x, &opts, None, 2)]
+    }
+
+    #[test]
+    fn table_renders_all_columns() {
+        let stats = small_stats();
+        let s = stats_table(&stats);
+        assert!(s.contains("Alg."));
+        assert!(s.contains("HALS"));
+        assert!(s.contains("Mean-ARI"));
+    }
+
+    #[test]
+    fn csv_has_rows() {
+        let stats = small_stats();
+        let dir = std::env::temp_dir().join("symnmf_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("conv.csv");
+        write_convergence_csv(&p, &stats).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.lines().count() > 2);
+        assert!(text.starts_with("method,trial,iter"));
+    }
+
+    #[test]
+    fn topwords_table_shapes() {
+        let words = vec![
+            vec!["alpha".into(), "beta".into()],
+            vec!["gamma".into()],
+        ];
+        let s = topwords_table(&words, 2);
+        assert!(s.contains("TW1"));
+        assert!(s.contains("alpha"));
+        assert!(s.contains("gamma"));
+    }
+}

@@ -1,0 +1,170 @@
+//! EDVW hypergraph → symmetric adjacency (paper §5.1, methodology of
+//! Hayashi, Aksoy, Park & Park, CIKM'20 [27]).
+//!
+//! Documents are vertices, terms are hyperedges, and the tf-idf value is
+//! the edge-dependent vertex weight γ_e(v). The clique expansion with
+//! EDVW gives the dense symmetric similarity matrix
+//!
+//! ```text
+//!     A = Γᵀ · diag(ω_e / δ_e) · Γ,   δ_e = Σ_v γ_e(v),  ω_e = 1,
+//! ```
+//!
+//! ("each hyperedge is expanded into a weighted clique" — §5.1), followed
+//! by the [35] preprocessing: zeroed diagonal + symmetric normalization.
+//! The result is dense (m×m), exactly the §5.1 regime.
+
+use crate::linalg::DenseMat;
+use crate::sparse::CsrMat;
+
+/// Build the dense EDVW adjacency from a docs×terms tf-idf matrix.
+pub fn edvw_adjacency(tfidf: &CsrMat) -> DenseMat {
+    let m = tfidf.rows();
+    let t = tfidf.cols();
+    // hyperedge degrees δ_e = Σ_v γ_e(v): column sums
+    let mut delta = vec![0.0f64; t];
+    for d in 0..m {
+        let (cols, vals) = tfidf.row(d);
+        for (&e, &v) in cols.iter().zip(vals) {
+            delta[e] += v;
+        }
+    }
+    // A = Σ_e (1/δ_e) γ_e γ_eᵀ — accumulate per hyperedge via a
+    // transposed (terms→docs) pass to keep it O(Σ_e |e|²).
+    let trans = transpose_csr(tfidf);
+    let mut a = DenseMat::zeros(m, m);
+    for e in 0..t {
+        if delta[e] <= 0.0 {
+            continue;
+        }
+        let (docs, gammas) = trans.row(e);
+        let inv = 1.0 / delta[e];
+        for (p, (&di, &gi)) in docs.iter().zip(gammas).enumerate() {
+            let wi = gi * inv;
+            // symmetric accumulation: handle pairs (p, q≥p)
+            for (&dj, &gj) in docs[p..].iter().zip(&gammas[p..]) {
+                let v = wi * gj;
+                *a.at_mut(di, dj) += v;
+                if di != dj {
+                    *a.at_mut(dj, di) += v;
+                }
+            }
+        }
+    }
+    // §5 preprocessing: zero diagonal, symmetric normalization
+    for i in 0..m {
+        a.set(i, i, 0.0);
+    }
+    let deg: Vec<f64> = (0..m)
+        .map(|i| a.row(i).iter().sum::<f64>())
+        .collect();
+    let dinv: Vec<f64> = deg
+        .iter()
+        .map(|&d| if d > 0.0 { 1.0 / d.sqrt() } else { 0.0 })
+        .collect();
+    for i in 0..m {
+        let di = dinv[i];
+        for j in 0..m {
+            *a.at_mut(i, j) *= di * dinv[j];
+        }
+    }
+    a
+}
+
+fn transpose_csr(x: &CsrMat) -> CsrMat {
+    let mut trips = Vec::with_capacity(x.nnz());
+    for i in 0..x.rows() {
+        let (cols, vals) = x.row(i);
+        for (&j, &v) in cols.iter().zip(vals) {
+            trips.push((j, i, v));
+        }
+    }
+    CsrMat::from_coo(x.cols(), x.rows(), trips)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{generate, tfidf, CorpusParams};
+
+    #[test]
+    fn adjacency_is_symmetric_nonneg_zero_diag() {
+        let c = generate(&CorpusParams {
+            num_docs: 50,
+            num_terms: 150,
+            num_topics: 5,
+            doc_len: 40,
+            noise: 0.2,
+            topic_mix: 0.0,
+            seed: 1,
+        });
+        let w = tfidf(&c.counts);
+        let a = edvw_adjacency(&w);
+        assert_eq!(a.shape(), (50, 50));
+        assert!(a.is_nonneg());
+        for i in 0..50 {
+            assert_eq!(a.at(i, i), 0.0);
+            for j in 0..50 {
+                assert!((a.at(i, j) - a.at(j, i)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn same_topic_docs_are_more_similar() {
+        let c = generate(&CorpusParams {
+            num_docs: 60,
+            num_terms: 300,
+            num_topics: 3,
+            doc_len: 60,
+            noise: 0.1,
+            topic_mix: 0.0,
+            seed: 2,
+        });
+        let w = tfidf(&c.counts);
+        let a = edvw_adjacency(&w);
+        // average within-topic vs cross-topic similarity
+        let mut within = (0.0, 0usize);
+        let mut across = (0.0, 0usize);
+        for i in 0..60 {
+            for j in (i + 1)..60 {
+                if c.labels[i] == c.labels[j] {
+                    within.0 += a.at(i, j);
+                    within.1 += 1;
+                } else {
+                    across.0 += a.at(i, j);
+                    across.1 += 1;
+                }
+            }
+        }
+        let w_avg = within.0 / within.1 as f64;
+        let a_avg = across.0 / across.1 as f64;
+        assert!(
+            w_avg > 3.0 * a_avg,
+            "within {w_avg} should dominate across {a_avg}"
+        );
+    }
+
+    #[test]
+    fn clique_expansion_matches_dense_formula() {
+        // tiny hand case: A = Γᵀ diag(1/δ) Γ with diagonal zeroed + norm
+        let g = CsrMat::from_coo(
+            3,
+            2,
+            vec![(0, 0, 1.0), (1, 0, 2.0), (1, 1, 1.0), (2, 1, 3.0)],
+        );
+        let a = edvw_adjacency(&g);
+        // edge 0: docs {0(1), 1(2)}, δ=3 → A01 += 1·2/3
+        // edge 1: docs {1(1), 2(3)}, δ=4 → A12 += 1·3/4
+        // before normalization: A01 = 2/3, A12 = 3/4, A02 = 0
+        let a01: f64 = 2.0 / 3.0;
+        let a12 = 0.75;
+        let d0 = a01;
+        let d1 = a01 + a12;
+        let d2 = a12;
+        let want01 = a01 / ((d0 * d1) as f64).sqrt();
+        let want12 = a12 / ((d1 * d2) as f64).sqrt();
+        assert!((a.at(0, 1) - want01).abs() < 1e-12);
+        assert!((a.at(1, 2) - want12).abs() < 1e-12);
+        assert_eq!(a.at(0, 2), 0.0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Data generation and construction pipelines for the §5 experiments.
+//!
+//! The paper's data sets (Web of Science, Microsoft OAG) are not
+//! redistributable / far beyond this testbed; per DESIGN.md §3 we build
+//! synthetic equivalents that exercise identical code paths:
+//!
+//! * [`corpus`] — a planted-topic document–term corpus with Zipf
+//!   vocabulary and tf-idf weighting (WoS stand-in), plus the topword
+//!   extraction used by Tables 3/7/8;
+//! * [`edvw`] — the EDVW hypergraph → symmetric adjacency construction
+//!   of [27] (documents = vertices, terms = hyperedges), producing the
+//!   dense symmetric input of §5.1;
+//! * [`sbm`] — a stochastic block model with a dominant core block
+//!   (OAG stand-in), producing the large sparse input of §5.2.
+
+pub mod corpus;
+pub mod edvw;
+pub mod sbm;

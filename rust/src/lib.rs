@@ -1,0 +1,43 @@
+//! # symnmf — Randomized Algorithms for Symmetric Nonnegative Matrix Factorization
+//!
+//! A full reproduction of Hayashi, Aksoy, Ballard & Park (2024):
+//! *Randomized Algorithms for Symmetric Nonnegative Matrix Factorization*.
+//!
+//! The crate implements, from scratch:
+//!
+//! * the two proposed randomized algorithms — [`symnmf::lai`] (LAI-SymNMF:
+//!   SymNMF of a randomized low-rank approximate input, with iterative
+//!   refinement and the adaptive randomized range finder) and
+//!   [`symnmf::lvs`] (LvS-SymNMF: leverage-score-sampled NLS subproblems
+//!   with the hybrid deterministic+random scheme of §4.2);
+//! * every deterministic baseline the paper compares against — regularized
+//!   ANLS with the BPP active-set solver, regularized HALS, PGNCG, and the
+//!   Compressed-NMF baseline of Tepper & Sapiro;
+//! * the RandNLA toolbox they build on — randomized range finder, adaptive
+//!   RRF, approximate truncated EVD, exact leverage scores via CholeskyQR,
+//!   hybrid sampling matrices;
+//! * the numerical substrate — dense blocked BLAS-like kernels, Cholesky /
+//!   CholeskyQR / Householder QR, a symmetric eigensolver, CSR sparse
+//!   matrices with SpMM and row sampling;
+//! * the evaluation stack — graph construction (EDVW hypergraph expansion,
+//!   stochastic block models), clustering (argmax assignment, ARI,
+//!   similarity silhouettes, k-means, a spectral-clustering baseline),
+//!   and an experiment driver that regenerates every table and figure of
+//!   the paper's §5.
+//!
+//! The dense per-iteration hot spot (the products `X·F` and `FᵀF`) can be
+//! executed either by the native rust kernels or through AOT-compiled
+//! XLA/PJRT executables whose HLO was lowered from a JAX model calling
+//! Pallas kernels (see `python/compile/` and [`runtime`]). Python never
+//! runs at request time.
+
+pub mod clustering;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod nls;
+pub mod randnla;
+pub mod runtime;
+pub mod sparse;
+pub mod symnmf;
+pub mod util;

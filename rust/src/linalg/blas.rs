@@ -1,0 +1,311 @@
+//! BLAS-like dense kernels, shaped for the paper's workloads.
+//!
+//! The SymNMF hot path multiplies a large square `X` (m×m) by a skinny
+//! factor `F` (m×k, k ≤ ~100). All kernels here use an i-k-j loop order
+//! with contiguous row accumulation: for each row `i` of the left operand
+//! the output row `out[i, :]` stays hot while rows of the right operand
+//! stream through cache. `parallel_for_chunks` splits the `i` range across
+//! cores when more than one is available.
+
+use crate::linalg::DenseMat;
+use crate::util::threadpool::parallel_for_chunks;
+
+/// C = A·B.
+pub fn matmul(a: &DenseMat, b: &DenseMat) -> DenseMat {
+    let mut c = DenseMat::zeros(a.rows(), b.cols());
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// C = A·B into a pre-allocated output (hot-path form; no allocation of
+/// the output).
+///
+/// Two regimes (§Perf): for skinny B (n ≤ 64 — the X·F shape that
+/// dominates every SymNMF iteration) B is transposed once and each output
+/// entry becomes a long contiguous dot product, which the autovectorizer
+/// turns into FMA streams; otherwise the row-axpy formulation is used.
+pub fn matmul_into(a: &DenseMat, b: &DenseMat, c: &mut DenseMat) {
+    let (m, ka) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(ka, kb, "matmul: {:?} x {:?}", a.shape(), b.shape());
+    assert_eq!(c.shape(), (m, n));
+    if n <= 64 && ka >= 32 {
+        // skinny-B path: bt rows are the columns of B, contiguous
+        let bt = b.transpose();
+        let adata = a.data();
+        let btdata = bt.data();
+        let cptr = SendPtr(c.data_mut().as_mut_ptr());
+        parallel_for_chunks(m, 64, move |lo, hi| {
+            let cdata = cptr;
+            for i in lo..hi {
+                let arow = &adata[i * ka..(i + 1) * ka];
+                let crow = unsafe {
+                    std::slice::from_raw_parts_mut(cdata.0.add(i * n), n)
+                };
+                for (j, cij) in crow.iter_mut().enumerate() {
+                    *cij = dot(arow, &btdata[j * ka..(j + 1) * ka]);
+                }
+            }
+        });
+        return;
+    }
+    let bdata = b.data();
+    let adata = a.data();
+    let cptr = SendPtr(c.data_mut().as_mut_ptr());
+    parallel_for_chunks(m, 64, move |lo, hi| {
+        let cdata = cptr;
+        for i in lo..hi {
+            let arow = &adata[i * ka..(i + 1) * ka];
+            // SAFETY: rows [lo, hi) are disjoint across workers.
+            let crow = unsafe {
+                std::slice::from_raw_parts_mut(cdata.0.add(i * n), n)
+            };
+            crow.fill(0.0);
+            for (kk, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &bdata[kk * n..(kk + 1) * n];
+                axpy(aik, brow, crow);
+            }
+        }
+    });
+}
+
+/// y += alpha * x  (contiguous slices).
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    // 4-way unrolled; the autovectorizer turns this into mul-add vectors.
+    let n = x.len();
+    let chunks = n / 4 * 4;
+    let (xh, xt) = x.split_at(chunks);
+    let (yh, yt) = y.split_at_mut(chunks);
+    for (xc, yc) in xh.chunks_exact(4).zip(yh.chunks_exact_mut(4)) {
+        yc[0] += alpha * xc[0];
+        yc[1] += alpha * xc[1];
+        yc[2] += alpha * xc[2];
+        yc[3] += alpha * xc[3];
+    }
+    for (xi, yi) in xt.iter().zip(yt.iter_mut()) {
+        *yi += alpha * xi;
+    }
+}
+
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc0 = 0.0;
+    let mut acc1 = 0.0;
+    let mut acc2 = 0.0;
+    let mut acc3 = 0.0;
+    let chunks = x.len() / 4 * 4;
+    let (xh, xt) = x.split_at(chunks);
+    let (yh, yt) = y.split_at(chunks);
+    for (xc, yc) in xh.chunks_exact(4).zip(yh.chunks_exact(4)) {
+        acc0 += xc[0] * yc[0];
+        acc1 += xc[1] * yc[1];
+        acc2 += xc[2] * yc[2];
+        acc3 += xc[3] * yc[3];
+    }
+    let mut acc = acc0 + acc1 + acc2 + acc3;
+    for (xi, yi) in xt.iter().zip(yt.iter()) {
+        acc += xi * yi;
+    }
+    acc
+}
+
+/// C = Aᵀ·B  (A: m×p, B: m×n → C: p×n), streaming both row-major operands
+/// once — no explicit transpose is materialized.
+pub fn matmul_tn(a: &DenseMat, b: &DenseMat) -> DenseMat {
+    let mut c = DenseMat::zeros(a.cols(), b.cols());
+    matmul_tn_into(a, b, &mut c);
+    c
+}
+
+pub fn matmul_tn_into(a: &DenseMat, b: &DenseMat, c: &mut DenseMat) {
+    let (m, p) = a.shape();
+    let (mb, n) = b.shape();
+    assert_eq!(m, mb, "matmul_tn: {:?}ᵀ x {:?}", a.shape(), b.shape());
+    assert_eq!(c.shape(), (p, n));
+    c.data_mut().fill(0.0);
+    let cdata = c.data_mut();
+    for i in 0..m {
+        let arow = a.row(i);
+        let brow = b.row(i);
+        for (t, &ait) in arow.iter().enumerate() {
+            if ait == 0.0 {
+                continue;
+            }
+            axpy(ait, brow, &mut cdata[t * n..(t + 1) * n]);
+        }
+    }
+}
+
+/// C = A·Bᵀ (A: m×p, B: n×p → C: m×n): each output entry is a dot of two
+/// contiguous rows.
+pub fn matmul_nt(a: &DenseMat, b: &DenseMat) -> DenseMat {
+    let (m, p) = a.shape();
+    let (n, pb) = b.shape();
+    assert_eq!(p, pb, "matmul_nt: {:?} x {:?}ᵀ", a.shape(), b.shape());
+    let mut c = DenseMat::zeros(m, n);
+    let cn = c.cols();
+    let cptr = SendPtr(c.data_mut().as_mut_ptr());
+    parallel_for_chunks(m, 64, move |lo, hi| {
+        let cdata = cptr;
+        for i in lo..hi {
+            let arow = a.row(i);
+            let crow = unsafe {
+                std::slice::from_raw_parts_mut(cdata.0.add(i * cn), cn)
+            };
+            for (j, cij) in crow.iter_mut().enumerate() {
+                *cij = dot(arow, b.row(j));
+            }
+        }
+    });
+    c
+}
+
+/// Gram matrix G = FᵀF (k×k), exploiting symmetry (SYRK): only the upper
+/// triangle is accumulated, then mirrored.
+pub fn gram(f: &DenseMat) -> DenseMat {
+    let (m, k) = f.shape();
+    let mut g = DenseMat::zeros(k, k);
+    {
+        let gd = g.data_mut();
+        for i in 0..m {
+            let row = f.row(i);
+            for t in 0..k {
+                let v = row[t];
+                if v == 0.0 {
+                    continue;
+                }
+                let grow = &mut gd[t * k..(t + 1) * k];
+                for u in t..k {
+                    grow[u] += v * row[u];
+                }
+            }
+        }
+    }
+    for t in 0..k {
+        for u in (t + 1)..k {
+            let v = g.at(t, u);
+            g.set(u, t, v);
+        }
+    }
+    g
+}
+
+/// out = X·F where X is a large symmetric square matrix. Currently an
+/// alias of `matmul_into`; kept distinct so a symmetry-exploiting or
+/// PJRT-dispatched kernel can slot in without touching call sites.
+pub fn symm_tall_into(x: &DenseMat, f: &DenseMat, out: &mut DenseMat) {
+    matmul_into(x, f, out);
+}
+
+/// Raw mutable pointer wrapper so disjoint row ranges can be written from
+/// scoped worker threads.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{dim, forall};
+    use crate::util::rng::Pcg64;
+
+    fn naive_matmul(a: &DenseMat, b: &DenseMat) -> DenseMat {
+        let (m, k) = a.shape();
+        let n = b.cols();
+        DenseMat::from_fn(m, n, |i, j| {
+            (0..k).map(|t| a.at(i, t) * b.at(t, j)).sum()
+        })
+    }
+
+    #[test]
+    fn matmul_matches_naive_property() {
+        forall(
+            20,
+            100,
+            |rng| {
+                let m = dim(rng, 1, 30);
+                let k = dim(rng, 1, 30);
+                let n = dim(rng, 1, 30);
+                (DenseMat::gaussian(m, k, rng), DenseMat::gaussian(k, n, rng))
+            },
+            |(a, b)| {
+                let got = matmul(a, b);
+                let want = naive_matmul(a, b);
+                let err = got.diff_fro(&want);
+                if err < 1e-10 * (1.0 + want.fro_norm()) {
+                    Ok(())
+                } else {
+                    Err(format!("err={err}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn tn_and_nt_match_explicit_transpose() {
+        forall(
+            15,
+            200,
+            |rng| {
+                let m = dim(rng, 1, 25);
+                let p = dim(rng, 1, 25);
+                let n = dim(rng, 1, 25);
+                (DenseMat::gaussian(m, p, rng), DenseMat::gaussian(m, n, rng),
+                 DenseMat::gaussian(n, p, rng))
+            },
+            |(a, b, c)| {
+                let tn = matmul_tn(a, b);
+                let tn_want = naive_matmul(&a.transpose(), b);
+                if tn.diff_fro(&tn_want) > 1e-10 * (1.0 + tn_want.fro_norm()) {
+                    return Err("tn mismatch".into());
+                }
+                let nt = matmul_nt(a, c);
+                let nt_want = naive_matmul(a, &c.transpose());
+                if nt.diff_fro(&nt_want) > 1e-10 * (1.0 + nt_want.fro_norm()) {
+                    return Err("nt mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn gram_matches_tn_and_is_symmetric_psd() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        let f = DenseMat::gaussian(40, 9, &mut rng);
+        let g = gram(&f);
+        let want = matmul_tn(&f, &f);
+        assert!(g.diff_fro(&want) < 1e-10);
+        for i in 0..9 {
+            assert!(g.at(i, i) >= 0.0);
+            for j in 0..9 {
+                assert!((g.at(i, j) - g.at(j, i)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Pcg64::seed_from_u64(6);
+        let a = DenseMat::gaussian(8, 8, &mut rng);
+        let i = DenseMat::eye(8);
+        assert!(matmul(&a, &i).diff_fro(&a) < 1e-14);
+        assert!(matmul(&i, &a).diff_fro(&a) < 1e-14);
+    }
+
+    #[test]
+    fn dot_and_axpy() {
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut y = vec![1.0; 5];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![3.0, 5.0, 7.0, 9.0, 11.0]);
+        assert_eq!(dot(&x, &x), 55.0);
+    }
+}

@@ -1,0 +1,179 @@
+//! Cholesky factorization and triangular solves.
+//!
+//! Used by CholeskyQR (paper Alg. LvS-SymNMF lines 4–5 and 11–12): the
+//! Gram matrix FᵀF is factored as RᵀR, then Q = F·R⁻¹ is obtained by a
+//! right triangular solve applied row-by-row.
+
+use crate::linalg::DenseMat;
+
+/// Upper-triangular Cholesky factor R of a symmetric positive-definite
+/// matrix A = RᵀR. Returns Err if a pivot is not positive (A not SPD).
+pub fn cholesky_upper(a: &DenseMat) -> Result<DenseMat, String> {
+    let n = a.rows();
+    assert_eq!(a.rows(), a.cols());
+    let mut r = DenseMat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            let mut sum = a.at(i, j);
+            for k in 0..i {
+                sum -= r.at(k, i) * r.at(k, j);
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(format!(
+                        "cholesky: non-positive pivot {sum:.3e} at {i}"
+                    ));
+                }
+                r.set(i, j, sum.sqrt());
+            } else {
+                r.set(i, j, sum / r.at(i, i));
+            }
+        }
+    }
+    Ok(r)
+}
+
+/// Cholesky with diagonal jitter retry: A + εI for growing ε. Returns the
+/// factor and the jitter actually used. LvS-SymNMF calls this on HᵀH
+/// which can be numerically semidefinite early in the iteration.
+pub fn cholesky_upper_jittered(a: &DenseMat) -> (DenseMat, f64) {
+    if let Ok(r) = cholesky_upper(a) {
+        return (r, 0.0);
+    }
+    let scale = (0..a.rows()).map(|i| a.at(i, i)).fold(0.0f64, f64::max).max(1e-300);
+    let mut eps = scale * 1e-14;
+    loop {
+        let mut aj = a.clone();
+        for i in 0..a.rows() {
+            *aj.at_mut(i, i) += eps;
+        }
+        if let Ok(r) = cholesky_upper(&aj) {
+            return (r, eps);
+        }
+        eps *= 10.0;
+        assert!(eps.is_finite(), "cholesky jitter diverged");
+    }
+}
+
+/// Solve Q·R = F for Q given upper-triangular R, i.e. each row q of Q
+/// satisfies qᵀR = fᵀ → forward substitution over columns.
+pub fn solve_right_upper(f: &DenseMat, r: &DenseMat) -> DenseMat {
+    let (m, k) = f.shape();
+    assert_eq!(r.shape(), (k, k));
+    let mut q = f.clone();
+    for i in 0..m {
+        let row = q.row_mut(i);
+        for j in 0..k {
+            let mut v = row[j];
+            for t in 0..j {
+                v -= row[t] * r.at(t, j);
+            }
+            row[j] = v / r.at(j, j);
+        }
+    }
+    q
+}
+
+/// Solve Rᵀ·y = b (forward substitution), single RHS.
+pub fn solve_lower_t(r: &DenseMat, b: &[f64]) -> Vec<f64> {
+    let n = r.rows();
+    assert_eq!(b.len(), n);
+    let mut y = b.to_vec();
+    for i in 0..n {
+        for k in 0..i {
+            y[i] -= r.at(k, i) * y[k];
+        }
+        y[i] /= r.at(i, i);
+    }
+    y
+}
+
+/// Solve R·x = y (back substitution), single RHS.
+pub fn solve_upper(r: &DenseMat, y: &[f64]) -> Vec<f64> {
+    let n = r.rows();
+    assert_eq!(y.len(), n);
+    let mut x = y.to_vec();
+    for i in (0..n).rev() {
+        for k in (i + 1)..n {
+            x[i] -= r.at(i, k) * x[k];
+        }
+        x[i] /= r.at(i, i);
+    }
+    x
+}
+
+/// Solve the SPD system A·x = b via Cholesky (A = RᵀR → Rᵀy = b, Rx = y).
+pub fn spd_solve(a: &DenseMat, b: &[f64]) -> Result<Vec<f64>, String> {
+    let r = cholesky_upper(a)?;
+    Ok(solve_upper(&r, &solve_lower_t(&r, b)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas;
+    use crate::util::propcheck::{dim, forall};
+    use crate::util::rng::Pcg64;
+
+    fn random_spd(n: usize, rng: &mut Pcg64) -> DenseMat {
+        let f = DenseMat::gaussian(n + 4, n, rng);
+        let mut g = blas::gram(&f);
+        for i in 0..n {
+            *g.at_mut(i, i) += 0.1;
+        }
+        g
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        forall(
+            20,
+            300,
+            |rng| random_spd(dim(rng, 1, 20), rng),
+            |a| {
+                let r = cholesky_upper(a).map_err(|e| e)?;
+                let rtr = blas::matmul_tn(&r, &r);
+                let err = rtr.diff_fro(a) / a.fro_norm();
+                if err < 1e-12 {
+                    Ok(())
+                } else {
+                    Err(format!("rel err {err}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = DenseMat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]);
+        assert!(cholesky_upper(&a).is_err());
+        let (r, eps) = cholesky_upper_jittered(&a);
+        assert!(eps > 0.0);
+        assert_eq!(r.shape(), (2, 2));
+    }
+
+    #[test]
+    fn spd_solve_matches() {
+        let mut rng = Pcg64::seed_from_u64(8);
+        let a = random_spd(6, &mut rng);
+        let x_true: Vec<f64> = rng.gaussian_vec(6);
+        let b: Vec<f64> = (0..6)
+            .map(|i| (0..6).map(|j| a.at(i, j) * x_true[j]).sum())
+            .collect();
+        let x = spd_solve(&a, &b).unwrap();
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-9, "{x:?} vs {x_true:?}");
+        }
+    }
+
+    #[test]
+    fn right_solve_gives_orthonormal_q() {
+        let mut rng = Pcg64::seed_from_u64(9);
+        let f = DenseMat::gaussian(50, 7, &mut rng);
+        let g = blas::gram(&f);
+        let r = cholesky_upper(&g).unwrap();
+        let q = solve_right_upper(&f, &r);
+        let qtq = blas::gram(&q);
+        assert!(qtq.diff_fro(&DenseMat::eye(7)) < 1e-10);
+    }
+}

@@ -1,0 +1,298 @@
+//! Row-major dense f64 matrix.
+//!
+//! Row-major layout is chosen deliberately: the NMF factors W, H are tall
+//! (m×k) and every per-row operation in the paper — BPP's per-row QPs
+//! (App. E), leverage-score row norms (Eq. 2.10), sampled-row gathers
+//! (Eq. 2.11) — touches contiguous memory.
+
+use crate::util::rng::Pcg64;
+
+/// Dense row-major matrix of f64.
+#[derive(Clone, PartialEq)]
+pub struct DenseMat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl std::fmt::Debug for DenseMat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "DenseMat({}x{})", self.rows, self.cols)?;
+        if self.rows * self.cols <= 64 {
+            for i in 0..self.rows {
+                write!(f, "\n  {:?}", self.row(i))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl DenseMat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        DenseMat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        DenseMat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        DenseMat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// i.i.d. standard Gaussian entries (the Ω of Alg. RRF line 3).
+    pub fn gaussian(rows: usize, cols: usize, rng: &mut Pcg64) -> Self {
+        DenseMat { rows, cols, data: rng.gaussian_vec(rows * cols) }
+    }
+
+    /// Entries uniform in [0, scale).
+    pub fn uniform(rows: usize, cols: usize, scale: f64, rng: &mut Pcg64) -> Self {
+        let data = (0..rows * cols).map(|_| rng.uniform() * scale).collect();
+        DenseMat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self.set(i, j, v[i]);
+        }
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn transpose(&self) -> DenseMat {
+        let mut out = DenseMat::zeros(self.cols, self.rows);
+        // blocked transpose for cache friendliness on big matrices
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Gather rows by index into a new matrix (the row-sampling S·A).
+    pub fn gather_rows(&self, idx: &[usize]) -> DenseMat {
+        let mut out = DenseMat::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Gather rows and scale row r by `scale[r]` (leverage-score rescaling
+    /// 1/√(s·p_i) of Eq. 2.11 applied during the gather).
+    pub fn gather_rows_scaled(&self, idx: &[usize], scale: &[f64]) -> DenseMat {
+        assert_eq!(idx.len(), scale.len());
+        let mut out = DenseMat::zeros(idx.len(), self.cols);
+        for (r, (&i, &s)) in idx.iter().zip(scale.iter()).enumerate() {
+            for (o, &v) in out.row_mut(r).iter_mut().zip(self.row(i)) {
+                *o = v * s;
+            }
+        }
+        out
+    }
+
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum()
+    }
+
+    pub fn fro_norm(&self) -> f64 {
+        self.fro_norm_sq().sqrt()
+    }
+
+    /// max entry
+    pub fn max_value(&self) -> f64 {
+        self.data.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// mean of all entries (the ζ of the §5 init strategy)
+    pub fn mean(&self) -> f64 {
+        self.data.iter().sum::<f64>() / (self.data.len() as f64)
+    }
+
+    /// self += alpha * other
+    pub fn axpy(&mut self, alpha: f64, other: &DenseMat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f64) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// Projection onto the nonnegative orthant, [·]_+ in the paper.
+    pub fn project_nonneg(&mut self) {
+        for a in self.data.iter_mut() {
+            if *a < 0.0 {
+                *a = 0.0;
+            }
+        }
+    }
+
+    pub fn is_nonneg(&self) -> bool {
+        self.data.iter().all(|&x| x >= 0.0)
+    }
+
+    /// ‖self − other‖_F
+    pub fn diff_fro(&self, other: &DenseMat) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Symmetrize in place: A ← (A + Aᵀ)/2.
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let v = 0.5 * (self.at(i, j) + self.at(j, i));
+                self.set(i, j, v);
+                self.set(j, i, v);
+            }
+        }
+    }
+
+    /// f32 copy (PJRT boundary).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    /// From an f32 buffer (PJRT boundary).
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> DenseMat {
+        assert_eq!(data.len(), rows * cols);
+        DenseMat { rows, cols, data: data.iter().map(|&x| x as f64).collect() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_ops() {
+        let a = DenseMat::from_fn(3, 2, |i, j| (i * 2 + j) as f64);
+        assert_eq!(a.at(2, 1), 5.0);
+        assert_eq!(a.row(1), &[2.0, 3.0]);
+        assert_eq!(a.col(0), vec![0.0, 2.0, 4.0]);
+        let t = a.transpose();
+        assert_eq!(t.shape(), (2, 3));
+        assert_eq!(t.at(1, 2), 5.0);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let a = DenseMat::gaussian(37, 53, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn gather_rows_scaled_matches_manual() {
+        let a = DenseMat::from_fn(4, 3, |i, j| (i * 3 + j) as f64);
+        let g = a.gather_rows_scaled(&[2, 0, 2], &[2.0, 1.0, 0.5]);
+        assert_eq!(g.row(0), &[12.0, 14.0, 16.0]);
+        assert_eq!(g.row(1), &[0.0, 1.0, 2.0]);
+        assert_eq!(g.row(2), &[3.0, 3.5, 4.0]);
+    }
+
+    #[test]
+    fn project_nonneg_and_norms() {
+        let mut a = DenseMat::from_vec(2, 2, vec![1.0, -2.0, 3.0, -4.0]);
+        assert!(!a.is_nonneg());
+        a.project_nonneg();
+        assert!(a.is_nonneg());
+        assert_eq!(a.fro_norm_sq(), 10.0);
+    }
+
+    #[test]
+    fn symmetrize_works() {
+        let mut a = DenseMat::from_vec(2, 2, vec![1.0, 2.0, 4.0, 5.0]);
+        a.symmetrize();
+        assert_eq!(a.at(0, 1), 3.0);
+        assert_eq!(a.at(1, 0), 3.0);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let a = DenseMat::gaussian(5, 7, &mut rng);
+        let b = DenseMat::from_f32(5, 7, &a.to_f32());
+        assert!(a.diff_fro(&b) < 1e-5);
+    }
+}

@@ -1,0 +1,175 @@
+//! Symmetric eigensolver: cyclic Jacobi rotations.
+//!
+//! Apx-EVD (paper Alg. Apx-EVD line 5) needs the full EVD of the small
+//! projected matrix T = QᵀXQ ∈ R^{l×l} with l = k + ρ ≤ ~130. Cyclic
+//! Jacobi is O(l³) per sweep, converges in a handful of sweeps, is
+//! unconditionally stable, and returns an orthogonal eigenvector matrix —
+//! exactly what the randomized EVD needs.
+
+use crate::linalg::DenseMat;
+
+/// Eigen-decomposition A = V·diag(w)·Vᵀ of a symmetric matrix.
+/// Eigenvalues are returned sorted by decreasing |w| (the order Apx-EVD
+/// wants: leading eigenpairs first); columns of V are the matching
+/// eigenvectors.
+pub fn symmetric_eig(a: &DenseMat) -> (Vec<f64>, DenseMat) {
+    let n = a.rows();
+    assert_eq!(a.rows(), a.cols(), "symmetric_eig needs a square matrix");
+    let mut m = a.clone();
+    m.symmetrize();
+    let mut v = DenseMat::eye(n);
+
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += m.at(p, q) * m.at(p, q);
+            }
+        }
+        let scale = m.fro_norm_sq().max(1e-300);
+        if off / scale < 1e-30 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.at(p, q);
+                if apq == 0.0 {
+                    continue;
+                }
+                let app = m.at(p, p);
+                let aqq = m.at(q, q);
+                // Rutishauser-stable rotation
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rows/cols p and q of m
+                for i in 0..n {
+                    let mip = m.at(i, p);
+                    let miq = m.at(i, q);
+                    m.set(i, p, c * mip - s * miq);
+                    m.set(i, q, s * mip + c * miq);
+                }
+                for j in 0..n {
+                    let mpj = m.at(p, j);
+                    let mqj = m.at(q, j);
+                    m.set(p, j, c * mpj - s * mqj);
+                    m.set(q, j, s * mpj + c * mqj);
+                }
+                for i in 0..n {
+                    let vip = v.at(i, p);
+                    let viq = v.at(i, q);
+                    v.set(i, p, c * vip - s * viq);
+                    v.set(i, q, s * vip + c * viq);
+                }
+            }
+        }
+    }
+
+    let mut w: Vec<f64> = (0..n).map(|i| m.at(i, i)).collect();
+    // sort by decreasing magnitude, permute eigenvector columns to match
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| w[b].abs().partial_cmp(&w[a].abs()).unwrap());
+    let w_sorted: Vec<f64> = order.iter().map(|&i| w[i]).collect();
+    let mut v_sorted = DenseMat::zeros(n, n);
+    for (newj, &oldj) in order.iter().enumerate() {
+        for i in 0..n {
+            v_sorted.set(i, newj, v.at(i, oldj));
+        }
+    }
+    w = w_sorted;
+    (w, v_sorted)
+}
+
+/// Largest singular value (2-norm) of a small matrix, via the square root
+/// of the largest eigenvalue of AᵀA. Used by tests and the Theorem 2.1
+/// verification harness (σ_min / σ_max of the NLS coefficient matrix).
+pub fn singular_values(a: &DenseMat) -> Vec<f64> {
+    let g = crate::linalg::blas::gram(a);
+    let (w, _) = symmetric_eig(&g);
+    let mut sv: Vec<f64> = w.iter().map(|&x| x.max(0.0).sqrt()).collect();
+    sv.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    sv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas;
+    use crate::util::propcheck::{dim, forall};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn reconstructs_symmetric_matrix() {
+        forall(
+            15,
+            700,
+            |rng| {
+                let n = dim(rng, 1, 20);
+                let mut a = DenseMat::gaussian(n, n, rng);
+                a.symmetrize();
+                a
+            },
+            |a| {
+                let n = a.rows();
+                let (w, v) = symmetric_eig(a);
+                // A·V = V·diag(w)
+                let av = blas::matmul(a, &v);
+                let mut vd = v.clone();
+                for j in 0..n {
+                    for i in 0..n {
+                        *vd.at_mut(i, j) *= w[j];
+                    }
+                }
+                let err = av.diff_fro(&vd) / (1.0 + a.fro_norm());
+                if err < 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("AV−VΛ err {err:.2e}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn eigvecs_orthonormal() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let mut a = DenseMat::gaussian(15, 15, &mut rng);
+        a.symmetrize();
+        let (_w, v) = symmetric_eig(&a);
+        let vtv = blas::gram(&v);
+        assert!(vtv.diff_fro(&DenseMat::eye(15)) < 1e-10);
+    }
+
+    #[test]
+    fn known_eigenvalues() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1.
+        let a = DenseMat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let (w, _) = symmetric_eig(&a);
+        assert!((w[0] - 3.0).abs() < 1e-12);
+        assert!((w[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sorted_by_magnitude() {
+        let mut rng = Pcg64::seed_from_u64(13);
+        let mut a = DenseMat::gaussian(12, 12, &mut rng);
+        a.symmetrize();
+        let (w, _) = symmetric_eig(&a);
+        for i in 1..w.len() {
+            assert!(w[i - 1].abs() >= w[i].abs() - 1e-12);
+        }
+    }
+
+    #[test]
+    fn singular_values_of_orthonormal_are_ones() {
+        let mut rng = Pcg64::seed_from_u64(17);
+        let f = DenseMat::gaussian(30, 5, &mut rng);
+        let (q, _) = crate::linalg::qr::householder_qr(&f);
+        let sv = singular_values(&q);
+        for s in sv {
+            assert!((s - 1.0).abs() < 1e-8);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Dense numerical linear algebra substrate (f64, row-major).
+//!
+//! Everything the paper's algorithms need is implemented here from
+//! scratch: blocked matmul/Gram kernels ([`blas`]), Cholesky factorization
+//! and triangular solves ([`chol`]), CholeskyQR + Householder QR and row
+//! leverage scores ([`qr`]), and a cyclic-Jacobi symmetric eigensolver
+//! ([`eig`]) used by Apx-EVD (paper Alg. Apx-EVD line 5).
+
+pub mod blas;
+pub mod chol;
+pub mod dense;
+pub mod eig;
+pub mod qr;
+
+pub use dense::DenseMat;

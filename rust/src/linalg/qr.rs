@@ -1,0 +1,262 @@
+//! Thin QR decompositions and row leverage scores.
+//!
+//! The paper computes exact leverage scores of the factor matrices every
+//! iteration via **CholeskyQR** (§4.2: "CholeskyQR is numerically less
+//! stable than Householder QR but faster and empirically we find that it
+//! works well for computing leverage scores"). We implement both:
+//! CholeskyQR is the fast path, Householder the stable fallback and test
+//! oracle.
+
+use crate::linalg::{blas, chol, DenseMat};
+
+/// Thin QR via CholeskyQR: G = FᵀF = RᵀR, Q = F·R⁻¹. Cost O(mk²).
+/// Falls back to jittered Cholesky if G is numerically semidefinite.
+pub fn cholesky_qr(f: &DenseMat) -> (DenseMat, DenseMat) {
+    let g = blas::gram(f);
+    let (r, _eps) = chol::cholesky_upper_jittered(&g);
+    let q = chol::solve_right_upper(f, &r);
+    (q, r)
+}
+
+/// Orthonormal basis for range(F): CholeskyQR fast path, Householder
+/// fallback when the Gram matrix needed diagonal jitter (rank-deficient
+/// or extremely ill-conditioned F, where CholQR's orthogonality breaks).
+/// This is the per-power-step orthonormalization of the RRF (§Perf).
+pub fn orthonormalize(f: &DenseMat) -> DenseMat {
+    let g = blas::gram(f);
+    let scale = (0..g.rows()).map(|i| g.at(i, i)).fold(0.0f64, f64::max);
+    match chol::cholesky_upper(&g) {
+        Ok(r) => {
+            // reject borderline factors: tiny trailing pivot → CholQR
+            // orthogonality loss
+            let min_piv = (0..r.rows()).map(|i| r.at(i, i)).fold(f64::INFINITY, f64::min);
+            if min_piv * min_piv > scale * 1e-10 {
+                return chol::solve_right_upper(f, &r);
+            }
+            householder_qr(f).0
+        }
+        Err(_) => householder_qr(f).0,
+    }
+}
+
+/// Thin Householder QR (returns Q: m×k with orthonormal columns, R: k×k
+/// upper-triangular). O(mk²), numerically robust; used as the oracle and
+/// inside the RRF where orthonormality quality matters across power
+/// iterations.
+pub fn householder_qr(f: &DenseMat) -> (DenseMat, DenseMat) {
+    let (m, k) = f.shape();
+    assert!(m >= k, "householder_qr expects a tall matrix, got {m}x{k}");
+    let mut a = f.clone();
+    // Householder vectors stored below the diagonal of `a`; betas aside.
+    let mut betas = vec![0.0f64; k];
+    for j in 0..k {
+        // norm of column j below row j
+        let mut norm_sq = 0.0;
+        for i in j..m {
+            let v = a.at(i, j);
+            norm_sq += v * v;
+        }
+        let norm = norm_sq.sqrt();
+        if norm == 0.0 {
+            betas[j] = 0.0;
+            continue;
+        }
+        let a0 = a.at(j, j);
+        let alpha = if a0 >= 0.0 { -norm } else { norm };
+        // v = x - alpha e1, normalized so v[0] = 1
+        let v0 = a0 - alpha;
+        betas[j] = -v0 / alpha; // beta = 2/(vᵀv) with v0=1 scaling
+        for i in (j + 1)..m {
+            *a.at_mut(i, j) /= v0;
+        }
+        a.set(j, j, alpha);
+        // apply reflector to trailing columns
+        for c in (j + 1)..k {
+            let mut s = a.at(j, c);
+            for i in (j + 1)..m {
+                s += a.at(i, j) * a.at(i, c);
+            }
+            s *= betas[j];
+            *a.at_mut(j, c) -= s;
+            for i in (j + 1)..m {
+                let vij = a.at(i, j);
+                *a.at_mut(i, c) -= s * vij;
+            }
+        }
+    }
+    // R is the upper triangle
+    let mut r = DenseMat::zeros(k, k);
+    for i in 0..k {
+        for j in i..k {
+            r.set(i, j, a.at(i, j));
+        }
+    }
+    // form thin Q by applying reflectors to the first k columns of I
+    let mut q = DenseMat::zeros(m, k);
+    for i in 0..k {
+        q.set(i, i, 1.0);
+    }
+    for j in (0..k).rev() {
+        if betas[j] == 0.0 {
+            continue;
+        }
+        for c in 0..k {
+            let mut s = q.at(j, c);
+            for i in (j + 1)..m {
+                s += a.at(i, j) * q.at(i, c);
+            }
+            s *= betas[j];
+            *q.at_mut(j, c) -= s;
+            for i in (j + 1)..m {
+                let vij = a.at(i, j);
+                *q.at_mut(i, c) -= s * vij;
+            }
+        }
+    }
+    (q, r)
+}
+
+/// Row leverage scores l_i = ‖Q[i,:]‖² (paper Eq. 2.10) from any matrix
+/// with orthonormal columns. Σ l_i = k.
+pub fn leverage_scores_from_q(q: &DenseMat) -> Vec<f64> {
+    (0..q.rows())
+        .map(|i| blas::dot(q.row(i), q.row(i)))
+        .collect()
+}
+
+/// Leverage scores of a tall full-rank matrix F via CholeskyQR. O(mk²).
+pub fn leverage_scores(f: &DenseMat) -> Vec<f64> {
+    leverage_scores_via_chol(f)
+}
+
+/// Q-free leverage scores (§Perf): l_i = ‖R⁻ᵀ f_i‖² with G = FᵀF = RᵀR.
+/// Never materializes the m×k Q — each row's forward substitution runs in
+/// a k-sized stack buffer, saving 2·m·k·8 bytes of traffic per call
+/// (called twice per LvS iteration).
+pub fn leverage_scores_via_chol(f: &DenseMat) -> Vec<f64> {
+    let (m, k) = f.shape();
+    let g = blas::gram(f);
+    let (r, _eps) = chol::cholesky_upper_jittered(&g);
+    let mut z = vec![0.0f64; k];
+    let mut out = Vec::with_capacity(m);
+    for i in 0..m {
+        let fi = f.row(i);
+        // solve Rᵀ z = f_i (forward substitution; Rᵀ is lower-triangular)
+        for a in 0..k {
+            let mut v = fi[a];
+            for b in 0..a {
+                v -= r.at(b, a) * z[b];
+            }
+            z[a] = v / r.at(a, a);
+        }
+        out.push(blas::dot(&z, &z));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{dim, forall};
+    use crate::util::rng::Pcg64;
+
+    fn check_qr(f: &DenseMat, q: &DenseMat, r: &DenseMat, tol: f64) -> Result<(), String> {
+        let k = f.cols();
+        let qtq = blas::gram(q);
+        let orth_err = qtq.diff_fro(&DenseMat::eye(k));
+        if orth_err > tol {
+            return Err(format!("QᵀQ−I = {orth_err:.2e}"));
+        }
+        let qr = blas::matmul(q, r);
+        let rec_err = qr.diff_fro(f) / (1.0 + f.fro_norm());
+        if rec_err > tol {
+            return Err(format!("QR−F = {rec_err:.2e}"));
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn cholesky_qr_property() {
+        forall(
+            20,
+            400,
+            |rng| {
+                let k = dim(rng, 1, 12);
+                let m = k + dim(rng, 0, 40);
+                DenseMat::gaussian(m, k, rng)
+            },
+            |f| {
+                let (q, r) = cholesky_qr(f);
+                check_qr(f, &q, &r, 1e-8)
+            },
+        );
+    }
+
+    #[test]
+    fn householder_qr_property() {
+        forall(
+            20,
+            500,
+            |rng| {
+                let k = dim(rng, 1, 12);
+                let m = k + dim(rng, 0, 40);
+                DenseMat::gaussian(m, k, rng)
+            },
+            |f| {
+                let (q, r) = householder_qr(f);
+                check_qr(f, &q, &r, 1e-10)
+            },
+        );
+    }
+
+    #[test]
+    fn householder_handles_ill_conditioned() {
+        // nearly collinear columns — CholeskyQR squares the condition
+        // number; Householder must still produce an orthonormal Q.
+        let mut rng = Pcg64::seed_from_u64(77);
+        let base = rng.gaussian_vec(60);
+        let f = DenseMat::from_fn(60, 3, |i, j| {
+            base[i] + 1e-7 * (i as f64 * (j as f64 + 1.0)).sin()
+        });
+        let (q, _r) = householder_qr(&f);
+        let orth = blas::gram(&q).diff_fro(&DenseMat::eye(3));
+        assert!(orth < 1e-8, "orth err {orth}");
+    }
+
+    #[test]
+    fn leverage_scores_sum_to_k() {
+        forall(
+            15,
+            600,
+            |rng| {
+                let k = dim(rng, 1, 10);
+                let m = k + dim(rng, 5, 60);
+                DenseMat::gaussian(m, k, rng)
+            },
+            |f| {
+                let l = leverage_scores(f);
+                let sum: f64 = l.iter().sum();
+                let k = f.cols() as f64;
+                if l.iter().all(|&x| x >= -1e-12 && x <= 1.0 + 1e-8)
+                    && (sum - k).abs() < 1e-6
+                {
+                    Ok(())
+                } else {
+                    Err(format!("sum={sum}, k={k}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn leverage_scores_detect_spiked_row() {
+        // One huge row dominates the column space → its score → ~1.
+        let mut rng = Pcg64::seed_from_u64(21);
+        let mut f = DenseMat::gaussian(100, 4, &mut rng);
+        for j in 0..4 {
+            f.set(17, j, 1000.0 * (j as f64 + 1.0));
+        }
+        let l = leverage_scores(&f);
+        assert!(l[17] > 0.99, "spiked row score {}", l[17]);
+    }
+}

@@ -1,0 +1,161 @@
+//! `symnmf` CLI — run SymNMF methods on generated workloads or
+//! MatrixMarket graphs, inspect artifacts, and print runtime diagnostics.
+//!
+//! Examples:
+//!   symnmf run --workload wos --docs 800 --method lai-hals --trials 3
+//!   symnmf run --workload oag --m 5000 --method lvs-hals --tau 0.001
+//!   symnmf run --input graph.mtx --k 8 --method bpp
+//!   symnmf artifacts            # list loaded AOT artifacts
+//!   symnmf info                 # platform / runtime diagnostics
+
+use symnmf::coordinator::driver::{run_trials, Method};
+use symnmf::coordinator::{experiments, report};
+use symnmf::nls::UpdateRule;
+use symnmf::runtime::registry::Registry;
+use symnmf::runtime::PjrtRuntime;
+use symnmf::symnmf::options::{SymNmfOptions, Tau};
+use symnmf::util::cli::Args;
+
+fn parse_method(s: &str, tau: Tau) -> Option<Method> {
+    let s = s.to_ascii_lowercase();
+    let rule = UpdateRule::parse;
+    Some(match s.as_str() {
+        "bpp" | "hals" | "mu" => Method::Exact(rule(&s)?),
+        "pgncg" => Method::Pgncg,
+        "lai-pgncg" => Method::LaiPgncg { refine: false },
+        "lai-pgncg-ir" => Method::LaiPgncg { refine: true },
+        _ => {
+            if let Some(rest) = s.strip_prefix("lai-") {
+                let (r, refine) = match rest.strip_suffix("-ir") {
+                    Some(r) => (r, true),
+                    None => (rest, false),
+                };
+                Method::Lai { rule: rule(r)?, refine }
+            } else if let Some(r) = s.strip_prefix("comp-") {
+                Method::Comp(rule(r)?)
+            } else if let Some(r) = s.strip_prefix("lvs-") {
+                Method::Lvs { rule: rule(r)?, tau }
+            } else {
+                return None;
+            }
+        }
+    })
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    let tau = match args.get("tau") {
+        Some(t) => Tau::Fixed(t.parse().map_err(|e| format!("bad --tau: {e}"))?),
+        None => Tau::OneOverS,
+    };
+    let method = parse_method(args.get_str("method", "bpp"), tau)
+        .ok_or_else(|| format!("unknown method {:?}", args.get_str("method", "")))?;
+    let trials = args.get_usize("trials", 1);
+    let seed = args.get_usize("seed", 0) as u64;
+
+    if let Some(path) = args.get("input") {
+        // user-supplied MatrixMarket graph
+        let mut adj =
+            symnmf::sparse::io::read_matrix_market(std::path::Path::new(path))?;
+        symnmf::sparse::sym::prepare_adjacency(&mut adj);
+        let k = args.get_usize("k", 8);
+        let mut opts = SymNmfOptions::new(k).with_seed(seed);
+        opts.max_iters = args.get_usize("max-iters", 300);
+        let stats = run_trials(method, &adj, &opts, None, trials);
+        println!("{}", report::stats_table(&[stats]));
+        return Ok(());
+    }
+    match args.get_str("workload", "wos") {
+        "wos" => {
+            let docs = args.get_usize("docs", 800);
+            let w = experiments::wos_workload(docs, seed);
+            let mut opts = experiments::wos_options().with_seed(seed);
+            opts.max_iters = args.get_usize("max-iters", 300);
+            println!(
+                "WoS workload: {} docs, dense {}x{} adjacency, 7 topics",
+                docs,
+                w.adjacency.rows(),
+                w.adjacency.cols()
+            );
+            let stats =
+                run_trials(method, &w.adjacency, &opts, Some(&w.labels), trials);
+            println!("{}", report::stats_table(&[stats]));
+        }
+        "oag" => {
+            let m = args.get_usize("m", 5000);
+            let g = experiments::oag_workload(m, seed);
+            let mut opts = experiments::oag_options().with_seed(seed);
+            opts.max_iters = args.get_usize("max-iters", 100);
+            println!(
+                "OAG workload: sparse {}x{} adjacency, {} nnz, k=16",
+                g.adj.rows(),
+                g.adj.cols(),
+                g.adj.nnz()
+            );
+            let stats = run_trials(method, &g.adj, &opts, Some(&g.labels), trials);
+            println!("{}", report::stats_table(&[stats]));
+        }
+        other => return Err(format!("unknown workload {other:?} (wos|oag)")),
+    }
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<(), String> {
+    let dir = Registry::default_dir();
+    let reg = Registry::load(&dir)?;
+    if reg.specs.is_empty() {
+        println!("no artifacts found in {dir:?} — run `make artifacts`");
+        return Ok(());
+    }
+    println!("{} artifacts in {dir:?}:", reg.specs.len());
+    for s in &reg.specs {
+        println!(
+            "  {:<14} dims={:?} inputs={:?} outputs={:?}",
+            s.program, s.dims, s.inputs, s.outputs
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<(), String> {
+    match PjrtRuntime::from_default_dir() {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("artifacts loaded: {}", rt.registry.specs.len());
+        }
+        Err(e) => println!("PJRT unavailable ({e:#}); native kernels only"),
+    }
+    println!("threads: {}", symnmf::util::threadpool::num_threads());
+    Ok(())
+}
+
+fn usage() -> &'static str {
+    "symnmf — randomized symmetric NMF (Hayashi et al. 2024 reproduction)
+
+USAGE:
+  symnmf run [--workload wos|oag] [--method M] [--trials N] [--seed S]
+             [--docs N | --m N] [--tau T] [--max-iters N]
+             [--input graph.mtx --k K]
+  symnmf artifacts      list AOT artifacts
+  symnmf info           runtime diagnostics
+
+METHODS:
+  bpp hals mu pgncg lai-<rule>[-ir] comp-<rule> lvs-<rule> lai-pgncg[-ir]
+"
+}
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("artifacts") => cmd_artifacts(),
+        Some("info") => cmd_info(),
+        _ => {
+            println!("{}", usage());
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,12 @@
+//! Nonnegative least squares solvers — the Update(G, Y) toolbox of the
+//! paper's Appendix E. All rules consume the normal-equations pair
+//! (G = FᵀF + αI ∈ R^{k×k}, Y = X·F + αF ∈ R^{m×k}) so the same code
+//! serves the exact products, the LAI products, and the leverage-score
+//! sampled products.
+
+pub mod bpp;
+pub mod hals;
+pub mod mu;
+pub mod update;
+
+pub use update::{update, UpdateRule};

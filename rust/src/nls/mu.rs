@@ -1,0 +1,87 @@
+//! Multiplicative Updates (Lee & Seung [39], App. E) in Update(G, Y) form:
+//!
+//! ```text
+//!     W_ij ← W_ij · Y_ij / (W·G)_ij
+//! ```
+//!
+//! Requires Y ≥ 0 (true for nonnegative X and the regularized RHS); a
+//! small ε guards the denominator. Included for completeness of the
+//! Appendix-E rule set and as an extra baseline in the ablations.
+
+use crate::linalg::{blas, DenseMat};
+
+const EPS: f64 = 1e-16;
+
+/// One multiplicative update of every entry of `w` given (G, Y).
+pub fn mu_update(g: &DenseMat, y: &DenseMat, w: &mut DenseMat) {
+    let (m, k) = w.shape();
+    assert_eq!(g.shape(), (k, k));
+    assert_eq!(y.shape(), (m, k));
+    let wg = blas::matmul(w, g);
+    for i in 0..m {
+        let wrow = w.row_mut(i);
+        let yrow = y.row(i);
+        let grow = wg.row(i);
+        for j in 0..k {
+            let numer = yrow[j].max(0.0);
+            wrow[j] *= numer / (grow[j] + EPS);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn mk(m: usize, k: usize, seed: u64) -> (DenseMat, DenseMat, DenseMat, DenseMat, DenseMat) {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let u = DenseMat::uniform(m, k, 1.0, &mut rng);
+        let x = blas::matmul_nt(&u, &u);
+        let h = DenseMat::uniform(m, k, 1.0, &mut rng);
+        let w = DenseMat::uniform(m, k, 1.0, &mut rng);
+        let g = blas::gram(&h);
+        let y = blas::matmul(&x, &h);
+        (x, h, w, g, y)
+    }
+
+    #[test]
+    fn stays_nonnegative() {
+        let (_x, _h, mut w, g, y) = mk(20, 4, 1);
+        for _ in 0..5 {
+            mu_update(&g, &y, &mut w);
+        }
+        assert!(w.is_nonneg());
+    }
+
+    #[test]
+    fn does_not_increase_objective() {
+        let (x, h, mut w, g, y) = mk(25, 3, 2);
+        let obj = |wm: &DenseMat| {
+            let rec = blas::matmul_nt(wm, &h);
+            let mut d = x.clone();
+            d.axpy(-1.0, &rec);
+            d.fro_norm_sq()
+        };
+        let mut prev = obj(&w);
+        for _ in 0..10 {
+            mu_update(&g, &y, &mut w);
+            let cur = obj(&w);
+            assert!(cur <= prev + 1e-9, "{prev} → {cur}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn fixed_point_at_exact_factorization() {
+        // if X = HHᵀ exactly and W = H, the update leaves W ≈ unchanged
+        let mut rng = Pcg64::seed_from_u64(3);
+        let h = DenseMat::uniform(15, 3, 1.0, &mut rng);
+        let x = blas::matmul_nt(&h, &h);
+        let g = blas::gram(&h);
+        let y = blas::matmul(&x, &h);
+        let mut w = h.clone();
+        mu_update(&g, &y, &mut w);
+        assert!(w.diff_fro(&h) < 1e-10);
+    }
+}

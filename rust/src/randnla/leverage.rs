@@ -1,0 +1,246 @@
+//! Leverage-score sampling matrices (paper Eq. 2.11) and the **hybrid**
+//! deterministic + randomized scheme of §4.2 / Eq. 4.2–4.3 that the paper
+//! shows is crucial for speedups in practice (§5.2, Fig. 2).
+//!
+//! A sampling matrix is stored implicitly as (row indices, rescale
+//! factors): S·A is a scaled row gather, never a matmul.
+
+use crate::util::rng::{AliasTable, Pcg64};
+
+/// Implicit row-sampling-and-rescaling matrix S ∈ R^{s×m}.
+#[derive(Clone, Debug)]
+pub struct SampleMatrix {
+    /// source row index i_r of each sample row
+    pub indices: Vec<usize>,
+    /// rescale factor c_r (1/√(s·p_i) for random rows, 1 for
+    /// deterministically included rows)
+    pub scales: Vec<f64>,
+    /// number of deterministically included rows (they come first)
+    pub num_deterministic: usize,
+    /// leverage mass θ = Σ_{i∈deterministic} l_i captured deterministically
+    pub theta: f64,
+}
+
+impl SampleMatrix {
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Squared scales c_r², the weights of X·SᵀS·F accumulation.
+    pub fn weights_sq(&self) -> Vec<f64> {
+        self.scales.iter().map(|c| c * c).collect()
+    }
+
+    /// Fraction of samples taken deterministically (paper Fig. 6a).
+    pub fn deterministic_fraction(&self) -> f64 {
+        if self.indices.is_empty() {
+            0.0
+        } else {
+            self.num_deterministic as f64 / self.indices.len() as f64
+        }
+    }
+}
+
+/// Standard leverage-score sampling (Eq. 2.11): draw `s` rows i.i.d. with
+/// replacement with p_i = l_i / Σl, rescale by 1/√(s·p_i).
+pub fn sample_standard(leverage: &[f64], s: usize, rng: &mut Pcg64) -> SampleMatrix {
+    let total: f64 = leverage.iter().sum();
+    assert!(total > 0.0, "leverage scores sum to zero");
+    let table = AliasTable::new(leverage);
+    let indices = table.sample_many(rng, s);
+    let scales = indices
+        .iter()
+        .map(|&i| {
+            let p = leverage[i] / total;
+            1.0 / (s as f64 * p).sqrt()
+        })
+        .collect();
+    SampleMatrix { indices, scales, num_deterministic: 0, theta: 0.0 }
+}
+
+/// Hybrid sampling (§4.2): rows with normalized leverage p_i = l_i/k ≥ τ
+/// are included deterministically (scale 1, a pure permutation block
+/// Eq. 4.3); the remaining budget s_R = s − s_D is drawn from the leftover
+/// rows with renormalized probabilities p̃_i = l_i / ξ, ξ = k − θ
+/// (rescale 1/√(s_R·p̃_i)).
+///
+/// τ = 1 reduces to pure random sampling (no row reaches p_i ≥ 1 unless it
+/// carries *all* the mass); the paper's sparse experiments use τ = 1/s.
+pub fn sample_hybrid(
+    leverage: &[f64],
+    s: usize,
+    tau: f64,
+    rng: &mut Pcg64,
+) -> SampleMatrix {
+    let k: f64 = leverage.iter().sum(); // Σ l_i = rank (= k for full-rank F)
+    assert!(k > 0.0);
+    let mut det: Vec<usize> = Vec::new();
+    let mut theta = 0.0;
+    for (i, &l) in leverage.iter().enumerate() {
+        if l / k >= tau {
+            det.push(i);
+            theta += l;
+        }
+    }
+    // Never spend the whole budget deterministically: keep at least one
+    // random slot unless every row is deterministic.
+    if det.len() >= s && s > 0 {
+        // keep the top (s-1) by leverage
+        det.sort_by(|&a, &b| leverage[b].partial_cmp(&leverage[a]).unwrap());
+        det.truncate(s.saturating_sub(1));
+        theta = det.iter().map(|&i| leverage[i]).sum();
+    }
+    let s_d = det.len();
+    let s_r = s - s_d;
+
+    let mut indices = det.clone();
+    let mut scales = vec![1.0; s_d];
+
+    if s_r > 0 {
+        let in_det: std::collections::HashSet<usize> = det.iter().copied().collect();
+        let xi: f64 = k - theta;
+        // residual weights over the non-deterministic rows
+        let mut resid = leverage.to_vec();
+        for &i in &in_det {
+            resid[i] = 0.0;
+        }
+        if xi > 1e-300 && resid.iter().any(|&w| w > 0.0) {
+            let table = AliasTable::new(&resid);
+            for _ in 0..s_r {
+                let i = table.sample(rng);
+                let p = leverage[i] / xi; // renormalized p̃_i
+                indices.push(i);
+                scales.push(1.0 / (s_r as f64 * p).sqrt());
+            }
+        }
+    }
+    SampleMatrix { indices, scales, num_deterministic: s_d, theta }
+}
+
+/// Number of samples Theorem 2.1 prescribes:
+/// s ≥ k·max(C·log(k/δ), 1/(δ·ε_r)), C = 144/(1−√2)².
+pub fn theorem21_sample_count(k: usize, delta: f64, eps_r: f64) -> usize {
+    let c = 144.0 / (1.0 - std::f64::consts::SQRT_2).powi(2);
+    let kf = k as f64;
+    (kf * (c * (kf / delta).ln()).max(1.0 / (delta * eps_r))).ceil() as usize
+}
+
+/// Hybrid-sampling budget from Lemma 4.2/4.3 discussion: s_D + ξ·φ with
+/// φ = max(C·log(k/δ), 1/(δ·ε_r)) — vs k·φ for standard sampling.
+pub fn hybrid_sample_count(s_d: usize, xi: f64, k: usize, delta: f64, eps_r: f64) -> usize {
+    let c = 144.0 / (1.0 - std::f64::consts::SQRT_2).powi(2);
+    let phi = (c * ((k as f64) / delta).ln()).max(1.0 / (delta * eps_r));
+    s_d + (xi * phi).ceil() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{blas, qr, DenseMat};
+
+    fn orthonormal(m: usize, k: usize, rng: &mut Pcg64) -> DenseMat {
+        let f = DenseMat::gaussian(m, k, rng);
+        qr::householder_qr(&f).0
+    }
+
+    /// SC1 sanity: with many samples, (SQ)ᵀ(SQ) ≈ I for orthonormal Q.
+    #[test]
+    fn standard_sampling_preserves_gram() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let q = orthonormal(400, 4, &mut rng);
+        let lev = qr::leverage_scores_from_q(&q);
+        let s = 2000;
+        let sm = sample_standard(&lev, s, &mut rng);
+        let sq = q.gather_rows_scaled(&sm.indices, &sm.scales);
+        let g = blas::gram(&sq);
+        let err = g.diff_fro(&DenseMat::eye(4));
+        assert!(err < 0.25, "‖(SQ)ᵀSQ − I‖ = {err}");
+    }
+
+    #[test]
+    fn hybrid_sampling_preserves_gram_with_spiked_rows() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        // matrix with a few huge-leverage rows
+        let mut f = DenseMat::gaussian(500, 4, &mut rng);
+        for j in 0..4 {
+            f.set(13, j, 40.0 * ((j + 1) as f64));
+            f.set(99, j, -35.0 * ((j + 2) as f64));
+        }
+        let (q, _) = qr::householder_qr(&f);
+        let lev = qr::leverage_scores_from_q(&q);
+        let s = 1500;
+        let sm = sample_hybrid(&lev, s, 1.0 / s as f64, &mut rng);
+        assert!(sm.num_deterministic >= 2, "spiked rows should be deterministic");
+        assert!(sm.indices[..sm.num_deterministic].contains(&13));
+        let sq = q.gather_rows_scaled(&sm.indices, &sm.scales);
+        let err = blas::gram(&sq).diff_fro(&DenseMat::eye(4));
+        assert!(err < 0.25, "hybrid gram err {err}");
+    }
+
+    #[test]
+    fn tau_one_is_pure_random() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let q = orthonormal(200, 3, &mut rng);
+        let lev = qr::leverage_scores_from_q(&q);
+        let sm = sample_hybrid(&lev, 50, 1.0, &mut rng);
+        assert_eq!(sm.num_deterministic, 0);
+        assert_eq!(sm.theta, 0.0);
+        assert_eq!(sm.len(), 50);
+    }
+
+    #[test]
+    fn sampling_matrix_is_unbiased_for_gram() {
+        // E[(SQ)ᵀSQ] = QᵀQ: check the Monte-Carlo average over repeats.
+        let mut rng = Pcg64::seed_from_u64(4);
+        let q = orthonormal(100, 3, &mut rng);
+        let lev = qr::leverage_scores_from_q(&q);
+        let mut acc = DenseMat::zeros(3, 3);
+        let reps = 300;
+        for _ in 0..reps {
+            let sm = sample_standard(&lev, 20, &mut rng);
+            let sq = q.gather_rows_scaled(&sm.indices, &sm.scales);
+            acc.axpy(1.0 / reps as f64, &blas::gram(&sq));
+        }
+        let err = acc.diff_fro(&DenseMat::eye(3));
+        assert!(err < 0.1, "bias {err}");
+    }
+
+    #[test]
+    fn deterministic_budget_never_exceeds_s() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        // every row has identical leverage → τ tiny would select all
+        let lev = vec![0.01; 300];
+        let sm = sample_hybrid(&lev, 10, 1e-9, &mut rng);
+        assert!(sm.len() <= 10);
+        assert!(sm.num_deterministic < 10);
+    }
+
+    #[test]
+    fn theorem21_counts_monotone() {
+        let base = theorem21_sample_count(8, 0.1, 0.5);
+        // ε only matters once 1/(δε) exceeds C·log(k/δ) (the max)
+        assert!(theorem21_sample_count(8, 0.1, 0.1) >= base);
+        assert!(theorem21_sample_count(8, 0.01, 0.5) > base, "smaller delta → more samples");
+        assert!(theorem21_sample_count(16, 0.1, 0.5) > base, "larger k → more samples");
+        // regime where the 1/(δε) branch dominates: tiny δ·ε
+        let tight = theorem21_sample_count(8, 0.01, 0.001);
+        let loose = theorem21_sample_count(8, 0.01, 0.01);
+        assert!(tight > loose, "ε-dominated regime must be monotone in ε");
+    }
+
+    #[test]
+    fn hybrid_count_beats_standard_when_theta_large() {
+        // θ = k−ξ large (deterministic rows grab most mass) with small s_D
+        let k = 16;
+        let std_count = theorem21_sample_count(k, 0.1, 0.5);
+        let hyb = hybrid_sample_count(40, 1.0, k, 0.1, 0.5); // ξ=1, s_D=40
+        assert!(
+            hyb < std_count,
+            "hybrid {hyb} should beat standard {std_count}"
+        );
+    }
+}

@@ -1,0 +1,13 @@
+//! RandNLA toolbox (paper §2.2): the randomized range finder and its
+//! adaptive variant, the approximate truncated EVD of a symmetric matrix,
+//! and leverage-score / hybrid sampling matrices for sketched least
+//! squares.
+
+pub mod evd;
+pub mod leverage;
+pub mod op;
+pub mod rrf;
+
+pub use evd::ApxEvd;
+pub use leverage::SampleMatrix;
+pub use op::SymOp;

@@ -1,0 +1,169 @@
+//! Abstraction over the symmetric data matrix X.
+//!
+//! Every algorithm in the paper touches X only through the product X·F
+//! with a skinny dense block F (that is the entire point of LAI-SymNMF:
+//! §3 "Computing matrix products with the data matrix X is the main
+//! computational bottleneck"). `SymOp` captures exactly that interface, so
+//! the same algorithm code runs against:
+//!
+//!  * a dense [`DenseMat`] (native blocked kernels),
+//!  * a sparse [`CsrMat`] (CSR SpMM),
+//!  * a PJRT-backed dense operator ([`crate::runtime::exec::PjrtSymOp`])
+//!    whose X·F executes the AOT-compiled Pallas kernel, and
+//!  * a factored LAI `U·Vᵀ` ([`crate::symnmf::lai::LaiOp`]).
+
+use crate::linalg::{blas, DenseMat};
+use crate::sparse::CsrMat;
+
+/// A symmetric linear operator X ∈ R^{m×m} accessed via block products.
+pub trait SymOp {
+    /// Dimension m.
+    fn dim(&self) -> usize;
+
+    /// Compute X·F (F: m×k dense).
+    fn apply(&self, f: &DenseMat) -> DenseMat;
+
+    /// ‖X‖²_F — needed by the Ada-RRF residual trick (App. D) and the
+    /// normalized-residual stopping criterion (App. C).
+    fn fro_norm_sq(&self) -> f64;
+
+    /// max entry — the paper's recommended α = max(X) (§5.1).
+    fn max_value(&self) -> f64;
+
+    /// mean entry ζ — the §5 initialization scale 2·√(ζ/k).
+    fn mean_value(&self) -> f64;
+
+    /// Sampled product X·SᵀS·F (LvS-SymNMF). The default gathers through
+    /// `apply` semantics; dense/sparse impls override with O(s·row) code.
+    fn sampled_apply(&self, f: &DenseMat, samples: &[usize], weights_sq: &[f64]) -> DenseMat;
+}
+
+/// Blanket impl so `&dyn SymOp` (and any `&T`) satisfies the generic
+/// `X: SymOp` bounds of the solver entry points.
+impl<T: SymOp + ?Sized> SymOp for &T {
+    fn dim(&self) -> usize {
+        (**self).dim()
+    }
+    fn apply(&self, f: &DenseMat) -> DenseMat {
+        (**self).apply(f)
+    }
+    fn fro_norm_sq(&self) -> f64 {
+        (**self).fro_norm_sq()
+    }
+    fn max_value(&self) -> f64 {
+        (**self).max_value()
+    }
+    fn mean_value(&self) -> f64 {
+        (**self).mean_value()
+    }
+    fn sampled_apply(&self, f: &DenseMat, samples: &[usize], weights_sq: &[f64]) -> DenseMat {
+        (**self).sampled_apply(f, samples, weights_sq)
+    }
+}
+
+impl SymOp for DenseMat {
+    fn dim(&self) -> usize {
+        debug_assert_eq!(self.rows(), self.cols());
+        self.rows()
+    }
+
+    fn apply(&self, f: &DenseMat) -> DenseMat {
+        let mut out = DenseMat::zeros(self.rows(), f.cols());
+        blas::symm_tall_into(self, f, &mut out);
+        out
+    }
+
+    fn fro_norm_sq(&self) -> f64 {
+        DenseMat::fro_norm_sq(self)
+    }
+
+    fn max_value(&self) -> f64 {
+        DenseMat::max_value(self)
+    }
+
+    fn mean_value(&self) -> f64 {
+        self.mean()
+    }
+
+    fn sampled_apply(&self, f: &DenseMat, samples: &[usize], weights_sq: &[f64]) -> DenseMat {
+        // X·SᵀS·F = Σ_r w_r · x_{:,i_r} ⊗ F[i_r,:]; with X symmetric the
+        // column x_{:,i_r} is row i_r, so this is a scaled row gather —
+        // the "copying large portions of a large dense data matrix" cost
+        // the paper calls out in §5.1.1.
+        let k = f.cols();
+        let mut out = DenseMat::zeros(self.rows(), k);
+        let od = out.data_mut();
+        for (&ir, &w) in samples.iter().zip(weights_sq) {
+            let xrow = self.row(ir);
+            let frow = f.row(ir);
+            for (j, &xv) in xrow.iter().enumerate() {
+                if xv != 0.0 {
+                    blas::axpy(w * xv, frow, &mut od[j * k..(j + 1) * k]);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl SymOp for CsrMat {
+    fn dim(&self) -> usize {
+        debug_assert_eq!(self.rows(), self.cols());
+        self.rows()
+    }
+
+    fn apply(&self, f: &DenseMat) -> DenseMat {
+        self.spmm(f)
+    }
+
+    fn fro_norm_sq(&self) -> f64 {
+        CsrMat::fro_norm_sq(self)
+    }
+
+    fn max_value(&self) -> f64 {
+        CsrMat::max_value(self)
+    }
+
+    fn mean_value(&self) -> f64 {
+        self.mean_dense()
+    }
+
+    fn sampled_apply(&self, f: &DenseMat, samples: &[usize], weights_sq: &[f64]) -> DenseMat {
+        self.sampled_spmm_sym(f, samples, weights_sq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn dense_and_sparse_agree() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let n = 24;
+        let mut trips = Vec::new();
+        for i in 0..n {
+            for j in i..n {
+                if rng.uniform() < 0.3 {
+                    let v = rng.uniform();
+                    trips.push((i, j, v));
+                    if i != j {
+                        trips.push((j, i, v));
+                    }
+                }
+            }
+        }
+        let sp = CsrMat::from_coo(n, n, trips);
+        let de = sp.to_dense();
+        let f = DenseMat::gaussian(n, 5, &mut rng);
+        assert!(SymOp::apply(&de, &f).diff_fro(&sp.apply(&f)) < 1e-12);
+        assert!((SymOp::fro_norm_sq(&de) - SymOp::fro_norm_sq(&sp)).abs() < 1e-12);
+
+        let samples = vec![0, 3, 3, 7];
+        let w = vec![0.5, 1.0, 2.0, 0.25];
+        let a = SymOp::sampled_apply(&de, &f, &samples, &w);
+        let b = sp.sampled_apply(&f, &samples, &w);
+        assert!(a.diff_fro(&b) < 1e-12);
+    }
+}

@@ -1,0 +1,170 @@
+//! Typed entry points over the PJRT runtime, including [`PjrtSymOp`]:
+//! a dense symmetric operator whose X·F product executes the AOT-compiled
+//! Pallas matmul kernel when an artifact matches the shape, falling back
+//! to the native blocked kernel otherwise (logged once per shape).
+//!
+//! This is the piece that closes the three-layer loop: L3 SymNMF
+//! iterations call `apply`, which runs HLO lowered from the L2 JAX model
+//! calling the L1 Pallas kernels.
+
+use crate::linalg::DenseMat;
+use crate::randnla::SymOp;
+use crate::runtime::pjrt::{Input, PjrtRuntime};
+use std::cell::RefCell;
+use std::collections::HashSet;
+use std::rc::Rc;
+
+/// Dense symmetric operator backed by PJRT `products_*` artifacts.
+pub struct PjrtSymOp {
+    x: DenseMat,
+    /// pre-converted f32 literal of X, built once (8·m² bytes saved per call)
+    x_lit: RefCell<Option<xla::Literal>>,
+    runtime: Rc<PjrtRuntime>,
+    /// count of PJRT-dispatched / native-fallback applies (diagnostics)
+    pub stats: RefCell<DispatchStats>,
+    warned: RefCell<HashSet<usize>>,
+}
+
+#[derive(Default, Debug, Clone)]
+pub struct DispatchStats {
+    pub pjrt_calls: usize,
+    pub native_calls: usize,
+}
+
+impl PjrtSymOp {
+    pub fn new(x: DenseMat, runtime: Rc<PjrtRuntime>) -> PjrtSymOp {
+        assert_eq!(x.rows(), x.cols(), "PjrtSymOp needs a square matrix");
+        PjrtSymOp {
+            x,
+            x_lit: RefCell::new(None),
+            runtime,
+            stats: RefCell::new(DispatchStats::default()),
+            warned: RefCell::new(HashSet::new()),
+        }
+    }
+
+    pub fn inner(&self) -> &DenseMat {
+        &self.x
+    }
+
+    /// The (X·F, FᵀF) pair through PJRT if possible: Some((xf, gram)) on
+    /// the PJRT path, None if no artifact matches this width.
+    pub fn products_pjrt(&self, f: &DenseMat) -> Option<(DenseMat, DenseMat)> {
+        let m = self.x.rows();
+        let k = f.cols();
+        let spec = self.runtime.registry.find("products", &[("m", m), ("k", k)])?;
+        // lazily build + cache the X literal
+        if self.x_lit.borrow().is_none() {
+            match crate::runtime::pjrt::literal_from_mat(&self.x) {
+                Ok(lit) => *self.x_lit.borrow_mut() = Some(lit),
+                Err(e) => {
+                    eprintln!("[runtime] literal conversion failed ({e:#})");
+                    return None;
+                }
+            }
+        }
+        let f_lit = crate::runtime::pjrt::literal_from_mat(f).ok()?;
+        let guard = self.x_lit.borrow();
+        let x_lit = guard.as_ref().expect("cached above");
+        let result = self.runtime.execute_literals(spec, &[x_lit, &f_lit]);
+        match result {
+            Ok(mut outs) => {
+                let gram = outs.pop()?;
+                let xf = outs.pop()?;
+                self.stats.borrow_mut().pjrt_calls += 1;
+                Some((xf, gram))
+            }
+            Err(e) => {
+                eprintln!("[runtime] PJRT execute failed ({e:#}); using native kernel");
+                None
+            }
+        }
+    }
+}
+
+impl SymOp for PjrtSymOp {
+    fn dim(&self) -> usize {
+        self.x.rows()
+    }
+
+    fn apply(&self, f: &DenseMat) -> DenseMat {
+        if let Some((xf, _gram)) = self.products_pjrt(f) {
+            return xf;
+        }
+        if self.warned.borrow_mut().insert(f.cols()) {
+            eprintln!(
+                "[runtime] no products_m{}_k{} artifact; native fallback for this width",
+                self.x.rows(),
+                f.cols()
+            );
+        }
+        self.stats.borrow_mut().native_calls += 1;
+        SymOp::apply(&self.x, f)
+    }
+
+    fn fro_norm_sq(&self) -> f64 {
+        DenseMat::fro_norm_sq(&self.x)
+    }
+
+    fn max_value(&self) -> f64 {
+        DenseMat::max_value(&self.x)
+    }
+
+    fn mean_value(&self) -> f64 {
+        self.x.mean()
+    }
+
+    fn sampled_apply(&self, f: &DenseMat, samples: &[usize], weights_sq: &[f64]) -> DenseMat {
+        SymOp::sampled_apply(&self.x, f, samples, weights_sq)
+    }
+}
+
+/// Execute the `lai_products` artifact: (U·(Vᵀ·F), FᵀF). Returns None if
+/// no artifact matches (caller falls back to native skinny matmuls).
+pub fn lai_products_pjrt(
+    runtime: &PjrtRuntime,
+    u: &DenseMat,
+    v: &DenseMat,
+    f: &DenseMat,
+) -> Option<(DenseMat, DenseMat)> {
+    let (m, l) = u.shape();
+    let k = f.cols();
+    let spec = runtime
+        .registry
+        .find("lai_products", &[("m", m), ("l", l), ("k", k)])?;
+    let outs = runtime
+        .execute(spec, &[Input::Mat(u), Input::Mat(v), Input::Mat(f)])
+        .ok()?;
+    let mut it = outs.into_iter();
+    let y = it.next()?;
+    let g = it.next()?;
+    Some((y, g))
+}
+
+/// Execute the `hals_sweep` artifact: fused regularized HALS column sweep
+/// (paper Eq. 2.6) on the PJRT path. Returns the updated W, or None if no
+/// artifact matches.
+pub fn hals_sweep_pjrt(
+    runtime: &PjrtRuntime,
+    xh: &DenseMat,
+    g: &DenseMat,
+    w: &DenseMat,
+    h: &DenseMat,
+    alpha: f64,
+) -> Option<DenseMat> {
+    let (m, k) = w.shape();
+    let spec = runtime.registry.find("hals_sweep", &[("m", m), ("k", k)])?;
+    let outs = runtime
+        .execute(
+            spec,
+            &[
+                Input::Mat(xh),
+                Input::Mat(g),
+                Input::Mat(w),
+                Input::Mat(h),
+                Input::Scalar(alpha),
+            ],
+        )
+        .ok()?;
+    outs.into_iter().next()
+}

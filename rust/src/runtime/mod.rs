@@ -1,0 +1,21 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts (lowered from the
+//! JAX/Pallas model by `python/compile/aot.py`) and execute them from the
+//! rust hot path.
+//!
+//! * [`registry`] — parses `artifacts/manifest.json` into shape-keyed
+//!   artifact specs.
+//! * [`pjrt`] — the `xla` crate wrapper: CPU PJRT client, HLO-text →
+//!   compile → execute, f64⇄f32 conversion at the boundary, lazy
+//!   executable cache.
+//! * [`exec`] — typed entry points: [`exec::PjrtSymOp`] is a [`SymOp`]
+//!   whose X·F runs the Pallas matmul kernel through PJRT when an
+//!   artifact matches the shape, with transparent native fallback.
+//!
+//! Python never runs here — artifacts are plain HLO text files.
+
+pub mod exec;
+pub mod pjrt;
+pub mod registry;
+
+pub use exec::PjrtSymOp;
+pub use pjrt::PjrtRuntime;

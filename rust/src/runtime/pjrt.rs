@@ -1,0 +1,184 @@
+//! PJRT execution: HLO text → compile → execute on the CPU PJRT client
+//! (the `xla` crate, following /opt/xla-example/load_hlo).
+//!
+//! Executables compile lazily on first use and are cached for the life of
+//! the runtime (one compiled executable per artifact — the AOT model).
+//! The f64 (rust-native) ⇄ f32 (artifact) conversion happens here at the
+//! boundary.
+
+use crate::linalg::DenseMat;
+use crate::runtime::registry::{ArtifactSpec, Registry};
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A live PJRT CPU client plus the artifact registry and executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub registry: Registry,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl PjrtRuntime {
+    /// Create from an artifact directory (see [`Registry::load`]).
+    pub fn new(artifact_dir: &Path) -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let registry = Registry::load(artifact_dir).map_err(|e| anyhow!(e))?;
+        Ok(PjrtRuntime { client, registry, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Create from the default artifact dir; Err if PJRT cannot start.
+    pub fn from_default_dir() -> Result<PjrtRuntime> {
+        Self::new(&Registry::default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compiled(&self, spec: &ArtifactSpec) -> Result<()> {
+        let key = spec.path.to_string_lossy().to_string();
+        if self.cache.borrow().contains_key(&key) {
+            return Ok(());
+        }
+        let path_str = spec
+            .path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parse HLO text {path_str}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {path_str}"))?;
+        self.cache.borrow_mut().insert(key, exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with f64 dense inputs (converted to f32),
+    /// returning f64 dense outputs. Scalar inputs are passed as 0-d.
+    pub fn execute(&self, spec: &ArtifactSpec, inputs: &[Input]) -> Result<Vec<DenseMat>> {
+        if inputs.len() != spec.inputs.len() {
+            return Err(anyhow!(
+                "artifact {} expects {} inputs, got {}",
+                spec.program,
+                spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (inp, shape) in inputs.iter().zip(&spec.inputs) {
+            literals.push(inp.to_literal(shape)?);
+        }
+        self.execute_literals(spec, &literals)
+    }
+
+    /// Execute with pre-built literals (hot-path form: callers can cache
+    /// the literal of a large constant operand — e.g. the m×m data matrix
+    /// X — instead of re-converting 8·m² bytes every call).
+    pub fn execute_literals<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        spec: &ArtifactSpec,
+        literals: &[L],
+    ) -> Result<Vec<DenseMat>> {
+        self.compiled(spec)?;
+        let key = spec.path.to_string_lossy().to_string();
+        let cache = self.cache.borrow();
+        let exe = cache.get(&key).expect("compiled above");
+        let result = exe.execute(literals).context("execute artifact")?;
+        let root = result[0][0].to_literal_sync().context("fetch result")?;
+        // aot.py lowers with return_tuple=True → root is a tuple
+        let parts = root.to_tuple().context("untuple result")?;
+        if parts.len() != spec.outputs.len() {
+            return Err(anyhow!(
+                "artifact {} returned {} outputs, expected {}",
+                spec.program,
+                parts.len(),
+                spec.outputs.len()
+            ));
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for (lit, shape) in parts.into_iter().zip(&spec.outputs) {
+            let data: Vec<f32> = lit.to_vec().context("read output literal")?;
+            let (r, c) = shape_rc(shape);
+            outs.push(DenseMat::from_f32(r, c, &data));
+        }
+        Ok(outs)
+    }
+}
+
+fn shape_rc(shape: &[usize]) -> (usize, usize) {
+    match shape.len() {
+        0 => (1, 1),
+        1 => (shape[0], 1),
+        2 => (shape[0], shape[1]),
+        _ => panic!("rank > 2 artifact output unsupported"),
+    }
+}
+
+/// An input value for artifact execution.
+pub enum Input<'a> {
+    Mat(&'a DenseMat),
+    Scalar(f64),
+}
+
+/// Convert a dense f64 matrix to a shaped f32 literal (public so callers
+/// can pre-convert and cache constant operands).
+pub fn literal_from_mat(m: &DenseMat) -> Result<xla::Literal> {
+    let f32s = m.to_f32();
+    let lit = xla::Literal::vec1(&f32s);
+    let dims = [m.rows() as i64, m.cols() as i64];
+    lit.reshape(&dims).context("reshape literal")
+}
+
+impl<'a> Input<'a> {
+    fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
+        match self {
+            Input::Scalar(v) => {
+                if !shape.is_empty() {
+                    return Err(anyhow!("scalar input for non-scalar shape {shape:?}"));
+                }
+                Ok(xla::Literal::scalar(*v as f32))
+            }
+            Input::Mat(m) => {
+                let (r, c) = shape_rc(shape);
+                if m.shape() != (r, c) {
+                    return Err(anyhow!(
+                        "input shape {:?} ≠ artifact shape {shape:?}",
+                        m.shape()
+                    ));
+                }
+                let f32s = m.to_f32();
+                let lit = xla::Literal::vec1(&f32s);
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                Ok(lit.reshape(&dims).context("reshape literal")?)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT round-trip tests live in rust/tests/runtime_pjrt.rs (they need
+    // the built artifacts). Here: pure helpers.
+    use super::*;
+
+    #[test]
+    fn shape_rc_cases() {
+        assert_eq!(shape_rc(&[]), (1, 1));
+        assert_eq!(shape_rc(&[5]), (5, 1));
+        assert_eq!(shape_rc(&[3, 4]), (3, 4));
+    }
+
+    #[test]
+    fn input_shape_mismatch_rejected() {
+        let m = DenseMat::zeros(2, 3);
+        let inp = Input::Mat(&m);
+        assert!(inp.to_literal(&[3, 2]).is_err());
+        assert!(inp.to_literal(&[2, 3]).is_ok());
+        assert!(Input::Scalar(1.0).to_literal(&[1]).is_err());
+        assert!(Input::Scalar(1.0).to_literal(&[]).is_ok());
+    }
+}

@@ -1,0 +1,148 @@
+//! Artifact registry: `artifacts/manifest.json` → shape-keyed specs.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled program.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    /// program family: "products" | "lai_products" | "hals_sweep"
+    pub program: String,
+    /// HLO text file (absolute path)
+    pub path: PathBuf,
+    /// named dimensions, e.g. {m: 1024, k: 7}
+    pub dims: BTreeMap<String, usize>,
+    /// input shapes in argument order
+    pub inputs: Vec<Vec<usize>>,
+    /// output shapes (tuple elements) in order
+    pub outputs: Vec<Vec<usize>>,
+}
+
+impl ArtifactSpec {
+    pub fn dim(&self, name: &str) -> Option<usize> {
+        self.dims.get(name).copied()
+    }
+}
+
+/// All artifacts from one manifest.
+#[derive(Debug, Default)]
+pub struct Registry {
+    pub specs: Vec<ArtifactSpec>,
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.json`. Missing file → empty registry (the
+    /// runtime then always falls back to native kernels).
+    pub fn load(dir: &Path) -> Result<Registry, String> {
+        let manifest = dir.join("manifest.json");
+        if !manifest.exists() {
+            return Ok(Registry::default());
+        }
+        let text = std::fs::read_to_string(&manifest)
+            .map_err(|e| format!("read {manifest:?}: {e}"))?;
+        let v = Json::parse(&text)?;
+        let arts = v
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or("manifest missing artifacts array")?;
+        let mut specs = Vec::with_capacity(arts.len());
+        for a in arts {
+            let program = a
+                .get("program")
+                .and_then(|p| p.as_str())
+                .ok_or("artifact missing program")?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(|p| p.as_str())
+                .ok_or("artifact missing file")?;
+            let mut dims = BTreeMap::new();
+            if let Some(Json::Obj(dm)) = a.get("dims") {
+                for (k, v) in dm {
+                    dims.insert(k.clone(), v.as_usize().ok_or("bad dim")?);
+                }
+            }
+            let shapes = |key: &str| -> Result<Vec<Vec<usize>>, String> {
+                a.get(key)
+                    .and_then(|s| s.as_arr())
+                    .ok_or_else(|| format!("artifact missing {key}"))?
+                    .iter()
+                    .map(|shp| {
+                        shp.as_arr()
+                            .ok_or_else(|| "bad shape".to_string())?
+                            .iter()
+                            .map(|d| d.as_usize().ok_or_else(|| "bad dim".to_string()))
+                            .collect()
+                    })
+                    .collect()
+            };
+            specs.push(ArtifactSpec {
+                program,
+                path: dir.join(file),
+                dims,
+                inputs: shapes("inputs")?,
+                outputs: shapes("outputs")?,
+            });
+        }
+        Ok(Registry { specs })
+    }
+
+    /// Default artifact directory: `$SYMNMF_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("SYMNMF_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Find a program matching all given dims exactly.
+    pub fn find(&self, program: &str, dims: &[(&str, usize)]) -> Option<&ArtifactSpec> {
+        self.specs.iter().find(|s| {
+            s.program == program
+                && dims
+                    .iter()
+                    .all(|(name, val)| s.dim(name) == Some(*val))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version": 1, "artifacts": [
+                {"program": "products", "file": "p.hlo.txt",
+                 "dims": {"m": 64, "k": 8},
+                 "inputs": [[64,64],[64,8]], "outputs": [[64,8],[8,8]],
+                 "dtype": "f32"}
+            ]}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn loads_and_finds() {
+        let dir = std::env::temp_dir().join("symnmf_registry_test");
+        write_manifest(&dir);
+        let reg = Registry::load(&dir).unwrap();
+        assert_eq!(reg.specs.len(), 1);
+        let spec = reg.find("products", &[("m", 64), ("k", 8)]).unwrap();
+        assert_eq!(spec.inputs[0], vec![64, 64]);
+        assert_eq!(spec.outputs[1], vec![8, 8]);
+        assert!(reg.find("products", &[("m", 64), ("k", 9)]).is_none());
+        assert!(reg.find("nothing", &[]).is_none());
+    }
+
+    #[test]
+    fn missing_manifest_is_empty() {
+        let dir = std::env::temp_dir().join("symnmf_registry_none");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let reg = Registry::load(&dir).unwrap();
+        assert!(reg.specs.is_empty());
+    }
+}

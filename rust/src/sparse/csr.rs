@@ -1,0 +1,335 @@
+//! Compressed Sparse Row matrix.
+//!
+//! The paper stores the OAG adjacency in MATLAB's CSC and exploits
+//! symmetry for fast row slicing (§5.2); we store CSR and rely on the
+//! same symmetry (row i ≡ column i), which makes both the SpMM X·F and
+//! the LvS sampled products row-gather-friendly.
+
+use crate::linalg::DenseMat;
+use crate::util::threadpool::parallel_for_chunks;
+
+/// CSR sparse matrix of f64.
+#[derive(Clone, Debug)]
+pub struct CsrMat {
+    rows: usize,
+    cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<usize>,
+    values: Vec<f64>,
+}
+
+impl CsrMat {
+    /// Build from COO triplets; duplicate (i, j) entries are summed.
+    pub fn from_coo(
+        rows: usize,
+        cols: usize,
+        mut triplets: Vec<(usize, usize, f64)>,
+    ) -> CsrMat {
+        triplets.sort_unstable_by_key(|&(i, j, _)| (i, j));
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices = Vec::with_capacity(triplets.len());
+        let mut values: Vec<f64> = Vec::with_capacity(triplets.len());
+        let mut last: Option<(usize, usize)> = None;
+        for &(i, j, v) in &triplets {
+            assert!(i < rows && j < cols, "triplet ({i},{j}) out of bounds");
+            if last == Some((i, j)) {
+                *values.last_mut().unwrap() += v;
+            } else {
+                indices.push(j);
+                values.push(v);
+                indptr[i + 1] += 1; // per-row count for now
+                last = Some((i, j));
+            }
+        }
+        for i in 0..rows {
+            indptr[i + 1] += indptr[i]; // counts → offsets
+        }
+        CsrMat { rows, cols, indptr, indices, values }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// (column indices, values) of row i.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[usize], &[f64]) {
+        let lo = self.indptr[i];
+        let hi = self.indptr[i + 1];
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.values.iter().map(|v| v * v).sum()
+    }
+
+    pub fn max_value(&self) -> f64 {
+        self.values.iter().cloned().fold(0.0f64, f64::max)
+    }
+
+    /// Mean over ALL m·n entries (zeros included) — the ζ of the §5 init.
+    pub fn mean_dense(&self) -> f64 {
+        self.values.iter().sum::<f64>() / (self.rows as f64 * self.cols as f64)
+    }
+
+    /// Check structural symmetry with matching values (used by tests and
+    /// the experiment driver to validate generated graphs).
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.rows != self.cols {
+            return false;
+        }
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                if (self.get(j, i) - v).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// O(log nnz_row) entry lookup.
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let (cols, vals) = self.row(i);
+        match cols.binary_search(&j) {
+            Ok(p) => vals[p],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Dense SpMM: out = X·F (X: m×n sparse, F: n×k dense) — the sparse
+    /// counterpart of the per-iteration hot product.
+    pub fn spmm(&self, f: &DenseMat) -> DenseMat {
+        let mut out = DenseMat::zeros(self.rows, f.cols());
+        self.spmm_into(f, &mut out);
+        out
+    }
+
+    pub fn spmm_into(&self, f: &DenseMat, out: &mut DenseMat) {
+        assert_eq!(self.cols, f.rows(), "spmm dims");
+        assert_eq!(out.shape(), (self.rows, f.cols()));
+        let k = f.cols();
+        let indptr = &self.indptr;
+        let indices = &self.indices;
+        let values = &self.values;
+        let optr = SendPtr(out.data_mut().as_mut_ptr());
+        parallel_for_chunks(self.rows, 256, move |lo, hi| {
+            let odata = optr;
+            for i in lo..hi {
+                // SAFETY: disjoint row ranges per worker.
+                let orow = unsafe {
+                    std::slice::from_raw_parts_mut(odata.0.add(i * k), k)
+                };
+                orow.fill(0.0);
+                for p in indptr[i]..indptr[i + 1] {
+                    let j = indices[p];
+                    let v = values[p];
+                    crate::linalg::blas::axpy(v, f.row(j), orow);
+                }
+            }
+        });
+    }
+
+    /// Sampled product X·SᵀS·F = Σ_r c_r² · x_{:,i_r} · F[i_r, :] for a
+    /// **symmetric** X (column i_r read as row i_r). This is the LvS
+    /// replacement of X·F (paper §4.1.1): cost O(s·nnz_row·k) instead of
+    /// O(nnz·k). `samples` are row indices i_r, `weights` the squared
+    /// rescaling factors c_r² = 1/(s·p_{i_r}).
+    pub fn sampled_spmm_sym(
+        &self,
+        f: &DenseMat,
+        samples: &[usize],
+        weights: &[f64],
+    ) -> DenseMat {
+        assert_eq!(self.rows, self.cols, "sampled_spmm_sym needs symmetric X");
+        assert_eq!(samples.len(), weights.len());
+        let k = f.cols();
+        let mut out = DenseMat::zeros(self.rows, k);
+        let od = out.data_mut();
+        for (&ir, &w) in samples.iter().zip(weights) {
+            let frow = f.row(ir);
+            let (cols, vals) = self.row(ir);
+            for (&j, &v) in cols.iter().zip(vals) {
+                crate::linalg::blas::axpy(w * v, frow, &mut od[j * k..(j + 1) * k]);
+            }
+        }
+        out
+    }
+
+    /// Dense copy (tests / small problems only).
+    pub fn to_dense(&self) -> DenseMat {
+        let mut out = DenseMat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                out.set(i, j, v);
+            }
+        }
+        out
+    }
+
+    /// Scale row i and column i by d[i] (symmetric diagonal scaling
+    /// D·A·D). Used by `sym::normalize_sym`.
+    pub fn scale_sym(&mut self, d: &[f64]) {
+        assert_eq!(d.len(), self.rows);
+        for i in 0..self.rows {
+            let lo = self.indptr[i];
+            let hi = self.indptr[i + 1];
+            for p in lo..hi {
+                let j = self.indices[p];
+                self.values[p] *= d[i] * d[j];
+            }
+        }
+    }
+
+    /// Remove the diagonal (paper §5.2: "the diagonal is zeroed out").
+    pub fn zero_diagonal(&mut self) {
+        let mut indptr = vec![0usize; self.rows + 1];
+        let mut indices = Vec::with_capacity(self.indices.len());
+        let mut values = Vec::with_capacity(self.values.len());
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                if j != i {
+                    indices.push(j);
+                    values.push(v);
+                }
+            }
+            indptr[i + 1] = indices.len();
+        }
+        self.indptr = indptr;
+        self.indices = indices;
+        self.values = values;
+    }
+
+    /// Row sums (weighted degrees).
+    pub fn row_sums(&self) -> Vec<f64> {
+        (0..self.rows)
+            .map(|i| self.row(i).1.iter().sum())
+            .collect()
+    }
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{dim, forall};
+    use crate::util::rng::Pcg64;
+
+    fn random_sparse(rng: &mut Pcg64, n: usize, density: f64) -> CsrMat {
+        let mut trips = Vec::new();
+        for i in 0..n {
+            for j in 0..n {
+                if rng.uniform() < density {
+                    trips.push((i, j, rng.gaussian()));
+                }
+            }
+        }
+        CsrMat::from_coo(n, n, trips)
+    }
+
+    #[test]
+    fn from_coo_sums_duplicates() {
+        let m = CsrMat::from_coo(2, 2, vec![(0, 1, 1.0), (0, 1, 2.5), (1, 0, -1.0)]);
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.get(0, 1), 3.5);
+        assert_eq!(m.get(1, 0), -1.0);
+        assert_eq!(m.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let m = CsrMat::from_coo(5, 5, vec![(4, 0, 2.0)]);
+        assert_eq!(m.nnz(), 1);
+        for i in 0..4 {
+            assert_eq!(m.row(i).0.len(), 0);
+        }
+        assert_eq!(m.get(4, 0), 2.0);
+    }
+
+    #[test]
+    fn spmm_matches_dense_property() {
+        forall(
+            15,
+            800,
+            |rng| {
+                let n = dim(rng, 1, 25);
+                let k = dim(rng, 1, 8);
+                (random_sparse(rng, n, 0.3), DenseMat::gaussian(n, k, rng))
+            },
+            |(x, f)| {
+                let got = x.spmm(f);
+                let want = crate::linalg::blas::matmul(&x.to_dense(), f);
+                let err = got.diff_fro(&want);
+                if err < 1e-10 * (1.0 + want.fro_norm()) {
+                    Ok(())
+                } else {
+                    Err(format!("err {err}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn sampled_spmm_full_sampling_recovers_product() {
+        // Taking every row once with weight 1 reproduces X·F exactly.
+        let mut rng = Pcg64::seed_from_u64(4);
+        let mut x = random_sparse(&mut rng, 20, 0.4);
+        // make symmetric
+        let dense = x.to_dense();
+        let mut trips = Vec::new();
+        for i in 0..20 {
+            for j in 0..20 {
+                let v = 0.5 * (dense.at(i, j) + dense.at(j, i));
+                if v != 0.0 {
+                    trips.push((i, j, v));
+                }
+            }
+        }
+        x = CsrMat::from_coo(20, 20, trips);
+        let f = DenseMat::gaussian(20, 5, &mut rng);
+        let samples: Vec<usize> = (0..20).collect();
+        let weights = vec![1.0; 20];
+        let got = x.sampled_spmm_sym(&f, &samples, &weights);
+        let want = x.spmm(&f);
+        assert!(got.diff_fro(&want) < 1e-10, "err {}", got.diff_fro(&want));
+    }
+
+    #[test]
+    fn zero_diagonal_and_scale() {
+        let mut m = CsrMat::from_coo(
+            3,
+            3,
+            vec![(0, 0, 5.0), (0, 1, 1.0), (1, 0, 1.0), (2, 2, 3.0)],
+        );
+        m.zero_diagonal();
+        assert_eq!(m.get(0, 0), 0.0);
+        assert_eq!(m.get(2, 2), 0.0);
+        assert_eq!(m.get(0, 1), 1.0);
+        m.scale_sym(&[2.0, 3.0, 1.0]);
+        assert_eq!(m.get(0, 1), 6.0);
+        assert_eq!(m.get(1, 0), 6.0);
+    }
+
+    #[test]
+    fn symmetry_check() {
+        let sym = CsrMat::from_coo(2, 2, vec![(0, 1, 2.0), (1, 0, 2.0)]);
+        assert!(sym.is_symmetric(1e-12));
+        let asym = CsrMat::from_coo(2, 2, vec![(0, 1, 2.0)]);
+        assert!(!asym.is_symmetric(1e-12));
+    }
+}

@@ -1,0 +1,10 @@
+//! Sparse matrix substrate (CSR) for the paper's large sparse experiments
+//! (§5.2, the OAG citation graph): SpMM against dense skinny factors,
+//! sampled products for LvS-SymNMF, symmetric normalization, and
+//! MatrixMarket IO.
+
+pub mod csr;
+pub mod io;
+pub mod sym;
+
+pub use csr::CsrMat;

@@ -1,0 +1,224 @@
+//! Symmetrically regularized alternating updating (paper §2.1.1–2.1.2):
+//! iterate the two NLS problems of Eq. 2.4,
+//!
+//! ```text
+//!     min_{W≥0} ‖[H; √αI]·Wᵀ − [X; √αHᵀ]‖   and symmetrically for H,
+//! ```
+//!
+//! through their normal-equation pair (G = FᵀF + αI, Y = X·F + αF) and
+//! the Update(G, Y) rule (BPP / HALS / MU). This single loop, generic
+//! over [`SymOp`], is also the engine of LAI-SymNMF (X replaced by the
+//! factored approximation) and Compressed-NMF (projected products).
+
+use crate::linalg::{blas, DenseMat};
+use crate::nls::update;
+use crate::randnla::SymOp;
+use crate::symnmf::convergence::{normalized_residual, projected_gradient_norm_sym};
+use crate::symnmf::metrics::{IterRecord, StopRule, SymNmfResult};
+use crate::symnmf::options::SymNmfOptions;
+use crate::symnmf::init::initial_factor;
+use crate::util::rng::Pcg64;
+use crate::util::timer::{PhaseTimer, Stopwatch, PHASE_MM, PHASE_SOLVE};
+
+/// Exact-metric evaluator: residual (and optional projected gradient)
+/// against the TRUE data matrix, evaluated off the clock so every method
+/// is billed only for its own algorithmic work (see `IterRecord`).
+pub struct Metrics<'a> {
+    pub x: &'a dyn SymOp,
+    pub x_norm_sq: f64,
+    pub proj_grad: bool,
+}
+
+impl<'a> Metrics<'a> {
+    pub fn new(x: &'a dyn SymOp, proj_grad: bool) -> Self {
+        Metrics { x, x_norm_sq: x.fro_norm_sq(), proj_grad }
+    }
+
+    /// (normalized residual of ‖X − WHᵀ‖, optional projected gradient)
+    pub fn eval(&self, w: &DenseMat, h: &DenseMat) -> (f64, Option<f64>) {
+        let xh = self.x.apply(h);
+        let gw = blas::gram(w);
+        let gh = blas::gram(h);
+        let res = normalized_residual(self.x_norm_sq, &xh, w, &gw, &gh);
+        let pg = self
+            .proj_grad
+            .then(|| projected_gradient_norm_sym(h, &xh, &gh));
+        (res, pg)
+    }
+}
+
+/// Resolve α: the paper's recommendation α = max(X) (§5.1, from [35]).
+pub fn resolve_alpha<X: SymOp + ?Sized>(x: &X, opts: &SymNmfOptions) -> f64 {
+    opts.alpha.unwrap_or_else(|| x.max_value())
+}
+
+/// The shared alternating loop. `x` is whatever operator the caller wants
+/// the iteration to see (true X, LAI, …); `metrics` always measures
+/// against the true X. `setup_secs` pre-loads the clock (LAI build time).
+#[allow(clippy::too_many_arguments)]
+pub fn run_alternating_loop(
+    x: &dyn SymOp,
+    alpha: f64,
+    opts: &SymNmfOptions,
+    mut h: DenseMat,
+    metrics: &Metrics,
+    label: String,
+    setup_secs: f64,
+    phases: PhaseTimer,
+) -> SymNmfResult {
+    let k = opts.k;
+    let mut w = h.clone();
+    let mut records: Vec<IterRecord> = Vec::new();
+    let mut stop = StopRule::new(opts.tol, opts.patience);
+    let mut phases = phases;
+    let mut clock = setup_secs;
+
+    for iter in 0..opts.max_iters {
+        let sw = Stopwatch::start();
+        let mut mm = 0.0;
+        let mut solve = 0.0;
+
+        // --- W update: G = HᵀH + αI, Y = X·H + αH ---
+        let t = Stopwatch::start();
+        let xh = x.apply(&h);
+        let mut g = blas::gram(&h);
+        mm += t.elapsed_secs();
+        for i in 0..k {
+            *g.at_mut(i, i) += alpha;
+        }
+        let mut y = xh;
+        y.axpy(alpha, &h);
+        let t = Stopwatch::start();
+        w = update(opts.rule, &g, &y, &w);
+        solve += t.elapsed_secs();
+
+        // --- H update: G = WᵀW + αI, Y = X·W + αW ---
+        let t = Stopwatch::start();
+        let xw = x.apply(&w);
+        let mut g2 = blas::gram(&w);
+        mm += t.elapsed_secs();
+        for i in 0..k {
+            *g2.at_mut(i, i) += alpha;
+        }
+        let mut y2 = xw;
+        y2.axpy(alpha, &w);
+        let t = Stopwatch::start();
+        h = update(opts.rule, &g2, &y2, &h);
+        solve += t.elapsed_secs();
+
+        clock += sw.elapsed_secs();
+        phases.add(PHASE_MM, std::time::Duration::from_secs_f64(mm));
+        phases.add(PHASE_SOLVE, std::time::Duration::from_secs_f64(solve));
+
+        // --- metrics, off the clock ---
+        let (res, pg) = metrics.eval(&w, &h);
+        records.push(IterRecord {
+            iter,
+            time_secs: clock,
+            residual: res,
+            proj_grad: pg,
+            phase_secs: (mm, solve, 0.0),
+            hybrid_stats: None,
+        });
+        if stop.update(res) {
+            break;
+        }
+    }
+
+    SymNmfResult { label, h, w, records, phases, setup_secs }
+}
+
+/// Standard SymNMF via regularized ANLS/HALS/MU on the exact X
+/// (the paper's deterministic baselines "BPP" and "HALS").
+pub fn symnmf_anls<X: SymOp>(x: &X, opts: &SymNmfOptions) -> SymNmfResult {
+    let mut rng = Pcg64::seed_from_u64(opts.seed);
+    let alpha = resolve_alpha(x, opts);
+    let h0 = initial_factor(x, opts, &mut rng);
+    let metrics = Metrics::new(x, true);
+    run_alternating_loop(
+        x,
+        alpha,
+        opts,
+        h0,
+        &metrics,
+        opts.rule.label().to_string(),
+        0.0,
+        PhaseTimer::new(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nls::UpdateRule;
+
+    /// A symmetric nonnegative matrix with planted rank-k structure.
+    pub fn planted(m: usize, k: usize, noise: f64, seed: u64) -> DenseMat {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let h = DenseMat::uniform(m, k, 1.0, &mut rng);
+        let mut x = blas::matmul_nt(&h, &h);
+        if noise > 0.0 {
+            let mut e = DenseMat::uniform(m, m, noise, &mut rng);
+            e.symmetrize();
+            x.axpy(1.0, &e);
+        }
+        x.symmetrize();
+        x
+    }
+
+    #[test]
+    fn converges_on_planted_problem_all_rules() {
+        let x = planted(60, 4, 0.0, 1);
+        for rule in [UpdateRule::Bpp, UpdateRule::Hals, UpdateRule::Mu] {
+            let mut opts = SymNmfOptions::new(4).with_rule(rule).with_seed(3);
+            opts.max_iters = 150;
+            let res = symnmf_anls(&x, &opts);
+            assert!(res.h.is_nonneg());
+            assert!(res.w.is_nonneg());
+            let final_res = res.final_residual();
+            assert!(
+                final_res < 0.15,
+                "{rule:?} residual {final_res} too high"
+            );
+            // residual roughly decreasing
+            let first = res.records.first().unwrap().residual;
+            assert!(final_res <= first + 1e-9);
+        }
+    }
+
+    #[test]
+    fn w_and_h_converge_together() {
+        // large α forces W ≈ H (the Eq. 2.3 coupling)
+        let x = planted(40, 3, 0.0, 2);
+        let mut opts = SymNmfOptions::new(3).with_seed(5);
+        opts.max_iters = 100;
+        let res = symnmf_anls(&x, &opts);
+        let rel = res.w.diff_fro(&res.h) / res.h.fro_norm();
+        assert!(rel < 0.05, "‖W−H‖/‖H‖ = {rel}");
+    }
+
+    #[test]
+    fn records_are_monotone_in_time() {
+        let x = planted(30, 3, 0.1, 3);
+        let mut opts = SymNmfOptions::new(3);
+        opts.max_iters = 20;
+        let res = symnmf_anls(&x, &opts);
+        for w in res.records.windows(2) {
+            assert!(w[1].time_secs >= w[0].time_secs);
+        }
+        assert!(res.iters() <= 20);
+    }
+
+    #[test]
+    fn stopping_rule_halts_early_on_easy_input() {
+        let x = planted(50, 3, 0.0, 4);
+        let mut opts = SymNmfOptions::new(3);
+        opts.max_iters = 300;
+        let res = symnmf_anls(&x, &opts);
+        assert!(
+            res.iters() < 300,
+            "should stop before the cap, took {}",
+            res.iters()
+        );
+    }
+}

@@ -1,0 +1,157 @@
+//! Compressed-NMF baseline (Tepper & Sapiro [51]) extended to SymNMF —
+//! the comparison method of paper App. B.1 ("Comp-BPP" / "Comp-HALS" in
+//! Fig. 1 / Table 2).
+//!
+//! One RRF basis Q ∈ R^{m×l} is computed up front (symmetric input needs
+//! only one side); each H-update then solves the projected problem
+//! min_{H≥0} ‖Qᵀ(WHᵀ − X)‖² + α‖W − H‖², whose normal equations are
+//!
+//! ```text
+//!     G = (QᵀW)ᵀ(QᵀW) + αI,   Y = Bᵀ·(QᵀW) + αW,   B = QᵀX (l×m).
+//! ```
+//!
+//! The only difference from LAI-NMF is the projection QQᵀ inside the
+//! Gram matrix (App. B.1 shows the RHS terms coincide) — empirically the
+//! two behave nearly identically, which Table 2 (and our bench) confirms.
+
+use crate::linalg::blas;
+#[cfg(test)]
+use crate::linalg::DenseMat;
+use crate::nls::update;
+use crate::randnla::rrf::{ada_rrf, rrf};
+use crate::randnla::SymOp;
+use crate::symnmf::anls::{resolve_alpha, Metrics};
+use crate::symnmf::init::initial_factor;
+use crate::symnmf::metrics::{IterRecord, StopRule, SymNmfResult};
+use crate::symnmf::options::{PowerIter, SymNmfOptions};
+use crate::util::rng::Pcg64;
+use crate::util::timer::{PhaseTimer, Stopwatch, PHASE_MM, PHASE_SOLVE};
+
+/// Compressed SymNMF ("Comp-<rule>").
+pub fn compressed_symnmf<X: SymOp>(x: &X, opts: &SymNmfOptions) -> SymNmfResult {
+    let mut rng = Pcg64::seed_from_u64(opts.seed);
+    let alpha = resolve_alpha(x, opts);
+    let k = opts.k;
+    let l = opts.sketch_width();
+    let mut phases = PhaseTimer::new();
+
+    // --- setup: one RRF + B = QᵀX (timed) ---
+    let sw = Stopwatch::start();
+    let basis = match opts.power {
+        PowerIter::Static(q) => rrf(x, l, q, &mut rng),
+        PowerIter::Adaptive { q_max, tol } => ada_rrf(x, l, q_max, tol, &mut rng),
+    };
+    let q = basis.q_basis;
+    // B = QᵀX = (X·Q)ᵀ for symmetric X → store Bᵀ = X·Q (m×l)
+    let bt = x.apply(&q);
+    let setup_secs = sw.elapsed_secs();
+    phases.add(PHASE_MM, std::time::Duration::from_secs_f64(setup_secs));
+
+    let mut h = initial_factor(x, opts, &mut rng);
+    let mut w = h.clone();
+    let metrics = Metrics::new(x, true);
+    let mut records: Vec<IterRecord> = Vec::new();
+    let mut stop = StopRule::new(opts.tol, opts.patience);
+    let mut clock = setup_secs;
+    let label = format!("Comp-{}", opts.rule.label());
+
+    for iter in 0..opts.max_iters {
+        let sw = Stopwatch::start();
+        let mut mm = 0.0;
+        let mut solve = 0.0;
+
+        // --- W update from H ---
+        let t = Stopwatch::start();
+        let qth = blas::matmul_tn(&q, &h); // l×k
+        let mut g = blas::gram(&qth); // Hᵀ·QQᵀ·H
+        let mut y = blas::matmul(&bt, &qth); // (XQ)·(QᵀH) = (QQᵀX)ᵀ… m×k
+        mm += t.elapsed_secs();
+        for i in 0..k {
+            *g.at_mut(i, i) += alpha;
+        }
+        y.axpy(alpha, &h);
+        let t = Stopwatch::start();
+        w = update(opts.rule, &g, &y, &w);
+        solve += t.elapsed_secs();
+
+        // --- H update from W ---
+        let t = Stopwatch::start();
+        let qtw = blas::matmul_tn(&q, &w);
+        let mut g2 = blas::gram(&qtw);
+        let mut y2 = blas::matmul(&bt, &qtw);
+        mm += t.elapsed_secs();
+        for i in 0..k {
+            *g2.at_mut(i, i) += alpha;
+        }
+        y2.axpy(alpha, &w);
+        let t = Stopwatch::start();
+        h = update(opts.rule, &g2, &y2, &h);
+        solve += t.elapsed_secs();
+
+        clock += sw.elapsed_secs();
+        phases.add(PHASE_MM, std::time::Duration::from_secs_f64(mm));
+        phases.add(PHASE_SOLVE, std::time::Duration::from_secs_f64(solve));
+
+        let (res, pg) = metrics.eval(&w, &h);
+        records.push(IterRecord {
+            iter,
+            time_secs: clock,
+            residual: res,
+            proj_grad: pg,
+            phase_secs: (mm, solve, 0.0),
+            hybrid_stats: None,
+        });
+        if stop.update(res) {
+            break;
+        }
+    }
+
+    SymNmfResult { label, h, w, records, phases, setup_secs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nls::UpdateRule;
+    use crate::symnmf::lai::lai_symnmf;
+
+    fn planted(m: usize, k: usize, seed: u64) -> DenseMat {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let h = DenseMat::uniform(m, k, 1.0, &mut rng);
+        let mut x = blas::matmul_nt(&h, &h);
+        x.symmetrize();
+        x
+    }
+
+    #[test]
+    fn converges_on_planted() {
+        let x = planted(60, 4, 1);
+        let mut opts = SymNmfOptions::new(4)
+            .with_rule(UpdateRule::Hals)
+            .with_seed(2);
+        opts.max_iters = 100;
+        let res = compressed_symnmf(&x, &opts);
+        assert!(res.h.is_nonneg());
+        assert!(res.min_residual() < 0.1, "res {}", res.min_residual());
+        assert_eq!(res.label, "Comp-HALS");
+    }
+
+    /// App. B.1: Compressed-NMF and LAI-NMF behave nearly identically on
+    /// symmetric inputs — check final residuals agree.
+    #[test]
+    fn nearly_identical_to_lai() {
+        let x = planted(50, 3, 3);
+        let mut opts = SymNmfOptions::new(3)
+            .with_rule(UpdateRule::Bpp)
+            .with_seed(4);
+        opts.max_iters = 80;
+        let comp = compressed_symnmf(&x, &opts);
+        let lai = lai_symnmf(&x, &opts);
+        assert!(
+            (comp.min_residual() - lai.min_residual()).abs() < 0.02,
+            "Comp {} vs LAI {}",
+            comp.min_residual(),
+            lai.min_residual()
+        );
+    }
+}

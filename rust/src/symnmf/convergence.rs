@@ -1,0 +1,127 @@
+//! Convergence metrics (paper App. C): the normalized residual via the
+//! trace trick (App. C.2) and the projected gradient norm (App. C.3).
+
+use crate::linalg::{blas, DenseMat};
+
+/// ‖X − W·Hᵀ‖²_F via the App. C.2 trace trick:
+///     ‖X‖² + tr((WᵀW)(HᵀH)) − 2·tr(Wᵀ·(XH))
+/// reusing the already-computed product XH and Gram matrices, so the
+/// check is almost free each iteration.
+pub fn residual_sq_from_products(
+    x_norm_sq: f64,
+    xh: &DenseMat, // X·H (m×k)
+    w: &DenseMat,  // m×k
+    gw: &DenseMat, // WᵀW (k×k, WITHOUT α)
+    gh: &DenseMat, // HᵀH (k×k, WITHOUT α)
+) -> f64 {
+    let k = gw.rows();
+    // tr((WᵀW)(HᵀH)) = Σ_ij gw_ij · gh_ji = Σ_ij gw_ij · gh_ij (sym)
+    let mut tr_gram = 0.0;
+    for i in 0..k {
+        tr_gram += blas::dot(gw.row(i), gh.row(i));
+    }
+    // tr(Wᵀ(XH)) = Σ_ij W_ij (XH)_ij
+    let tr_wxh = blas::dot(w.data(), xh.data());
+    (x_norm_sq + tr_gram - 2.0 * tr_wxh).max(0.0)
+}
+
+/// Normalized residual ‖X − WHᵀ‖_F / ‖X‖_F.
+pub fn normalized_residual(
+    x_norm_sq: f64,
+    xh: &DenseMat,
+    w: &DenseMat,
+    gw: &DenseMat,
+    gh: &DenseMat,
+) -> f64 {
+    (residual_sq_from_products(x_norm_sq, xh, w, gw, gh) / x_norm_sq.max(1e-300)).sqrt()
+}
+
+/// Projected gradient norm of the *symmetric* objective (App. C.3,
+/// Eq. C.7): ∇f_H = 4(HHᵀ − X)H = 4(H·(HᵀH) − XH), projected per
+/// Eq. C.6 (free entries, plus negative components at the boundary).
+pub fn projected_gradient_norm_sym(h: &DenseMat, xh: &DenseMat, gh: &DenseMat) -> f64 {
+    let (m, k) = h.shape();
+    assert_eq!(xh.shape(), (m, k));
+    let hg = blas::matmul(h, gh);
+    let mut acc = 0.0;
+    for i in 0..m {
+        let hrow = h.row(i);
+        let hgrow = hg.row(i);
+        let xhrow = xh.row(i);
+        for j in 0..k {
+            let g = 4.0 * (hgrow[j] - xhrow[j]);
+            if g < 0.0 || hrow[j] > 0.0 {
+                acc += g * g;
+            }
+        }
+    }
+    acc.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn trace_trick_matches_explicit() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let (m, k) = (20, 4);
+        let mut x = DenseMat::gaussian(m, m, &mut rng);
+        x.symmetrize();
+        let mut w = DenseMat::gaussian(m, k, &mut rng);
+        w.project_nonneg();
+        let mut h = DenseMat::gaussian(m, k, &mut rng);
+        h.project_nonneg();
+        let xh = blas::matmul(&x, &h);
+        let gw = blas::gram(&w);
+        let gh = blas::gram(&h);
+        let fast = residual_sq_from_products(x.fro_norm_sq(), &xh, &w, &gw, &gh);
+        let rec = blas::matmul_nt(&w, &h);
+        let mut d = x.clone();
+        d.axpy(-1.0, &rec);
+        let explicit = d.fro_norm_sq();
+        assert!(
+            (fast - explicit).abs() < 1e-8 * (1.0 + explicit),
+            "fast {fast} explicit {explicit}"
+        );
+    }
+
+    #[test]
+    fn residual_zero_at_exact_factorization() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let h = DenseMat::uniform(15, 3, 1.0, &mut rng);
+        let x = blas::matmul_nt(&h, &h);
+        let xh = blas::matmul(&x, &h);
+        let g = blas::gram(&h);
+        let r = normalized_residual(x.fro_norm_sq(), &xh, &h, &g, &g);
+        assert!(r < 1e-10, "r={r}");
+    }
+
+    #[test]
+    fn projected_gradient_zero_at_stationary_interior() {
+        // At an exact strictly-positive factorization the gradient is 0.
+        let mut rng = Pcg64::seed_from_u64(3);
+        let mut h = DenseMat::uniform(12, 3, 1.0, &mut rng);
+        for v in h.data_mut() {
+            *v += 0.1; // strictly positive
+        }
+        let x = blas::matmul_nt(&h, &h);
+        let xh = blas::matmul(&x, &h);
+        let gh = blas::gram(&h);
+        let pg = projected_gradient_norm_sym(&h, &xh, &gh);
+        assert!(pg < 1e-8, "pg={pg}");
+    }
+
+    #[test]
+    fn boundary_entries_with_positive_gradient_excluded() {
+        // H=0 at an entry whose gradient is positive (pushing further
+        // negative is blocked) → that entry contributes nothing.
+        let h = DenseMat::zeros(2, 1);
+        let x = DenseMat::from_vec(2, 2, vec![-1.0, 0.0, 0.0, -1.0]);
+        let xh = blas::matmul(&x, &h); // zero
+        let gh = blas::gram(&h); // zero
+        let pg = projected_gradient_norm_sym(&h, &xh, &gh);
+        assert_eq!(pg, 0.0);
+    }
+}

@@ -1,0 +1,67 @@
+//! Factor initialization — the strategy of [35] used throughout §5:
+//! entries uniform on [0, 1) scaled by 2·√(ζ/k), ζ = mean(X), so the
+//! initial ‖HHᵀ‖ is commensurate with ‖X‖.
+
+use crate::linalg::DenseMat;
+use crate::randnla::SymOp;
+use crate::util::rng::Pcg64;
+
+/// H₀ ∈ R^{m×k} per the §5 initialization.
+pub fn init_factor<X: SymOp>(x: &X, k: usize, rng: &mut Pcg64) -> DenseMat {
+    let zeta = x.mean_value().max(0.0);
+    let scale = 2.0 * (zeta / k as f64).sqrt();
+    DenseMat::uniform(x.dim(), k, scale, rng)
+}
+
+/// Resolve the initial factor: the options' warm start if provided (shape
+/// checked), else the §5 random initialization.
+pub fn initial_factor<X: SymOp>(
+    x: &X,
+    opts: &crate::symnmf::SymNmfOptions,
+    rng: &mut Pcg64,
+) -> DenseMat {
+    match &opts.warm_start {
+        Some(h0) => {
+            assert_eq!(
+                h0.shape(),
+                (x.dim(), opts.k),
+                "warm_start shape must be (m, k)"
+            );
+            h0.clone()
+        }
+        None => init_factor(x, opts.k, rng),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas;
+
+    #[test]
+    fn init_norm_is_commensurate() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let h_true = DenseMat::uniform(200, 4, 1.0, &mut rng);
+        let x = blas::matmul_nt(&h_true, &h_true);
+        let h0 = init_factor(&x, 4, &mut rng);
+        assert_eq!(h0.shape(), (200, 4));
+        assert!(h0.is_nonneg());
+        // E[(H₀H₀ᵀ)_ij] = k·(scale²/4)·(uniform moments) ≈ ζ → same order
+        let rec = blas::matmul_nt(&h0, &h0);
+        let ratio = rec.mean() / x.mean();
+        assert!(
+            ratio > 0.2 && ratio < 5.0,
+            "init scale off by {ratio}"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Pcg64::seed_from_u64(9);
+        let mut r2 = Pcg64::seed_from_u64(9);
+        let x = DenseMat::eye(10);
+        let a = init_factor(&x, 3, &mut r1);
+        let b = init_factor(&x, 3, &mut r2);
+        assert_eq!(a, b);
+    }
+}

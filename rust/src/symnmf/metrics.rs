@@ -1,0 +1,130 @@
+//! Per-iteration metric records and the solver result type — the raw data
+//! behind every convergence plot (Figs. 1, 2, 5) and summary table
+//! (Tables 2, 4–6) of the paper.
+
+use crate::linalg::DenseMat;
+use crate::util::timer::PhaseTimer;
+
+/// One row of a convergence log.
+#[derive(Clone, Debug)]
+pub struct IterRecord {
+    pub iter: usize,
+    /// cumulative *algorithm* time in seconds at the end of this
+    /// iteration. Metric evaluation (residual / projected gradient) is
+    /// excluded so randomized methods are not billed for exact-metric
+    /// computation they don't need (App. C discusses cheap estimates; we
+    /// log exact values but keep them off the clock for all methods
+    /// uniformly). Setup time (e.g. the LAI computation) IS included —
+    /// that is why the randomized curves "start later" in Fig. 1.
+    pub time_secs: f64,
+    /// normalized residual ‖X − WHᵀ‖_F / ‖X‖_F (App. C.1)
+    pub residual: f64,
+    /// projected gradient norm (App. C.3), when computed
+    pub proj_grad: Option<f64>,
+    /// per-phase seconds of THIS iteration: (matmul, solve, sampling)
+    pub phase_secs: (f64, f64, f64),
+    /// LvS hybrid-sampling stats for Fig. 6: (deterministic fraction,
+    /// θ/k leverage mass), averaged over the W and H samplers
+    pub hybrid_stats: Option<(f64, f64)>,
+}
+
+/// Result of a SymNMF solve.
+#[derive(Clone, Debug)]
+pub struct SymNmfResult {
+    /// display label, e.g. "LAI-HALS-IR" (§5.1 labeling scheme)
+    pub label: String,
+    /// final H factor (m×k)
+    pub h: DenseMat,
+    /// final W factor (≈ H at convergence of the regularized surrogate);
+    /// equals `h` for methods that only maintain H (PGNCG)
+    pub w: DenseMat,
+    /// convergence log
+    pub records: Vec<IterRecord>,
+    /// aggregate per-phase timings
+    pub phases: PhaseTimer,
+    /// seconds spent before the first iteration (LAI / sketch setup)
+    pub setup_secs: f64,
+}
+
+impl SymNmfResult {
+    /// Total algorithm time (setup + all iterations).
+    pub fn total_secs(&self) -> f64 {
+        self.records.last().map(|r| r.time_secs).unwrap_or(self.setup_secs)
+    }
+
+    pub fn iters(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Lowest residual reached.
+    pub fn min_residual(&self) -> f64 {
+        self.records
+            .iter()
+            .map(|r| r.residual)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Final residual.
+    pub fn final_residual(&self) -> f64 {
+        self.records.last().map(|r| r.residual).unwrap_or(f64::NAN)
+    }
+
+    /// Hard clustering by row-wise argmax of H (§5, from [35]).
+    pub fn cluster_assignments(&self) -> Vec<usize> {
+        crate::clustering::assign::argmax_rows(&self.h)
+    }
+}
+
+/// Tracks the §5.1 stopping rule: stop once the normalized residual fails
+/// to drop by more than `tol` for `patience` consecutive iterations.
+pub struct StopRule {
+    tol: f64,
+    patience: usize,
+    best: f64,
+    stall: usize,
+}
+
+impl StopRule {
+    pub fn new(tol: f64, patience: usize) -> Self {
+        StopRule { tol, patience, best: f64::INFINITY, stall: 0 }
+    }
+
+    /// Feed the residual of the iteration that just finished; returns
+    /// true when the algorithm should stop.
+    pub fn update(&mut self, residual: f64) -> bool {
+        if self.best - residual > self.tol {
+            self.best = residual;
+            self.stall = 0;
+        } else {
+            self.best = self.best.min(residual);
+            self.stall += 1;
+        }
+        self.stall >= self.patience
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stop_rule_fires_after_patience_stalls() {
+        let mut s = StopRule::new(1e-4, 4);
+        assert!(!s.update(0.9));
+        assert!(!s.update(0.8)); // improving
+        assert!(!s.update(0.8)); // stall 1
+        assert!(!s.update(0.79999)); // stall 2 (below tol improvement)
+        assert!(!s.update(0.8)); // stall 3
+        assert!(s.update(0.8)); // stall 4 → stop
+    }
+
+    #[test]
+    fn stop_rule_resets_on_improvement() {
+        let mut s = StopRule::new(1e-4, 2);
+        assert!(!s.update(0.5));
+        assert!(!s.update(0.5)); // stall 1
+        assert!(!s.update(0.4)); // improves → reset
+        assert!(!s.update(0.4)); // stall 1
+        assert!(s.update(0.4)); // stall 2 → stop
+    }
+}

@@ -1,0 +1,31 @@
+//! SymNMF algorithms: the paper's two randomized methods and every
+//! baseline they are compared against.
+//!
+//! * [`anls`] — symmetrically regularized ANLS / HALS / MU (paper §2.1.1,
+//!   Eq. 2.3–2.4), the deterministic baseline family.
+//! * [`pgncg`] — Projected Gauss–Newton with CG (paper §2.1.3).
+//! * [`lai`] — **LAI-SymNMF** (paper §3): SymNMF of a randomized low-rank
+//!   approximate input, with Iterative Refinement and Ada-RRF (§3.3), and
+//!   LAI-PGNCG (App. B.2).
+//! * [`lvs`] — **LvS-SymNMF** (paper §4): leverage-score-sampled NLS
+//!   subproblems with hybrid deterministic+random sampling (§4.2).
+//! * [`compressed`] — the Compressed-NMF baseline (Tepper & Sapiro [51])
+//!   extended to SymNMF (App. B.1).
+//!
+//! All methods speak [`crate::randnla::SymOp`], share the Update(G, Y)
+//! solver toolbox ([`crate::nls`]), the §5 initialization ([`init`]) and
+//! the App. C stopping criteria ([`convergence`]); per-iteration metrics
+//! land in [`metrics`].
+
+pub mod anls;
+pub mod compressed;
+pub mod convergence;
+pub mod init;
+pub mod lai;
+pub mod lvs;
+pub mod metrics;
+pub mod options;
+pub mod pgncg;
+
+pub use metrics::{IterRecord, SymNmfResult};
+pub use options::SymNmfOptions;

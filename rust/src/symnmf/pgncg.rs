@@ -1,0 +1,265 @@
+//! Projected Gauss–Newton with Conjugate Gradients (paper §2.1.3, [22])
+//! and its LAI variant (App. B.2, Alg. LAI-PGNCG-SymNMF).
+//!
+//! The all-at-once method minimizes ‖X − HHᵀ‖ directly. Each outer step
+//! solves the Gauss–Newton normal equations JᵀJ·z = g approximately with
+//! CG, exploiting the Kronecker structure of J so that the JᵀJ-product is
+//! two skinny matmuls (line 11 of Alg. LAI-PGNCG):
+//!
+//! ```text
+//!     Y = 2(P·(HᵀH) + H·(PᵀH)),   g = −2·(X·H − H·(HᵀH))
+//! ```
+//!
+//! then projects: H ← [H − Z]_+. The only X-sized work per outer
+//! iteration is the single product X·H — which is why LAI substitution
+//! (X·H → U(VᵀH)) accelerates PGNCG just as well as the AU methods,
+//! something the compression-based randomized NMF methods cannot do
+//! (paper §3.4).
+
+use crate::linalg::{blas, DenseMat};
+use crate::randnla::SymOp;
+use crate::symnmf::anls::Metrics;
+use crate::symnmf::init::initial_factor;
+use crate::symnmf::lai::build_lai;
+use crate::symnmf::metrics::{IterRecord, StopRule, SymNmfResult};
+use crate::symnmf::options::SymNmfOptions;
+use crate::util::rng::Pcg64;
+use crate::util::timer::{PhaseTimer, Stopwatch, PHASE_MM, PHASE_SOLVE};
+
+/// One CG solve of JᵀJ·Z ≈ R₀ (Gauss–Newton direction). `g` = HᵀH is held
+/// fixed during the inner solve. Returns Z.
+fn cg_direction(h: &DenseMat, g: &DenseMat, r0: DenseMat, iters: usize) -> DenseMat {
+    let mut z = DenseMat::zeros(h.rows(), h.cols());
+    let mut r = r0;
+    let mut p = r.clone();
+    let mut e_old = r.fro_norm_sq();
+    if e_old == 0.0 {
+        return z;
+    }
+    for _ in 0..iters {
+        // Y = JᵀJ·P = 2(P·G + H·(PᵀH))
+        let pth = blas::matmul_tn(&p, h);
+        let mut y = blas::matmul(&p, g);
+        let hp = blas::matmul(h, &pth);
+        y.axpy(1.0, &hp);
+        y.scale(2.0);
+        let py = blas::dot(p.data(), y.data());
+        if py.abs() < 1e-300 {
+            break;
+        }
+        let a = e_old / py;
+        z.axpy(a, &p);
+        r.axpy(-a, &y);
+        let e_new = r.fro_norm_sq();
+        if e_new.sqrt() < 1e-12 {
+            break;
+        }
+        let beta = e_new / e_old;
+        // p = r + beta·p
+        let mut p_next = r.clone();
+        p_next.axpy(beta, &p);
+        p = p_next;
+        e_old = e_new;
+    }
+    z
+}
+
+/// Shared PGNCG loop over any operator (`x_iter` drives the iteration,
+/// `metrics` measures against the true X).
+fn run_pgncg_loop(
+    x_iter: &dyn SymOp,
+    opts: &SymNmfOptions,
+    mut h: DenseMat,
+    metrics: &Metrics,
+    label: String,
+    setup_secs: f64,
+    mut phases: PhaseTimer,
+) -> SymNmfResult {
+    let mut records: Vec<IterRecord> = Vec::new();
+    let mut stop = StopRule::new(opts.tol, opts.patience);
+    let mut clock = setup_secs;
+
+    for iter in 0..opts.max_iters {
+        let sw = Stopwatch::start();
+        let t = Stopwatch::start();
+        let xh = x_iter.apply(&h);
+        let g = blas::gram(&h);
+        let mm = t.elapsed_secs();
+
+        let t = Stopwatch::start();
+        // gradient direction: R = −g/2 form: R₀ = 2(XH − H·G) is the CG
+        // right-hand side (−gradient); Alg. LAI-PGNCG phrases it with the
+        // opposite sign and a minus in the final update — equivalent.
+        let hg = blas::matmul(&h, &g);
+        let mut r0 = xh;
+        r0.axpy(-1.0, &hg);
+        r0.scale(2.0);
+        let z = cg_direction(&h, &g, r0, opts.cg_iters);
+        // H ← [H + Z]_+ (Z approximates the Newton step along −gradient)
+        h.axpy(1.0, &z);
+        h.project_nonneg();
+        let solve = t.elapsed_secs();
+
+        clock += sw.elapsed_secs();
+        phases.add(PHASE_MM, std::time::Duration::from_secs_f64(mm));
+        phases.add(PHASE_SOLVE, std::time::Duration::from_secs_f64(solve));
+
+        let (res, pg) = metrics.eval(&h, &h);
+        records.push(IterRecord {
+            iter,
+            time_secs: clock,
+            residual: res,
+            proj_grad: pg,
+            phase_secs: (mm, solve, 0.0),
+            hybrid_stats: None,
+        });
+        if stop.update(res) {
+            break;
+        }
+    }
+
+    SymNmfResult { label, h: h.clone(), w: h, records, phases, setup_secs }
+}
+
+/// PGNCG-SymNMF on the exact X (the paper's "PGNCG" baseline).
+pub fn pgncg_symnmf<X: SymOp>(x: &X, opts: &SymNmfOptions) -> SymNmfResult {
+    let mut rng = Pcg64::seed_from_u64(opts.seed);
+    let h0 = initial_factor(x, opts, &mut rng);
+    let metrics = Metrics::new(x, true);
+    run_pgncg_loop(
+        x,
+        opts,
+        h0,
+        &metrics,
+        "PGNCG".to_string(),
+        0.0,
+        PhaseTimer::new(),
+    )
+}
+
+/// LAI-PGNCG-SymNMF (App. B.2): identical loop against the factored LAI;
+/// with `opts.refine`, iterative refinement on the true X afterwards
+/// ("PGNCG-IR" rows of Table 2).
+pub fn lai_pgncg_symnmf<X: SymOp>(x: &X, opts: &SymNmfOptions) -> SymNmfResult {
+    let mut rng = Pcg64::seed_from_u64(opts.seed);
+    let mut phases = PhaseTimer::new();
+    let (lai, setup_secs, _evd) = build_lai(x, opts, &mut rng, &mut phases);
+    let h0 = initial_factor(x, opts, &mut rng);
+    let metrics = Metrics::new(x, true);
+    let result = run_pgncg_loop(
+        &lai,
+        opts,
+        h0,
+        &metrics,
+        "LAI-PGNCG".to_string(),
+        setup_secs,
+        phases,
+    );
+    if !opts.refine {
+        return result;
+    }
+    let clock = result.total_secs();
+    let refined = run_pgncg_loop(
+        x,
+        opts,
+        result.h.clone(),
+        &metrics,
+        "LAI-PGNCG-IR".to_string(),
+        clock,
+        result.phases.clone(),
+    );
+    let mut records = result.records;
+    let offset = records.len();
+    records.extend(refined.records.into_iter().map(|mut r| {
+        r.iter += offset;
+        r
+    }));
+    SymNmfResult {
+        label: "LAI-PGNCG-IR".to_string(),
+        h: refined.h,
+        w: refined.w,
+        records,
+        phases: refined.phases,
+        setup_secs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn planted(m: usize, k: usize, seed: u64) -> DenseMat {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let h = DenseMat::uniform(m, k, 1.0, &mut rng);
+        let mut x = blas::matmul_nt(&h, &h);
+        x.symmetrize();
+        x
+    }
+
+    #[test]
+    fn pgncg_converges_on_planted() {
+        let x = planted(50, 3, 1);
+        let mut opts = SymNmfOptions::new(3).with_seed(2);
+        opts.max_iters = 80;
+        opts.cg_iters = 15;
+        let res = pgncg_symnmf(&x, &opts);
+        assert!(res.h.is_nonneg());
+        let last = res.min_residual();
+        let first = res.records.first().unwrap().residual;
+        assert!(last < 0.5 * first, "residual {first} → {last}");
+    }
+
+    #[test]
+    fn cg_direction_solves_psd_system_when_unconstrained() {
+        // JᵀJ is PSD but can be singular; pick an RHS in its range
+        // (r0 = JᵀJ·y for random y) so CG must recover it exactly.
+        let mut rng = Pcg64::seed_from_u64(3);
+        let h = DenseMat::uniform(12, 3, 1.0, &mut rng);
+        let g = blas::gram(&h);
+        let y0 = DenseMat::gaussian(12, 3, &mut rng);
+        let r0 = {
+            let yth = blas::matmul_tn(&y0, &h);
+            let mut r = blas::matmul(&y0, &g);
+            r.axpy(1.0, &blas::matmul(&h, &yth));
+            r.scale(2.0);
+            r
+        };
+        let z = cg_direction(&h, &g, r0.clone(), 400);
+        // apply JᵀJ to z
+        let zth = blas::matmul_tn(&z, &h);
+        let mut y = blas::matmul(&z, &g);
+        y.axpy(1.0, &blas::matmul(&h, &zth));
+        y.scale(2.0);
+        let rel = y.diff_fro(&r0) / r0.fro_norm();
+        assert!(rel < 1e-6, "CG residual {rel}");
+    }
+
+    #[test]
+    fn lai_pgncg_matches_quality() {
+        let x = planted(60, 4, 4);
+        let mut opts = SymNmfOptions::new(4).with_seed(5);
+        opts.max_iters = 80;
+        let exact = pgncg_symnmf(&x, &opts);
+        let lai = lai_pgncg_symnmf(&x, &opts);
+        assert!(
+            lai.min_residual() < exact.min_residual() + 0.05,
+            "LAI {} vs exact {}",
+            lai.min_residual(),
+            exact.min_residual()
+        );
+    }
+
+    #[test]
+    fn ir_label_and_continuation() {
+        let x = planted(40, 3, 6);
+        let mut opts = SymNmfOptions::new(3).with_seed(7);
+        opts.max_iters = 20;
+        opts.refine = true;
+        let res = lai_pgncg_symnmf(&x, &opts);
+        assert_eq!(res.label, "LAI-PGNCG-IR");
+        for w in res.records.windows(2) {
+            assert!(w[1].time_secs >= w[0].time_secs - 1e-12);
+            assert_eq!(w[1].iter, w[0].iter + 1);
+        }
+    }
+}

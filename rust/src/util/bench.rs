@@ -1,0 +1,66 @@
+//! Micro-benchmark timing harness (criterion is unavailable offline):
+//! warmup + repeated timing, reporting min / median / mean. Used by the
+//! `cargo bench` targets (all `harness = false`).
+
+use std::time::Instant;
+
+/// Timing summary in seconds.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub reps: usize,
+    pub min: f64,
+    pub median: f64,
+    pub mean: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} min {:>10.6}s  median {:>10.6}s  mean {:>10.6}s  (n={})",
+            self.name, self.min, self.median, self.mean, self.reps
+        )
+    }
+}
+
+/// Run `f` `warmup` times unmeasured, then `reps` times measured.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> BenchResult {
+    assert!(reps >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let min = times[0];
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<f64>() / reps as f64;
+    BenchResult { name: name.to_string(), reps, min, median, mean }
+}
+
+/// Pretty GF/s for a flop count and seconds.
+pub fn gflops(flops: f64, secs: f64) -> f64 {
+    flops / secs / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let mut i = 0u64;
+        let r = bench("noop", 2, 9, || {
+            i = i.wrapping_add(1);
+            std::hint::black_box(i);
+        });
+        assert!(r.min <= r.median);
+        assert!(r.median <= r.mean * 3.0 + 1e-9);
+        assert_eq!(r.reps, 9);
+        assert!(r.report().contains("noop"));
+    }
+}

@@ -1,0 +1,111 @@
+//! Tiny CLI argument parser (clap is unavailable offline): subcommand +
+//! `--flag value` / `--flag` options, with typed getters and usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, positional args, `--key value` options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv[1..]. `--key value` becomes an option; a bare `--key`
+    /// followed by another `--...` (or nothing) becomes a boolean flag.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let items: Vec<String> = argv.into_iter().collect();
+        let mut i = 0;
+        while i < items.len() {
+            let a = &items[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let next_is_value =
+                    i + 1 < items.len() && !items[i + 1].starts_with("--");
+                if next_is_value {
+                    out.options.insert(key.to_string(), items[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.flags.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                if out.subcommand.is_none() && out.positional.is_empty() {
+                    out.subcommand = Some(a.clone());
+                } else {
+                    out.positional.push(a.clone());
+                }
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        // NOTE the parser's documented ambiguity: a bare `--flag` followed
+        // by a non-`--` token consumes it as a value, so positionals go
+        // before flags.
+        let a = parse("run input.mtx --method lai-hals --k 7 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("method"), Some("lai-hals"));
+        assert_eq!(a.get_usize("k", 0), 7);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["input.mtx"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("bench");
+        assert_eq!(a.get_usize("trials", 10), 10);
+        assert_eq!(a.get_f64("tau", 1.0), 1.0);
+        assert_eq!(a.get_str("method", "bpp"), "bpp");
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn negative_number_values() {
+        // "--shift -1.5": "-1.5" doesn't start with "--" so it is a value.
+        let a = parse("x --shift -1.5");
+        assert_eq!(a.get_f64("shift", 0.0), -1.5);
+    }
+}

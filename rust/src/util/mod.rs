@@ -1,0 +1,14 @@
+//! Framework substrates built in-repo (crates.io is unreachable in this
+//! environment; see DESIGN.md §2 "Offline-dependency substitutions"):
+//! a PCG64 PRNG, a scoped thread pool, a tiny CLI parser, a minimal JSON
+//! reader/writer, ASCII table rendering, timers, and a property-testing
+//! harness used by the test suite.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod propcheck;
+pub mod rng;
+pub mod table;
+pub mod threadpool;
+pub mod timer;

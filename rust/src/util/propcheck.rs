@@ -1,0 +1,76 @@
+//! Minimal property-testing harness (proptest is unavailable offline).
+//!
+//! `forall(cases, gen, prop)` runs `prop` on `cases` generated inputs from
+//! a seeded PRNG; on failure it reports the case index and seed so the
+//! failure replays deterministically. Generators for the shapes/values the
+//! linalg and coordinator invariants need are provided.
+
+use crate::util::rng::Pcg64;
+
+/// Run `prop` on `cases` inputs from `gen`. Panics with the replay seed on
+/// the first failing case.
+pub fn forall<T: std::fmt::Debug>(
+    cases: usize,
+    base_seed: u64,
+    gen: impl Fn(&mut Pcg64) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed on case {case} (replay seed {seed}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Random dimension in [lo, hi].
+pub fn dim(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+/// Vec of standard normals.
+pub fn gaussian_vec(rng: &mut Pcg64, n: usize) -> Vec<f64> {
+    rng.gaussian_vec(n)
+}
+
+/// Vec of nonnegative values (|N(0,1)|).
+pub fn nonneg_vec(rng: &mut Pcg64, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.gaussian().abs()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall(
+            50,
+            1,
+            |rng| dim(rng, 1, 10),
+            |&n| {
+                if n >= 1 && n <= 10 {
+                    Ok(())
+                } else {
+                    Err(format!("out of range: {n}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failures() {
+        forall(50, 2, |rng| dim(rng, 1, 10), |&n| {
+            if n < 10 {
+                Ok(())
+            } else {
+                Err("hit 10".into())
+            }
+        });
+    }
+}

@@ -1,0 +1,119 @@
+//! Scoped data-parallel helpers (rayon is unavailable offline).
+//!
+//! `parallel_for_chunks` splits an index range into contiguous chunks and
+//! runs them on `std::thread::scope` workers. On this image (1 core) it
+//! degrades gracefully to a sequential loop with no thread spawns; on
+//! multicore machines the dense kernels in `linalg::blas` pick it up.
+
+/// Number of worker threads to use: `SYMNMF_THREADS` env or available
+/// parallelism.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("SYMNMF_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `body(lo, hi)` over disjoint subranges covering `0..n` in parallel.
+/// `body` must be safe to run concurrently on disjoint ranges.
+pub fn parallel_for_chunks<F>(n: usize, min_chunk: usize, body: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let nt = num_threads();
+    if nt <= 1 || n <= min_chunk {
+        body(0, n);
+        return;
+    }
+    let chunks = nt.min(n.div_ceil(min_chunk)).max(1);
+    let per = n.div_ceil(chunks);
+    std::thread::scope(|s| {
+        for c in 0..chunks {
+            let lo = c * per;
+            let hi = ((c + 1) * per).min(n);
+            if lo >= hi {
+                break;
+            }
+            let body = &body;
+            s.spawn(move || body(lo, hi));
+        }
+    });
+}
+
+/// Map over `0..n`, writing results into a pre-allocated vec (each index
+/// written exactly once by one worker).
+pub fn parallel_map_into<T: Send + Sync, F>(out: &mut [T], min_chunk: usize, f: F)
+where
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = out.len();
+    let nt = num_threads();
+    if nt <= 1 || n <= min_chunk {
+        for (i, slot) in out.iter_mut().enumerate() {
+            f(i, slot);
+        }
+        return;
+    }
+    let chunks = nt.min(n.div_ceil(min_chunk)).max(1);
+    let per = n.div_ceil(chunks);
+    std::thread::scope(|s| {
+        // split_at_mut based partitioning
+        let mut rest = out;
+        let mut offset = 0usize;
+        for _ in 0..chunks {
+            let take = per.min(rest.len());
+            if take == 0 {
+                break;
+            }
+            let (head, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let base = offset;
+            offset += take;
+            let f = &f;
+            s.spawn(move || {
+                for (i, slot) in head.iter_mut().enumerate() {
+                    f(base + i, slot);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn covers_all_indices_once() {
+        let n = 1000;
+        let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for_chunks(n, 10, |lo, hi| {
+            for i in lo..hi {
+                counts[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn map_into_writes_each_slot() {
+        let mut out = vec![0usize; 257];
+        parallel_map_into(&mut out, 8, |i, slot| *slot = i * 2);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * 2);
+        }
+    }
+
+    #[test]
+    fn empty_range_ok() {
+        parallel_for_chunks(0, 1, |_, _| panic!("must not be called"));
+    }
+}

@@ -1,0 +1,113 @@
+//! Timing helpers: a stopwatch plus the per-phase accumulator used for the
+//! paper's Figure 3 time breakdown (Matrix-Multiplication / Solve /
+//! Sampling categories, §5.2).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Named phase accumulator. Phases are the Fig. 3 categories plus anything
+/// an algorithm wants to report.
+#[derive(Default, Clone, Debug)]
+pub struct PhaseTimer {
+    totals: BTreeMap<&'static str, Duration>,
+}
+
+/// Canonical phase names (paper Fig. 3).
+pub const PHASE_MM: &str = "matmul";
+pub const PHASE_SOLVE: &str = "solve";
+pub const PHASE_SAMPLING: &str = "sampling";
+pub const PHASE_OTHER: &str = "other";
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under a phase label.
+    pub fn time<T>(&mut self, phase: &'static str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(phase, t.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, phase: &'static str, d: Duration) {
+        *self.totals.entry(phase).or_default() += d;
+    }
+
+    pub fn get_secs(&self, phase: &str) -> f64 {
+        self.totals
+            .iter()
+            .find(|(k, _)| **k == phase)
+            .map(|(_, v)| v.as_secs_f64())
+            .unwrap_or(0.0)
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.totals.values().map(|d| d.as_secs_f64()).sum()
+    }
+
+    /// Merge another timer into this one.
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (k, v) in &other.totals {
+            *self.totals.entry(k).or_default() += *v;
+        }
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&'static str, f64)> + '_ {
+        self.totals.iter().map(|(k, v)| (*k, v.as_secs_f64()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut pt = PhaseTimer::new();
+        pt.time(PHASE_MM, || std::thread::sleep(Duration::from_millis(5)));
+        pt.time(PHASE_MM, || std::thread::sleep(Duration::from_millis(5)));
+        pt.time(PHASE_SOLVE, || ());
+        assert!(pt.get_secs(PHASE_MM) >= 0.009);
+        assert!(pt.get_secs(PHASE_SOLVE) >= 0.0);
+        assert!(pt.total_secs() >= pt.get_secs(PHASE_MM));
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = PhaseTimer::new();
+        a.add(PHASE_MM, Duration::from_millis(10));
+        let mut b = PhaseTimer::new();
+        b.add(PHASE_MM, Duration::from_millis(15));
+        b.add(PHASE_SAMPLING, Duration::from_millis(1));
+        a.merge(&b);
+        assert!((a.get_secs(PHASE_MM) - 0.025).abs() < 1e-9);
+        assert!((a.get_secs(PHASE_SAMPLING) - 0.001).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,97 @@
+//! Integration: the dense §5.1 pipeline end to end — synthetic corpus →
+//! tf-idf → EDVW adjacency → every SymNMF method → clustering quality.
+
+use symnmf::clustering::ari::adjusted_rand_index;
+use symnmf::coordinator::driver::{run_trials, Method};
+use symnmf::coordinator::experiments::{fig1_table2_methods, wos_workload};
+use symnmf::coordinator::report;
+use symnmf::nls::UpdateRule;
+use symnmf::symnmf::SymNmfOptions;
+use symnmf::util::rng::Pcg64;
+
+#[test]
+fn wos_pipeline_all_methods_cluster_better_than_chance() {
+    let w = wos_workload(140, 7); // 140 docs, 7 topics
+    let mut opts = SymNmfOptions::new(7).with_seed(1);
+    opts.max_iters = 60;
+    for method in fig1_table2_methods() {
+        let stats = run_trials(method, &w.adjacency, &opts, Some(&w.labels), 1);
+        assert!(
+            stats.mean_ari > 0.15,
+            "{}: ARI {} not better than chance",
+            stats.label,
+            stats.mean_ari
+        );
+        assert!(
+            stats.min_res < 1.0,
+            "{}: residual {} did not drop below trivial",
+            stats.label,
+            stats.min_res
+        );
+    }
+}
+
+#[test]
+fn randomized_methods_preserve_quality_vs_exact() {
+    let w = wos_workload(140, 3);
+    let mut opts = SymNmfOptions::new(7).with_seed(2);
+    opts.max_iters = 80;
+    let exact = run_trials(
+        Method::Exact(UpdateRule::Hals),
+        &w.adjacency,
+        &opts,
+        Some(&w.labels),
+        2,
+    );
+    let lai = run_trials(
+        Method::Lai { rule: UpdateRule::Hals, refine: false },
+        &w.adjacency,
+        &opts,
+        Some(&w.labels),
+        2,
+    );
+    // §5.1: randomized methods "maintain accuracy in terms of normalized
+    // residual norms and cluster quality"
+    assert!(
+        lai.avg_min_res < exact.avg_min_res + 0.02,
+        "LAI residual {} vs exact {}",
+        lai.avg_min_res,
+        exact.avg_min_res
+    );
+    assert!(
+        lai.mean_ari > exact.mean_ari - 0.15,
+        "LAI ARI {} vs exact {}",
+        lai.mean_ari,
+        exact.mean_ari
+    );
+}
+
+#[test]
+fn spectral_baseline_runs_on_wos() {
+    let w = wos_workload(120, 4);
+    let mut rng = Pcg64::seed_from_u64(3);
+    let assign = symnmf::clustering::spectral::spectral_cluster(&w.adjacency, 7, &mut rng);
+    let ari = adjusted_rand_index(&assign, &w.labels);
+    assert!(ari > 0.1, "spectral ARI {ari}");
+}
+
+#[test]
+fn report_artifacts_are_generated() {
+    let w = wos_workload(100, 5);
+    let mut opts = SymNmfOptions::new(7).with_seed(4);
+    opts.max_iters = 10;
+    let stats = vec![run_trials(
+        Method::Lai { rule: UpdateRule::Hals, refine: false },
+        &w.adjacency,
+        &opts,
+        Some(&w.labels),
+        1,
+    )];
+    let table = report::stats_table(&stats);
+    assert!(table.contains("LAI-HALS"));
+    let dir = std::env::temp_dir().join("symnmf_integration_report");
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv = dir.join("fig1.csv");
+    report::write_convergence_csv(&csv, &stats).unwrap();
+    assert!(std::fs::read_to_string(&csv).unwrap().lines().count() > 1);
+}

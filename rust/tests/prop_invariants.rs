@@ -1,0 +1,196 @@
+//! Property-based cross-module invariants (propcheck harness): the
+//! coordinator-level guarantees the paper's theory promises, checked on
+//! randomized inputs.
+
+use symnmf::linalg::{blas, eig, qr, DenseMat};
+use symnmf::nls::{bpp, update, UpdateRule};
+use symnmf::randnla::leverage::{sample_hybrid, sample_standard, theorem21_sample_count};
+use symnmf::util::propcheck::{dim, forall};
+use symnmf::util::rng::Pcg64;
+
+/// Theorem 2.1, empirically: with the prescribed sample count, the
+/// sampled-NLS solution error obeys ‖x̂ − x‖ ≤ √ε·‖r‖/σ_min(A) with
+/// high probability. We run several instances and require the bound to
+/// hold in the vast majority (δ = 0.4, generous ε).
+#[test]
+fn theorem21_error_bound_holds_with_high_probability() {
+    let delta = 0.4;
+    let eps = 0.5;
+    let mut failures = 0;
+    let cases = 24;
+    for case in 0..cases {
+        let mut rng = Pcg64::seed_from_u64(900 + case);
+        let k = 4;
+        let m = 4000;
+        let a = DenseMat::gaussian(m, k, &mut rng);
+        // b with substantial residual (not in range(A))
+        let x_true: Vec<f64> = (0..k).map(|_| rng.uniform()).collect();
+        let mut b: Vec<f64> = (0..m)
+            .map(|i| {
+                let mut s = 0.0;
+                for j in 0..k {
+                    s += a.at(i, j) * x_true[j];
+                }
+                s + rng.gaussian()
+            })
+            .collect();
+        // exact NLS solution via BPP on the normal equations
+        let g = blas::gram(&a);
+        let y: Vec<f64> = (0..k)
+            .map(|j| (0..m).map(|i| a.at(i, j) * b[i]).sum())
+            .collect();
+        let x_nls = bpp::solve_row(&g, &y, 200);
+        // residual norm
+        let mut r_norm_sq = 0.0;
+        for i in 0..m {
+            let mut pred = 0.0;
+            for j in 0..k {
+                pred += a.at(i, j) * x_nls[j];
+            }
+            let r = pred - b[i];
+            r_norm_sq += r * r;
+        }
+        let sv = eig::singular_values(&a);
+        let sigma_min = *sv.last().unwrap();
+
+        // sampled problem with the Theorem 2.1 count (capped at m)
+        let s = theorem21_sample_count(k, delta, eps).min(m);
+        let lev = qr::leverage_scores(&a);
+        let sm = sample_standard(&lev, s, &mut rng);
+        let sa = a.gather_rows_scaled(&sm.indices, &sm.scales);
+        let sb: Vec<f64> = sm
+            .indices
+            .iter()
+            .zip(&sm.scales)
+            .map(|(&i, &c)| c * b[i])
+            .collect();
+        let sg = blas::gram(&sa);
+        let sy: Vec<f64> = (0..k)
+            .map(|j| (0..sa.rows()).map(|i| sa.at(i, j) * sb[i]).sum())
+            .collect();
+        let x_hat = bpp::solve_row(&sg, &sy, 200);
+
+        let err: f64 = x_hat
+            .iter()
+            .zip(&x_nls)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        let bound = eps.sqrt() * r_norm_sq.sqrt() / sigma_min;
+        if err > bound {
+            failures += 1;
+        }
+        b.clear(); // silence unused-mut lint paths
+    }
+    // δ = 0.4 → expect ≤ ~40% failures; demand < 50% with slack
+    assert!(
+        failures * 2 < cases,
+        "Theorem 2.1 bound violated in {failures}/{cases} cases"
+    );
+}
+
+/// Lemma 4.2 flavor: hybrid sampling satisfies SC1 at least as well as
+/// standard sampling on spiked-leverage inputs, at equal budget.
+#[test]
+fn hybrid_sc1_at_least_as_good_on_spiked_inputs() {
+    let mut wins = 0;
+    let trials = 12;
+    for t in 0..trials {
+        let mut rng = Pcg64::seed_from_u64(1700 + t);
+        let mut f = DenseMat::gaussian(600, 4, &mut rng);
+        for j in 0..4 {
+            f.set(11, j, 60.0 * (j as f64 + 1.0));
+            f.set(222, j, -50.0 * (j as f64 + 1.5));
+        }
+        let (q, _) = qr::householder_qr(&f);
+        let lev = qr::leverage_scores_from_q(&q);
+        let s = 60;
+        let sc1 = |sm: &symnmf::randnla::SampleMatrix| {
+            let sq = q.gather_rows_scaled(&sm.indices, &sm.scales);
+            blas::gram(&sq).diff_fro(&DenseMat::eye(4))
+        };
+        let hybrid = sc1(&sample_hybrid(&lev, s, 1.0 / s as f64, &mut rng));
+        let standard = sc1(&sample_standard(&lev, s, &mut rng));
+        if hybrid <= standard + 1e-9 {
+            wins += 1;
+        }
+    }
+    assert!(
+        wins * 3 >= trials * 2,
+        "hybrid won only {wins}/{trials} SC1 comparisons"
+    );
+}
+
+/// Update(G, Y) invariants across random problems: nonnegativity and
+/// monotone objective for every rule.
+#[test]
+fn update_rules_invariants_property() {
+    forall(
+        12,
+        2100,
+        |rng| {
+            let m = dim(rng, 5, 40);
+            let k = dim(rng, 2, 6);
+            let u = DenseMat::uniform(m, k, 1.0, rng);
+            let x = blas::matmul_nt(&u, &u);
+            let h = DenseMat::uniform(m, k, 1.0, rng);
+            let w0 = DenseMat::uniform(m, k, 1.0, rng);
+            (x, h, w0)
+        },
+        |(x, h, w0)| {
+            let g = blas::gram(h);
+            let y = blas::matmul(x, h);
+            let obj = |wm: &DenseMat| {
+                let rec = blas::matmul_nt(wm, h);
+                let mut d = x.clone();
+                d.axpy(-1.0, &rec);
+                d.fro_norm_sq()
+            };
+            let before = obj(w0);
+            for rule in [UpdateRule::Bpp, UpdateRule::Hals, UpdateRule::Mu] {
+                let w = update(rule, &g, &y, w0);
+                if !w.is_nonneg() {
+                    return Err(format!("{rule:?} produced negatives"));
+                }
+                let after = obj(&w);
+                if after > before + 1e-6 * (1.0 + before) {
+                    return Err(format!("{rule:?} increased objective {before} → {after}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// RRF capture property: residual decreases monotonically in sketch
+/// width l for fixed q.
+#[test]
+fn rrf_residual_monotone_in_width() {
+    forall(
+        8,
+        2500,
+        |rng| {
+            let m = 50 + dim(rng, 0, 30);
+            let r = dim(rng, 2, 5);
+            let u = DenseMat::gaussian(m, r, rng);
+            let mut x = blas::matmul_nt(&u, &u);
+            let mut e = DenseMat::gaussian(m, m, rng);
+            e.symmetrize();
+            x.axpy(0.1, &e);
+            x.symmetrize();
+            (x, r)
+        },
+        |(x, r)| {
+            let mut rng = Pcg64::seed_from_u64(77);
+            let narrow = symnmf::randnla::rrf::rrf(x, *r, 1, &mut rng);
+            let wide = symnmf::randnla::rrf::rrf(x, 2 * r + 4, 1, &mut rng);
+            let rn = symnmf::randnla::rrf::qb_residual(x, &narrow.q_basis);
+            let rw = symnmf::randnla::rrf::qb_residual(x, &wide.q_basis);
+            if rw <= rn + 0.05 {
+                Ok(())
+            } else {
+                Err(format!("wider sketch worse: {rn} vs {rw}"))
+            }
+        },
+    );
+}

@@ -1,0 +1,146 @@
+//! Integration: the AOT path end to end — HLO text artifacts (lowered
+//! from the JAX model calling Pallas kernels) loaded and executed through
+//! PJRT must agree with the native rust kernels to f32 tolerance.
+//!
+//! Requires `make artifacts`; tests skip (with a loud message) if the
+//! artifact directory is missing so plain `cargo test` stays green.
+
+use std::rc::Rc;
+use symnmf::linalg::{blas, DenseMat};
+use symnmf::nls::hals;
+use symnmf::randnla::SymOp;
+use symnmf::runtime::exec::{hals_sweep_pjrt, lai_products_pjrt, PjrtSymOp};
+use symnmf::runtime::registry::Registry;
+use symnmf::runtime::PjrtRuntime;
+use symnmf::util::rng::Pcg64;
+
+fn runtime() -> Option<Rc<PjrtRuntime>> {
+    let dir = Registry::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        return None;
+    }
+    Some(Rc::new(PjrtRuntime::new(&dir).expect("PJRT runtime")))
+}
+
+fn sym_rand(m: usize, rng: &mut Pcg64) -> DenseMat {
+    let mut x = DenseMat::gaussian(m, m, rng);
+    x.symmetrize();
+    x
+}
+
+#[test]
+fn products_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg64::seed_from_u64(1);
+    let x = sym_rand(64, &mut rng);
+    let f = DenseMat::gaussian(64, 8, &mut rng);
+    let op = PjrtSymOp::new(x.clone(), rt);
+    let (xf, gram) = op.products_pjrt(&f).expect("products_m64_k8 artifact");
+    let xf_native = blas::matmul(&x, &f);
+    let gram_native = blas::gram(&f);
+    let scale = 1.0 + xf_native.fro_norm();
+    assert!(
+        xf.diff_fro(&xf_native) / scale < 1e-5,
+        "X·F mismatch: {}",
+        xf.diff_fro(&xf_native)
+    );
+    assert!(gram.diff_fro(&gram_native) / (1.0 + gram_native.fro_norm()) < 1e-5);
+    assert_eq!(op.stats.borrow().pjrt_calls, 1);
+}
+
+#[test]
+fn symop_apply_dispatches_to_pjrt_and_falls_back() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg64::seed_from_u64(2);
+    let x = sym_rand(64, &mut rng);
+    let op = PjrtSymOp::new(x.clone(), rt);
+    // k=8 → artifact exists → PJRT path
+    let f8 = DenseMat::gaussian(64, 8, &mut rng);
+    let _ = op.apply(&f8);
+    assert_eq!(op.stats.borrow().pjrt_calls, 1);
+    // k=5 → no artifact → native fallback, result still correct
+    let f5 = DenseMat::gaussian(64, 5, &mut rng);
+    let y = op.apply(&f5);
+    assert_eq!(op.stats.borrow().native_calls, 1);
+    assert!(y.diff_fro(&blas::matmul(&x, &f5)) < 1e-12);
+}
+
+#[test]
+fn lai_products_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg64::seed_from_u64(3);
+    let (m, l, k) = (64, 24, 8);
+    let u = DenseMat::gaussian(m, l, &mut rng);
+    let v = DenseMat::gaussian(m, l, &mut rng);
+    let f = DenseMat::gaussian(m, k, &mut rng);
+    let (y, g) = lai_products_pjrt(&rt, &u, &v, &f).expect("lai_products artifact");
+    let y_native = blas::matmul(&u, &blas::matmul_tn(&v, &f));
+    let g_native = blas::gram(&f);
+    assert!(y.diff_fro(&y_native) / (1.0 + y_native.fro_norm()) < 1e-5);
+    assert!(g.diff_fro(&g_native) / (1.0 + g_native.fro_norm()) < 1e-5);
+}
+
+#[test]
+fn hals_sweep_artifact_matches_native_sweep() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg64::seed_from_u64(4);
+    let (m, k) = (64, 8);
+    let x = sym_rand(m, &mut rng);
+    let mut h = DenseMat::gaussian(m, k, &mut rng);
+    h.project_nonneg();
+    let mut w = DenseMat::gaussian(m, k, &mut rng);
+    w.project_nonneg();
+    let alpha = 1.5;
+    let xh = blas::matmul(&x, &h);
+    let g0 = blas::gram(&h); // WITHOUT α — the artifact applies Eq. 2.6
+
+    let w_pjrt =
+        hals_sweep_pjrt(&rt, &xh, &g0, &w, &h, alpha).expect("hals_sweep artifact");
+
+    // native path: Update(G,Y) formulation with G = G0+αI, Y = XH+αH
+    // (tested equivalent to Eq. 2.6 in nls::hals unit tests)
+    let mut g = g0.clone();
+    for i in 0..k {
+        *g.at_mut(i, i) += alpha;
+    }
+    let mut y = xh.clone();
+    y.axpy(alpha, &h);
+    let mut w_native = w.clone();
+    hals::hals_sweep(&g, &y, &mut w_native);
+
+    let scale = 1.0 + w_native.fro_norm();
+    assert!(
+        w_pjrt.diff_fro(&w_native) / scale < 1e-4,
+        "HALS sweep mismatch: {}",
+        w_pjrt.diff_fro(&w_native)
+    );
+    assert!(w_pjrt.is_nonneg());
+}
+
+#[test]
+fn full_symnmf_through_pjrt_operator() {
+    // The L3 coordinator loop running with every X·F through PJRT.
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg64::seed_from_u64(5);
+    let h_true = DenseMat::uniform(64, 8, 1.0, &mut rng);
+    let mut x = blas::matmul_nt(&h_true, &h_true);
+    x.symmetrize();
+    let op = PjrtSymOp::new(x, rt);
+    let mut opts = symnmf::symnmf::SymNmfOptions::new(8);
+    opts.max_iters = 30;
+    opts.rule = symnmf::nls::UpdateRule::Hals;
+    let res = symnmf::symnmf::anls::symnmf_anls(&op, &opts);
+    assert!(
+        res.min_residual() < 0.15,
+        "residual {} through PJRT path",
+        res.min_residual()
+    );
+    let stats = op.stats.borrow();
+    assert!(
+        stats.pjrt_calls >= 2 * res.iters(),
+        "PJRT calls {} for {} iters — hot path not dispatched?",
+        stats.pjrt_calls,
+        res.iters()
+    );
+}
