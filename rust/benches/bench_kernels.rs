@@ -1,7 +1,12 @@
 //! Micro-benchmarks of the hot-path kernels (the §Perf tool, DESIGN.md
-//! §6): dense matmul X·F, Gram, SpMM, CholeskyQR + leverage scores, BPP
-//! multi-RHS solve, sampled SpMM, and the PJRT round-trip for the same
-//! product — with achieved GF/s against the 1-core f64 roofline.
+//! §6): dense matmul X·F (allocating vs `apply_into`), Gram, SpMM,
+//! CholeskyQR + leverage scores, BPP multi-RHS solve, sampled SpMM, and
+//! the PJRT round-trip for the same product — with achieved GF/s against
+//! the 1-core f64 roofline.
+//!
+//! Besides the stdout report, emits machine-readable
+//! **`BENCH_kernels.json`** at the repo root (op, shape, secs/iter,
+//! GFLOP/s) so perf trajectory tracking can diff runs across commits.
 //!
 //!     cargo bench --bench bench_kernels
 
@@ -9,14 +14,65 @@ use std::rc::Rc;
 use symnmf::linalg::{blas, qr, DenseMat};
 use symnmf::nls::bpp;
 use symnmf::randnla::leverage::sample_hybrid;
-
+use symnmf::randnla::SymOp;
 use symnmf::runtime::{PjrtRuntime, PjrtSymOp};
 use symnmf::sparse::CsrMat;
-use symnmf::util::bench::{bench, gflops};
+use symnmf::util::bench::{bench, gflops, BenchResult};
+use symnmf::util::json::Json;
 use symnmf::util::rng::Pcg64;
+
+/// One record of the JSON report.
+struct Record {
+    op: String,
+    shape: String,
+    secs_per_iter: f64,
+    gflops: f64,
+}
+
+fn record(records: &mut Vec<Record>, op: &str, shape: &str, r: &BenchResult, flops: f64) {
+    records.push(Record {
+        op: op.to_string(),
+        shape: shape.to_string(),
+        secs_per_iter: r.median,
+        gflops: if flops > 0.0 { gflops(flops, r.median) } else { 0.0 },
+    });
+}
+
+/// Repo root: parent of the cargo manifest dir (benches run with the
+/// manifest dir as cwd, the repo root is one level up).
+fn repo_root() -> std::path::PathBuf {
+    let manifest = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".to_string());
+    let p = std::path::PathBuf::from(manifest);
+    p.parent().map(|q| q.to_path_buf()).unwrap_or(p)
+}
+
+fn write_json(records: &[Record]) {
+    let arr: Vec<Json> = records
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("op", Json::Str(r.op.clone())),
+                ("shape", Json::Str(r.shape.clone())),
+                ("secs_per_iter", Json::Num(r.secs_per_iter)),
+                ("gflops", Json::Num(r.gflops)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("version", Json::Num(1.0)),
+        ("bench", Json::Str("kernels".to_string())),
+        ("kernels", Json::Arr(arr)),
+    ]);
+    let path = repo_root().join("BENCH_kernels.json");
+    match std::fs::write(&path, format!("{doc}\n")) {
+        Ok(()) => println!("\nwrote {path:?}"),
+        Err(e) => eprintln!("could not write {path:?}: {e}"),
+    }
+}
 
 fn main() {
     let mut rng = Pcg64::seed_from_u64(1);
+    let mut records: Vec<Record> = Vec::new();
     let m = 1024;
     let k = 16;
 
@@ -30,17 +86,52 @@ fn main() {
     });
     let flops = 2.0 * (m * m * k) as f64;
     println!("{}   {:.2} GF/s", r.report(), gflops(flops, r.median));
+    record(&mut records, "dense_xf_into", &format!("{m}x{m}·{m}x{k}"), &r, flops);
+
+    // --- the acceptance shape (m=2048, k=32): apply_into vs allocating ---
+    let m2 = 2048;
+    let k2 = 32;
+    let mut x2 = DenseMat::gaussian(m2, m2, &mut rng);
+    x2.symmetrize();
+    let f2 = DenseMat::gaussian(m2, k2, &mut rng);
+    let mut out2 = DenseMat::zeros(m2, k2);
+    let flops2 = 2.0 * (m2 * m2 * k2) as f64;
+    let r_into = bench(&format!("dense X·F apply_into ({m2}x{m2}, k={k2})"), 1, 5, || {
+        x2.apply_into(&f2, &mut out2);
+    });
+    println!("{}   {:.2} GF/s", r_into.report(), gflops(flops2, r_into.median));
+    record(
+        &mut records,
+        "dense_xf_apply_into",
+        &format!("{m2}x{m2}·{m2}x{k2}"),
+        &r_into,
+        flops2,
+    );
+    let r_alloc = bench(&format!("dense X·F allocating  ({m2}x{m2}, k={k2})"), 1, 5, || {
+        std::hint::black_box(SymOp::apply(&x2, &f2));
+    });
+    println!("{}   {:.2} GF/s", r_alloc.report(), gflops(flops2, r_alloc.median));
+    record(
+        &mut records,
+        "dense_xf_apply_alloc",
+        &format!("{m2}x{m2}·{m2}x{k2}"),
+        &r_alloc,
+        flops2,
+    );
+    println!(
+        "apply_into vs allocating at m={m2}, k={k2}: {:.2}% time",
+        100.0 * r_into.median / r_alloc.median.max(1e-300)
+    );
 
     // --- Gram FᵀF ---
     let tall = DenseMat::gaussian(100_000, k, &mut rng);
+    let mut gout = DenseMat::zeros(k, k);
     let r = bench("gram FᵀF   (100000x16)", 2, 9, || {
-        std::hint::black_box(blas::gram(&tall));
+        blas::gram_into(&tall, &mut gout);
     });
-    println!(
-        "{}   {:.2} GF/s",
-        r.report(),
-        gflops((100_000 * k * k) as f64, r.median)
-    );
+    let gflop = (100_000 * k * k) as f64;
+    println!("{}   {:.2} GF/s", r.report(), gflops(gflop, r.median));
+    record(&mut records, "gram_into", "100000x16", &r, gflop);
 
     // --- sparse SpMM ---
     let n = 50_000;
@@ -57,11 +148,9 @@ fn main() {
     let r = bench(&format!("spmm       ({n}x{n}, {} nnz, k={k})", sp.nnz()), 2, 9, || {
         sp.spmm_into(&fs, &mut spout);
     });
-    println!(
-        "{}   {:.2} GF/s",
-        r.report(),
-        gflops(2.0 * (sp.nnz() * k) as f64, r.median)
-    );
+    let spflops = 2.0 * (sp.nnz() * k) as f64;
+    println!("{}   {:.2} GF/s", r.report(), gflops(spflops, r.median));
+    record(&mut records, "spmm_into", &format!("{n}x{n} nnz={}", sp.nnz()), &r, spflops);
 
     // --- sampled SpMM (LvS inner product, s = 0.05·n) ---
     let h = DenseMat::gaussian(n, k, &mut rng);
@@ -69,16 +158,19 @@ fn main() {
     let s = n / 20;
     let sm = sample_hybrid(&lev, s, 1.0 / s as f64, &mut rng);
     let w_sq = sm.weights_sq();
+    let mut samp_out = DenseMat::zeros(n, k);
     let r = bench(&format!("sampled spmm (s={s})"), 2, 9, || {
-        std::hint::black_box(sp.sampled_spmm_sym(&fs, &sm.indices, &w_sq));
+        sp.sampled_spmm_sym_into(&fs, &sm.indices, &w_sq, &mut samp_out);
     });
     println!("{}", r.report());
+    record(&mut records, "sampled_spmm_into", &format!("s={s}"), &r, 0.0);
 
     // --- CholeskyQR leverage scores (the per-iteration sampling cost) ---
     let r = bench(&format!("choleskyQR + leverage ({n}x{k})"), 2, 9, || {
         std::hint::black_box(qr::leverage_scores(&h));
     });
     println!("{}", r.report());
+    record(&mut records, "leverage_scores", &format!("{n}x{k}"), &r, 0.0);
 
     // --- BPP multi-RHS (the Solve bar of Fig. 3) ---
     let g = {
@@ -90,10 +182,12 @@ fn main() {
         g
     };
     let y = DenseMat::gaussian(20_000, k, &mut rng);
+    let mut bpp_out = DenseMat::zeros(20_000, k);
     let r = bench("BPP multi-RHS (20000 rows, k=16)", 1, 5, || {
-        std::hint::black_box(bpp::solve_multi(&g, &y, None));
+        bpp::solve_multi_into(&g, &y, None, &mut bpp_out);
     });
     println!("{}", r.report());
+    record(&mut records, "bpp_multi_into", "20000x16", &r, 0.0);
 
     // --- PJRT round-trip for the same X·F (AOT Pallas path) ---
     match PjrtRuntime::from_default_dir() {
@@ -106,6 +200,7 @@ fn main() {
                 });
                 let flops = 2.0 * (m * m * 7) as f64;
                 println!("{}   {:.2} GF/s", r.report(), gflops(flops, r.median));
+                record(&mut records, "pjrt_products", "1024x1024·1024x7", &r, flops);
                 // native same-shape comparison
                 let mut o7 = DenseMat::zeros(m, 7);
                 let r = bench("native products (same shapes)", 2, 9, || {
@@ -113,10 +208,13 @@ fn main() {
                     std::hint::black_box(blas::gram(&f7));
                 });
                 println!("{}   {:.2} GF/s", r.report(), gflops(flops, r.median));
+                record(&mut records, "native_products", "1024x1024·1024x7", &r, flops);
             } else {
                 println!("PJRT products artifact for m=1024,k=7 not found — run `make artifacts`");
             }
         }
         Err(e) => println!("PJRT unavailable: {e:#}"),
     }
+
+    write_json(&records);
 }

@@ -9,6 +9,16 @@
 
 use crate::linalg::DenseMat;
 use crate::util::threadpool::parallel_for_chunks;
+use std::cell::RefCell;
+
+thread_local! {
+    /// Reusable staging buffer for the skinny-B transpose of
+    /// [`matmul_into`]. Capacity grows to the largest product seen on the
+    /// thread and is then reused, so the steady-state hot loop performs
+    /// no allocation even when a solve alternates between B shapes
+    /// (e.g. the LAI inner product and the metrics X·H product).
+    static BT_SCRATCH: RefCell<Vec<f64>> = RefCell::new(Vec::new());
+}
 
 /// C = A·B.
 pub fn matmul(a: &DenseMat, b: &DenseMat) -> DenseMat {
@@ -30,22 +40,40 @@ pub fn matmul_into(a: &DenseMat, b: &DenseMat, c: &mut DenseMat) {
     assert_eq!(ka, kb, "matmul: {:?} x {:?}", a.shape(), b.shape());
     assert_eq!(c.shape(), (m, n));
     if n <= 64 && ka >= 32 {
-        // skinny-B path: bt rows are the columns of B, contiguous
-        let bt = b.transpose();
-        let adata = a.data();
-        let btdata = bt.data();
-        let cptr = SendPtr(c.data_mut().as_mut_ptr());
-        parallel_for_chunks(m, 64, move |lo, hi| {
-            let cdata = cptr;
-            for i in lo..hi {
-                let arow = &adata[i * ka..(i + 1) * ka];
-                let crow = unsafe {
-                    std::slice::from_raw_parts_mut(cdata.0.add(i * n), n)
-                };
-                for (j, cij) in crow.iter_mut().enumerate() {
-                    *cij = dot(arow, &btdata[j * ka..(j + 1) * ka]);
+        // skinny-B path: bt rows are the columns of B, contiguous. The
+        // transpose is staged in a thread-local buffer so the per-call
+        // allocation the seed paid here is gone (zero-alloc hot loop).
+        BT_SCRATCH.with(|cell| {
+            let mut bt = cell.borrow_mut();
+            if bt.len() != n * ka {
+                bt.resize(n * ka, 0.0); // no realloc once capacity covers it
+            }
+            let bdata = b.data();
+            const BLK: usize = 32;
+            for ib in (0..ka).step_by(BLK) {
+                for jb in (0..n).step_by(BLK) {
+                    for i in ib..(ib + BLK).min(ka) {
+                        for j in jb..(jb + BLK).min(n) {
+                            bt[j * ka + i] = bdata[i * n + j];
+                        }
+                    }
                 }
             }
+            let adata = a.data();
+            let btdata = &bt[..];
+            let cptr = SendPtr(c.data_mut().as_mut_ptr());
+            parallel_for_chunks(m, 64, move |lo, hi| {
+                let cdata = cptr;
+                for i in lo..hi {
+                    let arow = &adata[i * ka..(i + 1) * ka];
+                    let crow = unsafe {
+                        std::slice::from_raw_parts_mut(cdata.0.add(i * n), n)
+                    };
+                    for (j, cij) in crow.iter_mut().enumerate() {
+                        *cij = dot(arow, &btdata[j * ka..(j + 1) * ka]);
+                    }
+                }
+            });
         });
         return;
     }
@@ -169,10 +197,22 @@ pub fn matmul_nt(a: &DenseMat, b: &DenseMat) -> DenseMat {
 /// Gram matrix G = FᵀF (k×k), exploiting symmetry (SYRK): only the upper
 /// triangle is accumulated, then mirrored.
 pub fn gram(f: &DenseMat) -> DenseMat {
+    let mut g = DenseMat::zeros(f.cols(), f.cols());
+    gram_into(f, &mut g);
+    g
+}
+
+/// G = FᵀF into a pre-allocated k×k output (hot-path form; the SYRK of
+/// every alternating iteration writes into the [`IterWorkspace`] Gram
+/// buffer instead of allocating).
+///
+/// [`IterWorkspace`]: crate::linalg::workspace::IterWorkspace
+pub fn gram_into(f: &DenseMat, g: &mut DenseMat) {
     let (m, k) = f.shape();
-    let mut g = DenseMat::zeros(k, k);
+    assert_eq!(g.shape(), (k, k), "gram_into: output must be {k}x{k}");
     {
         let gd = g.data_mut();
+        gd.fill(0.0);
         for i in 0..m {
             let row = f.row(i);
             for t in 0..k {
@@ -193,7 +233,6 @@ pub fn gram(f: &DenseMat) -> DenseMat {
             g.set(u, t, v);
         }
     }
-    g
 }
 
 /// out = X·F where X is a large symmetric square matrix. Currently an

@@ -124,6 +124,14 @@ impl DenseMat {
 
     pub fn transpose(&self) -> DenseMat {
         let mut out = DenseMat::zeros(self.cols, self.rows);
+        self.transpose_into(&mut out);
+        out
+    }
+
+    /// Transpose into a pre-allocated (cols×rows) output — the hot-path
+    /// form used by the HALS workspace sweep.
+    pub fn transpose_into(&self, out: &mut DenseMat) {
+        assert_eq!(out.shape(), (self.cols, self.rows), "transpose_into shape");
         // blocked transpose for cache friendliness on big matrices
         const B: usize = 32;
         for ib in (0..self.rows).step_by(B) {
@@ -135,7 +143,6 @@ impl DenseMat {
                 }
             }
         }
-        out
     }
 
     /// Gather rows by index into a new matrix (the row-sampling S·A).
@@ -150,14 +157,25 @@ impl DenseMat {
     /// Gather rows and scale row r by `scale[r]` (leverage-score rescaling
     /// 1/√(s·p_i) of Eq. 2.11 applied during the gather).
     pub fn gather_rows_scaled(&self, idx: &[usize], scale: &[f64]) -> DenseMat {
-        assert_eq!(idx.len(), scale.len());
         let mut out = DenseMat::zeros(idx.len(), self.cols);
+        self.gather_rows_scaled_into(idx, scale, &mut out);
+        out
+    }
+
+    /// Scaled row gather into a pre-allocated output (hot-path form for
+    /// the LvS workspace). `out` is resized to `idx.len()` rows; as long
+    /// as its initial capacity covers the largest sample count (the
+    /// workspace pre-sizes it to s×k), no reallocation happens.
+    pub fn gather_rows_scaled_into(&self, idx: &[usize], scale: &[f64], out: &mut DenseMat) {
+        assert_eq!(idx.len(), scale.len());
+        assert_eq!(out.cols, self.cols, "gather_rows_scaled_into column mismatch");
+        out.rows = idx.len();
+        out.data.resize(idx.len() * self.cols, 0.0);
         for (r, (&i, &s)) in idx.iter().zip(scale.iter()).enumerate() {
             for (o, &v) in out.row_mut(r).iter_mut().zip(self.row(i)) {
                 *o = v * s;
             }
         }
-        out
     }
 
     pub fn fro_norm_sq(&self) -> f64 {
@@ -183,6 +201,27 @@ impl DenseMat {
         assert_eq!(self.shape(), other.shape());
         for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
             *a += alpha * b;
+        }
+    }
+
+    /// Overwrite all entries of self with `other` (same shape, no
+    /// reallocation — the workspace-preserving assignment).
+    pub fn copy_from(&mut self, other: &DenseMat) {
+        assert_eq!(self.shape(), other.shape(), "copy_from shape mismatch");
+        self.data.copy_from_slice(&other.data);
+    }
+
+    /// Set every entry to `v`.
+    pub fn fill(&mut self, v: f64) {
+        self.data.fill(v);
+    }
+
+    /// Add `alpha` to the diagonal (the +αI regularization of Eq. 2.4),
+    /// in place.
+    pub fn add_diag(&mut self, alpha: f64) {
+        assert_eq!(self.rows, self.cols, "add_diag needs a square matrix");
+        for i in 0..self.rows {
+            self.data[i * self.cols + i] += alpha;
         }
     }
 
@@ -231,6 +270,14 @@ impl DenseMat {
     /// f32 copy (PJRT boundary).
     pub fn to_f32(&self) -> Vec<f32> {
         self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    /// f32 conversion into a reusable buffer (PJRT boundary, hot-path
+    /// form: the staging allocation happens once per solve, not per call).
+    pub fn write_f32_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.data.len());
+        out.extend(self.data.iter().map(|&x| x as f32));
     }
 
     /// From an f32 buffer (PJRT boundary).
@@ -286,6 +333,43 @@ mod tests {
         a.symmetrize();
         assert_eq!(a.at(0, 1), 3.0);
         assert_eq!(a.at(1, 0), 3.0);
+    }
+
+    #[test]
+    fn transpose_into_matches_transpose() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let a = DenseMat::gaussian(41, 19, &mut rng);
+        let mut out = DenseMat::zeros(19, 41);
+        a.transpose_into(&mut out);
+        assert_eq!(out, a.transpose());
+    }
+
+    #[test]
+    fn gather_into_resizes_without_realloc() {
+        let a = DenseMat::from_fn(6, 3, |i, j| (i * 3 + j) as f64);
+        let mut out = DenseMat::zeros(4, 3); // capacity for 4 rows
+        let ptr = out.data().as_ptr();
+        a.gather_rows_scaled_into(&[1, 5], &[1.0, 2.0], &mut out);
+        assert_eq!(out.shape(), (2, 3));
+        assert_eq!(out.row(1), &[30.0, 32.0, 34.0]);
+        a.gather_rows_scaled_into(&[0, 1, 2, 3], &[1.0; 4], &mut out);
+        assert_eq!(out.shape(), (4, 3));
+        assert_eq!(out.data().as_ptr(), ptr, "buffer must not reallocate");
+        assert_eq!(out, a.gather_rows_scaled(&[0, 1, 2, 3], &[1.0; 4]));
+    }
+
+    #[test]
+    fn copy_from_fill_add_diag() {
+        let a = DenseMat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let mut b = DenseMat::zeros(2, 2);
+        b.copy_from(&a);
+        assert_eq!(a, b);
+        b.add_diag(0.5);
+        assert_eq!(b.at(0, 0), 1.5);
+        assert_eq!(b.at(1, 1), 4.5);
+        assert_eq!(b.at(0, 1), 2.0);
+        b.fill(7.0);
+        assert!(b.data().iter().all(|&x| x == 7.0));
     }
 
     #[test]

@@ -3,13 +3,17 @@
 //! Everything the paper's algorithms need is implemented here from
 //! scratch: blocked matmul/Gram kernels ([`blas`]), Cholesky factorization
 //! and triangular solves ([`chol`]), CholeskyQR + Householder QR and row
-//! leverage scores ([`qr`]), and a cyclic-Jacobi symmetric eigensolver
-//! ([`eig`]) used by Apx-EVD (paper Alg. Apx-EVD line 5).
+//! leverage scores ([`qr`]), a cyclic-Jacobi symmetric eigensolver
+//! ([`eig`]) used by Apx-EVD (paper Alg. Apx-EVD line 5), and the
+//! zero-allocation per-iteration buffer workspace ([`workspace`]) behind
+//! the `apply_into` kernel dispatch protocol.
 
 pub mod blas;
 pub mod chol;
 pub mod dense;
 pub mod eig;
 pub mod qr;
+pub mod workspace;
 
 pub use dense::DenseMat;
+pub use workspace::{IterWorkspace, UpdateScratch};

@@ -1,0 +1,132 @@
+//! Pre-sized per-iteration buffer workspace — the zero-allocation
+//! substrate of the kernel dispatch layer.
+//!
+//! The paper's bottleneck analysis (§3, §5.1.1) is about memory traffic
+//! as much as flops: every alternating iteration forms the products X·F
+//! and FᵀF plus the Update(G, Y) scratch, and the seed implementation
+//! allocated each of them afresh — O(m·k) heap churn, thousands of times
+//! per solve. [`IterWorkspace`] holds all of those buffers, sized once
+//! from (m, k) (plus the LvS sample budget s), so the steady-state
+//! iteration of every driver — ANLS/HALS/MU ([`run_alternating_loop`]),
+//! LvS, PGNCG, Compressed — performs **no heap allocation**: X·F products
+//! land in [`IterWorkspace::y`] via [`SymOp::apply_into`], Gram matrices
+//! in [`IterWorkspace::g`] via [`gram_into`], and the update rules draw
+//! their scratch from [`UpdateScratch`].
+//!
+//! The protocol is enforced by tests that run several iterations and
+//! assert the buffer data pointers ([`IterWorkspace::buffer_ptrs`]) are
+//! bit-identical before and after — a reallocation (or a buffer replaced
+//! by assignment) would move them.
+//!
+//! [`run_alternating_loop`]: crate::symnmf::anls::run_alternating_loop
+//! [`SymOp::apply_into`]: crate::randnla::SymOp::apply_into
+//! [`gram_into`]: crate::linalg::blas::gram_into
+
+use crate::linalg::DenseMat;
+
+/// Scratch buffers for the Update(G, Y) rules (BPP / HALS / MU), shared
+/// across rules so one workspace serves whatever `opts.rule` selects:
+///
+/// * BPP writes its fresh solve into `out`, then copies back into the
+///   factor (BPP is warm-start-free by construction, matching [33]);
+/// * HALS stages the factor and RHS transposes in `ft`/`yt` (contiguous
+///   column access) with the per-column `delta` accumulator;
+/// * MU uses `out` for the W·G denominator product.
+#[derive(Debug)]
+pub struct UpdateScratch {
+    /// m×k: BPP output / MU's W·G product
+    pub out: DenseMat,
+    /// k×m: transposed factor (HALS column sweep)
+    pub ft: DenseMat,
+    /// k×m: transposed RHS (HALS column sweep)
+    pub yt: DenseMat,
+    /// length-m per-column delta accumulator (HALS)
+    pub delta: Vec<f64>,
+}
+
+impl UpdateScratch {
+    pub fn new(m: usize, k: usize) -> UpdateScratch {
+        UpdateScratch {
+            out: DenseMat::zeros(m, k),
+            ft: DenseMat::zeros(k, m),
+            yt: DenseMat::zeros(k, m),
+            delta: vec![0.0; m],
+        }
+    }
+}
+
+/// All per-iteration buffers of one SymNMF solve, sized once up front.
+#[derive(Debug)]
+pub struct IterWorkspace {
+    /// m×k RHS buffer: X·F (+ αF) — the target of `apply_into` /
+    /// `sampled_apply_into`
+    pub y: DenseMat,
+    /// k×k Gram buffer: FᵀF (+ αI)
+    pub g: DenseMat,
+    /// second k×k Gram buffer (metrics need WᵀW and HᵀH simultaneously)
+    pub g2: DenseMat,
+    /// m×k product buffer for off-the-clock metric evaluation (X·H)
+    pub xh: DenseMat,
+    /// s×k gathered sampled-factor rows (LvS only; 0×k otherwise). Its
+    /// row count tracks the actual sample draw but its capacity is fixed
+    /// at s·k, so regrowth never reallocates.
+    pub sf: DenseMat,
+    /// Update(G, Y) rule scratch
+    pub update: UpdateScratch,
+}
+
+impl IterWorkspace {
+    /// Workspace for the dense/LAI/compressed drivers (no sampling).
+    pub fn new(m: usize, k: usize) -> IterWorkspace {
+        IterWorkspace::with_samples(m, k, 0)
+    }
+
+    /// Workspace including the LvS gather buffer for `s` row samples.
+    pub fn with_samples(m: usize, k: usize, s: usize) -> IterWorkspace {
+        IterWorkspace {
+            y: DenseMat::zeros(m, k),
+            g: DenseMat::zeros(k, k),
+            g2: DenseMat::zeros(k, k),
+            xh: DenseMat::zeros(m, k),
+            sf: DenseMat::zeros(s, k),
+            update: UpdateScratch::new(m, k),
+        }
+    }
+
+    /// Data pointers of every buffer. The zero-allocation tests capture
+    /// these before a run and assert equality after: any per-iteration
+    /// reallocation or buffer replacement moves at least one of them.
+    pub fn buffer_ptrs(&self) -> Vec<*const f64> {
+        vec![
+            self.y.data().as_ptr(),
+            self.g.data().as_ptr(),
+            self.g2.data().as_ptr(),
+            self.xh.data().as_ptr(),
+            self.sf.data().as_ptr(),
+            self.update.out.data().as_ptr(),
+            self.update.ft.data().as_ptr(),
+            self.update.yt.data().as_ptr(),
+            self.update.delta.as_ptr(),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_are_consistent() {
+        let ws = IterWorkspace::with_samples(20, 4, 7);
+        assert_eq!(ws.y.shape(), (20, 4));
+        assert_eq!(ws.g.shape(), (4, 4));
+        assert_eq!(ws.g2.shape(), (4, 4));
+        assert_eq!(ws.xh.shape(), (20, 4));
+        assert_eq!(ws.sf.shape(), (7, 4));
+        assert_eq!(ws.update.out.shape(), (20, 4));
+        assert_eq!(ws.update.ft.shape(), (4, 20));
+        assert_eq!(ws.update.yt.shape(), (4, 20));
+        assert_eq!(ws.update.delta.len(), 20);
+        assert_eq!(ws.buffer_ptrs().len(), 9);
+    }
+}

@@ -128,11 +128,24 @@ fn solve_passive(g: &DenseMat, y: &[f64], passive: &[bool], w: &mut [f64], z: &m
 /// already nonnegative it is the (unique) optimum and the active-set
 /// machinery is skipped entirely. On converged SymNMF iterates the large
 /// majority of rows take this path.
-pub fn solve_multi(g: &DenseMat, y: &DenseMat, _warm: Option<&DenseMat>) -> DenseMat {
+pub fn solve_multi(g: &DenseMat, y: &DenseMat, warm: Option<&DenseMat>) -> DenseMat {
+    let mut out = DenseMat::zeros(y.rows(), y.cols());
+    solve_multi_into(g, y, warm, &mut out);
+    out
+}
+
+/// [`solve_multi`] into a pre-allocated m×k output (fully overwritten) —
+/// the hot-path form drawing its output from the iteration workspace.
+pub fn solve_multi_into(
+    g: &DenseMat,
+    y: &DenseMat,
+    _warm: Option<&DenseMat>,
+    out: &mut DenseMat,
+) {
     let (m, k) = y.shape();
     assert_eq!(g.shape(), (k, k));
+    assert_eq!(out.shape(), (m, k), "solve_multi_into shape");
     let max_iter = 5 * k + 10;
-    let mut out = DenseMat::zeros(m, k);
     let (r_full, _eps) = chol::cholesky_upper_jittered(g);
     let mut scratch = vec![0.0f64; k];
     for i in 0..m {
@@ -149,7 +162,6 @@ pub fn solve_multi(g: &DenseMat, y: &DenseMat, _warm: Option<&DenseMat>) -> Dens
             out.row_mut(i).copy_from_slice(&w);
         }
     }
-    out
 }
 
 #[cfg(test)]

@@ -17,18 +17,40 @@
 use crate::linalg::DenseMat;
 
 /// One full HALS sweep updating every column of `w` given (G, Y).
-/// `w` is modified in place and stays nonnegative.
+/// `w` is modified in place and stays nonnegative. Allocating wrapper
+/// over [`hals_sweep_ws`] for setup-phase and test callers.
 pub fn hals_sweep(g: &DenseMat, y: &DenseMat, w: &mut DenseMat) {
+    let (m, k) = w.shape();
+    let mut wt = DenseMat::zeros(k, m);
+    let mut yt = DenseMat::zeros(k, m);
+    let mut delta = vec![0.0f64; m];
+    hals_sweep_ws(g, y, w, &mut wt, &mut yt, &mut delta);
+}
+
+/// HALS sweep with caller-provided scratch (the `ft`/`yt`/`delta` buffers
+/// of [`crate::linalg::workspace::UpdateScratch`]): `w` is updated fully
+/// in place and the hot loop performs no allocation.
+///
+/// Column-major scratch gives contiguous column access: W is row-major,
+/// so the sweep runs on a transposed copy (k×m) where each column update
+/// is a contiguous slice, then transposes back into `w`. The delta buffer
+/// is reused across columns (§Perf: no per-column allocation).
+pub fn hals_sweep_ws(
+    g: &DenseMat,
+    y: &DenseMat,
+    w: &mut DenseMat,
+    wt: &mut DenseMat,
+    yt: &mut DenseMat,
+    delta: &mut [f64],
+) {
     let (m, k) = w.shape();
     assert_eq!(g.shape(), (k, k));
     assert_eq!(y.shape(), (m, k));
-    // Column-major scratch of W columns for contiguous column access.
-    // W is row-major; we work on a transposed copy (k×m) so each column
-    // update is a contiguous slice, then transpose back. The delta buffer
-    // is reused across columns (§Perf: no per-column allocation).
-    let mut wt = w.transpose(); // k×m
-    let yt = y.transpose(); // k×m
-    let mut delta = vec![0.0f64; m];
+    assert_eq!(wt.shape(), (k, m), "hals_sweep_ws wt shape");
+    assert_eq!(yt.shape(), (k, m), "hals_sweep_ws yt shape");
+    assert_eq!(delta.len(), m, "hals_sweep_ws delta length");
+    w.transpose_into(wt);
+    y.transpose_into(yt);
     for i in 0..k {
         let gii = g.at(i, i);
         if gii <= 0.0 {
@@ -39,7 +61,7 @@ pub fn hals_sweep(g: &DenseMat, y: &DenseMat, w: &mut DenseMat) {
         let grow = g.row(i);
         for (j, &gij) in grow.iter().enumerate() {
             if gij != 0.0 && j != i {
-                crate::linalg::blas::axpy(-gij, wt.row(j), &mut delta);
+                crate::linalg::blas::axpy(-gij, wt.row(j), delta);
             }
         }
         // fold the j == i term into the final update: with the diagonal
@@ -52,7 +74,7 @@ pub fn hals_sweep(g: &DenseMat, y: &DenseMat, w: &mut DenseMat) {
             *wv = (dv * inv).max(0.0);
         }
     }
-    *w = wt.transpose();
+    wt.transpose_into(w);
 }
 
 /// `fix_zero_columns`: HALS can zero out a column entirely (a dead

@@ -9,4 +9,4 @@ pub mod hals;
 pub mod mu;
 pub mod update;
 
-pub use update::{update, UpdateRule};
+pub use update::{update, update_into, UpdateRule};

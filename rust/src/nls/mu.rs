@@ -13,11 +13,20 @@ use crate::linalg::{blas, DenseMat};
 const EPS: f64 = 1e-16;
 
 /// One multiplicative update of every entry of `w` given (G, Y).
+/// Allocating wrapper over [`mu_update_ws`].
 pub fn mu_update(g: &DenseMat, y: &DenseMat, w: &mut DenseMat) {
+    let mut wg = DenseMat::zeros(w.rows(), w.cols());
+    mu_update_ws(g, y, w, &mut wg);
+}
+
+/// Multiplicative update with a caller-provided m×k buffer for the W·G
+/// denominator product (hot-path form; no allocation).
+pub fn mu_update_ws(g: &DenseMat, y: &DenseMat, w: &mut DenseMat, wg: &mut DenseMat) {
     let (m, k) = w.shape();
     assert_eq!(g.shape(), (k, k));
     assert_eq!(y.shape(), (m, k));
-    let wg = blas::matmul(w, g);
+    assert_eq!(wg.shape(), (m, k), "mu_update_ws wg shape");
+    blas::matmul_into(w, g, wg);
     for i in 0..m {
         let wrow = w.row_mut(i);
         let yrow = y.row(i);

@@ -2,6 +2,7 @@
 //! dispatching to BPP / HALS / MU, so every SymNMF driver (exact, LAI,
 //! LvS, compressed) shares one code path for the solve phase.
 
+use crate::linalg::workspace::UpdateScratch;
 use crate::linalg::DenseMat;
 use crate::nls::{bpp, hals, mu};
 
@@ -37,20 +38,41 @@ impl UpdateRule {
 
 /// Update the factor given the normal-equations pair:
 /// G = FᵀF (+αI), Y = X·F (+αF), warm start `w`. Returns the new factor
-/// (m×k, nonnegative).
+/// (m×k, nonnegative). Allocating wrapper over [`update_into`].
 pub fn update(rule: UpdateRule, g: &DenseMat, y: &DenseMat, w: &DenseMat) -> DenseMat {
+    let mut out = w.clone();
+    let mut ws = UpdateScratch::new(y.rows(), y.cols());
+    update_into(rule, g, y, &mut out, &mut ws);
+    out
+}
+
+/// In-place Update(G, Y): the factor `f` is overwritten with the updated
+/// iterate, all scratch drawn from the pre-sized [`UpdateScratch`] — the
+/// hot-path form every driver loop calls. Semantics per rule:
+///
+/// * **BPP** solves each row QP exactly from the all-active start (the
+///   warm start is irrelevant by construction, matching [33]); since the
+///   solve never reads its output buffer, it writes straight into `f`.
+/// * **HALS** sweeps `f`'s columns fully in place (later columns see
+///   earlier updates), then reseeds any dead column.
+/// * **MU** rescales `f` entrywise in place.
+pub fn update_into(
+    rule: UpdateRule,
+    g: &DenseMat,
+    y: &DenseMat,
+    f: &mut DenseMat,
+    ws: &mut UpdateScratch,
+) {
     match rule {
-        UpdateRule::Bpp => bpp::solve_multi(g, y, Some(w)),
+        UpdateRule::Bpp => {
+            bpp::solve_multi_into(g, y, None, f);
+        }
         UpdateRule::Hals => {
-            let mut out = w.clone();
-            hals::hals_sweep(g, y, &mut out);
-            hals::fix_zero_columns(&mut out, 1e-14);
-            out
+            hals::hals_sweep_ws(g, y, f, &mut ws.ft, &mut ws.yt, &mut ws.delta);
+            hals::fix_zero_columns(f, 1e-14);
         }
         UpdateRule::Mu => {
-            let mut out = w.clone();
-            mu::mu_update(g, y, &mut out);
-            out
+            mu::mu_update_ws(g, y, f, &mut ws.out);
         }
     }
 }
@@ -110,6 +132,43 @@ mod tests {
         let o_mu = obj(&update(UpdateRule::Mu, &g, &y, &w0));
         assert!(o_bpp <= o_hals + 1e-8);
         assert!(o_bpp <= o_mu + 1e-8);
+    }
+
+    /// The in-place form must agree with the allocating form exactly and
+    /// must not move the factor's buffer.
+    #[test]
+    fn update_into_matches_update_and_preserves_buffers() {
+        let mut rng = Pcg64::seed_from_u64(23);
+        let (m, k) = (20, 4);
+        let u = DenseMat::uniform(m, k, 1.0, &mut rng);
+        let x = blas::matmul_nt(&u, &u);
+        let h = DenseMat::uniform(m, k, 1.0, &mut rng);
+        let w0 = DenseMat::uniform(m, k, 1.0, &mut rng);
+        let g = blas::gram(&h);
+        let y = blas::matmul(&x, &h);
+        let mut ws = crate::linalg::workspace::UpdateScratch::new(m, k);
+        for rule in [UpdateRule::Bpp, UpdateRule::Hals, UpdateRule::Mu] {
+            let want = update(rule, &g, &y, &w0);
+            let mut f = w0.clone();
+            let fptr = f.data().as_ptr();
+            let ws_ptrs = (
+                ws.out.data().as_ptr(),
+                ws.ft.data().as_ptr(),
+                ws.yt.data().as_ptr(),
+            );
+            update_into(rule, &g, &y, &mut f, &mut ws);
+            assert!(f.diff_fro(&want) < 1e-14, "{rule:?}");
+            assert_eq!(f.data().as_ptr(), fptr, "{rule:?} moved the factor");
+            assert_eq!(
+                (
+                    ws.out.data().as_ptr(),
+                    ws.ft.data().as_ptr(),
+                    ws.yt.data().as_ptr()
+                ),
+                ws_ptrs,
+                "{rule:?} moved scratch"
+            );
+        }
     }
 
     #[test]

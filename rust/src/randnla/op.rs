@@ -11,6 +11,17 @@
 //!  * a PJRT-backed dense operator ([`crate::runtime::exec::PjrtSymOp`])
 //!    whose X·F executes the AOT-compiled Pallas kernel, and
 //!  * a factored LAI `U·Vᵀ` ([`crate::symnmf::lai::LaiOp`]).
+//!
+//! ## Write-into dispatch protocol
+//!
+//! The *required* methods are the write-into forms [`SymOp::apply_into`]
+//! and [`SymOp::sampled_apply_into`]: each backend implements them
+//! natively against a caller-provided output buffer (pre-sized by the
+//! per-iteration [`crate::linalg::workspace::IterWorkspace`]), so the
+//! steady-state hot loop of every driver performs zero heap allocation.
+//! The allocating [`SymOp::apply`] / [`SymOp::sampled_apply`] remain as
+//! thin default wrappers for setup-phase and test callers. Backends must
+//! fully overwrite `out` (accumulating backends zero it first).
 
 use crate::linalg::{blas, DenseMat};
 use crate::sparse::CsrMat;
@@ -20,8 +31,18 @@ pub trait SymOp {
     /// Dimension m.
     fn dim(&self) -> usize;
 
-    /// Compute X·F (F: m×k dense).
-    fn apply(&self, f: &DenseMat) -> DenseMat;
+    /// Write X·F (F: m×k dense) into the pre-allocated `out` (m×k). This
+    /// is the hot-path form every backend implements natively; `out` is
+    /// fully overwritten.
+    fn apply_into(&self, f: &DenseMat, out: &mut DenseMat);
+
+    /// Compute X·F, allocating the output — thin wrapper over
+    /// [`SymOp::apply_into`] for setup-phase and test callers.
+    fn apply(&self, f: &DenseMat) -> DenseMat {
+        let mut out = DenseMat::zeros(self.dim(), f.cols());
+        self.apply_into(f, &mut out);
+        out
+    }
 
     /// ‖X‖²_F — needed by the Ada-RRF residual trick (App. D) and the
     /// normalized-residual stopping criterion (App. C).
@@ -33,16 +54,35 @@ pub trait SymOp {
     /// mean entry ζ — the §5 initialization scale 2·√(ζ/k).
     fn mean_value(&self) -> f64;
 
-    /// Sampled product X·SᵀS·F (LvS-SymNMF). The default gathers through
-    /// `apply` semantics; dense/sparse impls override with O(s·row) code.
-    fn sampled_apply(&self, f: &DenseMat, samples: &[usize], weights_sq: &[f64]) -> DenseMat;
+    /// Write the sampled product X·SᵀS·F (LvS-SymNMF) into the
+    /// pre-allocated `out` (m×k, fully overwritten). Dense/sparse impls
+    /// use O(s·row) accumulation.
+    fn sampled_apply_into(
+        &self,
+        f: &DenseMat,
+        samples: &[usize],
+        weights_sq: &[f64],
+        out: &mut DenseMat,
+    );
+
+    /// Allocating wrapper over [`SymOp::sampled_apply_into`].
+    fn sampled_apply(&self, f: &DenseMat, samples: &[usize], weights_sq: &[f64]) -> DenseMat {
+        let mut out = DenseMat::zeros(self.dim(), f.cols());
+        self.sampled_apply_into(f, samples, weights_sq, &mut out);
+        out
+    }
 }
 
 /// Blanket impl so `&dyn SymOp` (and any `&T`) satisfies the generic
-/// `X: SymOp` bounds of the solver entry points.
+/// `X: SymOp` bounds of the solver entry points. Every method (including
+/// the defaulted allocating forms) forwards, so backend overrides like
+/// `PjrtSymOp::apply` stay in effect through references.
 impl<T: SymOp + ?Sized> SymOp for &T {
     fn dim(&self) -> usize {
         (**self).dim()
+    }
+    fn apply_into(&self, f: &DenseMat, out: &mut DenseMat) {
+        (**self).apply_into(f, out)
     }
     fn apply(&self, f: &DenseMat) -> DenseMat {
         (**self).apply(f)
@@ -56,6 +96,15 @@ impl<T: SymOp + ?Sized> SymOp for &T {
     fn mean_value(&self) -> f64 {
         (**self).mean_value()
     }
+    fn sampled_apply_into(
+        &self,
+        f: &DenseMat,
+        samples: &[usize],
+        weights_sq: &[f64],
+        out: &mut DenseMat,
+    ) {
+        (**self).sampled_apply_into(f, samples, weights_sq, out)
+    }
     fn sampled_apply(&self, f: &DenseMat, samples: &[usize], weights_sq: &[f64]) -> DenseMat {
         (**self).sampled_apply(f, samples, weights_sq)
     }
@@ -67,10 +116,8 @@ impl SymOp for DenseMat {
         self.rows()
     }
 
-    fn apply(&self, f: &DenseMat) -> DenseMat {
-        let mut out = DenseMat::zeros(self.rows(), f.cols());
-        blas::symm_tall_into(self, f, &mut out);
-        out
+    fn apply_into(&self, f: &DenseMat, out: &mut DenseMat) {
+        blas::symm_tall_into(self, f, out);
     }
 
     fn fro_norm_sq(&self) -> f64 {
@@ -85,14 +132,21 @@ impl SymOp for DenseMat {
         self.mean()
     }
 
-    fn sampled_apply(&self, f: &DenseMat, samples: &[usize], weights_sq: &[f64]) -> DenseMat {
+    fn sampled_apply_into(
+        &self,
+        f: &DenseMat,
+        samples: &[usize],
+        weights_sq: &[f64],
+        out: &mut DenseMat,
+    ) {
         // X·SᵀS·F = Σ_r w_r · x_{:,i_r} ⊗ F[i_r,:]; with X symmetric the
         // column x_{:,i_r} is row i_r, so this is a scaled row gather —
         // the "copying large portions of a large dense data matrix" cost
         // the paper calls out in §5.1.1.
         let k = f.cols();
-        let mut out = DenseMat::zeros(self.rows(), k);
+        assert_eq!(out.shape(), (self.rows(), k), "sampled_apply_into shape");
         let od = out.data_mut();
+        od.fill(0.0);
         for (&ir, &w) in samples.iter().zip(weights_sq) {
             let xrow = self.row(ir);
             let frow = f.row(ir);
@@ -102,7 +156,6 @@ impl SymOp for DenseMat {
                 }
             }
         }
-        out
     }
 }
 
@@ -112,8 +165,8 @@ impl SymOp for CsrMat {
         self.rows()
     }
 
-    fn apply(&self, f: &DenseMat) -> DenseMat {
-        self.spmm(f)
+    fn apply_into(&self, f: &DenseMat, out: &mut DenseMat) {
+        self.spmm_into(f, out);
     }
 
     fn fro_norm_sq(&self) -> f64 {
@@ -128,8 +181,14 @@ impl SymOp for CsrMat {
         self.mean_dense()
     }
 
-    fn sampled_apply(&self, f: &DenseMat, samples: &[usize], weights_sq: &[f64]) -> DenseMat {
-        self.sampled_spmm_sym(f, samples, weights_sq)
+    fn sampled_apply_into(
+        &self,
+        f: &DenseMat,
+        samples: &[usize],
+        weights_sq: &[f64],
+        out: &mut DenseMat,
+    ) {
+        self.sampled_spmm_sym_into(f, samples, weights_sq, out);
     }
 }
 
@@ -138,10 +197,7 @@ mod tests {
     use super::*;
     use crate::util::rng::Pcg64;
 
-    #[test]
-    fn dense_and_sparse_agree() {
-        let mut rng = Pcg64::seed_from_u64(1);
-        let n = 24;
+    fn random_sym_pair(n: usize, rng: &mut Pcg64) -> (CsrMat, DenseMat) {
         let mut trips = Vec::new();
         for i in 0..n {
             for j in i..n {
@@ -156,7 +212,14 @@ mod tests {
         }
         let sp = CsrMat::from_coo(n, n, trips);
         let de = sp.to_dense();
-        let f = DenseMat::gaussian(n, 5, &mut rng);
+        (sp, de)
+    }
+
+    #[test]
+    fn dense_and_sparse_agree() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let (sp, de) = random_sym_pair(24, &mut rng);
+        let f = DenseMat::gaussian(24, 5, &mut rng);
         assert!(SymOp::apply(&de, &f).diff_fro(&sp.apply(&f)) < 1e-12);
         assert!((SymOp::fro_norm_sq(&de) - SymOp::fro_norm_sq(&sp)).abs() < 1e-12);
 
@@ -165,5 +228,23 @@ mod tests {
         let a = SymOp::sampled_apply(&de, &f, &samples, &w);
         let b = sp.sampled_apply(&f, &samples, &w);
         assert!(a.diff_fro(&b) < 1e-12);
+    }
+
+    #[test]
+    fn into_forms_overwrite_stale_output() {
+        // apply_into / sampled_apply_into must fully overwrite `out`,
+        // including entries a previous iteration left behind.
+        let mut rng = Pcg64::seed_from_u64(2);
+        let (sp, de) = random_sym_pair(18, &mut rng);
+        let f = DenseMat::gaussian(18, 4, &mut rng);
+        let samples = vec![1, 4, 4, 9];
+        let w = vec![0.7, 1.3, 0.2, 2.0];
+        let mut out = DenseMat::zeros(18, 4);
+        out.fill(77.0);
+        SymOp::apply_into(&de, &f, &mut out);
+        assert!(out.diff_fro(&sp.apply(&f)) < 1e-12);
+        out.fill(-5.0);
+        SymOp::sampled_apply_into(&sp, &f, &samples, &w, &mut out);
+        assert!(out.diff_fro(&SymOp::sampled_apply(&de, &f, &samples, &w)) < 1e-12);
     }
 }

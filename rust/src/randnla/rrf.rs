@@ -29,7 +29,9 @@ pub struct RrfResult {
 pub fn rrf<X: SymOp>(x: &X, l: usize, q: usize, rng: &mut Pcg64) -> RrfResult {
     let m = x.dim();
     let omega = DenseMat::gaussian(m, l, rng);
-    let y = x.apply(&omega);
+    // one m×l product buffer reused across every power step (apply_into)
+    let mut y = DenseMat::zeros(m, l);
+    x.apply_into(&omega, &mut y);
     // CholeskyQR for the re-orthonormalizations (§Perf): ~10× faster than
     // Householder at these shapes; each power step re-orthonormalizes so
     // the squared-conditioning loss never accumulates (jittered fallback
@@ -37,10 +39,9 @@ pub fn rrf<X: SymOp>(x: &X, l: usize, q: usize, rng: &mut Pcg64) -> RrfResult {
     let mut qb = qr::orthonormalize(&y);
     let mut applications = 1;
     for _ in 0..q {
-        let b = x.apply(&qb);
+        x.apply_into(&qb, &mut y);
         applications += 1;
-        let qn = qr::orthonormalize(&b);
-        qb = qn;
+        qb = qr::orthonormalize(&y);
     }
     RrfResult { q_basis: qb, applications, residual_history: Vec::new() }
 }
@@ -61,7 +62,9 @@ pub fn ada_rrf<X: SymOp>(
     let m = x.dim();
     let xnorm_sq = x.fro_norm_sq();
     let omega = DenseMat::gaussian(m, l, rng);
-    let y = x.apply(&omega);
+    // one m×l product buffer reused across every power step (apply_into)
+    let mut y = DenseMat::zeros(m, l);
+    x.apply_into(&omega, &mut y);
     let mut qb = qr::orthonormalize(&y);
     let mut applications = 1;
     let mut history: Vec<f64> = Vec::new();
@@ -79,12 +82,11 @@ pub fn ada_rrf<X: SymOp>(
         // B = (X·Q)ᵀ; one application both advances the power iteration
         // and prices the residual check — "if q power iterations are
         // performed we only apply X, q+1 times".
-        let b = x.apply(&qb);
+        x.apply_into(&qb, &mut y);
         applications += 1;
-        let resid_sq = (xnorm_sq - b.fro_norm_sq()).max(0.0);
+        let resid_sq = (xnorm_sq - y.fro_norm_sq()).max(0.0);
         let rel = (resid_sq / xnorm_sq.max(1e-300)).sqrt();
-        let qn = qr::orthonormalize(&b);
-        qb = qn;
+        qb = qr::orthonormalize(&y);
         let stop = match history.last() {
             None => false,
             Some(prev) => {

@@ -1,0 +1,163 @@
+//! XLA/PJRT backend facade.
+//!
+//! The real `xla` crate (PJRT CPU client, HLO-text parsing, compiled
+//! executables) is an external dependency this build intentionally does
+//! NOT declare: the crate is zero-dependency so the tier-1 gate
+//! (`cargo build --release && cargo test -q`) runs hermetically with no
+//! network access. This module mirrors the slice of the `xla` API the
+//! runtime uses:
+//!
+//! * [`Literal`] — the host-side tensor container — is **fully
+//!   functional**, so the f64⇄f32 conversion helpers in
+//!   [`crate::runtime::pjrt`] (and their tests) work without the backend;
+//! * client construction ([`PjRtClient::cpu`]) returns an "unavailable"
+//!   error, so every caller falls through to the native blocked kernels
+//!   (the same transparent-fallback path used when no artifact matches a
+//!   shape).
+//!
+//! Wiring the real backend back in is a two-line swap: declare the `xla`
+//! crate in `Cargo.toml` and replace this module's body with
+//! `pub use ::xla::*;`.
+
+use crate::util::error::{Error, Result};
+
+const UNAVAILABLE: &str = "XLA/PJRT backend not compiled into this build \
+                           (zero-dependency build); native kernels are used instead";
+
+/// Host-side tensor literal: f32 data plus dimensions.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a flat f32 slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal { data: vec![v], dims: Vec::new() }
+    }
+
+    /// Reinterpret under new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error::msg(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch ({} elements)",
+                self.dims,
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Flat element read-out.
+    pub fn to_vec(&self) -> Result<Vec<f32>> {
+        Ok(self.data.clone())
+    }
+
+    /// Destructure a tuple literal. Only executables produce tuples, and
+    /// the stub client never executes, so this is unreachable here.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::msg(UNAVAILABLE))
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// PJRT client handle. The stub cannot be constructed: [`PjRtClient::cpu`]
+/// always errors, which routes every runtime consumer to native kernels.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::msg(UNAVAILABLE))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::msg(UNAVAILABLE))
+    }
+}
+
+/// Parsed HLO module. Parsing requires the backend.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::msg(UNAVAILABLE))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::msg(UNAVAILABLE))
+    }
+}
+
+/// A device buffer returned by execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::msg(UNAVAILABLE))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_container_is_functional() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(lit.dims(), &[6]);
+        let shaped = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(shaped.dims(), &[2, 3]);
+        assert_eq!(shaped.to_vec().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(lit.reshape(&[4, 2]).is_err(), "element count must match");
+        let s = Literal::scalar(2.5);
+        assert_eq!(s.dims().len(), 0);
+        assert_eq!(s.to_vec().unwrap(), vec![2.5]);
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().err().expect("stub client must not construct");
+        assert!(e.to_string().contains("not compiled"), "{e}");
+    }
+}

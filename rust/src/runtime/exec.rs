@@ -4,12 +4,16 @@
 //! to the native blocked kernel otherwise (logged once per shape).
 //!
 //! This is the piece that closes the three-layer loop: L3 SymNMF
-//! iterations call `apply`, which runs HLO lowered from the L2 JAX model
-//! calling the L1 Pallas kernels.
+//! iterations call `apply_into`, which runs HLO lowered from the L2 JAX
+//! model calling the L1 Pallas kernels. The operator participates in the
+//! zero-allocation dispatch protocol of [`SymOp`]: the m×m input literal
+//! is converted once and cached, and the skinny-factor f32 staging buffer
+//! is reused across every call of a solve.
 
-use crate::linalg::DenseMat;
+use crate::linalg::{blas, DenseMat};
 use crate::randnla::SymOp;
-use crate::runtime::pjrt::{Input, PjrtRuntime};
+use crate::runtime::backend as xla;
+use crate::runtime::pjrt::{literal_from_mat_buffered, Input, PjrtRuntime};
 use std::cell::RefCell;
 use std::collections::HashSet;
 use std::rc::Rc;
@@ -19,6 +23,9 @@ pub struct PjrtSymOp {
     x: DenseMat,
     /// pre-converted f32 literal of X, built once (8·m² bytes saved per call)
     x_lit: RefCell<Option<xla::Literal>>,
+    /// reusable f32 staging buffer for the skinny factor F (host-buffer
+    /// reuse across calls — no per-product conversion allocation)
+    f_scratch: RefCell<Vec<f32>>,
     runtime: Rc<PjrtRuntime>,
     /// count of PJRT-dispatched / native-fallback applies (diagnostics)
     pub stats: RefCell<DispatchStats>,
@@ -37,6 +44,7 @@ impl PjrtSymOp {
         PjrtSymOp {
             x,
             x_lit: RefCell::new(None),
+            f_scratch: RefCell::new(Vec::new()),
             runtime,
             stats: RefCell::new(DispatchStats::default()),
             warned: RefCell::new(HashSet::new()),
@@ -55,7 +63,8 @@ impl PjrtSymOp {
         let spec = self.runtime.registry.find("products", &[("m", m), ("k", k)])?;
         // lazily build + cache the X literal
         if self.x_lit.borrow().is_none() {
-            match crate::runtime::pjrt::literal_from_mat(&self.x) {
+            let mut scratch = Vec::new();
+            match literal_from_mat_buffered(&self.x, &mut scratch) {
                 Ok(lit) => *self.x_lit.borrow_mut() = Some(lit),
                 Err(e) => {
                     eprintln!("[runtime] literal conversion failed ({e:#})");
@@ -63,7 +72,10 @@ impl PjrtSymOp {
                 }
             }
         }
-        let f_lit = crate::runtime::pjrt::literal_from_mat(f).ok()?;
+        let f_lit = {
+            let mut scratch = self.f_scratch.borrow_mut();
+            literal_from_mat_buffered(f, &mut scratch).ok()?
+        };
         let guard = self.x_lit.borrow();
         let x_lit = guard.as_ref().expect("cached above");
         let result = self.runtime.execute_literals(spec, &[x_lit, &f_lit]);
@@ -80,6 +92,15 @@ impl PjrtSymOp {
             }
         }
     }
+
+    fn warn_fallback(&self, k: usize) {
+        if self.warned.borrow_mut().insert(k) {
+            eprintln!(
+                "[runtime] no products_m{}_k{k} artifact; native fallback for this width",
+                self.x.rows(),
+            );
+        }
+    }
 }
 
 impl SymOp for PjrtSymOp {
@@ -87,17 +108,23 @@ impl SymOp for PjrtSymOp {
         self.x.rows()
     }
 
+    fn apply_into(&self, f: &DenseMat, out: &mut DenseMat) {
+        if let Some((xf, _gram)) = self.products_pjrt(f) {
+            out.copy_from(&xf);
+            return;
+        }
+        self.warn_fallback(f.cols());
+        self.stats.borrow_mut().native_calls += 1;
+        blas::symm_tall_into(&self.x, f, out);
+    }
+
+    /// Allocating override: on the PJRT path the execute boundary already
+    /// materializes the result, so return it directly (no extra copy).
     fn apply(&self, f: &DenseMat) -> DenseMat {
         if let Some((xf, _gram)) = self.products_pjrt(f) {
             return xf;
         }
-        if self.warned.borrow_mut().insert(f.cols()) {
-            eprintln!(
-                "[runtime] no products_m{}_k{} artifact; native fallback for this width",
-                self.x.rows(),
-                f.cols()
-            );
-        }
+        self.warn_fallback(f.cols());
         self.stats.borrow_mut().native_calls += 1;
         SymOp::apply(&self.x, f)
     }
@@ -114,8 +141,14 @@ impl SymOp for PjrtSymOp {
         self.x.mean()
     }
 
-    fn sampled_apply(&self, f: &DenseMat, samples: &[usize], weights_sq: &[f64]) -> DenseMat {
-        SymOp::sampled_apply(&self.x, f, samples, weights_sq)
+    fn sampled_apply_into(
+        &self,
+        f: &DenseMat,
+        samples: &[usize],
+        weights_sq: &[f64],
+        out: &mut DenseMat,
+    ) {
+        SymOp::sampled_apply_into(&self.x, f, samples, weights_sq, out);
     }
 }
 

@@ -4,15 +4,19 @@
 //!
 //! * [`registry`] — parses `artifacts/manifest.json` into shape-keyed
 //!   artifact specs.
-//! * [`pjrt`] — the `xla` crate wrapper: CPU PJRT client, HLO-text →
-//!   compile → execute, f64⇄f32 conversion at the boundary, lazy
-//!   executable cache.
+//! * [`backend`] — the `xla`-crate facade (functional `Literal`
+//!   container; client construction gated so zero-dependency builds fall
+//!   back to native kernels).
+//! * [`pjrt`] — CPU PJRT client wrapper: HLO-text → compile → execute,
+//!   f64⇄f32 conversion at the boundary, lazy executable cache, reusable
+//!   host staging buffers.
 //! * [`exec`] — typed entry points: [`exec::PjrtSymOp`] is a [`SymOp`]
 //!   whose X·F runs the Pallas matmul kernel through PJRT when an
 //!   artifact matches the shape, with transparent native fallback.
 //!
 //! Python never runs here — artifacts are plain HLO text files.
 
+pub mod backend;
 pub mod exec;
 pub mod pjrt;
 pub mod registry;

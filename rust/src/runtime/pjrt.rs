@@ -1,14 +1,18 @@
 //! PJRT execution: HLO text → compile → execute on the CPU PJRT client
-//! (the `xla` crate, following /opt/xla-example/load_hlo).
+//! (through [`crate::runtime::backend`], the `xla`-crate facade).
 //!
 //! Executables compile lazily on first use and are cached for the life of
 //! the runtime (one compiled executable per artifact — the AOT model).
 //! The f64 (rust-native) ⇄ f32 (artifact) conversion happens here at the
-//! boundary.
+//! boundary; [`literal_from_mat_buffered`] lets hot-path callers reuse one
+//! host f32 staging buffer across calls instead of allocating 4·m·k bytes
+//! per product.
 
+use crate::err;
 use crate::linalg::DenseMat;
+use crate::runtime::backend as xla;
 use crate::runtime::registry::{ArtifactSpec, Registry};
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{Context, Error, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
@@ -24,7 +28,7 @@ impl PjrtRuntime {
     /// Create from an artifact directory (see [`Registry::load`]).
     pub fn new(artifact_dir: &Path) -> Result<PjrtRuntime> {
         let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        let registry = Registry::load(artifact_dir).map_err(|e| anyhow!(e))?;
+        let registry = Registry::load(artifact_dir).map_err(Error::msg)?;
         Ok(PjrtRuntime { client, registry, cache: RefCell::new(HashMap::new()) })
     }
 
@@ -45,7 +49,7 @@ impl PjrtRuntime {
         let path_str = spec
             .path
             .to_str()
-            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+            .ok_or_else(|| err!("non-utf8 artifact path"))?;
         let proto = xla::HloModuleProto::from_text_file(path_str)
             .with_context(|| format!("parse HLO text {path_str}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
@@ -61,7 +65,7 @@ impl PjrtRuntime {
     /// returning f64 dense outputs. Scalar inputs are passed as 0-d.
     pub fn execute(&self, spec: &ArtifactSpec, inputs: &[Input]) -> Result<Vec<DenseMat>> {
         if inputs.len() != spec.inputs.len() {
-            return Err(anyhow!(
+            return Err(err!(
                 "artifact {} expects {} inputs, got {}",
                 spec.program,
                 spec.inputs.len(),
@@ -92,7 +96,7 @@ impl PjrtRuntime {
         // aot.py lowers with return_tuple=True → root is a tuple
         let parts = root.to_tuple().context("untuple result")?;
         if parts.len() != spec.outputs.len() {
-            return Err(anyhow!(
+            return Err(err!(
                 "artifact {} returned {} outputs, expected {}",
                 spec.program,
                 parts.len(),
@@ -127,8 +131,20 @@ pub enum Input<'a> {
 /// Convert a dense f64 matrix to a shaped f32 literal (public so callers
 /// can pre-convert and cache constant operands).
 pub fn literal_from_mat(m: &DenseMat) -> Result<xla::Literal> {
-    let f32s = m.to_f32();
-    let lit = xla::Literal::vec1(&f32s);
+    let mut scratch = Vec::new();
+    literal_from_mat_buffered(m, &mut scratch)
+}
+
+/// Like [`literal_from_mat`] but staging the f32 conversion through a
+/// caller-owned buffer, so per-iteration callers (the `products_*` hot
+/// path) reuse one host allocation across the whole solve instead of
+/// allocating 4·m·k bytes per call.
+pub fn literal_from_mat_buffered(
+    m: &DenseMat,
+    scratch: &mut Vec<f32>,
+) -> Result<xla::Literal> {
+    m.write_f32_into(scratch);
+    let lit = xla::Literal::vec1(scratch);
     let dims = [m.rows() as i64, m.cols() as i64];
     lit.reshape(&dims).context("reshape literal")
 }
@@ -138,14 +154,14 @@ impl<'a> Input<'a> {
         match self {
             Input::Scalar(v) => {
                 if !shape.is_empty() {
-                    return Err(anyhow!("scalar input for non-scalar shape {shape:?}"));
+                    return Err(err!("scalar input for non-scalar shape {shape:?}"));
                 }
                 Ok(xla::Literal::scalar(*v as f32))
             }
             Input::Mat(m) => {
                 let (r, c) = shape_rc(shape);
                 if m.shape() != (r, c) {
-                    return Err(anyhow!(
+                    return Err(err!(
                         "input shape {:?} ≠ artifact shape {shape:?}",
                         m.shape()
                     ));
@@ -153,7 +169,7 @@ impl<'a> Input<'a> {
                 let f32s = m.to_f32();
                 let lit = xla::Literal::vec1(&f32s);
                 let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                Ok(lit.reshape(&dims).context("reshape literal")?)
+                lit.reshape(&dims).context("reshape literal")
             }
         }
     }
@@ -180,5 +196,18 @@ mod tests {
         assert!(inp.to_literal(&[2, 3]).is_ok());
         assert!(Input::Scalar(1.0).to_literal(&[1]).is_err());
         assert!(Input::Scalar(1.0).to_literal(&[]).is_ok());
+    }
+
+    #[test]
+    fn buffered_literal_reuses_scratch() {
+        let m = DenseMat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let mut scratch = Vec::new();
+        let lit = literal_from_mat_buffered(&m, &mut scratch).unwrap();
+        assert_eq!(lit.dims(), &[2, 2]);
+        let cap = scratch.capacity();
+        let ptr = scratch.as_ptr();
+        let _ = literal_from_mat_buffered(&m, &mut scratch).unwrap();
+        assert_eq!(scratch.capacity(), cap);
+        assert_eq!(scratch.as_ptr(), ptr, "staging buffer must be reused");
     }
 }

@@ -150,11 +150,26 @@ impl CsrMat {
         samples: &[usize],
         weights: &[f64],
     ) -> DenseMat {
+        let mut out = DenseMat::zeros(self.rows, f.cols());
+        self.sampled_spmm_sym_into(f, samples, weights, &mut out);
+        out
+    }
+
+    /// [`CsrMat::sampled_spmm_sym`] into a pre-allocated output (fully
+    /// overwritten) — the LvS hot-path form.
+    pub fn sampled_spmm_sym_into(
+        &self,
+        f: &DenseMat,
+        samples: &[usize],
+        weights: &[f64],
+        out: &mut DenseMat,
+    ) {
         assert_eq!(self.rows, self.cols, "sampled_spmm_sym needs symmetric X");
         assert_eq!(samples.len(), weights.len());
         let k = f.cols();
-        let mut out = DenseMat::zeros(self.rows, k);
+        assert_eq!(out.shape(), (self.rows, k), "sampled_spmm_sym_into shape");
         let od = out.data_mut();
+        od.fill(0.0);
         for (&ir, &w) in samples.iter().zip(weights) {
             let frow = f.row(ir);
             let (cols, vals) = self.row(ir);
@@ -162,7 +177,6 @@ impl CsrMat {
                 crate::linalg::blas::axpy(w * v, frow, &mut od[j * k..(j + 1) * k]);
             }
         }
-        out
     }
 
     /// Dense copy (tests / small problems only).

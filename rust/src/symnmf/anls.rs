@@ -10,13 +10,13 @@
 //! over [`SymOp`], is also the engine of LAI-SymNMF (X replaced by the
 //! factored approximation) and Compressed-NMF (projected products).
 
-use crate::linalg::{blas, DenseMat};
-use crate::nls::update;
+use crate::linalg::{blas, DenseMat, IterWorkspace};
+use crate::nls::update_into;
 use crate::randnla::SymOp;
 use crate::symnmf::convergence::{normalized_residual, projected_gradient_norm_sym};
+use crate::symnmf::init::initial_factor;
 use crate::symnmf::metrics::{IterRecord, StopRule, SymNmfResult};
 use crate::symnmf::options::SymNmfOptions;
-use crate::symnmf::init::initial_factor;
 use crate::util::rng::Pcg64;
 use crate::util::timer::{PhaseTimer, Stopwatch, PHASE_MM, PHASE_SOLVE};
 
@@ -45,6 +45,28 @@ impl<'a> Metrics<'a> {
             .then(|| projected_gradient_norm_sym(h, &xh, &gh));
         (res, pg)
     }
+
+    /// [`Metrics::eval`] drawing the X·H and Gram buffers from the
+    /// iteration workspace (`xh`, `g`, `g2` — all free between
+    /// iterations). The residual path allocates nothing; when
+    /// `proj_grad` is enabled the projected-gradient evaluation still
+    /// builds one m×k H·G product internally (off the clock, see
+    /// [`projected_gradient_norm_sym`]).
+    pub fn eval_ws(
+        &self,
+        w: &DenseMat,
+        h: &DenseMat,
+        ws: &mut IterWorkspace,
+    ) -> (f64, Option<f64>) {
+        self.x.apply_into(h, &mut ws.xh);
+        blas::gram_into(w, &mut ws.g2);
+        blas::gram_into(h, &mut ws.g);
+        let res = normalized_residual(self.x_norm_sq, &ws.xh, w, &ws.g2, &ws.g);
+        let pg = self
+            .proj_grad
+            .then(|| projected_gradient_norm_sym(h, &ws.xh, &ws.g));
+        (res, pg)
+    }
 }
 
 /// Resolve α: the paper's recommendation α = max(X) (§5.1, from [35]).
@@ -55,8 +77,30 @@ pub fn resolve_alpha<X: SymOp + ?Sized>(x: &X, opts: &SymNmfOptions) -> f64 {
 /// The shared alternating loop. `x` is whatever operator the caller wants
 /// the iteration to see (true X, LAI, …); `metrics` always measures
 /// against the true X. `setup_secs` pre-loads the clock (LAI build time).
+/// Sizes a fresh [`IterWorkspace`] from (m, k) and delegates to
+/// [`run_alternating_loop_ws`].
 #[allow(clippy::too_many_arguments)]
 pub fn run_alternating_loop(
+    x: &dyn SymOp,
+    alpha: f64,
+    opts: &SymNmfOptions,
+    h: DenseMat,
+    metrics: &Metrics,
+    label: String,
+    setup_secs: f64,
+    phases: PhaseTimer,
+) -> SymNmfResult {
+    let mut ws = IterWorkspace::new(x.dim(), opts.k);
+    run_alternating_loop_ws(x, alpha, opts, h, metrics, label, setup_secs, phases, &mut ws)
+}
+
+/// The alternating loop against a caller-provided workspace. The
+/// steady-state iteration performs no heap allocation: X·F products land
+/// in `ws.y` via [`SymOp::apply_into`], Gram matrices in `ws.g` via
+/// [`blas::gram_into`], and the Update(G, Y) rules draw their scratch
+/// from `ws.update` (see [`crate::linalg::workspace`]).
+#[allow(clippy::too_many_arguments)]
+pub fn run_alternating_loop_ws(
     x: &dyn SymOp,
     alpha: f64,
     opts: &SymNmfOptions,
@@ -65,8 +109,8 @@ pub fn run_alternating_loop(
     label: String,
     setup_secs: f64,
     phases: PhaseTimer,
+    ws: &mut IterWorkspace,
 ) -> SymNmfResult {
-    let k = opts.k;
     let mut w = h.clone();
     let mut records: Vec<IterRecord> = Vec::new();
     let mut stop = StopRule::new(opts.tol, opts.patience);
@@ -80,38 +124,32 @@ pub fn run_alternating_loop(
 
         // --- W update: G = HᵀH + αI, Y = X·H + αH ---
         let t = Stopwatch::start();
-        let xh = x.apply(&h);
-        let mut g = blas::gram(&h);
+        x.apply_into(&h, &mut ws.y);
+        blas::gram_into(&h, &mut ws.g);
         mm += t.elapsed_secs();
-        for i in 0..k {
-            *g.at_mut(i, i) += alpha;
-        }
-        let mut y = xh;
-        y.axpy(alpha, &h);
+        ws.g.add_diag(alpha);
+        ws.y.axpy(alpha, &h);
         let t = Stopwatch::start();
-        w = update(opts.rule, &g, &y, &w);
+        update_into(opts.rule, &ws.g, &ws.y, &mut w, &mut ws.update);
         solve += t.elapsed_secs();
 
         // --- H update: G = WᵀW + αI, Y = X·W + αW ---
         let t = Stopwatch::start();
-        let xw = x.apply(&w);
-        let mut g2 = blas::gram(&w);
+        x.apply_into(&w, &mut ws.y);
+        blas::gram_into(&w, &mut ws.g);
         mm += t.elapsed_secs();
-        for i in 0..k {
-            *g2.at_mut(i, i) += alpha;
-        }
-        let mut y2 = xw;
-        y2.axpy(alpha, &w);
+        ws.g.add_diag(alpha);
+        ws.y.axpy(alpha, &w);
         let t = Stopwatch::start();
-        h = update(opts.rule, &g2, &y2, &h);
+        update_into(opts.rule, &ws.g, &ws.y, &mut h, &mut ws.update);
         solve += t.elapsed_secs();
 
         clock += sw.elapsed_secs();
         phases.add(PHASE_MM, std::time::Duration::from_secs_f64(mm));
         phases.add(PHASE_SOLVE, std::time::Duration::from_secs_f64(solve));
 
-        // --- metrics, off the clock ---
-        let (res, pg) = metrics.eval(&w, &h);
+        // --- metrics, off the clock (workspace buffers are free here) ---
+        let (res, pg) = metrics.eval_ws(&w, &h, ws);
         records.push(IterRecord {
             iter,
             time_secs: clock,
@@ -195,6 +233,43 @@ mod tests {
         let res = symnmf_anls(&x, &opts);
         let rel = res.w.diff_fro(&res.h) / res.h.fro_norm();
         assert!(rel < 0.05, "‖W−H‖/‖H‖ = {rel}");
+    }
+
+    /// Acceptance: no heap allocation in the steady-state iteration — all
+    /// products, Grams and update scratch come from the pre-sized
+    /// workspace, whose buffer pointers must be bit-identical across
+    /// iterations (a reallocation or buffer replacement would move them).
+    #[test]
+    fn workspace_buffers_stable_across_iterations() {
+        for rule in [UpdateRule::Bpp, UpdateRule::Hals, UpdateRule::Mu] {
+            let x = planted(40, 3, 0.0, 9);
+            let mut opts = SymNmfOptions::new(3).with_rule(rule).with_seed(1);
+            opts.max_iters = 3;
+            let alpha = resolve_alpha(&x, &opts);
+            let mut rng = Pcg64::seed_from_u64(2);
+            let h0 = initial_factor(&x, &opts, &mut rng);
+            let metrics = Metrics::new(&x, true);
+            let mut ws = crate::linalg::IterWorkspace::new(40, 3);
+            let before = ws.buffer_ptrs();
+            let res = run_alternating_loop_ws(
+                &x,
+                alpha,
+                &opts,
+                h0,
+                &metrics,
+                "ws-test".to_string(),
+                0.0,
+                PhaseTimer::new(),
+                &mut ws,
+            );
+            assert_eq!(res.iters(), 3, "{rule:?}: patience must not fire in 3 iters");
+            assert_eq!(
+                ws.buffer_ptrs(),
+                before,
+                "{rule:?}: workspace buffers moved during the hot loop"
+            );
+            assert!(res.h.is_nonneg());
+        }
     }
 
     #[test]

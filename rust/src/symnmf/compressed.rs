@@ -14,10 +14,8 @@
 //! Gram matrix (App. B.1 shows the RHS terms coincide) — empirically the
 //! two behave nearly identically, which Table 2 (and our bench) confirms.
 
-use crate::linalg::blas;
-#[cfg(test)]
-use crate::linalg::DenseMat;
-use crate::nls::update;
+use crate::linalg::{blas, DenseMat, IterWorkspace};
+use crate::nls::update_into;
 use crate::randnla::rrf::{ada_rrf, rrf};
 use crate::randnla::SymOp;
 use crate::symnmf::anls::{resolve_alpha, Metrics};
@@ -54,6 +52,11 @@ pub fn compressed_symnmf<X: SymOp>(x: &X, opts: &SymNmfOptions) -> SymNmfResult 
     let mut stop = StopRule::new(opts.tol, opts.patience);
     let mut clock = setup_secs;
     let label = format!("Comp-{}", opts.rule.label());
+    // per-iteration buffers, sized once: shared (m,k) workspace plus the
+    // l×k projected-factor buffer specific to the compressed formulation
+    let m = x.dim();
+    let mut ws = IterWorkspace::new(m, k);
+    let mut qtf = DenseMat::zeros(l, k);
 
     for iter in 0..opts.max_iters {
         let sw = Stopwatch::start();
@@ -62,37 +65,33 @@ pub fn compressed_symnmf<X: SymOp>(x: &X, opts: &SymNmfOptions) -> SymNmfResult 
 
         // --- W update from H ---
         let t = Stopwatch::start();
-        let qth = blas::matmul_tn(&q, &h); // l×k
-        let mut g = blas::gram(&qth); // Hᵀ·QQᵀ·H
-        let mut y = blas::matmul(&bt, &qth); // (XQ)·(QᵀH) = (QQᵀX)ᵀ… m×k
+        blas::matmul_tn_into(&q, &h, &mut qtf); // QᵀH, l×k
+        blas::gram_into(&qtf, &mut ws.g); // Hᵀ·QQᵀ·H
+        blas::matmul_into(&bt, &qtf, &mut ws.y); // (XQ)·(QᵀH) = (QQᵀX)ᵀ… m×k
         mm += t.elapsed_secs();
-        for i in 0..k {
-            *g.at_mut(i, i) += alpha;
-        }
-        y.axpy(alpha, &h);
+        ws.g.add_diag(alpha);
+        ws.y.axpy(alpha, &h);
         let t = Stopwatch::start();
-        w = update(opts.rule, &g, &y, &w);
+        update_into(opts.rule, &ws.g, &ws.y, &mut w, &mut ws.update);
         solve += t.elapsed_secs();
 
         // --- H update from W ---
         let t = Stopwatch::start();
-        let qtw = blas::matmul_tn(&q, &w);
-        let mut g2 = blas::gram(&qtw);
-        let mut y2 = blas::matmul(&bt, &qtw);
+        blas::matmul_tn_into(&q, &w, &mut qtf);
+        blas::gram_into(&qtf, &mut ws.g);
+        blas::matmul_into(&bt, &qtf, &mut ws.y);
         mm += t.elapsed_secs();
-        for i in 0..k {
-            *g2.at_mut(i, i) += alpha;
-        }
-        y2.axpy(alpha, &w);
+        ws.g.add_diag(alpha);
+        ws.y.axpy(alpha, &w);
         let t = Stopwatch::start();
-        h = update(opts.rule, &g2, &y2, &h);
+        update_into(opts.rule, &ws.g, &ws.y, &mut h, &mut ws.update);
         solve += t.elapsed_secs();
 
         clock += sw.elapsed_secs();
         phases.add(PHASE_MM, std::time::Duration::from_secs_f64(mm));
         phases.add(PHASE_SOLVE, std::time::Duration::from_secs_f64(solve));
 
-        let (res, pg) = metrics.eval(&w, &h);
+        let (res, pg) = metrics.eval_ws(&w, &h, &mut ws);
         records.push(IterRecord {
             iter,
             time_secs: clock,

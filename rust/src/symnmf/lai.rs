@@ -19,13 +19,21 @@ use crate::util::rng::Pcg64;
 use crate::util::timer::{PhaseTimer, Stopwatch, PHASE_MM};
 
 /// The factored low-rank approximate input X ≈ U·Vᵀ (V = U·Λ) as a
-/// [`SymOp`]: `apply` costs two skinny matmuls.
+/// [`SymOp`]: `apply_into` costs two skinny matmuls. The l×k inner
+/// product Vᵀ·F is staged through an interior scratch buffer (sized on
+/// first use, reused across every call of a solve) so the hot loop
+/// allocates nothing. The scratch lives behind a `Mutex` (uncontended in
+/// the single-threaded solve loop, so the lock is noise next to the
+/// matmuls) to keep `LaiOp: Sync` for the planned batched multi-seed
+/// runs that share one read-only operator across worker threads.
 pub struct LaiOp {
     pub u: DenseMat,
     pub v: DenseMat,
     fro_sq: f64,
     max_v: f64,
     mean_v: f64,
+    /// l×k scratch for Vᵀ·F, reused across `apply_into` calls
+    vtf: std::sync::Mutex<DenseMat>,
 }
 
 impl LaiOp {
@@ -38,6 +46,7 @@ impl LaiOp {
             fro_sq: evd.fro_norm_sq(),
             max_v: alpha_source.max_value(),
             mean_v: alpha_source.mean_value(),
+            vtf: std::sync::Mutex::new(DenseMat::zeros(0, 0)),
         }
     }
 }
@@ -47,10 +56,16 @@ impl SymOp for LaiOp {
         self.u.rows()
     }
 
-    fn apply(&self, f: &DenseMat) -> DenseMat {
+    fn apply_into(&self, f: &DenseMat, out: &mut DenseMat) {
         // U·(Vᵀ·F): (l×k) inner product then (m×l)(l×k)
-        let vtf = blas::matmul_tn(&self.v, f);
-        blas::matmul(&self.u, &vtf)
+        let l = self.v.cols();
+        let k = f.cols();
+        let mut vtf = self.vtf.lock().unwrap_or_else(|e| e.into_inner());
+        if vtf.shape() != (l, k) {
+            *vtf = DenseMat::zeros(l, k); // first call (or width change) only
+        }
+        blas::matmul_tn_into(&self.v, f, &mut *vtf);
+        blas::matmul_into(&self.u, &*vtf, out);
     }
 
     fn fro_norm_sq(&self) -> f64 {
@@ -65,13 +80,20 @@ impl SymOp for LaiOp {
         self.mean_v
     }
 
-    fn sampled_apply(&self, f: &DenseMat, samples: &[usize], weights_sq: &[f64]) -> DenseMat {
+    fn sampled_apply_into(
+        &self,
+        f: &DenseMat,
+        samples: &[usize],
+        weights_sq: &[f64],
+        out: &mut DenseMat,
+    ) {
         // V·SᵀS·F ... not used by LAI-SymNMF; provide the generic form
-        // U·(VᵀSᵀ)(S F) for completeness.
-        let sv = self.v.gather_rows_scaled(samples, &weights_sq.iter().map(|w| w.sqrt()).collect::<Vec<_>>());
-        let sf = f.gather_rows_scaled(samples, &weights_sq.iter().map(|w| w.sqrt()).collect::<Vec<_>>());
+        // U·(VᵀSᵀ)(S F) for completeness (setup-grade path; allocates).
+        let scales: Vec<f64> = weights_sq.iter().map(|w| w.sqrt()).collect();
+        let sv = self.v.gather_rows_scaled(samples, &scales);
+        let sf = f.gather_rows_scaled(samples, &scales);
         let inner = blas::matmul_tn(&sv, &sf);
-        blas::matmul(&self.u, &inner)
+        blas::matmul_into(&self.u, &inner, out);
     }
 }
 
@@ -186,6 +208,19 @@ mod tests {
         let approx = lai.apply(&f);
         let rel = exact.diff_fro(&approx) / exact.fro_norm();
         assert!(rel < 1e-6, "planted rank-4 ⊂ l=12 sketch: rel={rel}");
+
+        // the write-into form must agree and must reuse its interior
+        // Vᵀ·F scratch across calls (zero-alloc hot path)
+        let mut out = DenseMat::zeros(80, 4);
+        lai.apply_into(&f, &mut out);
+        assert!(out.diff_fro(&approx) < 1e-14);
+        let scratch_ptr = lai.vtf.lock().unwrap().data().as_ptr();
+        lai.apply_into(&f, &mut out);
+        assert_eq!(
+            lai.vtf.lock().unwrap().data().as_ptr(),
+            scratch_ptr,
+            "LaiOp scratch must be reused across applies"
+        );
     }
 
     #[test]

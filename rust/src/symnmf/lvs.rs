@@ -16,8 +16,8 @@
 //! renormalized probabilities — the paper shows τ = 1 (pure random) gives
 //! no speedup while τ = 1/s makes the method competitive (§5.2, Fig. 2).
 
-use crate::linalg::{blas, DenseMat};
-use crate::nls::update;
+use crate::linalg::{blas, DenseMat, IterWorkspace};
+use crate::nls::update_into;
 use crate::randnla::leverage::{sample_hybrid, SampleMatrix};
 use crate::randnla::SymOp;
 use crate::symnmf::anls::{resolve_alpha, Metrics};
@@ -38,8 +38,26 @@ fn sample_factor(f: &DenseMat, s: usize, tau: f64, rng: &mut Pcg64) -> SampleMat
 }
 
 /// LvS-SymNMF. Works for any [`SymOp`]; designed for sparse X where
-/// `sampled_apply` costs O(s·nnz_row·k).
+/// `sampled_apply_into` costs O(s·nnz_row·k). Sizes the workspace
+/// (including the s×k gather buffer) once and delegates to
+/// [`lvs_symnmf_ws`].
 pub fn lvs_symnmf<X: SymOp>(x: &X, opts: &SymNmfOptions) -> SymNmfResult {
+    let m = x.dim();
+    let s = opts.effective_samples(m);
+    let mut ws = IterWorkspace::with_samples(m, opts.k, s);
+    lvs_symnmf_ws(x, opts, &mut ws)
+}
+
+/// LvS-SymNMF against a caller-provided workspace: the update loop's
+/// sampled products, Gram matrices and update-rule scratch all come from
+/// `ws` — no per-iteration O(m·k) allocation. (The sampler itself still
+/// builds its index/scale vectors per draw; those are O(s) and belong to
+/// the sampling phase, not the kernel core.)
+pub fn lvs_symnmf_ws<X: SymOp>(
+    x: &X,
+    opts: &SymNmfOptions,
+    ws: &mut IterWorkspace,
+) -> SymNmfResult {
     let mut rng = Pcg64::seed_from_u64(opts.seed);
     let alpha = resolve_alpha(x, opts);
     let m = x.dim();
@@ -71,43 +89,33 @@ pub fn lvs_symnmf<X: SymOp>(x: &X, opts: &SymNmfOptions) -> SymNmfResult {
         // --- sample on H, update W (lines 4–10) ---
         let t = Stopwatch::start();
         let sm_h = sample_factor(&h, s, tau, &mut rng);
-        let sh = h.gather_rows_scaled(&sm_h.indices, &sm_h.scales);
+        h.gather_rows_scaled_into(&sm_h.indices, &sm_h.scales, &mut ws.sf);
         t_sample += t.elapsed_secs();
 
         let t = Stopwatch::start();
-        let y_h = {
-            let mut y = x.sampled_apply(&h, &sm_h.indices, &sm_h.weights_sq());
-            y.axpy(alpha, &h);
-            y
-        };
-        let mut g_h = blas::gram(&sh);
+        x.sampled_apply_into(&h, &sm_h.indices, &sm_h.weights_sq(), &mut ws.y);
+        ws.y.axpy(alpha, &h);
+        blas::gram_into(&ws.sf, &mut ws.g);
         t_mm += t.elapsed_secs();
-        for i in 0..k {
-            *g_h.at_mut(i, i) += alpha;
-        }
+        ws.g.add_diag(alpha);
         let t = Stopwatch::start();
-        w = update(opts.rule, &g_h, &y_h, &w);
+        update_into(opts.rule, &ws.g, &ws.y, &mut w, &mut ws.update);
         t_solve += t.elapsed_secs();
 
         // --- sample on W, update H (lines 11–17) ---
         let t = Stopwatch::start();
         let sm_w = sample_factor(&w, s, tau, &mut rng);
-        let sw_mat = w.gather_rows_scaled(&sm_w.indices, &sm_w.scales);
+        w.gather_rows_scaled_into(&sm_w.indices, &sm_w.scales, &mut ws.sf);
         t_sample += t.elapsed_secs();
 
         let t = Stopwatch::start();
-        let y_w = {
-            let mut y = x.sampled_apply(&w, &sm_w.indices, &sm_w.weights_sq());
-            y.axpy(alpha, &w);
-            y
-        };
-        let mut g_w = blas::gram(&sw_mat);
+        x.sampled_apply_into(&w, &sm_w.indices, &sm_w.weights_sq(), &mut ws.y);
+        ws.y.axpy(alpha, &w);
+        blas::gram_into(&ws.sf, &mut ws.g);
         t_mm += t.elapsed_secs();
-        for i in 0..k {
-            *g_w.at_mut(i, i) += alpha;
-        }
+        ws.g.add_diag(alpha);
         let t = Stopwatch::start();
-        h = update(opts.rule, &g_w, &y_w, &h);
+        update_into(opts.rule, &ws.g, &ws.y, &mut h, &mut ws.update);
         t_solve += t.elapsed_secs();
 
         clock += sw.elapsed_secs();
@@ -115,8 +123,8 @@ pub fn lvs_symnmf<X: SymOp>(x: &X, opts: &SymNmfOptions) -> SymNmfResult {
         phases.add(PHASE_SOLVE, std::time::Duration::from_secs_f64(t_solve));
         phases.add(PHASE_SAMPLING, std::time::Duration::from_secs_f64(t_sample));
 
-        // --- metrics off the clock ---
-        let (res, pg) = metrics.eval(&w, &h);
+        // --- metrics off the clock (workspace buffers are free here) ---
+        let (res, pg) = metrics.eval_ws(&w, &h, ws);
         let det_frac =
             0.5 * (sm_h.deterministic_fraction() + sm_w.deterministic_fraction());
         let theta_over_k = 0.5 * (sm_h.theta + sm_w.theta) / k as f64;
@@ -176,6 +184,29 @@ mod tests {
         let last = res.min_residual();
         assert!(last < first, "residual {first} → {last}");
         assert!(res.h.is_nonneg());
+    }
+
+    /// Acceptance: the LvS update loop draws every sampled product, Gram
+    /// and update scratch from the pre-sized workspace — buffer pointers
+    /// must survive 3 iterations unchanged.
+    #[test]
+    fn workspace_buffers_stable_across_iterations() {
+        let x = planted_sparse(80, 4, 9);
+        let mut opts = SymNmfOptions::new(4)
+            .with_rule(UpdateRule::Hals)
+            .with_seed(3);
+        opts.max_iters = 3;
+        opts.samples = Some(40);
+        let s = opts.effective_samples(x.rows());
+        let mut ws = IterWorkspace::with_samples(x.rows(), 4, s);
+        let before = ws.buffer_ptrs();
+        let res = lvs_symnmf_ws(&x, &opts, &mut ws);
+        assert_eq!(res.iters(), 3);
+        assert_eq!(
+            ws.buffer_ptrs(),
+            before,
+            "LvS workspace buffers moved during the update loop"
+        );
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //! something the compression-based randomized NMF methods cannot do
 //! (paper §3.4).
 
-use crate::linalg::{blas, DenseMat};
+use crate::linalg::{blas, DenseMat, IterWorkspace};
 use crate::randnla::SymOp;
 use crate::symnmf::anls::Metrics;
 use crate::symnmf::init::initial_factor;
@@ -26,42 +26,85 @@ use crate::symnmf::options::SymNmfOptions;
 use crate::util::rng::Pcg64;
 use crate::util::timer::{PhaseTimer, Stopwatch, PHASE_MM, PHASE_SOLVE};
 
-/// One CG solve of JᵀJ·Z ≈ R₀ (Gauss–Newton direction). `g` = HᵀH is held
-/// fixed during the inner solve. Returns Z.
-fn cg_direction(h: &DenseMat, g: &DenseMat, r0: DenseMat, iters: usize) -> DenseMat {
-    let mut z = DenseMat::zeros(h.rows(), h.cols());
-    let mut r = r0;
-    let mut p = r.clone();
-    let mut e_old = r.fro_norm_sq();
-    if e_old == 0.0 {
-        return z;
+/// Pre-sized buffers for the CG inner solve — allocated once per
+/// [`run_pgncg_loop`], reused across every outer iteration and every CG
+/// step (the PGNCG face of the zero-allocation kernel core).
+struct CgWorkspace {
+    /// m×k: CG right-hand side / residual R
+    r: DenseMat,
+    /// m×k: accumulated direction Z
+    z: DenseMat,
+    /// m×k: search direction P
+    p: DenseMat,
+    /// m×k: JᵀJ·P product
+    y: DenseMat,
+    /// m×k: H·(PᵀH) partial
+    hp: DenseMat,
+    /// m×k: H·G product of the outer step (RHS assembly)
+    hg: DenseMat,
+    /// k×k: PᵀH inner product
+    pth: DenseMat,
+}
+
+impl CgWorkspace {
+    fn new(m: usize, k: usize) -> CgWorkspace {
+        CgWorkspace {
+            r: DenseMat::zeros(m, k),
+            z: DenseMat::zeros(m, k),
+            p: DenseMat::zeros(m, k),
+            y: DenseMat::zeros(m, k),
+            hp: DenseMat::zeros(m, k),
+            hg: DenseMat::zeros(m, k),
+            pth: DenseMat::zeros(k, k),
+        }
     }
+}
+
+/// One CG solve of JᵀJ·Z ≈ R (Gauss–Newton direction). `g` = HᵀH is held
+/// fixed during the inner solve; `cg.r` holds the right-hand side on
+/// entry and the CG residual on exit; the direction lands in `cg.z`.
+/// All intermediates come from the workspace — no allocation.
+fn cg_direction_ws(h: &DenseMat, g: &DenseMat, iters: usize, cg: &mut CgWorkspace) {
+    cg.z.fill(0.0);
+    let mut e_old = cg.r.fro_norm_sq();
+    if e_old == 0.0 {
+        return;
+    }
+    cg.p.copy_from(&cg.r);
     for _ in 0..iters {
         // Y = JᵀJ·P = 2(P·G + H·(PᵀH))
-        let pth = blas::matmul_tn(&p, h);
-        let mut y = blas::matmul(&p, g);
-        let hp = blas::matmul(h, &pth);
-        y.axpy(1.0, &hp);
-        y.scale(2.0);
-        let py = blas::dot(p.data(), y.data());
+        blas::matmul_tn_into(&cg.p, h, &mut cg.pth);
+        blas::matmul_into(&cg.p, g, &mut cg.y);
+        blas::matmul_into(h, &cg.pth, &mut cg.hp);
+        cg.y.axpy(1.0, &cg.hp);
+        cg.y.scale(2.0);
+        let py = blas::dot(cg.p.data(), cg.y.data());
         if py.abs() < 1e-300 {
             break;
         }
         let a = e_old / py;
-        z.axpy(a, &p);
-        r.axpy(-a, &y);
-        let e_new = r.fro_norm_sq();
+        cg.z.axpy(a, &cg.p);
+        cg.r.axpy(-a, &cg.y);
+        let e_new = cg.r.fro_norm_sq();
         if e_new.sqrt() < 1e-12 {
             break;
         }
         let beta = e_new / e_old;
-        // p = r + beta·p
-        let mut p_next = r.clone();
-        p_next.axpy(beta, &p);
-        p = p_next;
+        // p = r + beta·p, in place
+        cg.p.scale(beta);
+        cg.p.axpy(1.0, &cg.r);
         e_old = e_new;
     }
-    z
+}
+
+/// Allocating wrapper over [`cg_direction_ws`] (test oracle).
+#[cfg(test)]
+fn cg_direction(h: &DenseMat, g: &DenseMat, r0: DenseMat, iters: usize) -> DenseMat {
+    let (m, k) = r0.shape();
+    let mut cg = CgWorkspace::new(m, k);
+    cg.r.copy_from(&r0);
+    cg_direction_ws(h, g, iters, &mut cg);
+    cg.z
 }
 
 /// Shared PGNCG loop over any operator (`x_iter` drives the iteration,
@@ -78,25 +121,32 @@ fn run_pgncg_loop(
     let mut records: Vec<IterRecord> = Vec::new();
     let mut stop = StopRule::new(opts.tol, opts.patience);
     let mut clock = setup_secs;
+    let (m, k) = h.shape();
+    // all per-iteration buffers, sized once: X·H, HᵀH and the metric
+    // buffers in the shared iteration workspace (PGNCG leaves its
+    // Update(G,Y) scratch idle — it has no NLS solve), CG intermediates
+    // including the H·G RHS partial in the CG workspace
+    let mut ws = IterWorkspace::new(m, k);
+    let mut cg = CgWorkspace::new(m, k);
 
     for iter in 0..opts.max_iters {
         let sw = Stopwatch::start();
         let t = Stopwatch::start();
-        let xh = x_iter.apply(&h);
-        let g = blas::gram(&h);
+        x_iter.apply_into(&h, &mut ws.y); // X·H
+        blas::gram_into(&h, &mut ws.g); // G = HᵀH
         let mm = t.elapsed_secs();
 
         let t = Stopwatch::start();
         // gradient direction: R = −g/2 form: R₀ = 2(XH − H·G) is the CG
         // right-hand side (−gradient); Alg. LAI-PGNCG phrases it with the
         // opposite sign and a minus in the final update — equivalent.
-        let hg = blas::matmul(&h, &g);
-        let mut r0 = xh;
-        r0.axpy(-1.0, &hg);
-        r0.scale(2.0);
-        let z = cg_direction(&h, &g, r0, opts.cg_iters);
+        blas::matmul_into(&h, &ws.g, &mut cg.hg); // H·G
+        cg.r.copy_from(&ws.y);
+        cg.r.axpy(-1.0, &cg.hg);
+        cg.r.scale(2.0);
+        cg_direction_ws(&h, &ws.g, opts.cg_iters, &mut cg);
         // H ← [H + Z]_+ (Z approximates the Newton step along −gradient)
-        h.axpy(1.0, &z);
+        h.axpy(1.0, &cg.z);
         h.project_nonneg();
         let solve = t.elapsed_secs();
 
@@ -104,7 +154,7 @@ fn run_pgncg_loop(
         phases.add(PHASE_MM, std::time::Duration::from_secs_f64(mm));
         phases.add(PHASE_SOLVE, std::time::Duration::from_secs_f64(solve));
 
-        let (res, pg) = metrics.eval(&h, &h);
+        let (res, pg) = metrics.eval_ws(&h, &h, &mut ws);
         records.push(IterRecord {
             iter,
             time_secs: clock,

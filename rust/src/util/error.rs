@@ -1,0 +1,77 @@
+//! Minimal error-context substrate (anyhow is unavailable offline; see
+//! DESIGN.md §2 "Offline-dependency substitutions"): a string-backed
+//! error, a `Result` alias defaulting to it, a `Context` extension trait
+//! mirroring `anyhow::Context`, and the [`err!`](crate::err) macro for
+//! formatted construction.
+
+use std::fmt;
+
+/// A string-backed error with context chaining via `Context`.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error { msg: m.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context`-style extension: wrap an error with a message.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Construct an [`Error`] from a format string (the `anyhow!` stand-in).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_chains_messages() {
+        let base: Result<(), String> = Err("inner".to_string());
+        let e = base.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let base: Result<(), String> = Err("inner".to_string());
+        let e = base.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(e.to_string(), "step 3: inner");
+    }
+
+    #[test]
+    fn err_macro_formats() {
+        let e = crate::err!("bad shape {:?}", (2, 3));
+        assert!(e.to_string().contains("(2, 3)"));
+        // alternate formatting ({:#}) must also render
+        assert!(format!("{e:#}").contains("bad shape"));
+    }
+}

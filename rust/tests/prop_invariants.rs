@@ -4,7 +4,11 @@
 
 use symnmf::linalg::{blas, eig, qr, DenseMat};
 use symnmf::nls::{bpp, update, UpdateRule};
+use symnmf::randnla::evd::apx_evd;
 use symnmf::randnla::leverage::{sample_hybrid, sample_standard, theorem21_sample_count};
+use symnmf::randnla::SymOp;
+use symnmf::sparse::CsrMat;
+use symnmf::symnmf::lai::LaiOp;
 use symnmf::util::propcheck::{dim, forall};
 use symnmf::util::rng::Pcg64;
 
@@ -118,6 +122,92 @@ fn hybrid_sc1_at_least_as_good_on_spiked_inputs() {
     assert!(
         wins * 3 >= trials * 2,
         "hybrid won only {wins}/{trials} SC1 comparisons"
+    );
+}
+
+/// Backend-agreement property for the write-into kernel dispatch layer:
+/// `apply_into` / `sampled_apply_into` must match the allocating paths to
+/// 1e-12 across the `DenseMat`, `CsrMat` and `LaiOp` backends on random
+/// shapes — with the output buffer pre-filled with garbage, so any
+/// backend that forgets to fully overwrite its output fails loudly.
+#[test]
+fn apply_into_matches_allocating_paths_across_backends() {
+    forall(
+        12,
+        4400,
+        |rng| {
+            let n = dim(rng, 4, 28);
+            let k = dim(rng, 1, 6);
+            // random symmetric sparse pattern + matching dense copy
+            let mut trips = Vec::new();
+            for i in 0..n {
+                for j in i..n {
+                    if rng.uniform() < 0.4 {
+                        let v = rng.uniform();
+                        trips.push((i, j, v));
+                        if i != j {
+                            trips.push((j, i, v));
+                        }
+                    }
+                }
+            }
+            // guarantee at least one entry so X isn't all-zero
+            trips.push((0, 0, 1.0 + rng.uniform()));
+            let sp = CsrMat::from_coo(n, n, trips);
+            let de = sp.to_dense();
+            let f = DenseMat::gaussian(n, k, rng);
+            let s = dim(rng, 1, n);
+            let samples: Vec<usize> = (0..s).map(|_| rng.below(n)).collect();
+            let weights: Vec<f64> = (0..s).map(|_| rng.uniform() + 0.1).collect();
+            (sp, de, f, samples, weights)
+        },
+        |(sp, de, f, samples, weights)| {
+            let n = de.rows();
+            let k = f.cols();
+            let mut out = DenseMat::zeros(n, k);
+
+            // reference: the allocating dense path
+            let want_apply = SymOp::apply(de, f);
+            let want_sampled = SymOp::sampled_apply(de, f, samples, weights);
+
+            // dense + sparse backends, stale output pre-fill
+            out.fill(1e9);
+            SymOp::apply_into(de, f, &mut out);
+            if out.diff_fro(&want_apply) > 1e-12 {
+                return Err("dense apply_into mismatch".into());
+            }
+            out.fill(-1e9);
+            SymOp::apply_into(sp, f, &mut out);
+            if out.diff_fro(&want_apply) > 1e-12 {
+                return Err("sparse apply_into mismatch".into());
+            }
+            out.fill(1e9);
+            SymOp::sampled_apply_into(de, f, samples, weights, &mut out);
+            if out.diff_fro(&want_sampled) > 1e-12 {
+                return Err("dense sampled_apply_into mismatch".into());
+            }
+            out.fill(-1e9);
+            SymOp::sampled_apply_into(sp, f, samples, weights, &mut out);
+            if out.diff_fro(&want_sampled) > 1e-12 {
+                return Err("sparse sampled_apply_into mismatch".into());
+            }
+
+            // LAI backend: apply_into must match its own allocating form
+            // (U·(VᵀF) via allocating skinny matmuls) exactly
+            let mut rng2 = Pcg64::seed_from_u64(7);
+            let evd = apx_evd(de, n.min(2 * k + 2), 1, &mut rng2);
+            let lai = LaiOp::new(&evd, de);
+            let lai_want = blas::matmul(&lai.u, &blas::matmul_tn(&lai.v, f));
+            out.fill(1e9);
+            SymOp::apply_into(&lai, f, &mut out);
+            if out.diff_fro(&lai_want) > 1e-12 {
+                return Err("LaiOp apply_into mismatch".into());
+            }
+            if SymOp::apply(&lai, f).diff_fro(&lai_want) > 1e-12 {
+                return Err("LaiOp allocating apply mismatch".into());
+            }
+            Ok(())
+        },
     );
 }
 
