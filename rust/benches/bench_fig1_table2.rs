@@ -12,7 +12,7 @@
 //! writes results/fig1_convergence.csv and results/table2.txt
 
 use symnmf::clustering::ari::adjusted_rand_index;
-use symnmf::coordinator::driver::run_trials;
+use symnmf::coordinator::driver::{run_trials, run_trials_batched};
 use symnmf::coordinator::experiments::{fig1_table2_methods, wos_options, wos_workload};
 use symnmf::coordinator::report;
 use symnmf::util::rng::Pcg64;
@@ -27,8 +27,16 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(3);
+    // SYMNMF_BATCH_TRIALS=1 runs each method's trials concurrently over
+    // the shared adjacency (bitwise-identical factors/residuals; the
+    // per-trial `mean_time` column then reflects contended wall clock, so
+    // the default stays serial for paper-comparable timings).
+    let batched = std::env::var("SYMNMF_BATCH_TRIALS").map(|v| v == "1").unwrap_or(false);
 
-    println!("== Fig. 1 / Table 2 bench: WoS dense workload ({docs} docs, {trials} trials) ==");
+    println!(
+        "== Fig. 1 / Table 2 bench: WoS dense workload ({docs} docs, {trials} trials{}) ==",
+        if batched { ", batched" } else { "" }
+    );
     let w = wos_workload(docs, 1);
     let mut opts = wos_options().with_seed(10);
     opts.max_iters = 150;
@@ -36,7 +44,11 @@ fn main() {
     let mut all = Vec::new();
     for method in fig1_table2_methods() {
         let t = Stopwatch::start();
-        let stats = run_trials(method, &w.adjacency, &opts, Some(&w.labels), trials);
+        let stats = if batched {
+            run_trials_batched(method, &w.adjacency, &opts, Some(&w.labels), trials)
+        } else {
+            run_trials(method, &w.adjacency, &opts, Some(&w.labels), trials)
+        };
         println!(
             "  {:<14} mean {:5.1} iters  {:7.3}s  min-res {:.4}  ARI {:.3}  [bench wall {:.1}s]",
             stats.label,

@@ -1,8 +1,10 @@
 //! Micro-benchmarks of the hot-path kernels (the §Perf tool, DESIGN.md
-//! §6): dense matmul X·F (allocating vs `apply_into`), Gram, SpMM,
-//! CholeskyQR + leverage scores, BPP multi-RHS solve, sampled SpMM, and
-//! the PJRT round-trip for the same product — with achieved GF/s against
-//! the 1-core f64 roofline.
+//! §6): dense matmul X·F (blocked-SYMM vs generic GEMM vs allocating),
+//! Gram, SpMM (column-tiled vs untiled on wide k), the transpose-free
+//! HALS sweep vs the staged-transpose reference, batched vs serial
+//! multi-seed trials, CholeskyQR + leverage scores, BPP multi-RHS solve,
+//! sampled SpMM, and the PJRT round-trip for the same product — with
+//! achieved GF/s against the 1-core f64 roofline.
 //!
 //! Besides the stdout report, emits machine-readable
 //! **`BENCH_kernels.json`** at the repo root (op, shape, secs/iter,
@@ -11,12 +13,15 @@
 //!     cargo bench --bench bench_kernels
 
 use std::rc::Rc;
+use symnmf::coordinator::driver::{run_trials, run_trials_batched};
+use symnmf::coordinator::Method;
 use symnmf::linalg::{blas, qr, DenseMat};
-use symnmf::nls::bpp;
+use symnmf::nls::{bpp, hals, UpdateRule};
 use symnmf::randnla::leverage::sample_hybrid;
 use symnmf::randnla::SymOp;
 use symnmf::runtime::{PjrtRuntime, PjrtSymOp};
 use symnmf::sparse::CsrMat;
+use symnmf::symnmf::options::SymNmfOptions;
 use symnmf::util::bench::{bench, gflops, BenchResult};
 use symnmf::util::json::Json;
 use symnmf::util::rng::Pcg64;
@@ -122,6 +127,24 @@ fn main() {
         "apply_into vs allocating at m={m2}, k={k2}: {:.2}% time",
         100.0 * r_into.median / r_alloc.median.max(1e-300)
     );
+    // generic GEMM on the same shape — what the PR-1 `symm_tall_into`
+    // alias dispatched to; the gap to `dense_xf_apply_into` is the
+    // blocked-SYMM win (halved X traffic + fixed-order block reduction).
+    let r_gemm = bench(&format!("dense X·F generic GEMM ({m2}x{m2}, k={k2})"), 1, 5, || {
+        blas::matmul_into(&x2, &f2, &mut out2);
+    });
+    println!("{}   {:.2} GF/s", r_gemm.report(), gflops(flops2, r_gemm.median));
+    record(
+        &mut records,
+        "dense_xf_matmul_into",
+        &format!("{m2}x{m2}·{m2}x{k2}"),
+        &r_gemm,
+        flops2,
+    );
+    println!(
+        "blocked SYMM vs generic GEMM at m={m2}, k={k2}: {:.2}% time",
+        100.0 * r_into.median / r_gemm.median.max(1e-300)
+    );
 
     // --- Gram FᵀF ---
     let tall = DenseMat::gaussian(100_000, k, &mut rng);
@@ -151,6 +174,98 @@ fn main() {
     let spflops = 2.0 * (sp.nnz() * k) as f64;
     println!("{}   {:.2} GF/s", r.report(), gflops(spflops, r.median));
     record(&mut records, "spmm_into", &format!("{n}x{n} nnz={}", sp.nnz()), &r, spflops);
+
+    // --- tiled vs untiled SpMM on a wide factor (k = 64 > SPMM_PANEL) ---
+    let kw = 64;
+    let fw = DenseMat::gaussian(n, kw, &mut rng);
+    let mut spout_w = DenseMat::zeros(n, kw);
+    let spflops_w = 2.0 * (sp.nnz() * kw) as f64;
+    let r_tiled = bench(&format!("spmm tiled  ({n}x{n}, k={kw})"), 2, 9, || {
+        sp.spmm_into(&fw, &mut spout_w);
+    });
+    println!("{}   {:.2} GF/s", r_tiled.report(), gflops(spflops_w, r_tiled.median));
+    record(&mut records, "spmm_tiled_into", &format!("{n}x{n} k={kw}"), &r_tiled, spflops_w);
+    let r_flat = bench(&format!("spmm untiled ({n}x{n}, k={kw})"), 2, 9, || {
+        sp.spmm_into_panels(&fw, &mut spout_w, kw);
+    });
+    println!("{}   {:.2} GF/s", r_flat.report(), gflops(spflops_w, r_flat.median));
+    record(&mut records, "spmm_untiled_into", &format!("{n}x{n} k={kw}"), &r_flat, spflops_w);
+
+    // --- transpose-free HALS sweep vs the staged-transpose reference ---
+    let hm = 20_000;
+    let hals_w0 = {
+        let mut w = DenseMat::gaussian(hm, k, &mut rng);
+        w.project_nonneg();
+        w
+    };
+    let hals_g = {
+        let a = DenseMat::gaussian(hm, k, &mut rng);
+        let mut g = blas::gram(&a);
+        g.add_diag(1.0);
+        g
+    };
+    let hals_y = DenseMat::gaussian(hm, k, &mut rng);
+    let hals_flops = 2.0 * (hm * k * k) as f64;
+    let mut hw = hals_w0.clone();
+    let r_hals = bench(&format!("HALS row-major sweep ({hm}x{k})"), 2, 9, || {
+        hals::hals_sweep(&hals_g, &hals_y, &mut hw);
+    });
+    println!("{}   {:.2} GF/s", r_hals.report(), gflops(hals_flops, r_hals.median));
+    record(&mut records, "hals_rowmajor", &format!("{hm}x{k}"), &r_hals, hals_flops);
+    let mut hw_ref = hals_w0.clone();
+    let r_hals_ref = bench(&format!("HALS transpose-staged ({hm}x{k})"), 2, 9, || {
+        hals::hals_sweep_reference(&hals_g, &hals_y, &mut hw_ref);
+    });
+    println!(
+        "{}   {:.2} GF/s",
+        r_hals_ref.report(),
+        gflops(hals_flops, r_hals_ref.median)
+    );
+    record(
+        &mut records,
+        "hals_transpose_ref",
+        &format!("{hm}x{k}"),
+        &r_hals_ref,
+        hals_flops,
+    );
+
+    // --- batched vs serial multi-seed trials (shared X, 4 seeds) ---
+    let (tx, topts) = {
+        let mut trng = Pcg64::seed_from_u64(7);
+        let th = DenseMat::uniform(192, 4, 1.0, &mut trng);
+        let mut tx = blas::matmul_nt(&th, &th);
+        tx.symmetrize();
+        let mut o = SymNmfOptions::new(4);
+        o.rule = UpdateRule::Hals;
+        o.max_iters = 10;
+        (tx, o)
+    };
+    let r_ser = bench("run_trials serial (192², k=4, 4 seeds)", 1, 5, || {
+        std::hint::black_box(run_trials(
+            Method::Exact(UpdateRule::Hals),
+            &tx,
+            &topts,
+            None,
+            4,
+        ));
+    });
+    println!("{}", r_ser.report());
+    record(&mut records, "trials_serial", "m=192 k=4 x4", &r_ser, 0.0);
+    let r_bat = bench("run_trials batched (192², k=4, 4 seeds)", 1, 5, || {
+        std::hint::black_box(run_trials_batched(
+            Method::Exact(UpdateRule::Hals),
+            &tx,
+            &topts,
+            None,
+            4,
+        ));
+    });
+    println!("{}", r_bat.report());
+    record(&mut records, "trials_batched", "m=192 k=4 x4", &r_bat, 0.0);
+    println!(
+        "batched vs serial trials: {:.2}% time",
+        100.0 * r_bat.median / r_ser.median.max(1e-300)
+    );
 
     // --- sampled SpMM (LvS inner product, s = 0.05·n) ---
     let h = DenseMat::gaussian(n, k, &mut rng);

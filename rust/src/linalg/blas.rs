@@ -1,14 +1,36 @@
 //! BLAS-like dense kernels, shaped for the paper's workloads.
 //!
-//! The SymNMF hot path multiplies a large square `X` (m×m) by a skinny
-//! factor `F` (m×k, k ≤ ~100). All kernels here use an i-k-j loop order
-//! with contiguous row accumulation: for each row `i` of the left operand
-//! the output row `out[i, :]` stays hot while rows of the right operand
-//! stream through cache. `parallel_for_chunks` splits the `i` range across
-//! cores when more than one is available.
+//! The SymNMF hot path multiplies a large square symmetric `X` (m×m) by a
+//! skinny factor `F` (m×k, k ≤ ~100). The kernels are organized around
+//! two blocking ideas:
+//!
+//! **Register blocking (the NT microkernel).** Products whose right
+//! operand is accessed row-contiguously transposed — the skinny-B path of
+//! [`matmul_into`] and all of [`matmul_nt_into`] — run on a shared 2×4
+//! register tile: two left rows × four right rows are multiplied in one
+//! pass with eight scalar accumulators, so every loaded element of the
+//! right panel feeds two FMAs and every left element four. All streams
+//! are contiguous in the reduction index, which the autovectorizer turns
+//! into FMA vectors; the j-panel width of 4 keeps the accumulators in
+//! registers. Skinny B is transposed once per call into a thread-local
+//! staging buffer ([`BT_SCRATCH`]), so the hot loop allocates nothing.
+//!
+//! **Cache blocking with symmetry (the SYMM kernel).** [`symm_tall_into`]
+//! partitions symmetric X into `SYMM_BLOCK`-sized row/column blocks and
+//! walks only the upper-triangle block pairs: each off-diagonal block
+//! X[I,J] is read once and applied to both output panels
+//! (out[I] += X[I,J]·F[J] and out[J] += X[I,J]ᵀ·F[I]), roughly halving
+//! X memory traffic relative to the plain GEMM. Workers accumulate into
+//! private m×k buffers (round-robin over block pairs) which are reduced
+//! in fixed worker order, so the result is deterministic for a given
+//! thread count.
+//!
+//! `parallel_for_chunks` splits row ranges across cores when more than
+//! one is available; partitioning is balanced and deterministic (see
+//! [`crate::util::threadpool`]).
 
 use crate::linalg::DenseMat;
-use crate::util::threadpool::parallel_for_chunks;
+use crate::util::threadpool::{num_threads, parallel_for_chunks, SendPtr};
 use std::cell::RefCell;
 
 thread_local! {
@@ -18,6 +40,12 @@ thread_local! {
     /// no allocation even when a solve alternates between B shapes
     /// (e.g. the LAI inner product and the metrics X·H product).
     static BT_SCRATCH: RefCell<Vec<f64>> = RefCell::new(Vec::new());
+
+    /// Per-call accumulator pool for the multi-worker path of
+    /// [`symm_tall_into`]: `nt` private m×k buffers, reused across calls
+    /// on the same thread (nested kernel calls from batched trials each
+    /// see their own pool).
+    static SYMM_ACC: RefCell<Vec<f64>> = RefCell::new(Vec::new());
 }
 
 /// C = A·B.
@@ -31,9 +59,9 @@ pub fn matmul(a: &DenseMat, b: &DenseMat) -> DenseMat {
 /// the output).
 ///
 /// Two regimes (§Perf): for skinny B (n ≤ 64 — the X·F shape that
-/// dominates every SymNMF iteration) B is transposed once and each output
-/// entry becomes a long contiguous dot product, which the autovectorizer
-/// turns into FMA streams; otherwise the row-axpy formulation is used.
+/// dominates every SymNMF iteration) B is transposed once into the
+/// thread-local staging buffer and the product runs on the 2×4 register
+/// tile of [`nt_rows`]; otherwise the row-axpy formulation is used.
 pub fn matmul_into(a: &DenseMat, b: &DenseMat, c: &mut DenseMat) {
     let (m, ka) = a.shape();
     let (kb, n) = b.shape();
@@ -63,16 +91,7 @@ pub fn matmul_into(a: &DenseMat, b: &DenseMat, c: &mut DenseMat) {
             let btdata = &bt[..];
             let cptr = SendPtr(c.data_mut().as_mut_ptr());
             parallel_for_chunks(m, 64, move |lo, hi| {
-                let cdata = cptr;
-                for i in lo..hi {
-                    let arow = &adata[i * ka..(i + 1) * ka];
-                    let crow = unsafe {
-                        std::slice::from_raw_parts_mut(cdata.0.add(i * n), n)
-                    };
-                    for (j, cij) in crow.iter_mut().enumerate() {
-                        *cij = dot(arow, &btdata[j * ka..(j + 1) * ka]);
-                    }
-                }
+                nt_rows(adata, ka, btdata, n, lo, hi, cptr);
             });
         });
         return;
@@ -98,6 +117,108 @@ pub fn matmul_into(a: &DenseMat, b: &DenseMat, c: &mut DenseMat) {
             }
         }
     });
+}
+
+/// The register-blocked NT microkernel: writes C rows [lo, hi) of
+/// C = A·BTᵀ, where `a` is m×p row-major and `bt` is n×p row-major (the
+/// TRANSPOSE of the logical right operand, so both reduction streams are
+/// contiguous). Rows are processed in pairs against 4-column panels of
+/// the output: 8 accumulators, 6 loads and 8 FMAs per reduction step.
+fn nt_rows(a: &[f64], p: usize, bt: &[f64], n: usize, lo: usize, hi: usize, cptr: SendPtr) {
+    let mut i = lo;
+    while i + 2 <= hi {
+        let a0 = &a[i * p..(i + 1) * p];
+        let a1 = &a[(i + 1) * p..(i + 2) * p];
+        // SAFETY: rows [lo, hi) are disjoint across workers.
+        let c0 = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i * n), n) };
+        let c1 = unsafe { std::slice::from_raw_parts_mut(cptr.0.add((i + 1) * n), n) };
+        nt_row_pair(a0, a1, p, bt, n, c0, c1);
+        i += 2;
+    }
+    if i < hi {
+        let a0 = &a[i * p..(i + 1) * p];
+        // SAFETY: as above.
+        let c0 = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i * n), n) };
+        nt_row_single(a0, p, bt, n, c0);
+    }
+}
+
+/// 2×4 tile: two A rows against panels of four BT rows.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn nt_row_pair(
+    a0: &[f64],
+    a1: &[f64],
+    p: usize,
+    bt: &[f64],
+    n: usize,
+    c0: &mut [f64],
+    c1: &mut [f64],
+) {
+    let mut j = 0;
+    while j + 4 <= n {
+        let b0 = &bt[j * p..(j + 1) * p];
+        let b1 = &bt[(j + 1) * p..(j + 2) * p];
+        let b2 = &bt[(j + 2) * p..(j + 3) * p];
+        let b3 = &bt[(j + 3) * p..(j + 4) * p];
+        let (mut s00, mut s01, mut s02, mut s03) = (0.0f64, 0.0, 0.0, 0.0);
+        let (mut s10, mut s11, mut s12, mut s13) = (0.0f64, 0.0, 0.0, 0.0);
+        for t in 0..p {
+            let x0 = a0[t];
+            let x1 = a1[t];
+            s00 += x0 * b0[t];
+            s01 += x0 * b1[t];
+            s02 += x0 * b2[t];
+            s03 += x0 * b3[t];
+            s10 += x1 * b0[t];
+            s11 += x1 * b1[t];
+            s12 += x1 * b2[t];
+            s13 += x1 * b3[t];
+        }
+        c0[j] = s00;
+        c0[j + 1] = s01;
+        c0[j + 2] = s02;
+        c0[j + 3] = s03;
+        c1[j] = s10;
+        c1[j + 1] = s11;
+        c1[j + 2] = s12;
+        c1[j + 3] = s13;
+        j += 4;
+    }
+    while j < n {
+        let b = &bt[j * p..(j + 1) * p];
+        c0[j] = dot(a0, b);
+        c1[j] = dot(a1, b);
+        j += 1;
+    }
+}
+
+/// 1×4 tail tile for an odd final row.
+fn nt_row_single(a0: &[f64], p: usize, bt: &[f64], n: usize, c0: &mut [f64]) {
+    let mut j = 0;
+    while j + 4 <= n {
+        let b0 = &bt[j * p..(j + 1) * p];
+        let b1 = &bt[(j + 1) * p..(j + 2) * p];
+        let b2 = &bt[(j + 2) * p..(j + 3) * p];
+        let b3 = &bt[(j + 3) * p..(j + 4) * p];
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
+        for t in 0..p {
+            let x = a0[t];
+            s0 += x * b0[t];
+            s1 += x * b1[t];
+            s2 += x * b2[t];
+            s3 += x * b3[t];
+        }
+        c0[j] = s0;
+        c0[j + 1] = s1;
+        c0[j + 2] = s2;
+        c0[j + 3] = s3;
+        j += 4;
+    }
+    while j < n {
+        c0[j] = dot(a0, &bt[j * p..(j + 1) * p]);
+        j += 1;
+    }
 }
 
 /// y += alpha * x  (contiguous slices).
@@ -170,28 +291,27 @@ pub fn matmul_tn_into(a: &DenseMat, b: &DenseMat, c: &mut DenseMat) {
     }
 }
 
-/// C = A·Bᵀ (A: m×p, B: n×p → C: m×n): each output entry is a dot of two
-/// contiguous rows.
+/// C = A·Bᵀ (A: m×p, B: n×p → C: m×n): both operands are row-contiguous
+/// in the reduction index, so this is the NT microkernel applied
+/// directly — no staging transpose at all.
 pub fn matmul_nt(a: &DenseMat, b: &DenseMat) -> DenseMat {
+    let mut c = DenseMat::zeros(a.rows(), b.rows());
+    matmul_nt_into(a, b, &mut c);
+    c
+}
+
+/// C = A·Bᵀ into a pre-allocated output (hot-path form; no allocation).
+pub fn matmul_nt_into(a: &DenseMat, b: &DenseMat, c: &mut DenseMat) {
     let (m, p) = a.shape();
     let (n, pb) = b.shape();
     assert_eq!(p, pb, "matmul_nt: {:?} x {:?}ᵀ", a.shape(), b.shape());
-    let mut c = DenseMat::zeros(m, n);
-    let cn = c.cols();
+    assert_eq!(c.shape(), (m, n));
+    let adata = a.data();
+    let btdata = b.data();
     let cptr = SendPtr(c.data_mut().as_mut_ptr());
     parallel_for_chunks(m, 64, move |lo, hi| {
-        let cdata = cptr;
-        for i in lo..hi {
-            let arow = a.row(i);
-            let crow = unsafe {
-                std::slice::from_raw_parts_mut(cdata.0.add(i * cn), cn)
-            };
-            for (j, cij) in crow.iter_mut().enumerate() {
-                *cij = dot(arow, b.row(j));
-            }
-        }
+        nt_rows(adata, p, btdata, n, lo, hi, cptr);
     });
-    c
 }
 
 /// Gram matrix G = FᵀF (k×k), exploiting symmetry (SYRK): only the upper
@@ -235,19 +355,161 @@ pub fn gram_into(f: &DenseMat, g: &mut DenseMat) {
     }
 }
 
-/// out = X·F where X is a large symmetric square matrix. Currently an
-/// alias of `matmul_into`; kept distinct so a symmetry-exploiting or
-/// PJRT-dispatched kernel can slot in without touching call sites.
+/// Row/column block size of the symmetric kernel. A block pair touches
+/// one SYMM_BLOCK² panel of X (128 KiB) plus two SYMM_BLOCK×k panels each
+/// of F and the accumulator (64 KiB at k = 32) — comfortably L2-resident
+/// while X itself streams through once.
+const SYMM_BLOCK: usize = 128;
+
+/// out = X·F where X is a large **symmetric** square matrix. Only blocks
+/// on or above the block diagonal are read — strictly-lower off-diagonal
+/// blocks are never touched, halving X traffic (diagonal blocks are read
+/// in full, so X must still be stored as a complete square array).
+/// Dispatches to the cache-blocked kernel ([`symm_tall_into_blocked`])
+/// for the shapes where the saved traffic pays off, and to the generic
+/// [`matmul_into`] otherwise: small X, F wide enough that the panel
+/// working set would spill L2, or a multi-worker accumulator-pool
+/// overhead (≈ 2·nt·m·k element ops to zero + reduce) that would exceed
+/// the ≈ m²/2 element reads it saves.
 pub fn symm_tall_into(x: &DenseMat, f: &DenseMat, out: &mut DenseMat) {
-    matmul_into(x, f, out);
+    let m = x.rows();
+    let k = f.cols();
+    let nt = num_threads();
+    if k > 64 || m < 2 * SYMM_BLOCK || (nt > 1 && m < 4 * nt * k) {
+        matmul_into(x, f, out);
+        return;
+    }
+    symm_tall_into_blocked(x, f, out, SYMM_BLOCK);
 }
 
-/// Raw mutable pointer wrapper so disjoint row ranges can be written from
-/// scoped worker threads.
-#[derive(Clone, Copy)]
-struct SendPtr(*mut f64);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
+/// The blocked symmetric kernel with an explicit block size (exposed so
+/// tests can exercise multi-block tiling on small shapes and benchmarks
+/// can sweep block sizes). X must be symmetric: only blocks on or above
+/// the block diagonal are read (diagonal blocks in full, including their
+/// strictly-lower entries); each off-diagonal block is applied to both
+/// output panels. With more than one worker thread, block pairs are dealt
+/// round-robin to workers accumulating into private buffers from the
+/// thread-local pool, then reduced in fixed worker order — deterministic
+/// for a given thread count.
+pub fn symm_tall_into_blocked(x: &DenseMat, f: &DenseMat, out: &mut DenseMat, block: usize) {
+    let (m, mc) = x.shape();
+    assert_eq!(m, mc, "symm_tall_into: X must be square, got {:?}", x.shape());
+    let (mf, k) = f.shape();
+    assert_eq!(m, mf, "symm_tall_into: X is {m}x{m} but F has {mf} rows");
+    assert_eq!(out.shape(), (m, k), "symm_tall_into: output must be {m}x{k}");
+    assert!(block >= 1, "symm_tall_into: block size must be positive");
+    if m == 0 || k == 0 {
+        out.data_mut().fill(0.0);
+        return;
+    }
+    let nb = m.div_ceil(block);
+    let npairs = nb * (nb + 1) / 2;
+    let nt = num_threads().min(npairs).max(1);
+    let xd = x.data();
+    let fd = f.data();
+    if nt == 1 {
+        let od = out.data_mut();
+        od.fill(0.0);
+        for ib in 0..nb {
+            for jb in ib..nb {
+                symm_block_pair(xd, fd, m, k, block, ib, jb, od);
+            }
+        }
+        return;
+    }
+    SYMM_ACC.with(|cell| {
+        let mut pool_ref = cell.borrow_mut();
+        let need = nt * m * k;
+        if pool_ref.len() < need {
+            pool_ref.resize(need, 0.0);
+        }
+        let pool: &mut [f64] = &mut pool_ref[..need];
+        pool.fill(0.0);
+        std::thread::scope(|s| {
+            for (t, acc) in pool.chunks_mut(m * k).enumerate() {
+                s.spawn(move || {
+                    let mut p = 0usize;
+                    for ib in 0..nb {
+                        for jb in ib..nb {
+                            if p % nt == t {
+                                symm_block_pair(xd, fd, m, k, block, ib, jb, acc);
+                            }
+                            p += 1;
+                        }
+                    }
+                });
+            }
+        });
+        // Deterministic reduction: out[row] = Σ_t acc_t[row], in worker
+        // order, row-parallel.
+        let pool_s: &[f64] = pool;
+        let optr = SendPtr(out.data_mut().as_mut_ptr());
+        parallel_for_chunks(m, 256, move |lo, hi| {
+            // SAFETY: disjoint row ranges per worker.
+            let od = unsafe {
+                std::slice::from_raw_parts_mut(optr.0.add(lo * k), (hi - lo) * k)
+            };
+            od.copy_from_slice(&pool_s[lo * k..hi * k]);
+            for t in 1..nt {
+                let base = t * m * k;
+                let part = &pool_s[base + lo * k..base + hi * k];
+                for (o, &v) in od.iter_mut().zip(part) {
+                    *o += v;
+                }
+            }
+        });
+    });
+}
+
+/// Apply the (ib, jb) upper-triangle block pair of symmetric X to F,
+/// accumulating into `acc` (m×k row-major). For ib == jb this is the
+/// plain diagonal-block product; for ib < jb the block X[I,J] is read
+/// once and applied to both output panels:
+/// acc[I] += X[I,J]·F[J] and acc[J] += X[I,J]ᵀ·F[I].
+#[allow(clippy::too_many_arguments)]
+fn symm_block_pair(
+    xd: &[f64],
+    fd: &[f64],
+    m: usize,
+    k: usize,
+    block: usize,
+    ib: usize,
+    jb: usize,
+    acc: &mut [f64],
+) {
+    let i0 = ib * block;
+    let i1 = (i0 + block).min(m);
+    let j0 = jb * block;
+    let j1 = (j0 + block).min(m);
+    if ib == jb {
+        for i in i0..i1 {
+            let xrow = &xd[i * m + j0..i * m + j1];
+            let acci = &mut acc[i * k..(i + 1) * k];
+            for (jj, &v) in xrow.iter().enumerate() {
+                if v != 0.0 {
+                    let j = j0 + jj;
+                    axpy(v, &fd[j * k..(j + 1) * k], acci);
+                }
+            }
+        }
+        return;
+    }
+    // Off-diagonal pair: i1 <= j0 by construction, so the I-panel and
+    // J-panel of the accumulator can be split and written simultaneously.
+    let (acc_i, acc_j) = acc.split_at_mut(j0 * k);
+    for i in i0..i1 {
+        let xrow = &xd[i * m + j0..i * m + j1];
+        let fi = &fd[i * k..(i + 1) * k];
+        let acci = &mut acc_i[i * k..(i + 1) * k];
+        for (jj, &v) in xrow.iter().enumerate() {
+            if v != 0.0 {
+                let j = j0 + jj;
+                axpy(v, &fd[j * k..(j + 1) * k], acci);
+                axpy(v, fi, &mut acc_j[(j - j0) * k..(j - j0 + 1) * k]);
+            }
+        }
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -287,6 +549,28 @@ mod tests {
         );
     }
 
+    /// The skinny-B register-tiled path must agree with the naive product
+    /// across non-multiple-of-tile shapes (odd row counts, j-panel tails).
+    #[test]
+    fn skinny_register_tile_matches_naive() {
+        let mut rng = Pcg64::seed_from_u64(11);
+        for m in [1usize, 3, 31, 33, 65] {
+            for n in [1usize, 3, 31, 33, 64] {
+                // ka >= 32 triggers the transposed register-tile path
+                let ka = 37;
+                let a = DenseMat::gaussian(m, ka, &mut rng);
+                let b = DenseMat::gaussian(ka, n, &mut rng);
+                let got = matmul(&a, &b);
+                let want = naive_matmul(&a, &b);
+                let err = got.diff_fro(&want);
+                assert!(
+                    err < 1e-12 * (1.0 + want.fro_norm()),
+                    "m={m} n={n}: err={err}"
+                );
+            }
+        }
+    }
+
     #[test]
     fn tn_and_nt_match_explicit_transpose() {
         forall(
@@ -313,6 +597,20 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn nt_into_matches_allocating_form() {
+        let mut rng = Pcg64::seed_from_u64(12);
+        for (m, p, n) in [(1, 5, 1), (3, 9, 7), (33, 31, 65), (65, 4, 33)] {
+            let a = DenseMat::gaussian(m, p, &mut rng);
+            let b = DenseMat::gaussian(n, p, &mut rng);
+            let want = matmul_nt(&a, &b);
+            let mut c = DenseMat::zeros(m, n);
+            c.fill(99.0); // stale data must be overwritten
+            matmul_nt_into(&a, &b, &mut c);
+            assert!(c.diff_fro(&want) == 0.0, "({m},{p},{n})");
+        }
     }
 
     #[test]
@@ -346,5 +644,74 @@ mod tests {
         axpy(2.0, &x, &mut y);
         assert_eq!(y, vec![3.0, 5.0, 7.0, 9.0, 11.0]);
         assert_eq!(dot(&x, &x), 55.0);
+    }
+
+    fn random_symmetric(m: usize, rng: &mut Pcg64) -> DenseMat {
+        let mut x = DenseMat::gaussian(m, m, rng);
+        x.symmetrize();
+        x
+    }
+
+    /// Blocked SYMM vs the generic GEMM at 1e-12, across
+    /// non-multiple-of-block shapes and block sizes (including blocks
+    /// larger than the matrix and single-row matrices).
+    #[test]
+    fn blocked_symm_matches_gemm_across_shapes() {
+        let mut rng = Pcg64::seed_from_u64(13);
+        for m in [1usize, 3, 31, 33, 65] {
+            let x = random_symmetric(m, &mut rng);
+            for k in [1usize, 3, 31, 33, 65] {
+                let f = DenseMat::gaussian(m, k, &mut rng);
+                let want = naive_matmul(&x, &f);
+                for block in [4usize, 8, 32, 256] {
+                    let mut out = DenseMat::zeros(m, k);
+                    out.fill(-3.0); // stale data must be overwritten
+                    symm_tall_into_blocked(&x, &f, &mut out, block);
+                    let err = out.diff_fro(&want);
+                    assert!(
+                        err < 1e-12 * (1.0 + want.fro_norm()),
+                        "m={m} k={k} block={block}: err={err}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The public dispatcher must agree with the generic GEMM on a shape
+    /// large enough to take the blocked path — sized from num_threads()
+    /// so the dispatch predicate (m ≥ 4·nt·k) selects the blocked kernel
+    /// on any machine, not just small-core-count ones.
+    #[test]
+    fn symm_dispatch_matches_gemm_on_blocked_shape() {
+        let mut rng = Pcg64::seed_from_u64(14);
+        let k = 9;
+        // + 37 keeps m off the block-size multiples
+        let m = (2 * SYMM_BLOCK).max(4 * num_threads() * k) + 37;
+        let x = random_symmetric(m, &mut rng);
+        let f = DenseMat::gaussian(m, k, &mut rng);
+        let mut got = DenseMat::zeros(m, k);
+        symm_tall_into(&x, &f, &mut got);
+        let want = matmul(&x, &f);
+        let err = got.diff_fro(&want);
+        assert!(err < 1e-12 * (1.0 + want.fro_norm()), "err={err}");
+    }
+
+    /// Same input, repeated calls → bitwise-identical output (the batched
+    /// multi-seed driver relies on kernel determinism). Calls the blocked
+    /// kernel directly with a small block so the multi-worker
+    /// accumulator-pool path runs regardless of the dispatch heuristic.
+    #[test]
+    fn blocked_symm_is_deterministic() {
+        let mut rng = Pcg64::seed_from_u64(15);
+        let m = 300;
+        let x = random_symmetric(m, &mut rng);
+        let f = DenseMat::gaussian(m, 8, &mut rng);
+        let mut a = DenseMat::zeros(m, 8);
+        let mut b = DenseMat::zeros(m, 8);
+        symm_tall_into_blocked(&x, &f, &mut a, 64);
+        symm_tall_into_blocked(&x, &f, &mut b, 64);
+        for (va, vb) in a.data().iter().zip(b.data()) {
+            assert_eq!(va.to_bits(), vb.to_bits());
+        }
     }
 }

@@ -54,7 +54,8 @@ pub fn update(rule: UpdateRule, g: &DenseMat, y: &DenseMat, w: &DenseMat) -> Den
 ///   warm start is irrelevant by construction, matching [33]); since the
 ///   solve never reads its output buffer, it writes straight into `f`.
 /// * **HALS** sweeps `f`'s columns fully in place (later columns see
-///   earlier updates), then reseeds any dead column.
+///   earlier updates) via the transpose-free row-major sweep — it needs
+///   no scratch at all — then reseeds any dead column.
 /// * **MU** rescales `f` entrywise in place.
 pub fn update_into(
     rule: UpdateRule,
@@ -68,7 +69,7 @@ pub fn update_into(
             bpp::solve_multi_into(g, y, None, f);
         }
         UpdateRule::Hals => {
-            hals::hals_sweep_ws(g, y, f, &mut ws.ft, &mut ws.yt, &mut ws.delta);
+            hals::hals_sweep(g, y, f);
             hals::fix_zero_columns(f, 1e-14);
         }
         UpdateRule::Mu => {
@@ -151,23 +152,11 @@ mod tests {
             let want = update(rule, &g, &y, &w0);
             let mut f = w0.clone();
             let fptr = f.data().as_ptr();
-            let ws_ptrs = (
-                ws.out.data().as_ptr(),
-                ws.ft.data().as_ptr(),
-                ws.yt.data().as_ptr(),
-            );
+            let ws_ptr = ws.out.data().as_ptr();
             update_into(rule, &g, &y, &mut f, &mut ws);
             assert!(f.diff_fro(&want) < 1e-14, "{rule:?}");
             assert_eq!(f.data().as_ptr(), fptr, "{rule:?} moved the factor");
-            assert_eq!(
-                (
-                    ws.out.data().as_ptr(),
-                    ws.ft.data().as_ptr(),
-                    ws.yt.data().as_ptr()
-                ),
-                ws_ptrs,
-                "{rule:?} moved scratch"
-            );
+            assert_eq!(ws.out.data().as_ptr(), ws_ptr, "{rule:?} moved scratch");
         }
     }
 

@@ -6,8 +6,10 @@
 //! computational bottleneck"). `SymOp` captures exactly that interface, so
 //! the same algorithm code runs against:
 //!
-//!  * a dense [`DenseMat`] (native blocked kernels),
-//!  * a sparse [`CsrMat`] (CSR SpMM),
+//!  * a dense [`DenseMat`] (the cache-blocked symmetric kernel
+//!    `blas::symm_tall_into`, which skips strictly-lower off-diagonal
+//!    blocks of X — X must still be stored in full),
+//!  * a sparse [`CsrMat`] (column-panel-tiled CSR SpMM),
 //!  * a PJRT-backed dense operator ([`crate::runtime::exec::PjrtSymOp`])
 //!    whose X·F executes the AOT-compiled Pallas kernel, and
 //!  * a factored LAI `U·Vᵀ` ([`crate::symnmf::lai::LaiOp`]).

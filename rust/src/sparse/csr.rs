@@ -6,7 +6,14 @@
 //! the LvS sampled products row-gather-friendly.
 
 use crate::linalg::DenseMat;
-use crate::util::threadpool::parallel_for_chunks;
+use crate::util::threadpool::{parallel_for_chunks, SendPtr};
+
+/// Column-panel width of the tiled SpMM paths. 32 f64 columns keep a
+/// panel row within half a cache line pair and bound the working set of
+/// a 256-row chunk's gathered F rows to the L2 budget on wide factors
+/// (k > SPMM_PANEL triggers tiling; the LAI/compressed drivers run with
+/// l = k + ρ ≥ 3k columns, well past it).
+pub const SPMM_PANEL: usize = 32;
 
 /// CSR sparse matrix of f64.
 #[derive(Clone, Debug)]
@@ -114,27 +121,66 @@ impl CsrMat {
         out
     }
 
+    /// SpMM into a pre-allocated output, with column-panel tiling on wide
+    /// factors: for k > [`SPMM_PANEL`] the dense factor is processed in
+    /// `SPMM_PANEL`-wide column panels, so the randomly-gathered F rows of
+    /// a row chunk stay cache-resident within each panel instead of
+    /// thrashing on full k-wide rows. Per-entry accumulation order is
+    /// unchanged, so results are bitwise identical to the untiled path.
     pub fn spmm_into(&self, f: &DenseMat, out: &mut DenseMat) {
+        self.spmm_into_panels(f, out, SPMM_PANEL);
+    }
+
+    /// [`CsrMat::spmm_into`] with an explicit column-panel width
+    /// (`panel >= k` disables tiling). Exposed so benchmarks and property
+    /// tests can compare tiled and untiled execution directly.
+    pub fn spmm_into_panels(&self, f: &DenseMat, out: &mut DenseMat, panel: usize) {
         assert_eq!(self.cols, f.rows(), "spmm dims");
         assert_eq!(out.shape(), (self.rows, f.cols()));
         let k = f.cols();
+        let panel = panel.max(1);
         let indptr = &self.indptr;
         let indices = &self.indices;
         let values = &self.values;
+        let fd = f.data();
         let optr = SendPtr(out.data_mut().as_mut_ptr());
         parallel_for_chunks(self.rows, 256, move |lo, hi| {
             let odata = optr;
-            for i in lo..hi {
-                // SAFETY: disjoint row ranges per worker.
-                let orow = unsafe {
-                    std::slice::from_raw_parts_mut(odata.0.add(i * k), k)
-                };
-                orow.fill(0.0);
-                for p in indptr[i]..indptr[i + 1] {
-                    let j = indices[p];
-                    let v = values[p];
-                    crate::linalg::blas::axpy(v, f.row(j), orow);
+            if k <= panel {
+                for i in lo..hi {
+                    // SAFETY: disjoint row ranges per worker.
+                    let orow = unsafe {
+                        std::slice::from_raw_parts_mut(odata.0.add(i * k), k)
+                    };
+                    orow.fill(0.0);
+                    for p in indptr[i]..indptr[i + 1] {
+                        let j = indices[p];
+                        let v = values[p];
+                        crate::linalg::blas::axpy(v, &fd[j * k..(j + 1) * k], orow);
+                    }
                 }
+                return;
+            }
+            // Column-tiled: the CSR structure of the chunk is re-streamed
+            // once per panel (sequential, cheap) while the F panel rows it
+            // gathers stay L2-resident across the chunk's sparse rows.
+            let mut c0 = 0;
+            while c0 < k {
+                let c1 = (c0 + panel).min(k);
+                let w = c1 - c0;
+                for i in lo..hi {
+                    // SAFETY: disjoint row ranges per worker.
+                    let oseg = unsafe {
+                        std::slice::from_raw_parts_mut(odata.0.add(i * k + c0), w)
+                    };
+                    oseg.fill(0.0);
+                    for p in indptr[i]..indptr[i + 1] {
+                        let j = indices[p];
+                        let v = values[p];
+                        crate::linalg::blas::axpy(v, &fd[j * k + c0..j * k + c1], oseg);
+                    }
+                }
+                c0 = c1;
             }
         });
     }
@@ -156,7 +202,9 @@ impl CsrMat {
     }
 
     /// [`CsrMat::sampled_spmm_sym`] into a pre-allocated output (fully
-    /// overwritten) — the LvS hot-path form.
+    /// overwritten) — the LvS hot-path form. The scatter accumulation is
+    /// column-panel tiled on wide k like [`CsrMat::spmm_into`]; per-entry
+    /// accumulation order is unchanged, so tiling is bitwise-neutral.
     pub fn sampled_spmm_sym_into(
         &self,
         f: &DenseMat,
@@ -170,12 +218,28 @@ impl CsrMat {
         assert_eq!(out.shape(), (self.rows, k), "sampled_spmm_sym_into shape");
         let od = out.data_mut();
         od.fill(0.0);
-        for (&ir, &w) in samples.iter().zip(weights) {
-            let frow = f.row(ir);
-            let (cols, vals) = self.row(ir);
-            for (&j, &v) in cols.iter().zip(vals) {
-                crate::linalg::blas::axpy(w * v, frow, &mut od[j * k..(j + 1) * k]);
+        let fd = f.data();
+        if k <= SPMM_PANEL {
+            for (&ir, &w) in samples.iter().zip(weights) {
+                let frow = &fd[ir * k..(ir + 1) * k];
+                let (cols, vals) = self.row(ir);
+                for (&j, &v) in cols.iter().zip(vals) {
+                    crate::linalg::blas::axpy(w * v, frow, &mut od[j * k..(j + 1) * k]);
+                }
             }
+            return;
+        }
+        let mut c0 = 0;
+        while c0 < k {
+            let c1 = (c0 + SPMM_PANEL).min(k);
+            for (&ir, &w) in samples.iter().zip(weights) {
+                let fseg = &fd[ir * k + c0..ir * k + c1];
+                let (cols, vals) = self.row(ir);
+                for (&j, &v) in cols.iter().zip(vals) {
+                    crate::linalg::blas::axpy(w * v, fseg, &mut od[j * k + c0..j * k + c1]);
+                }
+            }
+            c0 = c1;
         }
     }
 
@@ -232,11 +296,6 @@ impl CsrMat {
             .collect()
     }
 }
-
-#[derive(Clone, Copy)]
-struct SendPtr(*mut f64);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
 
 #[cfg(test)]
 mod tests {
@@ -296,6 +355,77 @@ mod tests {
                 }
             },
         );
+    }
+
+    /// Tiled SpMM vs the untiled path and the dense product, across
+    /// non-multiple-of-panel widths (k = 33, 65 exercise tiling with
+    /// partial tail panels; k ≤ 32 exercises the untiled fast path).
+    #[test]
+    fn tiled_spmm_matches_untiled_and_dense() {
+        let mut rng = Pcg64::seed_from_u64(9);
+        for n in [1usize, 3, 31, 33, 65] {
+            let x = random_sparse(&mut rng, n, 0.4);
+            let dense = x.to_dense();
+            for k in [1usize, 3, 31, 33, 65] {
+                let f = DenseMat::gaussian(n, k, &mut rng);
+                let want = crate::linalg::blas::matmul(&dense, &f);
+                let mut tiled = DenseMat::zeros(n, k);
+                tiled.fill(7.0); // stale data must be overwritten
+                x.spmm_into(&f, &mut tiled);
+                let err = tiled.diff_fro(&want);
+                assert!(
+                    err < 1e-12 * (1.0 + want.fro_norm()),
+                    "n={n} k={k}: err={err}"
+                );
+                // tiling must be bitwise-neutral vs the untiled path
+                let mut untiled = DenseMat::zeros(n, k);
+                x.spmm_into_panels(&f, &mut untiled, k.max(1));
+                for (a, b) in tiled.data().iter().zip(untiled.data()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "n={n} k={k}");
+                }
+            }
+        }
+    }
+
+    /// The tiled sampled product must stay bitwise identical to the
+    /// untiled accumulation (same per-entry order) on wide k.
+    #[test]
+    fn tiled_sampled_spmm_matches_dense_reference() {
+        let mut rng = Pcg64::seed_from_u64(10);
+        let n = 30;
+        // symmetric sparse X
+        let mut trips = Vec::new();
+        for i in 0..n {
+            for j in i..n {
+                if rng.uniform() < 0.3 {
+                    let v = rng.gaussian();
+                    trips.push((i, j, v));
+                    if i != j {
+                        trips.push((j, i, v));
+                    }
+                }
+            }
+        }
+        let x = CsrMat::from_coo(n, n, trips);
+        let dense = x.to_dense();
+        for k in [31usize, 33, 65] {
+            let f = DenseMat::gaussian(n, k, &mut rng);
+            let samples = vec![0, 4, 4, 11, 29];
+            let weights = vec![0.5, 1.0, 2.0, 0.25, 1.5];
+            let got = x.sampled_spmm_sym(&f, &samples, &weights);
+            // dense reference: Σ_r w_r · x_{:,i_r} ⊗ F[i_r,:]
+            let mut want = DenseMat::zeros(n, k);
+            for (&ir, &w) in samples.iter().zip(&weights) {
+                for j in 0..n {
+                    let xv = dense.at(ir, j);
+                    for c in 0..k {
+                        *want.at_mut(j, c) += w * xv * f.at(ir, c);
+                    }
+                }
+            }
+            let err = got.diff_fro(&want);
+            assert!(err < 1e-12 * (1.0 + want.fro_norm()), "k={k}: err={err}");
+        }
     }
 
     #[test]

@@ -1,21 +1,69 @@
 //! Scoped data-parallel helpers (rayon is unavailable offline).
 //!
 //! `parallel_for_chunks` splits an index range into contiguous chunks and
-//! runs them on `std::thread::scope` workers. On this image (1 core) it
+//! runs them on `std::thread::scope` workers. On a 1-core image it
 //! degrades gracefully to a sequential loop with no thread spawns; on
-//! multicore machines the dense kernels in `linalg::blas` pick it up.
+//! multicore machines the dense kernels in `linalg::blas`, the CSR SpMM,
+//! and the batched trial driver pick it up.
+//!
+//! The worker count is resolved **once per process** (see
+//! [`num_threads`]) and chunk sizes are balanced to within one element,
+//! so the partitioning seen by every kernel is deterministic — a property
+//! the batched multi-seed driver relies on for bitwise-reproducible
+//! trials.
+
+use std::sync::OnceLock;
+
+/// Raw mutable pointer wrapper so disjoint index ranges of one output
+/// buffer can be written from scoped worker threads. Shared by the dense
+/// kernels, the CSR SpMM, and the HALS sweep.
+///
+/// SAFETY contract for users: every worker must write only through
+/// offsets derived from its own disjoint `(lo, hi)` range, and the
+/// pointee must outlive the parallel call (guaranteed by
+/// `std::thread::scope`).
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr(pub(crate) *mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Cached worker count, resolved on first use. `parallel_for_chunks` is
+/// called from inside every hot kernel, so re-reading (and re-parsing)
+/// the environment per call would put a syscall on the per-iteration
+/// path.
+static NUM_THREADS: OnceLock<usize> = OnceLock::new();
 
 /// Number of worker threads to use: `SYMNMF_THREADS` env or available
-/// parallelism.
+/// parallelism. Resolved once per process and cached — changing the
+/// environment variable after the first kernel call has no effect.
 pub fn num_threads() -> usize {
-    if let Ok(v) = std::env::var("SYMNMF_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
+    *NUM_THREADS.get_or_init(|| {
+        if let Ok(v) = std::env::var("SYMNMF_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
         }
-    }
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
+}
+
+/// The `c`-th of `chunks` balanced contiguous ranges covering `0..n`:
+/// the first `n % chunks` ranges get one extra element, so sizes differ
+/// by at most one. The previous `div_ceil` sizing gave every chunk
+/// ⌈n/chunks⌉ elements and dumped the shortfall on the tail — e.g. 97
+/// rows over 4 workers split 25/25/25/22, and 9 rows over 8 workers left
+/// 3 workers with nothing at all. Balanced sizing keeps the slowest
+/// worker's share minimal, which matters when the chunk body is the
+/// memory-bound inner loop of a kernel.
+fn chunk_range(n: usize, chunks: usize, c: usize) -> (usize, usize) {
+    debug_assert!(chunks >= 1 && c < chunks);
+    let base = n / chunks;
+    let rem = n % chunks;
+    let lo = c * base + c.min(rem);
+    let hi = lo + base + usize::from(c < rem);
+    (lo, hi)
 }
 
 /// Run `body(lo, hi)` over disjoint subranges covering `0..n` in parallel.
@@ -33,13 +81,11 @@ where
         return;
     }
     let chunks = nt.min(n.div_ceil(min_chunk)).max(1);
-    let per = n.div_ceil(chunks);
     std::thread::scope(|s| {
         for c in 0..chunks {
-            let lo = c * per;
-            let hi = ((c + 1) * per).min(n);
+            let (lo, hi) = chunk_range(n, chunks, c);
             if lo >= hi {
-                break;
+                continue;
             }
             let body = &body;
             s.spawn(move || body(lo, hi));
@@ -62,24 +108,22 @@ where
         return;
     }
     let chunks = nt.min(n.div_ceil(min_chunk)).max(1);
-    let per = n.div_ceil(chunks);
     std::thread::scope(|s| {
-        // split_at_mut based partitioning
+        // split_at_mut based partitioning, balanced to within one element;
+        // chunk_range tiles 0..n contiguously, so `lo` is each chunk's
+        // global base index.
         let mut rest = out;
-        let mut offset = 0usize;
-        for _ in 0..chunks {
-            let take = per.min(rest.len());
-            if take == 0 {
-                break;
+        for c in 0..chunks {
+            let (lo, hi) = chunk_range(n, chunks, c);
+            if lo >= hi {
+                continue;
             }
-            let (head, tail) = rest.split_at_mut(take);
+            let (head, tail) = rest.split_at_mut(hi - lo);
             rest = tail;
-            let base = offset;
-            offset += take;
             let f = &f;
             s.spawn(move || {
                 for (i, slot) in head.iter_mut().enumerate() {
-                    f(base + i, slot);
+                    f(lo + i, slot);
                 }
             });
         }
@@ -115,5 +159,35 @@ mod tests {
     #[test]
     fn empty_range_ok() {
         parallel_for_chunks(0, 1, |_, _| panic!("must not be called"));
+    }
+
+    #[test]
+    fn num_threads_is_cached_and_positive() {
+        let a = num_threads();
+        let b = num_threads();
+        assert!(a >= 1);
+        assert_eq!(a, b, "cached value must be stable");
+    }
+
+    /// Balanced split: ranges tile 0..n exactly and sizes differ by ≤ 1.
+    #[test]
+    fn chunk_ranges_are_balanced() {
+        for n in [1usize, 2, 7, 130, 1000, 1025] {
+            for chunks in 1..=8usize.min(n) {
+                let mut next = 0usize;
+                let mut sizes = Vec::new();
+                for c in 0..chunks {
+                    let (lo, hi) = chunk_range(n, chunks, c);
+                    assert_eq!(lo, next, "ranges must tile contiguously");
+                    assert!(hi >= lo);
+                    sizes.push(hi - lo);
+                    next = hi;
+                }
+                assert_eq!(next, n, "ranges must cover 0..n");
+                let max = *sizes.iter().max().unwrap();
+                let min = *sizes.iter().min().unwrap();
+                assert!(max - min <= 1, "n={n} chunks={chunks}: {sizes:?}");
+            }
+        }
     }
 }

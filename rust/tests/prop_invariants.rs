@@ -211,6 +211,66 @@ fn apply_into_matches_allocating_paths_across_backends() {
     );
 }
 
+/// Blocked-kernel pinning (the PR-2 satellite): the blocked SYMM, the
+/// column-tiled SpMM, and the transpose-free HALS sweep must each match
+/// their naive/reference counterparts at 1e-12 across every pair of
+/// non-multiple-of-block shapes m, k ∈ {1, 3, 31, 33, 65}.
+#[test]
+fn blocked_kernels_match_references_across_shapes() {
+    let shapes = [1usize, 3, 31, 33, 65];
+    let mut rng = Pcg64::seed_from_u64(4242);
+    for &m in &shapes {
+        // symmetric dense X and a matching sparse copy
+        let mut xd = DenseMat::gaussian(m, m, &mut rng);
+        xd.symmetrize();
+        let mut trips = Vec::new();
+        for i in 0..m {
+            for j in 0..m {
+                let v = xd.at(i, j);
+                if v != 0.0 {
+                    trips.push((i, j, v));
+                }
+            }
+        }
+        let xs = CsrMat::from_coo(m, m, trips);
+        for &k in &shapes {
+            let f = DenseMat::gaussian(m, k, &mut rng);
+            let want = blas::matmul(&xd, &f);
+            let tol = 1e-12 * (1.0 + want.fro_norm());
+
+            // blocked SYMM (forced multi-block tiling via small blocks)
+            for block in [4usize, 32] {
+                let mut out = DenseMat::zeros(m, k);
+                out.fill(5.0);
+                blas::symm_tall_into_blocked(&xd, &f, &mut out, block);
+                assert!(
+                    out.diff_fro(&want) < tol,
+                    "SYMM m={m} k={k} block={block}"
+                );
+            }
+
+            // tiled SpMM vs the same dense product
+            let mut out = DenseMat::zeros(m, k);
+            out.fill(-5.0);
+            xs.spmm_into(&f, &mut out);
+            assert!(out.diff_fro(&want) < tol, "SpMM m={m} k={k}");
+
+            // transpose-free HALS vs the staged-transpose reference
+            let mut g = blas::gram(&f);
+            g.add_diag(0.9);
+            let y = DenseMat::gaussian(m, k, &mut rng);
+            let mut w0 = DenseMat::uniform(m, k, 1.0, &mut rng);
+            let mut w_ref = w0.clone();
+            symnmf::nls::hals::hals_sweep(&g, &y, &mut w0);
+            symnmf::nls::hals::hals_sweep_reference(&g, &y, &mut w_ref);
+            assert!(
+                w0.diff_fro(&w_ref) < 1e-12 * (1.0 + w_ref.fro_norm()),
+                "HALS m={m} k={k}"
+            );
+        }
+    }
+}
+
 /// Update(G, Y) invariants across random problems: nonnegativity and
 /// monotone objective for every rule.
 #[test]

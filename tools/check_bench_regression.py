@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""Kernel bench regression gate.
+
+Compares the freshly generated BENCH_kernels.json against the committed
+baseline, prints the per-kernel GFLOP/s delta table, and fails (exit 1)
+when the gated kernel row regresses by more than the allowed fraction.
+
+Only the gate row is enforced: micro-benchmark noise on shared CI runners
+makes a hard gate on every row too flaky, but the m=2048/k=32 symmetric
+dense X*F product runs long enough to be stable (ROADMAP "Perf trajectory
+tracking").
+
+Bootstrap behaviour: if the baseline has no measurement for the gate row
+(e.g. the committed file is the empty bootstrap placeholder produced
+before any machine ran the bench), the check passes with a notice so the
+first CI run can publish real numbers to commit as the next baseline.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path):
+    with open(path) as fh:
+        doc = json.load(fh)
+    rows = {}
+    for rec in doc.get("kernels", []):
+        rows[(rec["op"], rec.get("shape", ""))] = rec
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, help="committed BENCH_kernels.json")
+    ap.add_argument("--current", required=True, help="freshly generated BENCH_kernels.json")
+    ap.add_argument(
+        "--gate-op",
+        default="dense_xf_apply_into",
+        help="kernel op whose GFLOP/s regression fails the job",
+    )
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=0.05,
+        help="allowed fractional GFLOP/s drop on the gate row (default 5%%)",
+    )
+    args = ap.parse_args()
+
+    base = load_rows(args.baseline)
+    cur = load_rows(args.current)
+
+    print(f"{'op':<24} {'shape':<24} {'base GF/s':>10} {'cur GF/s':>10} {'delta':>8}")
+    for key in sorted(cur):
+        op, shape = key
+        c = cur[key]
+        b = base.get(key)
+        if b is None or b.get("gflops", 0.0) <= 0.0:
+            delta = "  (new)"
+            bg = "-"
+        else:
+            bgf = b["gflops"]
+            delta = f"{100.0 * (c.get('gflops', 0.0) - bgf) / bgf:+7.1f}%"
+            bg = f"{bgf:10.2f}"
+        cg = c.get("gflops", 0.0)
+        print(f"{op:<24} {shape:<24} {bg:>10} {cg:>10.2f} {delta:>8}")
+
+    gate_base = [r for (op, _), r in base.items() if op == args.gate_op]
+    gate_cur = [r for (op, _), r in cur.items() if op == args.gate_op]
+    if not gate_cur:
+        print(f"ERROR: current run has no '{args.gate_op}' row", file=sys.stderr)
+        return 1
+    if not gate_base or gate_base[0].get("gflops", 0.0) <= 0.0:
+        print(
+            f"NOTICE: baseline has no measured '{args.gate_op}' row "
+            "(bootstrap) — passing; commit the generated BENCH_kernels.json "
+            "as the new baseline."
+        )
+        return 0
+    bgf = gate_base[0]["gflops"]
+    cgf = gate_cur[0].get("gflops", 0.0)
+    floor = bgf * (1.0 - args.max_regression)
+    if cgf < floor:
+        print(
+            f"FAIL: {args.gate_op} regressed: {cgf:.2f} GF/s < "
+            f"{floor:.2f} GF/s ({bgf:.2f} baseline, "
+            f"-{args.max_regression:.0%} allowed)",
+            file=sys.stderr,
+        )
+        return 1
+    print(
+        f"OK: {args.gate_op} at {cgf:.2f} GF/s vs baseline {bgf:.2f} GF/s "
+        f"(floor {floor:.2f})"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
