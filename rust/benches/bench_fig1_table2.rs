@@ -12,7 +12,7 @@
 //! writes results/fig1_convergence.csv and results/table2.txt
 
 use symnmf::clustering::ari::adjusted_rand_index;
-use symnmf::coordinator::driver::{run_trials, run_trials_batched};
+use symnmf::coordinator::driver::{batch_trials_enabled, packed_x_enabled, run_trials_dense};
 use symnmf::coordinator::experiments::{fig1_table2_methods, wos_options, wos_workload};
 use symnmf::coordinator::report;
 use symnmf::util::rng::Pcg64;
@@ -31,11 +31,15 @@ fn main() {
     // the shared adjacency (bitwise-identical factors/residuals; the
     // per-trial `mean_time` column then reflects contended wall clock, so
     // the default stays serial for paper-comparable timings).
-    let batched = std::env::var("SYMNMF_BATCH_TRIALS").map(|v| v == "1").unwrap_or(false);
+    // SYMNMF_PACKED_X=1 additionally stages the adjacency as the
+    // packed-triangular SymPacked, so all k seeds share ONE half-sized
+    // resident X (see coordinator::driver::run_trials_dense).
+    let batched = batch_trials_enabled();
 
     println!(
-        "== Fig. 1 / Table 2 bench: WoS dense workload ({docs} docs, {trials} trials{}) ==",
-        if batched { ", batched" } else { "" }
+        "== Fig. 1 / Table 2 bench: WoS dense workload ({docs} docs, {trials} trials{}{}) ==",
+        if batched { ", batched" } else { "" },
+        if packed_x_enabled() { ", packed X" } else { "" }
     );
     let w = wos_workload(docs, 1);
     let mut opts = wos_options().with_seed(10);
@@ -44,11 +48,8 @@ fn main() {
     let mut all = Vec::new();
     for method in fig1_table2_methods() {
         let t = Stopwatch::start();
-        let stats = if batched {
-            run_trials_batched(method, &w.adjacency, &opts, Some(&w.labels), trials)
-        } else {
-            run_trials(method, &w.adjacency, &opts, Some(&w.labels), trials)
-        };
+        let stats =
+            run_trials_dense(method, &w.adjacency, &opts, Some(&w.labels), trials, batched);
         println!(
             "  {:<14} mean {:5.1} iters  {:7.3}s  min-res {:.4}  ARI {:.3}  [bench wall {:.1}s]",
             stats.label,

@@ -1,10 +1,12 @@
 //! Micro-benchmarks of the hot-path kernels (the §Perf tool, DESIGN.md
-//! §6): dense matmul X·F (blocked-SYMM vs generic GEMM vs allocating),
+//! §6): dense matmul X·F (blocked-SYMM vs generic GEMM vs allocating vs
+//! packed-triangular SymPacked), packed-panel vs unpacked NT GEMM,
 //! Gram, SpMM (column-tiled vs untiled on wide k), the transpose-free
 //! HALS sweep vs the staged-transpose reference, batched vs serial
-//! multi-seed trials, CholeskyQR + leverage scores, BPP multi-RHS solve,
-//! sampled SpMM, and the PJRT round-trip for the same product — with
-//! achieved GF/s against the 1-core f64 roofline.
+//! multi-seed trials (plus batched under an explicit thread budget),
+//! CholeskyQR + leverage scores, BPP multi-RHS solve, sampled SpMM, and
+//! the PJRT round-trip for the same product — with achieved GF/s against
+//! the 1-core f64 roofline.
 //!
 //! Besides the stdout report, emits machine-readable
 //! **`BENCH_kernels.json`** at the repo root (op, shape, secs/iter,
@@ -15,7 +17,7 @@
 use std::rc::Rc;
 use symnmf::coordinator::driver::{run_trials, run_trials_batched};
 use symnmf::coordinator::Method;
-use symnmf::linalg::{blas, qr, DenseMat};
+use symnmf::linalg::{blas, qr, DenseMat, SymPacked};
 use symnmf::nls::{bpp, hals, UpdateRule};
 use symnmf::randnla::leverage::sample_hybrid;
 use symnmf::randnla::SymOp;
@@ -146,6 +148,57 @@ fn main() {
         100.0 * r_into.median / r_gemm.median.max(1e-300)
     );
 
+    // --- packed-triangular X (SymPacked): same product, half-resident X ---
+    let xp = SymPacked::from_dense(&x2);
+    println!(
+        "SymPacked resident: {} vs {} doubles ({:.1}%)",
+        xp.packed_len(),
+        m2 * m2,
+        100.0 * xp.packed_len() as f64 / (m2 * m2) as f64
+    );
+    let r_packedx = bench(&format!("packed X·F apply_into ({m2}x{m2}, k={k2})"), 1, 5, || {
+        xp.apply_into(&f2, &mut out2);
+    });
+    println!("{}   {:.2} GF/s", r_packedx.report(), gflops(flops2, r_packedx.median));
+    record(
+        &mut records,
+        "symm_packed_apply_into",
+        &format!("{m2}x{m2}·{m2}x{k2}"),
+        &r_packedx,
+        flops2,
+    );
+    println!(
+        "packed vs full-storage SYMM at m={m2}, k={k2}: {:.2}% time",
+        100.0 * r_packedx.median / r_into.median.max(1e-300)
+    );
+
+    // --- packed-panel NT GEMM vs the unpacked 2×4 reference ---
+    // (the W·Hᵀ reconstruction shape at the acceptance m=2048/k=32)
+    let nt_a = DenseMat::gaussian(m2, k2, &mut rng);
+    let nt_b = DenseMat::gaussian(m2, k2, &mut rng);
+    let mut nt_c = DenseMat::zeros(m2, m2);
+    let nt_flops = 2.0 * (m2 * m2 * k2) as f64;
+    let r_pk = bench(&format!("matmul_nt packed   ({m2}x{k2} · {m2}x{k2}ᵀ)"), 1, 5, || {
+        blas::matmul_nt_into_packed(&nt_a, &nt_b, &mut nt_c);
+    });
+    println!("{}   {:.2} GF/s", r_pk.report(), gflops(nt_flops, r_pk.median));
+    record(&mut records, "matmul_nt_packed", &format!("{m2}x{k2}·{m2}x{k2}T"), &r_pk, nt_flops);
+    let r_un = bench(&format!("matmul_nt unpacked ({m2}x{k2} · {m2}x{k2}ᵀ)"), 1, 5, || {
+        blas::matmul_nt_into_unpacked(&nt_a, &nt_b, &mut nt_c);
+    });
+    println!("{}   {:.2} GF/s", r_un.report(), gflops(nt_flops, r_un.median));
+    record(
+        &mut records,
+        "matmul_nt_unpacked",
+        &format!("{m2}x{k2}·{m2}x{k2}T"),
+        &r_un,
+        nt_flops,
+    );
+    println!(
+        "packed vs unpacked NT GEMM at m={m2}, k={k2}: {:.2}% time",
+        100.0 * r_pk.median / r_un.median.max(1e-300)
+    );
+
     // --- Gram FᵀF ---
     let tall = DenseMat::gaussian(100_000, k, &mut rng);
     let mut gout = DenseMat::zeros(k, k);
@@ -265,6 +318,34 @@ fn main() {
     println!(
         "batched vs serial trials: {:.2}% time",
         100.0 * r_bat.median / r_ser.median.max(1e-300)
+    );
+    // batched trials under an explicit outer thread budget (half the
+    // machine): results are bitwise identical by construction — this row
+    // tracks the scheduling cost of the cap.
+    let half = (symnmf::util::threadpool::num_threads() / 2).max(1);
+    let r_budget = bench(
+        &format!("run_trials batched, budget {half} (192², k=4, 4 seeds)"),
+        1,
+        5,
+        || {
+            symnmf::util::threadpool::with_thread_budget(half, || {
+                std::hint::black_box(run_trials_batched(
+                    Method::Exact(UpdateRule::Hals),
+                    &tx,
+                    &topts,
+                    None,
+                    4,
+                ));
+            });
+        },
+    );
+    println!("{}", r_budget.report());
+    record(
+        &mut records,
+        "trials_batched_budget",
+        &format!("m=192 k=4 x4 nt={half}"),
+        &r_budget,
+        0.0,
     );
 
     // --- sampled SpMM (LvS inner product, s = 0.05·n) ---

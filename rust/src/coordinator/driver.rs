@@ -9,9 +9,10 @@
 //! one shared read-only operator with bitwise-identical per-seed results.
 
 use crate::clustering::ari::adjusted_rand_index;
+use crate::linalg::{DenseMat, SymPacked};
 use crate::nls::UpdateRule;
 use crate::randnla::SymOp;
-use crate::util::threadpool::parallel_map_into;
+use crate::util::threadpool::{num_threads, parallel_map_into, with_thread_budget};
 use crate::symnmf::anls::symnmf_anls;
 use crate::symnmf::compressed::compressed_symnmf;
 use crate::symnmf::lai::lai_symnmf;
@@ -191,20 +192,23 @@ pub fn run_trials<X: SymOp>(
 ///
 /// Per-seed results are **bitwise identical** to the serial path (a test
 /// pins this): trial `t` draws the same RNG stream, and every kernel on
-/// the iteration path is deterministic for a fixed thread count — row
-/// partitioning depends only on (n, num_threads), and the blocked SYMM
-/// reduction runs in fixed worker order. Only wall-clock fields differ.
+/// the iteration path is deterministic for a fixed process configuration
+/// — row partitioning never affects per-row values, and the blocked SYMM
+/// accumulator geometry is pinned to the logical `num_threads()` with a
+/// fixed-order reduction. Only wall-clock fields differ.
 ///
-/// Inner kernels keep their full `num_threads()`-wide parallelism inside
-/// each trial worker (capping them would change the blocked-SYMM
-/// reduction order and break the bitwise guarantee), so a batched run
-/// oversubscribes the machine by up to the trial-worker count and each
-/// concurrently-running trial holds its own workspace plus the
-/// per-thread SYMM accumulator pool (nt·m·k f64). That is the intended
-/// trade: trials are memory-bound on shared X, and the OS scheduler
-/// interleaves the short-lived kernel scopes; per-trial `time_secs`
-/// reflects contended wall clock, so use the serial path when per-trial
-/// timings must be paper-comparable.
+/// The machine is split between trial workers and inner kernels with a
+/// per-scope thread budget: with `nt = num_threads()` and `T` trials,
+/// `min(nt, T)` trial workers each run their solver under
+/// `with_thread_budget(nt / workers)`, so total OS-thread demand stays
+/// ≈ nt instead of the nt² a fully nested run would spawn, and the
+/// per-worker SYMM accumulator pools (nt·m·k f64 each) stop competing
+/// for cores they cannot use. The budget caps only *physical*
+/// concurrency — kernel FP geometry still derives from `num_threads()`
+/// (see [`crate::util::threadpool`]) — which is what preserves the
+/// bitwise serial≡batched guarantee. Per-trial `time_secs` still
+/// reflects shared-machine wall clock, so use the serial path when
+/// per-trial timings must be paper-comparable.
 pub fn run_trials_batched<X: SymOp + Sync>(
     method: Method,
     x: &X,
@@ -213,13 +217,65 @@ pub fn run_trials_batched<X: SymOp + Sync>(
     trials: usize,
 ) -> MethodStats {
     assert!(trials >= 1);
+    let nt = num_threads();
+    let workers = nt.min(trials).max(1);
+    let inner = (nt / workers).max(1);
     let mut slots: Vec<Option<SymNmfResult>> = (0..trials).map(|_| None).collect();
     parallel_map_into(&mut slots, 1, |t, slot| {
-        *slot = Some(method.run(x, &trial_options(base, t)));
+        // The budget is set on the trial worker's own thread, so every
+        // kernel the solver runs on this worker sees the split width.
+        *slot = Some(with_thread_budget(inner, || {
+            method.run(x, &trial_options(base, t))
+        }));
     });
     let results: Vec<SymNmfResult> =
         slots.into_iter().map(|r| r.expect("every trial slot is written")).collect();
     aggregate(method.label(), results, labels)
+}
+
+/// Is the packed-X staging option on? `SYMNMF_PACKED_X=1` makes the
+/// dense drivers store X as [`SymPacked`] (upper-triangle block panels —
+/// half the resident footprint) instead of the full square array.
+/// Read per call, not cached: the benches toggle it per run.
+pub fn packed_x_enabled() -> bool {
+    std::env::var("SYMNMF_PACKED_X").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Is batched multi-seed driving on? `SYMNMF_BATCH_TRIALS=1` routes
+/// multi-trial runs through [`run_trials_batched`] (bitwise-identical to
+/// the serial driver; per-trial wall-clock reflects sharing). The single
+/// parsing point for the env contract — benches and integration tests
+/// consume this instead of re-reading the variable.
+pub fn batch_trials_enabled() -> bool {
+    std::env::var("SYMNMF_BATCH_TRIALS").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Multi-trial driver for a dense X that honors the packed-X option:
+/// when [`packed_x_enabled`], X is staged once as [`SymPacked`] and
+/// every seed runs against that single half-sized resident operand —
+/// the memory win compounds with `batched`, which shares the one
+/// operand across concurrent trial workers. The full `x` can be dropped
+/// by the caller after this call.
+pub fn run_trials_dense(
+    method: Method,
+    x: &DenseMat,
+    base: &SymNmfOptions,
+    labels: Option<&[usize]>,
+    trials: usize,
+    batched: bool,
+) -> MethodStats {
+    if packed_x_enabled() {
+        let packed = SymPacked::from_dense(x);
+        if batched {
+            run_trials_batched(method, &packed, base, labels, trials)
+        } else {
+            run_trials(method, &packed, base, labels, trials)
+        }
+    } else if batched {
+        run_trials_batched(method, x, base, labels, trials)
+    } else {
+        run_trials(method, x, base, labels, trials)
+    }
 }
 
 #[cfg(test)]
@@ -334,6 +390,99 @@ mod tests {
             // (times excluded — they are wall-clock)
             assert_eq!(serial.min_res.to_bits(), batched.min_res.to_bits());
             assert_eq!(serial.mean_ari.to_bits(), batched.mean_ari.to_bits());
+        }
+    }
+
+    /// The satellite pinning: under a NON-TRIVIAL outer thread budget the
+    /// batched driver must still be bitwise identical to the serial path
+    /// — budgets cap physical concurrency only, never FP geometry.
+    #[test]
+    fn batched_trials_bitwise_match_serial_under_budget() {
+        use crate::util::threadpool::with_thread_budget;
+        let (x, labels) = planted(48, 3, 9);
+        let mut opts = SymNmfOptions::new(3);
+        opts.max_iters = 6;
+        let method = Method::Exact(UpdateRule::Hals);
+        let serial = run_trials(method, &x, &opts, Some(&labels), 3);
+        for budget in [1usize, 2] {
+            let batched = with_thread_budget(budget, || {
+                run_trials_batched(method, &x, &opts, Some(&labels), 3)
+            });
+            for (t, (a, b)) in serial.trials.iter().zip(&batched.trials).enumerate() {
+                assert_eq!(a.iters(), b.iters(), "budget {budget} trial {t}");
+                for (va, vb) in a.h.data().iter().zip(b.h.data()) {
+                    assert_eq!(
+                        va.to_bits(),
+                        vb.to_bits(),
+                        "budget {budget} trial {t}: H differs"
+                    );
+                }
+                for (ra, rb) in a.records.iter().zip(&b.records) {
+                    assert_eq!(
+                        ra.residual.to_bits(),
+                        rb.residual.to_bits(),
+                        "budget {budget} trial {t}: residual differs"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The packed-triangular operand drives the same multi-trial quality
+    /// as the full dense array (the half-sized resident X of the
+    /// SYMNMF_PACKED_X option), serial and batched agreeing bitwise.
+    #[test]
+    fn packed_operand_trials_cluster_and_batch_bitwise() {
+        let (x, labels) = planted(60, 3, 1);
+        let packed = SymPacked::from_dense(&x);
+        let mut opts = SymNmfOptions::new(3);
+        opts.max_iters = 40;
+        let stats = run_trials(
+            Method::Exact(UpdateRule::Hals),
+            &packed,
+            &opts,
+            Some(&labels),
+            2,
+        );
+        assert!(
+            stats.mean_ari > 0.9,
+            "packed X should cluster the planted blocks: ARI {}",
+            stats.mean_ari
+        );
+        let batched = run_trials_batched(
+            Method::Exact(UpdateRule::Hals),
+            &packed,
+            &opts,
+            Some(&labels),
+            2,
+        );
+        for (a, b) in stats.trials.iter().zip(&batched.trials) {
+            for (va, vb) in a.h.data().iter().zip(b.h.data()) {
+                assert_eq!(va.to_bits(), vb.to_bits(), "packed batched ≠ serial");
+            }
+        }
+    }
+
+    /// With the packed-X option off (the default), run_trials_dense is
+    /// exactly the plain drivers.
+    #[test]
+    fn run_trials_dense_defaults_to_plain_drivers() {
+        let (x, labels) = planted(48, 3, 12);
+        let mut opts = SymNmfOptions::new(3);
+        opts.max_iters = 5;
+        let method = Method::Exact(UpdateRule::Bpp);
+        let plain = run_trials(method, &x, &opts, Some(&labels), 2);
+        let viadense = run_trials_dense(method, &x, &opts, Some(&labels), 2, false);
+        for (a, b) in plain.trials.iter().zip(&viadense.trials) {
+            for (va, vb) in a.h.data().iter().zip(b.h.data()) {
+                assert_eq!(va.to_bits(), vb.to_bits());
+            }
+        }
+        let viabatched = run_trials_dense(method, &x, &opts, Some(&labels), 2, true);
+        for (a, b) in plain.trials.iter().zip(&viabatched.trials) {
+            for (va, vb) in a.h.data().iter().zip(b.h.data()) {
+                assert_eq!(va.to_bits(), vb.to_bits());
+            }
         }
     }
 

@@ -2,18 +2,40 @@
 //!
 //! The SymNMF hot path multiplies a large square symmetric `X` (m×m) by a
 //! skinny factor `F` (m×k, k ≤ ~100). The kernels are organized around
-//! two blocking ideas:
+//! three blocking ideas:
 //!
-//! **Register blocking (the NT microkernel).** Products whose right
+//! **Panel packing (the 2×8 NT microkernel).** Products whose right
 //! operand is accessed row-contiguously transposed — the skinny-B path of
-//! [`matmul_into`] and all of [`matmul_nt_into`] — run on a shared 2×4
-//! register tile: two left rows × four right rows are multiplied in one
-//! pass with eight scalar accumulators, so every loaded element of the
-//! right panel feeds two FMAs and every left element four. All streams
-//! are contiguous in the reduction index, which the autovectorizer turns
-//! into FMA vectors; the j-panel width of 4 keeps the accumulators in
-//! registers. Skinny B is transposed once per call into a thread-local
-//! staging buffer ([`BT_SCRATCH`]), so the hot loop allocates nothing.
+//! [`matmul_into`] and all of [`matmul_nt_into`] — first pack the right
+//! operand into **tile-major panels** and then run a 2×8 register tile
+//! over them. With B̃ the n×p logical transpose of the right operand
+//! (row j of B̃ = output column j), panel `jp` covers output columns
+//! `j0 = 8·jp … j0+7` and interleaves them by reduction index:
+//!
+//! ```text
+//!   panel jp  (8·p contiguous f64, edge columns zero-padded):
+//!
+//!     t = 0          t = 1                    t = p−1
+//!   ┌──────────────┬──────────────┬── ... ──┬──────────────┐
+//!   │ B̃[j0  ][0]   │ B̃[j0  ][1]   │         │ B̃[j0  ][p−1] │
+//!   │ B̃[j0+1][0]   │ B̃[j0+1][1]   │         │ B̃[j0+1][p−1] │
+//!   │   ⋮  (8)     │   ⋮  (8)     │         │   ⋮  (8)     │
+//!   │ B̃[j0+7][0]   │ B̃[j0+7][1]   │         │ B̃[j0+7][p−1] │
+//!   └──────────────┴──────────────┴── ... ──┴──────────────┘
+//! ```
+//!
+//! The microkernel multiplies two A rows against one panel with 16
+//! scalar accumulators: each reduction step is two broadcast loads
+//! (`a0[t]`, `a1[t]`) plus ONE contiguous 8-vector load (`panel[t·8..]`),
+//! where the previous 2×4 kernel streamed four separate B̃ rows. Every
+//! loaded panel element feeds two FMAs, every A element eight. Edge
+//! panels (n not a multiple of 8) are zero-padded during packing, so the
+//! kernel always accumulates full-width tiles and masks only the final
+//! store — the "masked edge tile". Packing is staged in a thread-local
+//! [`PanelBuf`], so the steady-state hot loop performs no allocation.
+//! The PR-2 2×4 unpacked kernel is retained as [`matmul_nt_into_unpacked`]
+//! — the few-row dispatch target and the oracle the packed path is
+//! pinned against.
 //!
 //! **Cache blocking with symmetry (the SYMM kernel).** [`symm_tall_into`]
 //! partitions symmetric X into `SYMM_BLOCK`-sized row/column blocks and
@@ -22,29 +44,41 @@
 //! (out[I] += X[I,J]·F[J] and out[J] += X[I,J]ᵀ·F[I]), roughly halving
 //! X memory traffic relative to the plain GEMM. Workers accumulate into
 //! private m×k buffers (round-robin over block pairs) which are reduced
-//! in fixed worker order, so the result is deterministic for a given
-//! thread count.
+//! in fixed worker order. The pool/reduction harness is shared with the
+//! packed-triangular storage ([`crate::linalg::packed::SymPacked`]) as
+//! [`pair_pool_accumulate`]: the accumulator-slot count is pinned to the
+//! **logical** width [`num_threads`] while the slots execute on at most
+//! [`current_threads`] OS threads — so a thread budget changes scheduling
+//! but not one bit of output, which is what keeps batched multi-seed
+//! trials bitwise identical to serial runs.
 //!
 //! `parallel_for_chunks` splits row ranges across cores when more than
 //! one is available; partitioning is balanced and deterministic (see
 //! [`crate::util::threadpool`]).
+//!
+//! [`PanelBuf`]: crate::linalg::workspace::PanelBuf
 
+use crate::linalg::workspace::PanelBuf;
 use crate::linalg::DenseMat;
-use crate::util::threadpool::{num_threads, parallel_for_chunks, SendPtr};
+use crate::util::threadpool::{current_threads, num_threads, parallel_for_chunks, SendPtr};
 use std::cell::RefCell;
 
-thread_local! {
-    /// Reusable staging buffer for the skinny-B transpose of
-    /// [`matmul_into`]. Capacity grows to the largest product seen on the
-    /// thread and is then reused, so the steady-state hot loop performs
-    /// no allocation even when a solve alternates between B shapes
-    /// (e.g. the LAI inner product and the metrics X·H product).
-    static BT_SCRATCH: RefCell<Vec<f64>> = RefCell::new(Vec::new());
+/// Panel width of the packed NT microkernel (output columns per tile).
+const NR: usize = 8;
 
-    /// Per-call accumulator pool for the multi-worker path of
-    /// [`symm_tall_into`]: `nt` private m×k buffers, reused across calls
-    /// on the same thread (nested kernel calls from batched trials each
-    /// see their own pool).
+thread_local! {
+    /// Reusable packing target for the tile-major B panels of
+    /// [`matmul_into`] (skinny-B path) and [`matmul_nt_into_packed`].
+    /// Capacity grows to the largest packed operand seen on the thread
+    /// and is then reused, so the steady-state hot loop performs no
+    /// allocation even when a solve alternates between B shapes
+    /// (e.g. the LAI inner product and the metrics X·H product).
+    static PANEL_SCRATCH: RefCell<PanelBuf> = RefCell::new(PanelBuf::new());
+
+    /// Per-call accumulator pool for the multi-slot path of
+    /// [`pair_pool_accumulate`]: `num_threads()` private m×k buffers,
+    /// reused across calls on the same thread (nested kernel calls from
+    /// batched trials each see their own pool).
     static SYMM_ACC: RefCell<Vec<f64>> = RefCell::new(Vec::new());
 }
 
@@ -59,39 +93,29 @@ pub fn matmul(a: &DenseMat, b: &DenseMat) -> DenseMat {
 /// the output).
 ///
 /// Two regimes (§Perf): for skinny B (n ≤ 64 — the X·F shape that
-/// dominates every SymNMF iteration) B is transposed once into the
-/// thread-local staging buffer and the product runs on the 2×4 register
-/// tile of [`nt_rows`]; otherwise the row-axpy formulation is used.
+/// dominates every SymNMF iteration) B is packed once into tile-major
+/// panels in the thread-local [`PanelBuf`] and the product runs on the
+/// 2×8 register tile of [`packed_nt_rows`]; otherwise the row-axpy
+/// formulation is used.
 pub fn matmul_into(a: &DenseMat, b: &DenseMat, c: &mut DenseMat) {
     let (m, ka) = a.shape();
     let (kb, n) = b.shape();
     assert_eq!(ka, kb, "matmul: {:?} x {:?}", a.shape(), b.shape());
     assert_eq!(c.shape(), (m, n));
     if n <= 64 && ka >= 32 {
-        // skinny-B path: bt rows are the columns of B, contiguous. The
-        // transpose is staged in a thread-local buffer so the per-call
-        // allocation the seed paid here is gone (zero-alloc hot loop).
-        BT_SCRATCH.with(|cell| {
-            let mut bt = cell.borrow_mut();
-            if bt.len() != n * ka {
-                bt.resize(n * ka, 0.0); // no realloc once capacity covers it
-            }
-            let bdata = b.data();
-            const BLK: usize = 32;
-            for ib in (0..ka).step_by(BLK) {
-                for jb in (0..n).step_by(BLK) {
-                    for i in ib..(ib + BLK).min(ka) {
-                        for j in jb..(jb + BLK).min(n) {
-                            bt[j * ka + i] = bdata[i * n + j];
-                        }
-                    }
-                }
-            }
+        // skinny-B path: pack B straight from row-major storage (each B
+        // row scatters contiguously into the panels' t-slots), replacing
+        // the staging transpose of the previous implementation — the
+        // panel IS the transpose, interleaved for the microkernel.
+        PANEL_SCRATCH.with(|cell| {
+            let mut buf = cell.borrow_mut();
+            let dst = buf.packed(n.div_ceil(NR) * NR * ka);
+            pack_b_panels(b.data(), ka, n, dst);
+            let panels: &[f64] = dst;
             let adata = a.data();
-            let btdata = &bt[..];
             let cptr = SendPtr(c.data_mut().as_mut_ptr());
             parallel_for_chunks(m, 64, move |lo, hi| {
-                nt_rows(adata, ka, btdata, n, lo, hi, cptr);
+                packed_nt_rows(adata, ka, panels, n, lo, hi, cptr);
             });
         });
         return;
@@ -119,7 +143,128 @@ pub fn matmul_into(a: &DenseMat, b: &DenseMat, c: &mut DenseMat) {
     });
 }
 
-/// The register-blocked NT microkernel: writes C rows [lo, hi) of
+/// T-blocking of the panel packing: bounds the packed working set per
+/// pass to 8·256 doubles (16 KiB, L1-resident) when p is large.
+const PACK_TBLK: usize = 256;
+
+/// Pack the n×p row-major B̃ operand (the logical transpose of the right
+/// operand, as handed to [`matmul_nt_into`]) into tile-major panels —
+/// see the module-header diagram. Panel `jp` holds output columns
+/// `8·jp … 8·jp+7`; within the panel, reduction step `t` stores the
+/// eight values `B̃[j0..j0+8][t]` contiguously. Columns past `n` are
+/// zero-filled so the masked edge tile accumulates exact zeros.
+fn pack_bt_panels(bt: &[f64], n: usize, p: usize, dst: &mut [f64]) {
+    debug_assert_eq!(dst.len(), n.div_ceil(NR) * NR * p);
+    for jp in 0..n.div_ceil(NR) {
+        let j0 = jp * NR;
+        let w = (n - j0).min(NR);
+        let panel = &mut dst[jp * NR * p..(jp + 1) * NR * p];
+        if w < NR {
+            panel.fill(0.0);
+        }
+        for tb in (0..p).step_by(PACK_TBLK) {
+            let te = (tb + PACK_TBLK).min(p);
+            for jj in 0..w {
+                let row = &bt[(j0 + jj) * p..(j0 + jj + 1) * p];
+                for t in tb..te {
+                    panel[t * NR + jj] = row[t];
+                }
+            }
+        }
+    }
+}
+
+/// Pack a p×n row-major B operand (the skinny right factor of
+/// [`matmul_into`]) into the same tile-major panel layout. Reads stream
+/// each B row once; writes land in each panel's contiguous t-slot, so no
+/// staging transpose is materialized.
+fn pack_b_panels(b: &[f64], p: usize, n: usize, dst: &mut [f64]) {
+    let np = n.div_ceil(NR);
+    debug_assert_eq!(dst.len(), np * NR * p);
+    for t in 0..p {
+        let brow = &b[t * n..(t + 1) * n];
+        for jp in 0..np {
+            let j0 = jp * NR;
+            let w = (n - j0).min(NR);
+            let d = &mut dst[jp * NR * p + t * NR..jp * NR * p + (t + 1) * NR];
+            d[..w].copy_from_slice(&brow[j0..j0 + w]);
+            for z in &mut d[w..] {
+                *z = 0.0;
+            }
+        }
+    }
+}
+
+/// The packed 2×8 NT microkernel: writes C rows [lo, hi) of C = A·B̃ᵀ
+/// where `a` is m×p row-major and `panels` is the tile-major packing of
+/// the n×p B̃ (see [`pack_bt_panels`]). Rows are processed in pairs
+/// against one 8-wide panel per tile: 16 accumulators, and every
+/// reduction step is two broadcast loads plus one contiguous 8-vector
+/// load — the layout the autovectorizer turns into full-width FMA
+/// vectors. Each output element accumulates sequentially over `t`, so
+/// the per-element FP order matches the unpacked 2×4 tile.
+fn packed_nt_rows(
+    a: &[f64],
+    p: usize,
+    panels: &[f64],
+    n: usize,
+    lo: usize,
+    hi: usize,
+    cptr: SendPtr,
+) {
+    let np = n.div_ceil(NR);
+    let mut i = lo;
+    while i + 2 <= hi {
+        let a0 = &a[i * p..(i + 1) * p];
+        let a1 = &a[(i + 1) * p..(i + 2) * p];
+        // SAFETY: rows [lo, hi) are disjoint across workers.
+        let c0 = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i * n), n) };
+        let c1 = unsafe { std::slice::from_raw_parts_mut(cptr.0.add((i + 1) * n), n) };
+        for jp in 0..np {
+            let j0 = jp * NR;
+            let w = (n - j0).min(NR);
+            let pb = &panels[jp * NR * p..(jp + 1) * NR * p];
+            let mut acc0 = [0.0f64; NR];
+            let mut acc1 = [0.0f64; NR];
+            for t in 0..p {
+                let x0 = a0[t];
+                let x1 = a1[t];
+                let bv = &pb[t * NR..(t + 1) * NR];
+                for jj in 0..NR {
+                    acc0[jj] += x0 * bv[jj];
+                    acc1[jj] += x1 * bv[jj];
+                }
+            }
+            // masked store: only the w real columns of the edge tile
+            c0[j0..j0 + w].copy_from_slice(&acc0[..w]);
+            c1[j0..j0 + w].copy_from_slice(&acc1[..w]);
+        }
+        i += 2;
+    }
+    if i < hi {
+        let a0 = &a[i * p..(i + 1) * p];
+        // SAFETY: as above.
+        let c0 = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i * n), n) };
+        for jp in 0..np {
+            let j0 = jp * NR;
+            let w = (n - j0).min(NR);
+            let pb = &panels[jp * NR * p..(jp + 1) * NR * p];
+            let mut acc = [0.0f64; NR];
+            for t in 0..p {
+                let x0 = a0[t];
+                let bv = &pb[t * NR..(t + 1) * NR];
+                for jj in 0..NR {
+                    acc[jj] += x0 * bv[jj];
+                }
+            }
+            c0[j0..j0 + w].copy_from_slice(&acc[..w]);
+        }
+    }
+}
+
+/// The unpacked register-blocked NT microkernel (the PR-2 2×4 tile,
+/// retained as the few-row dispatch target of [`matmul_nt_into`] and the
+/// oracle the packed path is pinned against): writes C rows [lo, hi) of
 /// C = A·BTᵀ, where `a` is m×p row-major and `bt` is n×p row-major (the
 /// TRANSPOSE of the logical right operand, so both reduction streams are
 /// contiguous). Rows are processed in pairs against 4-column panels of
@@ -291,9 +436,9 @@ pub fn matmul_tn_into(a: &DenseMat, b: &DenseMat, c: &mut DenseMat) {
     }
 }
 
-/// C = A·Bᵀ (A: m×p, B: n×p → C: m×n): both operands are row-contiguous
-/// in the reduction index, so this is the NT microkernel applied
-/// directly — no staging transpose at all.
+/// C = A·Bᵀ (A: m×p, B: n×p → C: m×n): B is already the row-major
+/// transpose of the logical right operand, so it packs straight into
+/// tile-major panels and the product runs on the 2×8 microkernel.
 pub fn matmul_nt(a: &DenseMat, b: &DenseMat) -> DenseMat {
     let mut c = DenseMat::zeros(a.rows(), b.rows());
     matmul_nt_into(a, b, &mut c);
@@ -301,7 +446,44 @@ pub fn matmul_nt(a: &DenseMat, b: &DenseMat) -> DenseMat {
 }
 
 /// C = A·Bᵀ into a pre-allocated output (hot-path form; no allocation).
+/// Dispatches to the packed-panel kernel when there are enough output
+/// rows to amortize the n·p packing pass, and to the unpacked 2×4
+/// reference tile otherwise.
 pub fn matmul_nt_into(a: &DenseMat, b: &DenseMat, c: &mut DenseMat) {
+    if a.rows() >= 4 {
+        matmul_nt_into_packed(a, b, c);
+    } else {
+        matmul_nt_into_unpacked(a, b, c);
+    }
+}
+
+/// The packed-panel NT product: packs B into the thread-local
+/// [`PanelBuf`] (tile-major, zero-padded edge panel) and runs the 2×8
+/// microkernel. Exposed so tests can pin it against the unpacked
+/// reference on shapes the dispatcher would route elsewhere, and so
+/// benches can compare the two directly.
+pub fn matmul_nt_into_packed(a: &DenseMat, b: &DenseMat, c: &mut DenseMat) {
+    let (m, p) = a.shape();
+    let (n, pb) = b.shape();
+    assert_eq!(p, pb, "matmul_nt: {:?} x {:?}ᵀ", a.shape(), b.shape());
+    assert_eq!(c.shape(), (m, n));
+    PANEL_SCRATCH.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        let dst = buf.packed(n.div_ceil(NR) * NR * p);
+        pack_bt_panels(b.data(), n, p, dst);
+        let panels: &[f64] = dst;
+        let adata = a.data();
+        let cptr = SendPtr(c.data_mut().as_mut_ptr());
+        parallel_for_chunks(m, 64, move |lo, hi| {
+            packed_nt_rows(adata, p, panels, n, lo, hi, cptr);
+        });
+    });
+}
+
+/// The unpacked PR-2 NT product (2×4 register tile streaming four
+/// strided BT rows per tile). Reference oracle and few-row dispatch
+/// target.
+pub fn matmul_nt_into_unpacked(a: &DenseMat, b: &DenseMat, c: &mut DenseMat) {
     let (m, p) = a.shape();
     let (n, pb) = b.shape();
     assert_eq!(p, pb, "matmul_nt: {:?} x {:?}ᵀ", a.shape(), b.shape());
@@ -359,61 +541,62 @@ pub fn gram_into(f: &DenseMat, g: &mut DenseMat) {
 /// one SYMM_BLOCK² panel of X (128 KiB) plus two SYMM_BLOCK×k panels each
 /// of F and the accumulator (64 KiB at k = 32) — comfortably L2-resident
 /// while X itself streams through once.
-const SYMM_BLOCK: usize = 128;
+pub(crate) const SYMM_BLOCK: usize = 128;
 
-/// out = X·F where X is a large **symmetric** square matrix. Only blocks
-/// on or above the block diagonal are read — strictly-lower off-diagonal
-/// blocks are never touched, halving X traffic (diagonal blocks are read
-/// in full, so X must still be stored as a complete square array).
-/// Dispatches to the cache-blocked kernel ([`symm_tall_into_blocked`])
-/// for the shapes where the saved traffic pays off, and to the generic
-/// [`matmul_into`] otherwise: small X, F wide enough that the panel
-/// working set would spill L2, or a multi-worker accumulator-pool
-/// overhead (≈ 2·nt·m·k element ops to zero + reduce) that would exceed
-/// the ≈ m²/2 element reads it saves.
-pub fn symm_tall_into(x: &DenseMat, f: &DenseMat, out: &mut DenseMat) {
-    let m = x.rows();
-    let k = f.cols();
-    let nt = num_threads();
-    if k > 64 || m < 2 * SYMM_BLOCK || (nt > 1 && m < 4 * nt * k) {
-        matmul_into(x, f, out);
-        return;
+/// Map an upper-triangle pair index `p` (block-row-major enumeration
+/// `(0,0),(0,1),…,(0,nb−1),(1,1),…`) back to its block coordinates.
+/// Exact integer scan — O(nb), negligible against the O(block²·k) work
+/// of one pair.
+#[inline]
+pub(crate) fn pair_to_blocks(mut p: usize, nb: usize) -> (usize, usize) {
+    let mut ib = 0;
+    let mut row = nb; // pairs remaining in block-row ib
+    while p >= row {
+        p -= row;
+        ib += 1;
+        row -= 1;
     }
-    symm_tall_into_blocked(x, f, out, SYMM_BLOCK);
+    (ib, ib + p)
 }
 
-/// The blocked symmetric kernel with an explicit block size (exposed so
-/// tests can exercise multi-block tiling on small shapes and benchmarks
-/// can sweep block sizes). X must be symmetric: only blocks on or above
-/// the block diagonal are read (diagonal blocks in full, including their
-/// strictly-lower entries); each off-diagonal block is applied to both
-/// output panels. With more than one worker thread, block pairs are dealt
-/// round-robin to workers accumulating into private buffers from the
-/// thread-local pool, then reduced in fixed worker order — deterministic
-/// for a given thread count.
-pub fn symm_tall_into_blocked(x: &DenseMat, f: &DenseMat, out: &mut DenseMat, block: usize) {
-    let (m, mc) = x.shape();
-    assert_eq!(m, mc, "symm_tall_into: X must be square, got {:?}", x.shape());
-    let (mf, k) = f.shape();
-    assert_eq!(m, mf, "symm_tall_into: X is {m}x{m} but F has {mf} rows");
-    assert_eq!(out.shape(), (m, k), "symm_tall_into: output must be {m}x{k}");
-    assert!(block >= 1, "symm_tall_into: block size must be positive");
+/// The deterministic pair-pool harness shared by the dense blocked SYMM
+/// and the packed-triangular [`SymPacked`] kernel: run `pair_body(p, acc)`
+/// for every `p in 0..npairs`, accumulating into `num_threads()` private
+/// m×k slots (pair `p` always lands in slot `p % num_threads()`), then
+/// reduce the slots into `out` in fixed slot order.
+///
+/// The slot count — the only structure that affects FP results — is
+/// pinned to the **logical** width [`num_threads`]; the slots execute on
+/// at most [`current_threads`] OS threads (slot `t` runs on worker
+/// `t % phys`, each worker walking its slots in ascending order). A
+/// thread budget therefore changes scheduling but never the result: a
+/// batched trial running under `with_thread_budget(1)` produces the same
+/// bits as a serial full-width run.
+///
+/// `pair_body` must only **accumulate** into `acc` (slots start zeroed)
+/// and must write row blocks derived from its own pair only.
+///
+/// [`SymPacked`]: crate::linalg::packed::SymPacked
+pub(crate) fn pair_pool_accumulate<F>(
+    m: usize,
+    k: usize,
+    npairs: usize,
+    out: &mut DenseMat,
+    pair_body: F,
+) where
+    F: Fn(usize, &mut [f64]) + Sync,
+{
+    assert_eq!(out.shape(), (m, k), "pair_pool_accumulate: output must be {m}x{k}");
     if m == 0 || k == 0 {
         out.data_mut().fill(0.0);
         return;
     }
-    let nb = m.div_ceil(block);
-    let npairs = nb * (nb + 1) / 2;
     let nt = num_threads().min(npairs).max(1);
-    let xd = x.data();
-    let fd = f.data();
     if nt == 1 {
         let od = out.data_mut();
         od.fill(0.0);
-        for ib in 0..nb {
-            for jb in ib..nb {
-                symm_block_pair(xd, fd, m, k, block, ib, jb, od);
-            }
+        for p in 0..npairs {
+            pair_body(p, od);
         }
         return;
     }
@@ -425,22 +608,45 @@ pub fn symm_tall_into_blocked(x: &DenseMat, f: &DenseMat, out: &mut DenseMat, bl
         }
         let pool: &mut [f64] = &mut pool_ref[..need];
         pool.fill(0.0);
-        std::thread::scope(|s| {
+        let phys = current_threads().min(nt);
+        if phys <= 1 {
+            // budgeted to one OS thread: same slots, same assignment,
+            // same reduction — just executed sequentially.
             for (t, acc) in pool.chunks_mut(m * k).enumerate() {
-                s.spawn(move || {
-                    let mut p = 0usize;
-                    for ib in 0..nb {
-                        for jb in ib..nb {
-                            if p % nt == t {
-                                symm_block_pair(xd, fd, m, k, block, ib, jb, acc);
-                            }
-                            p += 1;
-                        }
-                    }
-                });
+                let mut p = t;
+                while p < npairs {
+                    pair_body(p, acc);
+                    p += nt;
+                }
             }
-        });
-        // Deterministic reduction: out[row] = Σ_t acc_t[row], in worker
+        } else {
+            let pptr = SendPtr(pool.as_mut_ptr());
+            let body = &pair_body;
+            std::thread::scope(|s| {
+                for w in 0..phys {
+                    s.spawn(move || {
+                        let mut t = w;
+                        while t < nt {
+                            // SAFETY: slot t is touched only by the worker
+                            // with w == t % phys — slots are disjoint.
+                            let acc = unsafe {
+                                std::slice::from_raw_parts_mut(
+                                    pptr.0.add(t * m * k),
+                                    m * k,
+                                )
+                            };
+                            let mut p = t;
+                            while p < npairs {
+                                body(p, acc);
+                                p += nt;
+                            }
+                            t += phys;
+                        }
+                    });
+                }
+            });
+        }
+        // Deterministic reduction: out[row] = Σ_t acc_t[row], in slot
         // order, row-parallel.
         let pool_s: &[f64] = pool;
         let optr = SendPtr(out.data_mut().as_mut_ptr());
@@ -458,6 +664,60 @@ pub fn symm_tall_into_blocked(x: &DenseMat, f: &DenseMat, out: &mut DenseMat, bl
                 }
             }
         });
+    });
+}
+
+/// out = X·F where X is a large **symmetric** square matrix. Only blocks
+/// on or above the block diagonal are read — strictly-lower off-diagonal
+/// blocks are never touched, halving X traffic (diagonal blocks are read
+/// in full, so X must still be stored as a complete square array; see
+/// [`crate::linalg::packed::SymPacked`] for the storage that drops the
+/// lower triangle too).
+/// Dispatches to the cache-blocked kernel ([`symm_tall_into_blocked`])
+/// for the shapes where the saved traffic pays off, and to the generic
+/// [`matmul_into`] otherwise: small X, F wide enough that the panel
+/// working set would spill L2, or a multi-worker accumulator-pool
+/// overhead (≈ 2·nt·m·k element ops to zero + reduce) that would exceed
+/// the ≈ m²/2 element reads it saves. The predicate uses the logical
+/// [`num_threads`] so the chosen kernel — and therefore the FP result —
+/// is independent of any thread budget.
+pub fn symm_tall_into(x: &DenseMat, f: &DenseMat, out: &mut DenseMat) {
+    let m = x.rows();
+    let k = f.cols();
+    let nt = num_threads();
+    if k > 64 || m < 2 * SYMM_BLOCK || (nt > 1 && m < 4 * nt * k) {
+        matmul_into(x, f, out);
+        return;
+    }
+    symm_tall_into_blocked(x, f, out, SYMM_BLOCK);
+}
+
+/// The blocked symmetric kernel with an explicit block size (exposed so
+/// tests can exercise multi-block tiling on small shapes and benchmarks
+/// can sweep block sizes). X must be symmetric: only blocks on or above
+/// the block diagonal are read (diagonal blocks in full, including their
+/// strictly-lower entries); each off-diagonal block is applied to both
+/// output panels. Accumulation and reduction run on the deterministic
+/// pair-pool harness ([`pair_pool_accumulate`]) — deterministic for a
+/// given process configuration, independent of thread budgets.
+pub fn symm_tall_into_blocked(x: &DenseMat, f: &DenseMat, out: &mut DenseMat, block: usize) {
+    let (m, mc) = x.shape();
+    assert_eq!(m, mc, "symm_tall_into: X must be square, got {:?}", x.shape());
+    let (mf, k) = f.shape();
+    assert_eq!(m, mf, "symm_tall_into: X is {m}x{m} but F has {mf} rows");
+    assert_eq!(out.shape(), (m, k), "symm_tall_into: output must be {m}x{k}");
+    assert!(block >= 1, "symm_tall_into: block size must be positive");
+    if m == 0 || k == 0 {
+        out.data_mut().fill(0.0);
+        return;
+    }
+    let nb = m.div_ceil(block);
+    let npairs = nb * (nb + 1) / 2;
+    let xd = x.data();
+    let fd = f.data();
+    pair_pool_accumulate(m, k, npairs, out, |p, acc| {
+        let (ib, jb) = pair_to_blocks(p, nb);
+        symm_block_pair(xd, fd, m, k, block, ib, jb, acc);
     });
 }
 
@@ -516,6 +776,7 @@ mod tests {
     use super::*;
     use crate::util::propcheck::{dim, forall};
     use crate::util::rng::Pcg64;
+    use crate::util::threadpool::with_thread_budget;
 
     fn naive_matmul(a: &DenseMat, b: &DenseMat) -> DenseMat {
         let (m, k) = a.shape();
@@ -549,14 +810,15 @@ mod tests {
         );
     }
 
-    /// The skinny-B register-tiled path must agree with the naive product
-    /// across non-multiple-of-tile shapes (odd row counts, j-panel tails).
+    /// The skinny-B packed-panel path must agree with the naive product
+    /// across non-multiple-of-tile shapes (odd row counts, masked edge
+    /// panels at every width mod 8).
     #[test]
     fn skinny_register_tile_matches_naive() {
         let mut rng = Pcg64::seed_from_u64(11);
         for m in [1usize, 3, 31, 33, 65] {
-            for n in [1usize, 3, 31, 33, 64] {
-                // ka >= 32 triggers the transposed register-tile path
+            for n in [1usize, 3, 7, 31, 33, 64] {
+                // ka >= 32 triggers the packed-panel path
                 let ka = 37;
                 let a = DenseMat::gaussian(m, ka, &mut rng);
                 let b = DenseMat::gaussian(ka, n, &mut rng);
@@ -610,6 +872,58 @@ mod tests {
             c.fill(99.0); // stale data must be overwritten
             matmul_nt_into(&a, &b, &mut c);
             assert!(c.diff_fro(&want) == 0.0, "({m},{p},{n})");
+        }
+    }
+
+    /// The acceptance pinning: packed-panel GEMM vs the PR-2 unpacked
+    /// reference (and the naive oracle) at 1e-12 across m,k ∈
+    /// {1, 3, 7, 31, 33, 65} — widths 1/3/7 exercise the masked edge
+    /// tile inside a single panel, 31/33/65 the panel-boundary masks.
+    #[test]
+    fn packed_nt_matches_unpacked_reference_across_shapes() {
+        let mut rng = Pcg64::seed_from_u64(21);
+        for m in [1usize, 3, 7, 31, 33, 65] {
+            for n in [1usize, 3, 7, 31, 33, 65] {
+                for p in [1usize, 7, 37] {
+                    let a = DenseMat::gaussian(m, p, &mut rng);
+                    let b = DenseMat::gaussian(n, p, &mut rng);
+                    let mut packed = DenseMat::zeros(m, n);
+                    packed.fill(41.0); // stale data must be overwritten
+                    matmul_nt_into_packed(&a, &b, &mut packed);
+                    let mut unpacked = DenseMat::zeros(m, n);
+                    unpacked.fill(-17.0);
+                    matmul_nt_into_unpacked(&a, &b, &mut unpacked);
+                    let err = packed.diff_fro(&unpacked);
+                    let scale = 1.0 + unpacked.fro_norm();
+                    assert!(
+                        err < 1e-12 * scale,
+                        "m={m} n={n} p={p}: packed vs unpacked err={err}"
+                    );
+                    let want = naive_matmul(&a, &b.transpose());
+                    let err = packed.diff_fro(&want);
+                    assert!(
+                        err < 1e-12 * scale,
+                        "m={m} n={n} p={p}: packed vs naive err={err}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Zero-padding of the masked edge panel must contribute exact
+    /// zeros: a one-column B against a long reduction is the worst case.
+    #[test]
+    fn packed_edge_panel_padding_is_exact() {
+        let mut rng = Pcg64::seed_from_u64(22);
+        let a = DenseMat::gaussian(6, 300, &mut rng);
+        let b = DenseMat::gaussian(1, 300, &mut rng);
+        let mut c = DenseMat::zeros(6, 1);
+        matmul_nt_into_packed(&a, &b, &mut c);
+        let mut want = DenseMat::zeros(6, 1);
+        matmul_nt_into_unpacked(&a, &b, &mut want);
+        for (x, y) in c.data().iter().zip(want.data()) {
+            // single-column output: both kernels accumulate t-sequentially
+            assert_eq!(x.to_bits(), y.to_bits());
         }
     }
 
@@ -677,6 +991,22 @@ mod tests {
         }
     }
 
+    /// The pair index inversion must reproduce the block-row-major
+    /// upper-triangle enumeration exactly.
+    #[test]
+    fn pair_to_blocks_inverts_enumeration() {
+        for nb in [1usize, 2, 3, 7, 16] {
+            let mut p = 0;
+            for ib in 0..nb {
+                for jb in ib..nb {
+                    assert_eq!(pair_to_blocks(p, nb), (ib, jb), "nb={nb} p={p}");
+                    p += 1;
+                }
+            }
+            assert_eq!(p, nb * (nb + 1) / 2);
+        }
+    }
+
     /// The public dispatcher must agree with the generic GEMM on a shape
     /// large enough to take the blocked path — sized from num_threads()
     /// so the dispatch predicate (m ≥ 4·nt·k) selects the blocked kernel
@@ -698,7 +1028,7 @@ mod tests {
 
     /// Same input, repeated calls → bitwise-identical output (the batched
     /// multi-seed driver relies on kernel determinism). Calls the blocked
-    /// kernel directly with a small block so the multi-worker
+    /// kernel directly with a small block so the multi-slot
     /// accumulator-pool path runs regardless of the dispatch heuristic.
     #[test]
     fn blocked_symm_is_deterministic() {
@@ -712,6 +1042,32 @@ mod tests {
         symm_tall_into_blocked(&x, &f, &mut b, 64);
         for (va, vb) in a.data().iter().zip(b.data()) {
             assert_eq!(va.to_bits(), vb.to_bits());
+        }
+    }
+
+    /// A thread budget must not change a single bit of the blocked SYMM:
+    /// the accumulator-slot geometry is pinned to num_threads(), the
+    /// budget only reschedules the slots onto fewer OS threads.
+    #[test]
+    fn blocked_symm_is_budget_invariant_bitwise() {
+        let mut rng = Pcg64::seed_from_u64(16);
+        let m = 300;
+        let x = random_symmetric(m, &mut rng);
+        let f = DenseMat::gaussian(m, 8, &mut rng);
+        let mut full = DenseMat::zeros(m, 8);
+        symm_tall_into_blocked(&x, &f, &mut full, 64);
+        for budget in [1usize, 2, 3] {
+            let mut capped = DenseMat::zeros(m, 8);
+            with_thread_budget(budget, || {
+                symm_tall_into_blocked(&x, &f, &mut capped, 64);
+            });
+            for (va, vb) in full.data().iter().zip(capped.data()) {
+                assert_eq!(
+                    va.to_bits(),
+                    vb.to_bits(),
+                    "budget={budget} changed the SYMM result"
+                );
+            }
         }
     }
 }

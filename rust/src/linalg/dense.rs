@@ -103,8 +103,34 @@ impl DenseMat {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Column j as a fresh Vec. Setup/test convenience only — hot paths
+    /// must use the allocation-free [`DenseMat::col_iter`] /
+    /// [`DenseMat::col_into`] instead.
     pub fn col(&self, j: usize) -> Vec<f64> {
-        (0..self.rows).map(|i| self.at(i, j)).collect()
+        self.col_iter(j).collect()
+    }
+
+    /// Allocation-free strided walk down column j (row-major storage, so
+    /// the stride is `cols`). Hard bounds check: a strided walk from an
+    /// out-of-range start would yield a plausible-looking wrong column
+    /// rather than a panic, so this must not be a debug-only assert.
+    #[inline]
+    pub fn col_iter(&self, j: usize) -> impl Iterator<Item = f64> + '_ {
+        assert!(j < self.cols, "col_iter: column {j} out of {} columns", self.cols);
+        self.data
+            .get(j..)
+            .unwrap_or(&[])
+            .iter()
+            .step_by(self.cols)
+            .copied()
+    }
+
+    /// Copy column j into a pre-allocated buffer (hot-path form).
+    pub fn col_into(&self, j: usize, out: &mut [f64]) {
+        assert_eq!(out.len(), self.rows, "col_into: buffer must hold {} rows", self.rows);
+        for (o, v) in out.iter_mut().zip(self.col_iter(j)) {
+            *o = v;
+        }
     }
 
     pub fn set_col(&mut self, j: usize, v: &[f64]) {
@@ -300,6 +326,22 @@ mod tests {
         let t = a.transpose();
         assert_eq!(t.shape(), (2, 3));
         assert_eq!(t.at(1, 2), 5.0);
+    }
+
+    #[test]
+    fn col_iter_and_col_into_match_col() {
+        let a = DenseMat::from_fn(4, 3, |i, j| (i * 3 + j) as f64);
+        for j in 0..3 {
+            let want = a.col(j);
+            let got: Vec<f64> = a.col_iter(j).collect();
+            assert_eq!(got, want, "col {j}");
+            let mut buf = vec![0.0; 4];
+            a.col_into(j, &mut buf);
+            assert_eq!(buf, want, "col_into {j}");
+        }
+        // degenerate: zero-row matrix yields an empty walk
+        let e = DenseMat::zeros(0, 2);
+        assert_eq!(e.col_iter(1).count(), 0);
     }
 
     #[test]

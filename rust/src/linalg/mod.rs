@@ -6,14 +6,18 @@
 //! leverage scores ([`qr`]), a cyclic-Jacobi symmetric eigensolver
 //! ([`eig`]) used by Apx-EVD (paper Alg. Apx-EVD line 5), and the
 //! zero-allocation per-iteration buffer workspace ([`workspace`]) behind
-//! the `apply_into` kernel dispatch protocol.
+//! the `apply_into` kernel dispatch protocol, and the packed-triangular
+//! symmetric storage ([`packed`]) that halves the resident footprint of
+//! the dense data matrix.
 
 pub mod blas;
 pub mod chol;
 pub mod dense;
 pub mod eig;
+pub mod packed;
 pub mod qr;
 pub mod workspace;
 
 pub use dense::DenseMat;
-pub use workspace::{IterWorkspace, UpdateScratch};
+pub use packed::SymPacked;
+pub use workspace::{IterWorkspace, PanelBuf, UpdateScratch};

@@ -1,0 +1,583 @@
+//! Packed-triangular symmetric storage: the half-sized resident X.
+//!
+//! The dense blocked SYMM kernel (`blas::symm_tall_into`) already reads
+//! only the upper-triangle *blocks* of X, but X itself is still stored
+//! as a full m×m array — the strictly-lower half occupies memory that is
+//! never touched. [`SymPacked`] drops it: only the blocks on or above
+//! the block diagonal are stored, halving the resident footprint of the
+//! dominant memory object. That compounds with the batched multi-seed
+//! driver (`coordinator::driver::run_trials_batched`), which amortizes
+//! ONE resident X across every concurrent trial.
+//!
+//! ## Block-panel layout and index math
+//!
+//! X is partitioned into `block`-sized row/column blocks,
+//! `nb = ⌈m/block⌉` per side (edge blocks truncated, never padded).
+//! The upper-triangle block pairs are stored back to back in
+//! block-row-major order, each pair as a dense row-major `bi×bj` tile:
+//!
+//! ```text
+//!   data:  [ (0,0) | (0,1) | … | (0,nb−1) | (1,1) | … | (nb−1,nb−1) ]
+//!
+//!   pair index of (ib, jb), ib ≤ jb (block-row-major enumeration):
+//!       idx(ib, jb) = ib·(2·nb − ib + 1)/2 + (jb − ib)
+//!       (block-row ib contributes nb − ib pairs, so the row base is
+//!        Σ_{r<ib} (nb − r) = ib·nb − ib(ib−1)/2 = ib·(2nb − ib + 1)/2)
+//!
+//!   byte offset: block_off[idx] (precomputed prefix sums of bi·bj —
+//!       edge tiles make the tile sizes irregular, so offsets are a
+//!       table, not a closed form)
+//!
+//!   entry X[i, j] with i ≤ j:
+//!       ib = i / block, jb = j / block   (ib ≤ jb holds)
+//!       within-tile: row i − ib·block, col j − jb·block, leading dim bj
+//!   entry X[i, j] with i > j: stored once as X[j, i] (upper wins);
+//!       reading it walks the stored tile (jb, ib) down its
+//!       (i − ib·block)-th column — the mirrored, strided access that
+//!       only the row-sampled product ever performs.
+//! ```
+//!
+//! Diagonal tiles are stored **full** (both triangles, mirrored from the
+//! upper triangle at construction): a diagonal tile is read in full by
+//! the kernel anyway, and storing `bi×bi` instead of `bi(bi+1)/2` keeps
+//! every tile a plain row-major matrix — the same inner loops as the
+//! dense [`symm_block_pair`] path, byte for byte. The overhead is
+//! ≤ `m·block/2` doubles (≈ 0.8% of the full matrix at m = 16384,
+//! block = 128).
+//!
+//! ## Kernel equivalence
+//!
+//! [`SymPacked::apply_into`] runs on the same deterministic pair-pool
+//! harness ([`pair_pool_accumulate`]) as the dense blocked SYMM, with
+//! identical pair enumeration, identical per-tile inner loops, and the
+//! identical fixed-order reduction — so for a given process
+//! configuration the packed product equals the dense blocked product to
+//! the last bit, and is invariant under thread budgets. The aggregate
+//! statistics (`fro_norm_sq`, `max_value`, `mean_value`) are computed
+//! once at construction from the stored triangle (off-diagonal tiles
+//! weighted twice) and cached, so the SymOp surface stays O(1) where the
+//! dense operator rescans X.
+//!
+//! [`symm_block_pair`]: crate::linalg::blas
+//! [`pair_pool_accumulate`]: crate::linalg::blas
+
+use crate::linalg::blas::{axpy, pair_pool_accumulate, pair_to_blocks, SYMM_BLOCK};
+use crate::linalg::DenseMat;
+use crate::randnla::SymOp;
+use crate::sparse::CsrMat;
+
+/// Packed-triangular symmetric matrix in block-panel layout (see the
+/// module header for the index math). Implements [`SymOp`], so every
+/// solver driver runs on it unchanged.
+#[derive(Clone, Debug)]
+pub struct SymPacked {
+    m: usize,
+    block: usize,
+    nb: usize,
+    /// upper-triangle tiles, block-row-major, each row-major bi×bj
+    data: Vec<f64>,
+    /// prefix offsets of each tile in `data` (len = npairs + 1)
+    block_off: Vec<usize>,
+    /// ‖X‖²_F of the full (mirrored) matrix, cached at construction
+    fro_sq: f64,
+    /// max entry of the full matrix, cached at construction
+    max: f64,
+    /// mean entry of the full matrix, cached at construction
+    mean: f64,
+}
+
+impl SymPacked {
+    /// Pack the upper triangle of a square matrix with the production
+    /// block size (the SYMM cache block). For entries where X[i,j] and
+    /// X[j,i] disagree, the upper triangle wins.
+    pub fn from_dense(x: &DenseMat) -> SymPacked {
+        SymPacked::from_dense_with_block(x, SYMM_BLOCK)
+    }
+
+    /// Pack with an explicit block size (exposed so tests can exercise
+    /// multi-tile layouts on small shapes).
+    pub fn from_dense_with_block(x: &DenseMat, block: usize) -> SymPacked {
+        let (m, mc) = x.shape();
+        assert_eq!(m, mc, "SymPacked: X must be square, got {:?}", x.shape());
+        assert!(block >= 1, "SymPacked: block size must be positive");
+        let nb = m.div_ceil(block);
+        let npairs = nb * (nb + 1) / 2;
+        let bdim = |b: usize| (m - b * block).min(block);
+        let mut block_off = Vec::with_capacity(npairs + 1);
+        let mut total = 0usize;
+        for ib in 0..nb {
+            for jb in ib..nb {
+                block_off.push(total);
+                total += bdim(ib) * bdim(jb);
+            }
+        }
+        block_off.push(total);
+        let mut data = vec![0.0; total];
+        let xd = x.data();
+        let (mut sum, mut ss, mut mx) = (0.0f64, 0.0f64, f64::NEG_INFINITY);
+        let mut p = 0;
+        for ib in 0..nb {
+            let i0 = ib * block;
+            let i1 = (i0 + block).min(m);
+            for jb in ib..nb {
+                let j0 = jb * block;
+                let j1 = (j0 + block).min(m);
+                let bj = j1 - j0;
+                let bd = &mut data[block_off[p]..block_off[p + 1]];
+                if ib == jb {
+                    // diagonal tile stored full; lower entries mirrored
+                    // from the upper triangle. Each entry of the tile is
+                    // an entry of X exactly once in the stats.
+                    for i in i0..i1 {
+                        let dst = &mut bd[(i - i0) * bj..(i - i0 + 1) * bj];
+                        for j in j0..j1 {
+                            let v = if i <= j { xd[i * m + j] } else { xd[j * m + i] };
+                            dst[j - j0] = v;
+                            sum += v;
+                            ss += v * v;
+                            if v > mx {
+                                mx = v;
+                            }
+                        }
+                    }
+                } else {
+                    // off-diagonal tile: every entry appears twice in
+                    // the mirrored matrix.
+                    for i in i0..i1 {
+                        let src = &xd[i * m + j0..i * m + j1];
+                        bd[(i - i0) * bj..(i - i0 + 1) * bj].copy_from_slice(src);
+                        for &v in src {
+                            sum += 2.0 * v;
+                            ss += 2.0 * v * v;
+                            if v > mx {
+                                mx = v;
+                            }
+                        }
+                    }
+                }
+                p += 1;
+            }
+        }
+        SymPacked {
+            m,
+            block,
+            nb,
+            data,
+            block_off,
+            fro_sq: ss,
+            max: mx,
+            mean: sum / (m * m) as f64,
+        }
+    }
+
+    /// Pack a sparse symmetric matrix, densifying through
+    /// [`CsrMat::to_dense`] (the full array is transient — only the
+    /// packed triangle stays resident).
+    pub fn from_csr(x: &CsrMat) -> SymPacked {
+        SymPacked::from_dense(&x.to_dense())
+    }
+
+    /// Dimension m.
+    pub fn dim(&self) -> usize {
+        self.m
+    }
+
+    /// Block size of the panel layout.
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Stored elements — ≈ m(m + block)/2, vs m² for the full array.
+    pub fn packed_len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Rows/cols of block index `b` (edge blocks truncated).
+    #[inline]
+    fn bdim(&self, b: usize) -> usize {
+        (self.m - b * self.block).min(self.block)
+    }
+
+    /// Pair index of tile (ib, jb), ib ≤ jb — see the module header.
+    #[inline]
+    fn pair_index(&self, ib: usize, jb: usize) -> usize {
+        debug_assert!(ib <= jb && jb < self.nb);
+        ib * (2 * self.nb - ib + 1) / 2 + (jb - ib)
+    }
+
+    /// Tile (ib, jb) as a row-major slice (ib ≤ jb).
+    #[inline]
+    fn tile(&self, ib: usize, jb: usize) -> &[f64] {
+        let p = self.pair_index(ib, jb);
+        &self.data[self.block_off[p]..self.block_off[p + 1]]
+    }
+
+    /// Unpack to a full square matrix (test/debug aid).
+    pub fn to_dense(&self) -> DenseMat {
+        let mut out = DenseMat::zeros(self.m, self.m);
+        for ib in 0..self.nb {
+            let i0 = ib * self.block;
+            for jb in ib..self.nb {
+                let j0 = jb * self.block;
+                let bj = self.bdim(jb);
+                let bd = self.tile(ib, jb);
+                for li in 0..self.bdim(ib) {
+                    let i = i0 + li;
+                    for lj in 0..bj {
+                        let j = j0 + lj;
+                        let v = bd[li * bj + lj];
+                        out.set(i, j, v);
+                        if i != j {
+                            out.set(j, i, v);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// out = X·F on the packed storage: the same upper-triangle
+    /// block-pair walk, per-tile inner loops, and fixed-order
+    /// accumulator-pool reduction as the dense
+    /// [`symm_tall_into_blocked`], reading each stored tile exactly once
+    /// and applying off-diagonal tiles to both output panels.
+    ///
+    /// [`symm_tall_into_blocked`]: crate::linalg::blas::symm_tall_into_blocked
+    pub fn apply_blocked_into(&self, f: &DenseMat, out: &mut DenseMat) {
+        let m = self.m;
+        let (mf, k) = f.shape();
+        assert_eq!(m, mf, "SymPacked::apply: X is {m}x{m} but F has {mf} rows");
+        assert_eq!(out.shape(), (m, k), "SymPacked::apply: output must be {m}x{k}");
+        if m == 0 || k == 0 {
+            out.data_mut().fill(0.0);
+            return;
+        }
+        let nb = self.nb;
+        let npairs = nb * (nb + 1) / 2;
+        let fd = f.data();
+        pair_pool_accumulate(m, k, npairs, out, |p, acc| {
+            let (ib, jb) = pair_to_blocks(p, nb);
+            self.tile_pair_apply(fd, k, ib, jb, acc);
+        });
+    }
+
+    /// Apply one stored tile (ib, jb) to F, accumulating into the m×k
+    /// accumulator — the packed twin of the dense `symm_block_pair`.
+    fn tile_pair_apply(&self, fd: &[f64], k: usize, ib: usize, jb: usize, acc: &mut [f64]) {
+        let block = self.block;
+        let m = self.m;
+        let i0 = ib * block;
+        let i1 = (i0 + block).min(m);
+        let j0 = jb * block;
+        let j1 = (j0 + block).min(m);
+        let bj = j1 - j0;
+        let bd = self.tile(ib, jb);
+        if ib == jb {
+            for i in i0..i1 {
+                let xrow = &bd[(i - i0) * bj..(i - i0 + 1) * bj];
+                let acci = &mut acc[i * k..(i + 1) * k];
+                for (jj, &v) in xrow.iter().enumerate() {
+                    if v != 0.0 {
+                        let j = j0 + jj;
+                        axpy(v, &fd[j * k..(j + 1) * k], acci);
+                    }
+                }
+            }
+            return;
+        }
+        // Off-diagonal tile: i1 <= j0 by construction, so the I-panel
+        // and J-panel of the accumulator can be split and written
+        // simultaneously.
+        let (acc_i, acc_j) = acc.split_at_mut(j0 * k);
+        for i in i0..i1 {
+            let xrow = &bd[(i - i0) * bj..(i - i0 + 1) * bj];
+            let fi = &fd[i * k..(i + 1) * k];
+            let acci = &mut acc_i[i * k..(i + 1) * k];
+            for (jj, &v) in xrow.iter().enumerate() {
+                if v != 0.0 {
+                    let j = j0 + jj;
+                    axpy(v, &fd[j * k..(j + 1) * k], acci);
+                    axpy(v, fi, &mut acc_j[(j - j0) * k..(j - j0 + 1) * k]);
+                }
+            }
+        }
+    }
+}
+
+impl SymOp for SymPacked {
+    fn dim(&self) -> usize {
+        self.m
+    }
+
+    fn apply_into(&self, f: &DenseMat, out: &mut DenseMat) {
+        self.apply_blocked_into(f, out);
+    }
+
+    fn fro_norm_sq(&self) -> f64 {
+        self.fro_sq
+    }
+
+    fn max_value(&self) -> f64 {
+        self.max
+    }
+
+    fn mean_value(&self) -> f64 {
+        self.mean
+    }
+
+    fn sampled_apply_into(
+        &self,
+        f: &DenseMat,
+        samples: &[usize],
+        weights_sq: &[f64],
+        out: &mut DenseMat,
+    ) {
+        // Same accumulation as the dense operator (X·SᵀS·F =
+        // Σ_r w_r · x_{:,i_r} ⊗ F[i_r,:]): per sample, walk row i_r of X
+        // in ascending j. Tiles left of the diagonal tile are mirrored —
+        // column li of the stored tile (jb, ib), the only strided access
+        // in the layout; the diagonal tile and the tiles to its right
+        // give the row contiguously.
+        let k = f.cols();
+        assert_eq!(out.shape(), (self.m, k), "sampled_apply_into shape");
+        let od = out.data_mut();
+        od.fill(0.0);
+        let block = self.block;
+        for (&ir, &w) in samples.iter().zip(weights_sq) {
+            let frow = f.row(ir);
+            let ib = ir / block;
+            let li = ir - ib * block;
+            for jb in 0..self.nb {
+                let j0 = jb * block;
+                let j1 = (j0 + block).min(self.m);
+                if jb < ib {
+                    let bd = self.tile(jb, ib);
+                    let ld = self.bdim(ib); // cols of tile (jb, ib)
+                    for j in j0..j1 {
+                        let v = bd[(j - j0) * ld + li];
+                        if v != 0.0 {
+                            axpy(w * v, frow, &mut od[j * k..(j + 1) * k]);
+                        }
+                    }
+                } else {
+                    let bd = self.tile(ib, jb);
+                    let bj = j1 - j0;
+                    let xrow = &bd[li * bj..(li + 1) * bj];
+                    for (jj, &v) in xrow.iter().enumerate() {
+                        if v != 0.0 {
+                            let j = j0 + jj;
+                            axpy(w * v, frow, &mut od[j * k..(j + 1) * k]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas;
+    use crate::util::rng::Pcg64;
+    use crate::util::threadpool::with_thread_budget;
+
+    fn random_symmetric(m: usize, rng: &mut Pcg64) -> DenseMat {
+        let mut x = DenseMat::gaussian(m, m, rng);
+        x.symmetrize();
+        x
+    }
+
+    /// Packing then unpacking a symmetric matrix is the identity, at
+    /// every block size (including blocks larger than the matrix).
+    #[test]
+    fn roundtrip_is_exact() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        for m in [1usize, 3, 31, 33, 65] {
+            let x = random_symmetric(m, &mut rng);
+            for block in [4usize, 8, 32, 256] {
+                let sp = SymPacked::from_dense_with_block(&x, block);
+                let back = sp.to_dense();
+                for (a, b) in x.data().iter().zip(back.data()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "m={m} block={block}");
+                }
+            }
+        }
+    }
+
+    /// Packed storage really is about half the full array (plus the
+    /// full-diagonal-tile overhead bounded by m·block/2).
+    #[test]
+    fn packed_len_is_half_plus_diagonal_overhead() {
+        let m = 300;
+        let block = 32;
+        let mut rng = Pcg64::seed_from_u64(2);
+        let x = random_symmetric(m, &mut rng);
+        let sp = SymPacked::from_dense_with_block(&x, block);
+        let full = m * m;
+        let upper = m * (m + 1) / 2;
+        assert!(sp.packed_len() >= upper, "must hold at least the triangle");
+        assert!(
+            sp.packed_len() <= upper + m * block / 2 + block * block,
+            "len {} exceeds triangle {} + diagonal-tile overhead",
+            sp.packed_len(),
+            upper
+        );
+        assert!(sp.packed_len() * 2 < full + m * block + 2 * block * block);
+    }
+
+    /// The acceptance pinning: SymPacked::apply_into vs the PR-2 dense
+    /// blocked kernel at 1e-12 across m,k ∈ {1, 3, 7, 31, 33, 65} and
+    /// several tile sizes (edge tiles everywhere).
+    #[test]
+    fn apply_matches_dense_blocked_across_shapes() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        for m in [1usize, 3, 7, 31, 33, 65] {
+            let x = random_symmetric(m, &mut rng);
+            for k in [1usize, 3, 7, 31, 33, 65] {
+                let f = DenseMat::gaussian(m, k, &mut rng);
+                for block in [4usize, 8, 32, 256] {
+                    let sp = SymPacked::from_dense_with_block(&x, block);
+                    let mut want = DenseMat::zeros(m, k);
+                    want.fill(-3.0);
+                    blas::symm_tall_into_blocked(&x, &f, &mut want, block);
+                    let mut got = DenseMat::zeros(m, k);
+                    got.fill(7.0); // stale data must be overwritten
+                    sp.apply_blocked_into(&f, &mut got);
+                    let err = got.diff_fro(&want);
+                    assert!(
+                        err < 1e-12 * (1.0 + want.fro_norm()),
+                        "m={m} k={k} block={block}: err={err}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Same tile size + same process config → the packed product equals
+    /// the dense blocked product bitwise (identical pair walk, inner
+    /// loops, and reduction).
+    #[test]
+    fn apply_is_bitwise_equal_to_dense_blocked() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        let m = 300;
+        let x = random_symmetric(m, &mut rng);
+        let f = DenseMat::gaussian(m, 8, &mut rng);
+        let sp = SymPacked::from_dense_with_block(&x, 64);
+        let mut dense = DenseMat::zeros(m, 8);
+        blas::symm_tall_into_blocked(&x, &f, &mut dense, 64);
+        let mut packed = DenseMat::zeros(m, 8);
+        sp.apply_blocked_into(&f, &mut packed);
+        for (a, b) in dense.data().iter().zip(packed.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    /// A thread budget must not change a single bit of the packed apply
+    /// (slot geometry pinned to num_threads()).
+    #[test]
+    fn apply_is_budget_invariant_bitwise() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        let m = 300;
+        let x = random_symmetric(m, &mut rng);
+        let f = DenseMat::gaussian(m, 8, &mut rng);
+        let sp = SymPacked::from_dense_with_block(&x, 64);
+        let mut full = DenseMat::zeros(m, 8);
+        sp.apply_blocked_into(&f, &mut full);
+        for budget in [1usize, 2, 3] {
+            let mut capped = DenseMat::zeros(m, 8);
+            with_thread_budget(budget, || {
+                sp.apply_blocked_into(&f, &mut capped);
+            });
+            for (a, b) in full.data().iter().zip(capped.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "budget={budget}");
+            }
+        }
+    }
+
+    /// The cached aggregate statistics match the dense operator.
+    #[test]
+    fn stats_match_dense_operator() {
+        let mut rng = Pcg64::seed_from_u64(6);
+        for m in [1usize, 33, 129] {
+            let x = random_symmetric(m, &mut rng);
+            let sp = SymPacked::from_dense_with_block(&x, 32);
+            let fro = DenseMat::fro_norm_sq(&x);
+            assert!(
+                (SymOp::fro_norm_sq(&sp) - fro).abs() <= 1e-12 * (1.0 + fro.abs()),
+                "m={m} fro"
+            );
+            assert_eq!(SymOp::max_value(&sp), DenseMat::max_value(&x), "m={m} max");
+            let mean = x.mean();
+            assert!(
+                (SymOp::mean_value(&sp) - mean).abs() <= 1e-12 * (1.0 + mean.abs()),
+                "m={m} mean"
+            );
+        }
+    }
+
+    /// The mirrored (strided) row walk of the sampled product agrees
+    /// with the dense operator, including repeated and edge-tile rows.
+    #[test]
+    fn sampled_apply_matches_dense() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        let m = 45;
+        let x = random_symmetric(m, &mut rng);
+        let f = DenseMat::gaussian(m, 5, &mut rng);
+        let samples = vec![0usize, 13, 13, 31, 44, 7];
+        let w = vec![0.5, 1.0, 2.0, 0.25, 1.5, 0.75];
+        let want = SymOp::sampled_apply(&x, &f, &samples, &w);
+        for block in [8usize, 16, 64] {
+            let sp = SymPacked::from_dense_with_block(&x, block);
+            let mut got = DenseMat::zeros(m, 5);
+            got.fill(-9.0); // stale data must be overwritten
+            SymOp::sampled_apply_into(&sp, &f, &samples, &w, &mut got);
+            let err = got.diff_fro(&want);
+            assert!(err < 1e-12 * (1.0 + want.fro_norm()), "block={block}: err={err}");
+        }
+    }
+
+    /// Construction from CSR matches construction from the densified
+    /// matrix (and the production from_dense block size).
+    #[test]
+    fn from_csr_matches_dense_path() {
+        let mut rng = Pcg64::seed_from_u64(8);
+        let n = 40;
+        let mut trips = Vec::new();
+        for i in 0..n {
+            for j in i..n {
+                if rng.uniform() < 0.3 {
+                    let v = rng.uniform();
+                    trips.push((i, j, v));
+                    if i != j {
+                        trips.push((j, i, v));
+                    }
+                }
+            }
+        }
+        let sp_mat = CsrMat::from_coo(n, n, trips);
+        let packed = SymPacked::from_csr(&sp_mat);
+        let dense = sp_mat.to_dense();
+        let f = DenseMat::gaussian(n, 4, &mut rng);
+        let got = SymOp::apply(&packed, &f);
+        let want = sp_mat.apply(&f);
+        assert!(got.diff_fro(&want) < 1e-12 * (1.0 + want.fro_norm()));
+        assert!((SymOp::fro_norm_sq(&packed) - SymOp::fro_norm_sq(&dense)).abs() < 1e-12);
+    }
+
+    /// When X[i,j] ≠ X[j,i], the upper triangle wins everywhere —
+    /// including inside diagonal tiles.
+    #[test]
+    fn upper_triangle_wins_on_asymmetric_input() {
+        let x = DenseMat::from_fn(5, 5, |i, j| (10 * i + j) as f64);
+        let sp = SymPacked::from_dense_with_block(&x, 2);
+        let d = sp.to_dense();
+        for i in 0..5 {
+            for j in 0..5 {
+                let (a, b) = if i <= j { (i, j) } else { (j, i) };
+                assert_eq!(d.at(i, j), (10 * a + b) as f64, "({i},{j})");
+            }
+        }
+    }
+}

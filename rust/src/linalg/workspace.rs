@@ -24,6 +24,39 @@
 
 use crate::linalg::DenseMat;
 
+/// Reusable packing target for the tile-major B panels of the packed NT
+/// microkernel (see the `linalg::blas` header): capacity grows to the
+/// largest packed operand requested and is then reused, so steady-state
+/// panel packing performs no heap allocation. `blas` holds one per
+/// thread (thread-local), mirroring the accumulator-pool pattern, so
+/// batched trial workers never contend on a shared buffer.
+#[derive(Debug, Default)]
+pub struct PanelBuf {
+    data: Vec<f64>,
+}
+
+impl PanelBuf {
+    pub fn new() -> PanelBuf {
+        PanelBuf { data: Vec::new() }
+    }
+
+    /// A zeroed-capacity packing target of exactly `len` elements. Grows
+    /// (amortized, geometric) only when `len` exceeds every previous
+    /// request on this buffer; the packing routines overwrite the full
+    /// slice, so stale contents never leak into a product.
+    pub fn packed(&mut self, len: usize) -> &mut [f64] {
+        if self.data.len() < len {
+            self.data.resize(len, 0.0);
+        }
+        &mut self.data[..len]
+    }
+
+    /// Data pointer, for allocation-stability assertions in tests.
+    pub fn as_ptr(&self) -> *const f64 {
+        self.data.as_ptr()
+    }
+}
+
 /// Scratch buffers for the Update(G, Y) rules (BPP / HALS / MU), shared
 /// across rules so one workspace serves whatever `opts.rule` selects:
 ///
@@ -102,6 +135,21 @@ impl IterWorkspace {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// PanelBuf grows once and then serves smaller requests from the
+    /// same allocation (the steady-state zero-allocation property the
+    /// packed matmul paths rely on).
+    #[test]
+    fn panel_buf_reuses_allocation() {
+        let mut buf = PanelBuf::new();
+        let big = buf.packed(1024).len();
+        assert_eq!(big, 1024);
+        let ptr = buf.as_ptr();
+        assert_eq!(buf.packed(512).len(), 512);
+        assert_eq!(buf.as_ptr(), ptr, "shrinking request must not reallocate");
+        assert_eq!(buf.packed(1024).len(), 1024);
+        assert_eq!(buf.as_ptr(), ptr, "repeat of the high-water mark must not reallocate");
+    }
 
     #[test]
     fn shapes_are_consistent() {

@@ -107,7 +107,7 @@ pub fn fix_zero_columns(w: &mut DenseMat, eps: f64) -> usize {
     let (m, k) = w.shape();
     let mut fixed = 0;
     for j in 0..k {
-        let norm_sq: f64 = (0..m).map(|i| w.at(i, j) * w.at(i, j)).sum();
+        let norm_sq: f64 = w.col_iter(j).map(|v| v * v).sum();
         if norm_sq < eps * eps {
             for i in 0..m {
                 w.set(i, j, eps);

@@ -47,10 +47,14 @@ impl SampleMatrix {
 
 /// Standard leverage-score sampling (Eq. 2.11): draw `s` rows i.i.d. with
 /// replacement with p_i = l_i / Σl, rescale by 1/√(s·p_i).
+///
+/// The normalizer Σl is read from the alias table's cached total
+/// ([`AliasTable::total`], bitwise-identical to a re-sum), so this
+/// per-iteration call makes ONE pass over the leverage vector (the table
+/// build) instead of two.
 pub fn sample_standard(leverage: &[f64], s: usize, rng: &mut Pcg64) -> SampleMatrix {
-    let total: f64 = leverage.iter().sum();
-    assert!(total > 0.0, "leverage scores sum to zero");
-    let table = AliasTable::new(leverage);
+    let table = AliasTable::new(leverage); // asserts Σl > 0
+    let total = table.total();
     let indices = table.sample_many(rng, s);
     let scales = indices
         .iter()
@@ -76,8 +80,13 @@ pub fn sample_hybrid(
     tau: f64,
     rng: &mut Pcg64,
 ) -> SampleMatrix {
-    let k: f64 = leverage.iter().sum(); // Σ l_i = rank (= k for full-rank F)
-    assert!(k > 0.0);
+    // Σ l_i = rank (= k for full-rank F): read from the alias table's
+    // cached normalizer instead of a separate pass. When no row crosses
+    // the deterministic threshold (e.g. τ = 1 — the residual weights
+    // equal the leverage vector) the table is reused for the random
+    // draws, so that common path builds and sums the vector exactly once.
+    let table_all = AliasTable::new(leverage); // asserts Σ l_i > 0
+    let k = table_all.total();
     let mut det: Vec<usize> = Vec::new();
     let mut theta = 0.0;
     for (i, &l) in leverage.iter().enumerate() {
@@ -101,20 +110,34 @@ pub fn sample_hybrid(
     let mut scales = vec![1.0; s_d];
 
     if s_r > 0 {
-        let in_det: std::collections::HashSet<usize> = det.iter().copied().collect();
         let xi: f64 = k - theta;
-        // residual weights over the non-deterministic rows
-        let mut resid = leverage.to_vec();
-        for &i in &in_det {
-            resid[i] = 0.0;
-        }
-        if xi > 1e-300 && resid.iter().any(|&w| w > 0.0) {
-            let table = AliasTable::new(&resid);
-            for _ in 0..s_r {
-                let i = table.sample(rng);
-                let p = leverage[i] / xi; // renormalized p̃_i
-                indices.push(i);
-                scales.push(1.0 / (s_r as f64 * p).sqrt());
+        if det.is_empty() {
+            // no deterministic rows: the residual distribution IS the
+            // leverage distribution (θ = 0, ξ = k) — reuse the table
+            // built for the normalizer.
+            if xi > 1e-300 {
+                for _ in 0..s_r {
+                    let i = table_all.sample(rng);
+                    let p = leverage[i] / xi; // renormalized p̃_i
+                    indices.push(i);
+                    scales.push(1.0 / (s_r as f64 * p).sqrt());
+                }
+            }
+        } else {
+            let in_det: std::collections::HashSet<usize> = det.iter().copied().collect();
+            // residual weights over the non-deterministic rows
+            let mut resid = leverage.to_vec();
+            for &i in &in_det {
+                resid[i] = 0.0;
+            }
+            if xi > 1e-300 && resid.iter().any(|&w| w > 0.0) {
+                let table = AliasTable::new(&resid);
+                for _ in 0..s_r {
+                    let i = table.sample(rng);
+                    let p = leverage[i] / xi; // renormalized p̃_i
+                    indices.push(i);
+                    scales.push(1.0 / (s_r as f64 * p).sqrt());
+                }
             }
         }
     }

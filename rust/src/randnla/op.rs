@@ -9,6 +9,9 @@
 //!  * a dense [`DenseMat`] (the cache-blocked symmetric kernel
 //!    `blas::symm_tall_into`, which skips strictly-lower off-diagonal
 //!    blocks of X — X must still be stored in full),
+//!  * a packed-triangular dense [`crate::linalg::SymPacked`] (upper
+//!    triangle only, block-panel layout — half the resident footprint,
+//!    same blocked kernel structure),
 //!  * a sparse [`CsrMat`] (column-panel-tiled CSR SpMM),
 //!  * a PJRT-backed dense operator ([`crate::runtime::exec::PjrtSymOp`])
 //!    whose X·F executes the AOT-compiled Pallas kernel, and

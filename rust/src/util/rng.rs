@@ -117,6 +117,11 @@ impl Pcg64 {
 pub struct AliasTable {
     prob: Vec<f64>,
     alias: Vec<usize>,
+    /// Σ weights, cached at construction: the normalization every
+    /// sampling probability divides by. Callers that need p_i = w_i/Σw
+    /// (the leverage-score rescale factors of Eq. 2.11) read it from
+    /// here instead of re-summing the weight vector per call site.
+    total: f64,
 }
 
 impl AliasTable {
@@ -150,7 +155,16 @@ impl AliasTable {
         for &i in small.iter().chain(large.iter()) {
             prob[i] = 1.0;
         }
-        AliasTable { prob, alias }
+        AliasTable { prob, alias, total }
+    }
+
+    /// Σ of the construction weights (the row-probability normalizer),
+    /// summed in the same left-to-right order a caller-side
+    /// `weights.iter().sum()` would use — so substituting this cached
+    /// value for a re-sum is bitwise-neutral.
+    #[inline]
+    pub fn total(&self) -> f64 {
+        self.total
     }
 
     /// Draw one index.
@@ -228,6 +242,16 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         assert!(mean.abs() < 0.02, "mean={mean}");
         assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    /// The cached normalizer equals the caller-side sum bitwise (the
+    /// leverage sampler substitutes it for a re-sum of the weights).
+    #[test]
+    fn alias_table_total_matches_weight_sum() {
+        let weights = [0.1, 2.7, 0.0, 5.5, 1.3];
+        let table = AliasTable::new(&weights);
+        let manual: f64 = weights.iter().sum();
+        assert_eq!(table.total().to_bits(), manual.to_bits());
     }
 
     #[test]

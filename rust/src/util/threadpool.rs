@@ -6,12 +6,35 @@
 //! multicore machines the dense kernels in `linalg::blas`, the CSR SpMM,
 //! and the batched trial driver pick it up.
 //!
+//! ## Logical width vs physical width (the thread-budget contract)
+//!
+//! Two distinct thread counts govern every kernel:
+//!
+//! * **Logical width** — [`num_threads`], resolved once per process.
+//!   Any structure that affects floating-point results (the blocked-SYMM
+//!   accumulator count and its fixed reduction order, the SYMM dispatch
+//!   predicate) must be derived from this value ONLY, so results are a
+//!   function of the process configuration, never of scheduling.
+//! * **Physical width** — [`current_threads`], the logical width capped
+//!   by the innermost [`with_thread_budget`] scope on the calling thread.
+//!   It bounds how many OS threads a parallel construct may spawn.
+//!
+//! The contract that makes the cap harmless: every `parallel_for_chunks`
+//! body computes each index's result independently of the partitioning
+//! (all call sites are per-row writes with no cross-chunk reduction), so
+//! shrinking the physical width changes scheduling but not one bit of
+//! output. Kernels whose FP order *does* depend on a worker count (the
+//! SYMM accumulator pool) keep `num_threads()` accumulator slots and
+//! merely run those slots on fewer OS threads — see
+//! `linalg::blas::pair_pool_accumulate`. This is what lets
+//! `run_trials_batched` split the machine between trial workers and
+//! inner kernels while staying bitwise identical to the serial driver.
+//!
 //! The worker count is resolved **once per process** (see
 //! [`num_threads`]) and chunk sizes are balanced to within one element,
-//! so the partitioning seen by every kernel is deterministic — a property
-//! the batched multi-seed driver relies on for bitwise-reproducible
-//! trials.
+//! so the partitioning seen by every kernel is deterministic.
 
+use std::cell::Cell;
 use std::sync::OnceLock;
 
 /// Raw mutable pointer wrapper so disjoint index ranges of one output
@@ -33,9 +56,19 @@ unsafe impl Sync for SendPtr {}
 /// path.
 static NUM_THREADS: OnceLock<usize> = OnceLock::new();
 
+thread_local! {
+    /// Innermost thread budget on this thread: 0 = unbudgeted (full
+    /// machine width). Set only through [`with_thread_budget`].
+    static BUDGET: Cell<usize> = const { Cell::new(0) };
+}
+
 /// Number of worker threads to use: `SYMNMF_THREADS` env or available
 /// parallelism. Resolved once per process and cached — changing the
 /// environment variable after the first kernel call has no effect.
+///
+/// This is the **logical** width: FP-affecting kernel geometry (the
+/// SYMM accumulator count, dispatch predicates) must use it, never
+/// [`current_threads`], so results are budget-independent.
 pub fn num_threads() -> usize {
     *NUM_THREADS.get_or_init(|| {
         if let Ok(v) = std::env::var("SYMNMF_THREADS") {
@@ -47,6 +80,43 @@ pub fn num_threads() -> usize {
             .map(|n| n.get())
             .unwrap_or(1)
     })
+}
+
+/// Effective **physical** width for the calling thread: [`num_threads`]
+/// capped by the innermost [`with_thread_budget`] scope. Parallel
+/// constructs spawn at most this many workers; it never influences what
+/// is computed, only how many OS threads compute it.
+pub fn current_threads() -> usize {
+    let b = BUDGET.with(Cell::get);
+    let nt = num_threads();
+    if b == 0 {
+        nt
+    } else {
+        b.min(nt)
+    }
+}
+
+/// Run `f` with this thread's physical width capped at `n` (floored at
+/// 1). Budgets nest by taking the minimum, and the previous budget is
+/// restored when the scope ends — including on unwind, so a panicking
+/// trial worker does not leak its cap to later work on a pooled thread.
+///
+/// The budget is per-thread: the batched trial driver sets it *inside*
+/// each trial worker's closure, so each worker (and every kernel the
+/// solver runs on that worker) sees the split width while the kernels'
+/// FP geometry stays pinned to [`num_threads`].
+pub fn with_thread_budget<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            BUDGET.with(|b| b.set(self.0));
+        }
+    }
+    let prev = BUDGET.with(Cell::get);
+    let cap = if prev == 0 { n.max(1) } else { prev.min(n.max(1)) };
+    let _restore = Restore(prev);
+    BUDGET.with(|b| b.set(cap));
+    f()
 }
 
 /// The `c`-th of `chunks` balanced contiguous ranges covering `0..n`:
@@ -67,7 +137,10 @@ fn chunk_range(n: usize, chunks: usize, c: usize) -> (usize, usize) {
 }
 
 /// Run `body(lo, hi)` over disjoint subranges covering `0..n` in parallel.
-/// `body` must be safe to run concurrently on disjoint ranges.
+/// `body` must be safe to run concurrently on disjoint ranges, and must
+/// compute each index's result independently of the partitioning (every
+/// call site is a per-row write) — that is what makes the thread-budget
+/// cap on the worker count output-neutral.
 pub fn parallel_for_chunks<F>(n: usize, min_chunk: usize, body: F)
 where
     F: Fn(usize, usize) + Sync,
@@ -75,12 +148,16 @@ where
     if n == 0 {
         return;
     }
-    let nt = num_threads();
+    let nt = current_threads();
     if nt <= 1 || n <= min_chunk {
         body(0, n);
         return;
     }
     let chunks = nt.min(n.div_ceil(min_chunk)).max(1);
+    // Workers inherit an even split of this scope's width (spawned
+    // threads start with fresh thread-locals), so nested parallel
+    // constructs inside `body` cannot oversubscribe a budgeted scope.
+    let child = (nt / chunks).max(1);
     std::thread::scope(|s| {
         for c in 0..chunks {
             let (lo, hi) = chunk_range(n, chunks, c);
@@ -88,19 +165,21 @@ where
                 continue;
             }
             let body = &body;
-            s.spawn(move || body(lo, hi));
+            s.spawn(move || with_thread_budget(child, || body(lo, hi)));
         }
     });
 }
 
 /// Map over `0..n`, writing results into a pre-allocated vec (each index
-/// written exactly once by one worker).
+/// written exactly once by one worker). Worker count is capped by the
+/// calling thread's budget; slot results are independent of the
+/// partitioning, so the cap is output-neutral.
 pub fn parallel_map_into<T: Send + Sync, F>(out: &mut [T], min_chunk: usize, f: F)
 where
     F: Fn(usize, &mut T) + Sync,
 {
     let n = out.len();
-    let nt = num_threads();
+    let nt = current_threads();
     if nt <= 1 || n <= min_chunk {
         for (i, slot) in out.iter_mut().enumerate() {
             f(i, slot);
@@ -108,6 +187,11 @@ where
         return;
     }
     let chunks = nt.min(n.div_ceil(min_chunk)).max(1);
+    // Even split of this scope's width, as in `parallel_for_chunks`: the
+    // batched trial driver's solver bodies nest kernel parallelism, and
+    // inheritance is what keeps a budgeted batched run's total OS-thread
+    // demand at ≈ the budget.
+    let child = (nt / chunks).max(1);
     std::thread::scope(|s| {
         // split_at_mut based partitioning, balanced to within one element;
         // chunk_range tiles 0..n contiguously, so `lo` is each chunk's
@@ -122,9 +206,11 @@ where
             rest = tail;
             let f = &f;
             s.spawn(move || {
-                for (i, slot) in head.iter_mut().enumerate() {
-                    f(lo + i, slot);
-                }
+                with_thread_budget(child, || {
+                    for (i, slot) in head.iter_mut().enumerate() {
+                        f(lo + i, slot);
+                    }
+                })
             });
         }
     });
@@ -189,5 +275,61 @@ mod tests {
                 assert!(max - min <= 1, "n={n} chunks={chunks}: {sizes:?}");
             }
         }
+    }
+
+    /// Budgets cap, nest by min, and restore on scope exit.
+    #[test]
+    fn thread_budget_caps_nests_and_restores() {
+        let full = num_threads();
+        assert_eq!(current_threads(), full, "unbudgeted = full width");
+        with_thread_budget(1, || {
+            assert_eq!(current_threads(), 1);
+            // nesting can only tighten, never widen
+            with_thread_budget(8, || {
+                assert_eq!(current_threads(), 1);
+            });
+            assert_eq!(current_threads(), 1);
+        });
+        assert_eq!(current_threads(), full, "budget must restore");
+        with_thread_budget(2, || {
+            assert_eq!(current_threads(), 2.min(full));
+        });
+        // a zero request is floored at one, not treated as "unbudgeted"
+        with_thread_budget(0, || {
+            assert_eq!(current_threads(), 1);
+        });
+    }
+
+    /// The budget restores even when the scope unwinds (pooled trial
+    /// workers must not leak caps into later work).
+    #[test]
+    fn thread_budget_restores_on_panic() {
+        let full = current_threads();
+        let r = std::panic::catch_unwind(|| {
+            with_thread_budget(1, || panic!("boom"));
+        });
+        assert!(r.is_err());
+        assert_eq!(current_threads(), full, "budget leaked past unwind");
+    }
+
+    /// Under a budget the parallel constructs still cover every index
+    /// exactly once (the cap is scheduling-only).
+    #[test]
+    fn budgeted_constructs_still_cover_indices() {
+        with_thread_budget(2, || {
+            let n = 513;
+            let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            parallel_for_chunks(n, 4, |lo, hi| {
+                for i in lo..hi {
+                    counts[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+            let mut out = vec![0usize; 97];
+            parallel_map_into(&mut out, 1, |i, slot| *slot = i + 1);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i + 1);
+            }
+        });
     }
 }

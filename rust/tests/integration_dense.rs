@@ -2,12 +2,34 @@
 //! tf-idf → EDVW adjacency → every SymNMF method → clustering quality.
 
 use symnmf::clustering::ari::adjusted_rand_index;
-use symnmf::coordinator::driver::{run_trials, Method};
+use symnmf::coordinator::driver::{
+    batch_trials_enabled, run_trials, run_trials_batched, Method, MethodStats,
+};
 use symnmf::coordinator::experiments::{fig1_table2_methods, wos_workload};
 use symnmf::coordinator::report;
+use symnmf::linalg::DenseMat;
 use symnmf::nls::UpdateRule;
 use symnmf::symnmf::SymNmfOptions;
 use symnmf::util::rng::Pcg64;
+
+/// Run trials through the driver the environment selects:
+/// `SYMNMF_BATCH_TRIALS=1` (the CI bench-regression job sets it) routes
+/// the whole dense pipeline through the batched multi-seed driver, which
+/// is bitwise-identical to the serial path — so every assertion below
+/// holds for both.
+fn drive(
+    method: Method,
+    x: &DenseMat,
+    opts: &SymNmfOptions,
+    labels: Option<&[usize]>,
+    trials: usize,
+) -> MethodStats {
+    if batch_trials_enabled() {
+        run_trials_batched(method, x, opts, labels, trials)
+    } else {
+        run_trials(method, x, opts, labels, trials)
+    }
+}
 
 #[test]
 fn wos_pipeline_all_methods_cluster_better_than_chance() {
@@ -15,7 +37,7 @@ fn wos_pipeline_all_methods_cluster_better_than_chance() {
     let mut opts = SymNmfOptions::new(7).with_seed(1);
     opts.max_iters = 60;
     for method in fig1_table2_methods() {
-        let stats = run_trials(method, &w.adjacency, &opts, Some(&w.labels), 1);
+        let stats = drive(method, &w.adjacency, &opts, Some(&w.labels), 1);
         assert!(
             stats.mean_ari > 0.15,
             "{}: ARI {} not better than chance",
@@ -36,14 +58,14 @@ fn randomized_methods_preserve_quality_vs_exact() {
     let w = wos_workload(140, 3);
     let mut opts = SymNmfOptions::new(7).with_seed(2);
     opts.max_iters = 80;
-    let exact = run_trials(
+    let exact = drive(
         Method::Exact(UpdateRule::Hals),
         &w.adjacency,
         &opts,
         Some(&w.labels),
         2,
     );
-    let lai = run_trials(
+    let lai = drive(
         Method::Lai { rule: UpdateRule::Hals, refine: false },
         &w.adjacency,
         &opts,
@@ -80,7 +102,7 @@ fn report_artifacts_are_generated() {
     let w = wos_workload(100, 5);
     let mut opts = SymNmfOptions::new(7).with_seed(4);
     opts.max_iters = 10;
-    let stats = vec![run_trials(
+    let stats = vec![drive(
         Method::Lai { rule: UpdateRule::Hals, refine: false },
         &w.adjacency,
         &opts,
