@@ -17,16 +17,19 @@
 use std::rc::Rc;
 use symnmf::coordinator::driver::{run_trials, run_trials_batched};
 use symnmf::coordinator::Method;
-use symnmf::linalg::{blas, qr, DenseMat, SymPacked};
+use symnmf::linalg::{blas, qr, DenseMat, PanelBuf, SymPacked};
 use symnmf::nls::{bpp, hals, UpdateRule};
 use symnmf::randnla::leverage::sample_hybrid;
 use symnmf::randnla::SymOp;
 use symnmf::runtime::{PjrtRuntime, PjrtSymOp};
 use symnmf::sparse::CsrMat;
+use symnmf::symnmf::anls::{resolve_alpha, run_alternating_loop, symnmf_anls, Metrics};
+use symnmf::symnmf::init::initial_factor;
 use symnmf::symnmf::options::SymNmfOptions;
 use symnmf::util::bench::{bench, gflops, BenchResult};
 use symnmf::util::json::Json;
 use symnmf::util::rng::Pcg64;
+use symnmf::util::timer::PhaseTimer;
 
 /// One record of the JSON report.
 struct Record {
@@ -347,6 +350,98 @@ fn main() {
         &r_budget,
         0.0,
     );
+
+    // --- engine outer loop vs the frozen legacy loop (Exact-HALS on the
+    // acceptance shape m=2048/k=32, 3 iterations per solve): the delta is
+    // the per-step overhead of the resumable engine machinery — it should
+    // be noise against the three m²k products every iteration performs ---
+    let eng_opts = {
+        let mut o = SymNmfOptions::new(k2).with_rule(UpdateRule::Hals).with_seed(5);
+        o.max_iters = 3;
+        o.patience = usize::MAX; // fixed 3 iterations, no early stop
+        o
+    };
+    let eng_flops = 3.0 * 3.0 * flops2; // 3 iters × (2 update + 1 metric) X·F
+    let r_eng = bench(&format!("engine loop Exact-HALS ({m2}², k={k2}, 3 iters)"), 1, 5, || {
+        std::hint::black_box(symnmf_anls(&x2, &eng_opts));
+    });
+    println!("{}   {:.2} GF/s", r_eng.report(), gflops(eng_flops, r_eng.median));
+    record(
+        &mut records,
+        "engine_step_overhead",
+        &format!("m={m2} k={k2} x3"),
+        &r_eng,
+        eng_flops,
+    );
+    let r_leg = bench(&format!("legacy loop Exact-HALS ({m2}², k={k2}, 3 iters)"), 1, 5, || {
+        let mut rng = Pcg64::seed_from_u64(eng_opts.seed);
+        let alpha = resolve_alpha(&x2, &eng_opts);
+        let h0 = initial_factor(&x2, &eng_opts, &mut rng);
+        let metrics = Metrics::new(&x2, true);
+        std::hint::black_box(run_alternating_loop(
+            &x2,
+            alpha,
+            &eng_opts,
+            h0,
+            &metrics,
+            "HALS".to_string(),
+            0.0,
+            PhaseTimer::new(),
+        ));
+    });
+    println!("{}   {:.2} GF/s", r_leg.report(), gflops(eng_flops, r_leg.median));
+    record(
+        &mut records,
+        "legacy_loop_step",
+        &format!("m={m2} k={k2} x3"),
+        &r_leg,
+        eng_flops,
+    );
+    println!(
+        "engine vs legacy loop at m={m2}, k={k2}: {:.2}% time",
+        100.0 * r_eng.median / r_leg.median.max(1e-300)
+    );
+
+    // --- streamed CSR → SymPacked construction (no transient dense) ---
+    let m4 = 4096;
+    let mut sp4_trips = Vec::new();
+    for i in 0..m4 {
+        for _ in 0..10 {
+            let j = rng.below(m4);
+            let v = 1.0 + rng.uniform();
+            sp4_trips.push((i, j, v));
+            if i != j {
+                sp4_trips.push((j, i, v));
+            }
+        }
+    }
+    let sp4 = CsrMat::from_coo(m4, m4, sp4_trips);
+    let r_csr = bench(
+        &format!("SymPacked::from_csr streamed ({m4}², {} nnz)", sp4.nnz()),
+        1,
+        5,
+        || {
+            std::hint::black_box(SymPacked::from_csr(&sp4));
+        },
+    );
+    println!("{}", r_csr.report());
+    record(
+        &mut records,
+        "from_csr_streamed",
+        &format!("{m4}x{m4} nnz={}", sp4.nnz()),
+        &r_csr,
+        0.0,
+    );
+
+    // --- parallel panel packing (wide B: 256 panels split across
+    // workers; pure data movement, bitwise-neutral) ---
+    let pk_b = DenseMat::gaussian(2048, 256, &mut rng);
+    let mut pk_buf = PanelBuf::new();
+    let r_pack = bench("pack B panels, parallel (2048x256 → 256 panels)", 2, 9, || {
+        std::hint::black_box(blas::pack_nt_panels(&pk_b, &mut pk_buf));
+    });
+    println!("{}", r_pack.report());
+    record(&mut records, "pack_b_panels_par", "2048x256", &r_pack, 0.0);
 
     // --- sampled SpMM (LvS inner product, s = 0.05·n) ---
     let h = DenseMat::gaussian(n, k, &mut rng);

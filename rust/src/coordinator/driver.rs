@@ -7,18 +7,26 @@
 //! different seeds and aggregates the Table-2 statistics;
 //! [`run_trials_batched`] runs the same seed schedule concurrently over
 //! one shared read-only operator with bitwise-identical per-seed results.
+//!
+//! All dispatch drives the resumable solver engine
+//! ([`crate::symnmf::engine`]) directly: [`Method::run_controlled`]
+//! exposes deadline/pause budgets and checkpoint resume per solve, and
+//! [`run_trials_batched_controlled`] extends that to whole trial fleets
+//! (one checkpoint per seed). The plain entry points honor the
+//! `SYMNMF_DEADLINE_MS` environment deadline.
 
 use crate::clustering::ari::adjusted_rand_index;
 use crate::linalg::{DenseMat, SymPacked};
 use crate::nls::UpdateRule;
 use crate::randnla::SymOp;
 use crate::util::threadpool::{num_threads, parallel_map_into, with_thread_budget};
-use crate::symnmf::anls::symnmf_anls;
-use crate::symnmf::compressed::compressed_symnmf;
-use crate::symnmf::lai::lai_symnmf;
-use crate::symnmf::lvs::lvs_symnmf;
+use crate::symnmf::anls::symnmf_anls_run;
+use crate::symnmf::compressed::compressed_symnmf_run;
+use crate::symnmf::engine::{Checkpoint, EngineRun, RunControl};
+use crate::symnmf::lai::lai_symnmf_run;
+use crate::symnmf::lvs::lvs_symnmf_run;
 use crate::symnmf::options::{SymNmfOptions, Tau};
-use crate::symnmf::pgncg::{lai_pgncg_symnmf, pgncg_symnmf};
+use crate::symnmf::pgncg::{lai_pgncg_symnmf_run, pgncg_symnmf_run};
 use crate::symnmf::SymNmfResult;
 
 /// Every §5 algorithm variant.
@@ -71,32 +79,49 @@ impl Method {
     }
 
     /// Run once on `x` with the given base options (rule/τ/refine fields
-    /// are overridden by the method variant).
+    /// are overridden by the method variant), honoring the
+    /// `SYMNMF_DEADLINE_MS` environment deadline like every plain entry
+    /// point.
     pub fn run<X: SymOp>(&self, x: &X, base: &SymNmfOptions) -> SymNmfResult {
+        self.run_controlled(x, base, &RunControl::from_env(), None).result
+    }
+
+    /// Drive the method's engine directly: explicit deadline/pause
+    /// budget, optional checkpoint resume. All method dispatch funnels
+    /// through here — [`Method::run`] and the trial drivers are thin
+    /// layers on top, so every method gets deadline stopping and
+    /// pause/resume from the one shared outer loop.
+    pub fn run_controlled<X: SymOp>(
+        &self,
+        x: &X,
+        base: &SymNmfOptions,
+        ctrl: &RunControl,
+        resume: Option<&Checkpoint>,
+    ) -> EngineRun {
         let mut opts = base.clone();
         match *self {
             Method::Exact(rule) => {
                 opts.rule = rule;
-                symnmf_anls(x, &opts)
+                symnmf_anls_run(x, &opts, ctrl, resume, None)
             }
             Method::Lai { rule, refine } => {
                 opts.rule = rule;
                 opts.refine = refine;
-                lai_symnmf(x, &opts)
+                lai_symnmf_run(x, &opts, ctrl, resume, None)
             }
             Method::Comp(rule) => {
                 opts.rule = rule;
-                compressed_symnmf(x, &opts)
+                compressed_symnmf_run(x, &opts, ctrl, resume, None)
             }
-            Method::Pgncg => pgncg_symnmf(x, &opts),
+            Method::Pgncg => pgncg_symnmf_run(x, &opts, ctrl, resume, None),
             Method::LaiPgncg { refine } => {
                 opts.refine = refine;
-                lai_pgncg_symnmf(x, &opts)
+                lai_pgncg_symnmf_run(x, &opts, ctrl, resume, None)
             }
             Method::Lvs { rule, tau } => {
                 opts.rule = rule;
                 opts.tau = tau;
-                lvs_symnmf(x, &opts)
+                lvs_symnmf_run(x, &opts, ctrl, resume, None)
             }
         }
     }
@@ -216,21 +241,65 @@ pub fn run_trials_batched<X: SymOp + Sync>(
     labels: Option<&[usize]>,
     trials: usize,
 ) -> MethodStats {
+    run_trials_batched_controlled(
+        method,
+        x,
+        base,
+        labels,
+        trials,
+        &RunControl::from_env(),
+        None,
+    )
+    .0
+}
+
+/// Batched multi-seed trials under an explicit engine budget — the
+/// driver face of the resumable solver engine. Every trial worker drives
+/// its method's engine through [`Method::run_controlled`], so the whole
+/// fleet gets **deadline stopping and pause/resume for free**: an
+/// interrupted call returns one [`Checkpoint`] per trial (same seed
+/// schedule as [`run_trials`]), and passing those checkpoints back as
+/// `resume` continues every trial bitwise where it stopped — the
+/// concatenated fleet equals an uninterrupted run bit for bit (a test
+/// pins this), because the budget machinery only ever cuts iteration
+/// sequences short, never perturbs them.
+pub fn run_trials_batched_controlled<X: SymOp + Sync>(
+    method: Method,
+    x: &X,
+    base: &SymNmfOptions,
+    labels: Option<&[usize]>,
+    trials: usize,
+    ctrl: &RunControl,
+    resume: Option<&[Checkpoint]>,
+) -> (MethodStats, Vec<Checkpoint>) {
     assert!(trials >= 1);
+    if let Some(cps) = resume {
+        assert_eq!(cps.len(), trials, "need one checkpoint per trial");
+    }
     let nt = num_threads();
     let workers = nt.min(trials).max(1);
     let inner = (nt / workers).max(1);
-    let mut slots: Vec<Option<SymNmfResult>> = (0..trials).map(|_| None).collect();
+    let mut slots: Vec<Option<EngineRun>> = (0..trials).map(|_| None).collect();
     parallel_map_into(&mut slots, 1, |t, slot| {
         // The budget is set on the trial worker's own thread, so every
         // kernel the solver runs on this worker sees the split width.
         *slot = Some(with_thread_budget(inner, || {
-            method.run(x, &trial_options(base, t))
+            method.run_controlled(
+                x,
+                &trial_options(base, t),
+                ctrl,
+                resume.map(|cps| &cps[t]),
+            )
         }));
     });
-    let results: Vec<SymNmfResult> =
-        slots.into_iter().map(|r| r.expect("every trial slot is written")).collect();
-    aggregate(method.label(), results, labels)
+    let mut results = Vec::with_capacity(trials);
+    let mut checkpoints = Vec::with_capacity(trials);
+    for slot in slots {
+        let run = slot.expect("every trial slot is written");
+        results.push(run.result);
+        checkpoints.push(run.checkpoint);
+    }
+    (aggregate(method.label(), results, labels), checkpoints)
 }
 
 /// Is the packed-X staging option on? `SYMNMF_PACKED_X=1` makes the
@@ -424,6 +493,100 @@ mod tests {
                         "budget {budget} trial {t}: residual differs"
                     );
                 }
+            }
+        }
+    }
+
+    /// The engine-era acceptance: a batched fleet paused mid-solve (one
+    /// serialized checkpoint per trial) and then resumed reproduces the
+    /// uninterrupted serial run bitwise — pause/resume and deadline
+    /// semantics come to the trial drivers for free from the shared
+    /// engine loop.
+    #[test]
+    fn batched_controlled_pause_resume_bitwise() {
+        use crate::symnmf::engine::RunStatus;
+        let (x, labels) = planted(48, 3, 21);
+        let mut opts = SymNmfOptions::new(3);
+        opts.max_iters = 8;
+        let method = Method::Exact(UpdateRule::Hals);
+        let full = run_trials(method, &x, &opts, Some(&labels), 3);
+        let (paused, cps) = run_trials_batched_controlled(
+            method,
+            &x,
+            &opts,
+            Some(&labels),
+            3,
+            &RunControl::unlimited().with_max_steps(3),
+            None,
+        );
+        for (t, r) in paused.trials.iter().enumerate() {
+            assert_eq!(r.iters(), 3, "trial {t} must pause after 3 steps");
+        }
+        // serialize → parse each checkpoint, then resume the fleet
+        let cps: Vec<Checkpoint> = cps
+            .iter()
+            .map(|c| Checkpoint::parse(&c.serialize()).expect("roundtrip"))
+            .collect();
+        let (resumed, done) = run_trials_batched_controlled(
+            method,
+            &x,
+            &opts,
+            Some(&labels),
+            3,
+            &RunControl::unlimited(),
+            Some(&cps),
+        );
+        assert!(done.iter().all(|c| c.status == RunStatus::Completed));
+        for (t, (a, b)) in full.trials.iter().zip(&resumed.trials).enumerate() {
+            assert_eq!(a.iters(), b.iters(), "trial {t}");
+            for (va, vb) in a.h.data().iter().zip(b.h.data()) {
+                assert_eq!(va.to_bits(), vb.to_bits(), "trial {t}: H differs");
+            }
+            for (ra, rb) in a.records.iter().zip(&b.records) {
+                assert_eq!(
+                    ra.residual.to_bits(),
+                    rb.residual.to_bits(),
+                    "trial {t}: residual differs"
+                );
+            }
+        }
+    }
+
+    /// A fleet under a zero deadline returns every trial's initial
+    /// iterate unstepped, and resuming it completes to the serial run.
+    #[test]
+    fn batched_controlled_deadline_zero_then_resume() {
+        use crate::symnmf::engine::RunStatus;
+        let (x, labels) = planted(40, 2, 33);
+        let mut opts = SymNmfOptions::new(2);
+        opts.max_iters = 5;
+        let method = Method::Exact(UpdateRule::Bpp);
+        let (dead, cps) = run_trials_batched_controlled(
+            method,
+            &x,
+            &opts,
+            Some(&labels),
+            2,
+            &RunControl::unlimited().with_deadline(0.0),
+            None,
+        );
+        for (t, (r, c)) in dead.trials.iter().zip(&cps).enumerate() {
+            assert_eq!(c.status, RunStatus::Deadline, "trial {t}");
+            assert_eq!(r.iters(), 0, "trial {t} must not step");
+        }
+        let full = run_trials(method, &x, &opts, Some(&labels), 2);
+        let (resumed, _) = run_trials_batched_controlled(
+            method,
+            &x,
+            &opts,
+            Some(&labels),
+            2,
+            &RunControl::unlimited(),
+            Some(&cps),
+        );
+        for (t, (a, b)) in full.trials.iter().zip(&resumed.trials).enumerate() {
+            for (va, vb) in a.h.data().iter().zip(b.h.data()) {
+                assert_eq!(va.to_bits(), vb.to_bits(), "trial {t}: H differs");
             }
         }
     }

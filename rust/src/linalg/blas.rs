@@ -32,7 +32,11 @@
 //! panels (n not a multiple of 8) are zero-padded during packing, so the
 //! kernel always accumulates full-width tiles and masks only the final
 //! store — the "masked edge tile". Packing is staged in a thread-local
-//! [`PanelBuf`], so the steady-state hot loop performs no allocation.
+//! [`PanelBuf`], so the steady-state hot loop performs no allocation;
+//! for wide operands (> 8 panels) the packing pass itself splits panels
+//! across the scope's [`current_threads`] workers — panels write
+//! disjoint regions and packing is FP-order-free, so the split is
+//! bitwise-neutral at any thread budget.
 //! The PR-2 2×4 unpacked kernel is retained as [`matmul_nt_into_unpacked`]
 //! — the few-row dispatch target and the oracle the packed path is
 //! pinned against.
@@ -147,31 +151,67 @@ pub fn matmul_into(a: &DenseMat, b: &DenseMat, c: &mut DenseMat) {
 /// pass to 8·256 doubles (16 KiB, L1-resident) when p is large.
 const PACK_TBLK: usize = 256;
 
+/// Pack one panel (output columns `8·jp … 8·jp+7`) of the n×p row-major
+/// B̃ operand — the inner body of [`pack_bt_panels`], factored out so the
+/// packing pass can split panels across workers.
+fn pack_bt_panel(bt: &[f64], n: usize, p: usize, jp: usize, panel: &mut [f64]) {
+    debug_assert_eq!(panel.len(), NR * p);
+    let j0 = jp * NR;
+    let w = (n - j0).min(NR);
+    if w < NR {
+        panel.fill(0.0);
+    }
+    for tb in (0..p).step_by(PACK_TBLK) {
+        let te = (tb + PACK_TBLK).min(p);
+        for jj in 0..w {
+            let row = &bt[(j0 + jj) * p..(j0 + jj + 1) * p];
+            for t in tb..te {
+                panel[t * NR + jj] = row[t];
+            }
+        }
+    }
+}
+
 /// Pack the n×p row-major B̃ operand (the logical transpose of the right
 /// operand, as handed to [`matmul_nt_into`]) into tile-major panels —
 /// see the module-header diagram. Panel `jp` holds output columns
 /// `8·jp … 8·jp+7`; within the panel, reduction step `t` stores the
 /// eight values `B̃[j0..j0+8][t]` contiguously. Columns past `n` are
 /// zero-filled so the masked edge tile accumulates exact zeros.
+///
+/// For wide operands the panels are split across the calling scope's
+/// [`current_threads`] workers: every panel writes a disjoint `dst`
+/// region and packing is pure data movement (no FP accumulation), so the
+/// parallel pass is bitwise-identical to the serial one at any thread
+/// budget. Narrow operands (≤ 8 panels, the skinny-factor hot path) stay
+/// on the calling thread — no spawn overhead where packing is cheap.
 fn pack_bt_panels(bt: &[f64], n: usize, p: usize, dst: &mut [f64]) {
-    debug_assert_eq!(dst.len(), n.div_ceil(NR) * NR * p);
-    for jp in 0..n.div_ceil(NR) {
-        let j0 = jp * NR;
-        let w = (n - j0).min(NR);
-        let panel = &mut dst[jp * NR * p..(jp + 1) * NR * p];
-        if w < NR {
-            panel.fill(0.0);
+    let np = n.div_ceil(NR);
+    debug_assert_eq!(dst.len(), np * NR * p);
+    let dptr = SendPtr(dst.as_mut_ptr());
+    parallel_for_chunks(np, 8, move |lo, hi| {
+        for jp in lo..hi {
+            // SAFETY: panel regions [jp·NR·p, (jp+1)·NR·p) are disjoint
+            // across the workers' disjoint panel ranges.
+            let panel = unsafe {
+                std::slice::from_raw_parts_mut(dptr.0.add(jp * NR * p), NR * p)
+            };
+            pack_bt_panel(bt, n, p, jp, panel);
         }
-        for tb in (0..p).step_by(PACK_TBLK) {
-            let te = (tb + PACK_TBLK).min(p);
-            for jj in 0..w {
-                let row = &bt[(j0 + jj) * p..(j0 + jj + 1) * p];
-                for t in tb..te {
-                    panel[t * NR + jj] = row[t];
-                }
-            }
-        }
-    }
+    });
+}
+
+/// Pack the NT right operand `b` (n×p row-major — already the transpose
+/// of the logical right factor) into tile-major panels inside `buf`,
+/// returning the packed length. This is exactly the packing pass of
+/// [`matmul_nt_into_packed`], exposed so benches can measure it in
+/// isolation (`pack_b_panels_par`) and tests can pin the parallel pass
+/// against a budget-capped serial run.
+pub fn pack_nt_panels(b: &DenseMat, buf: &mut PanelBuf) -> usize {
+    let (n, p) = b.shape();
+    let len = n.div_ceil(NR) * NR * p;
+    pack_bt_panels(b.data(), n, p, buf.packed(len));
+    len
 }
 
 /// Pack a p×n row-major B operand (the skinny right factor of
@@ -908,6 +948,55 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Budget-aware pack parallelism: the parallel panel-packing pass is
+    /// bitwise-identical to a budget-1 serial pass at every width
+    /// (packing is pure data movement — no FP accumulation to reorder).
+    #[test]
+    fn parallel_pack_matches_serial_bitwise() {
+        use crate::linalg::workspace::PanelBuf;
+        let mut rng = Pcg64::seed_from_u64(31);
+        for (n, p) in [(1usize, 3usize), (7, 37), (64, 300), (129, 65), (1024, 33)] {
+            let b = DenseMat::gaussian(n, p, &mut rng);
+            let mut serial = PanelBuf::new();
+            let len_s = with_thread_budget(1, || pack_nt_panels(&b, &mut serial));
+            let mut par = PanelBuf::new();
+            let len_p = pack_nt_panels(&b, &mut par);
+            assert_eq!(len_s, len_p);
+            let sv = serial.packed(len_s).to_vec();
+            for (i, (x, y)) in sv.iter().zip(par.packed(len_p).iter()).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "n={n} p={p}: packed element {i} differs"
+                );
+            }
+        }
+    }
+
+    /// Wide-B NT products (the shapes whose packing splits across
+    /// workers) stay bitwise budget-invariant and pinned to the unpacked
+    /// oracle.
+    #[test]
+    fn packed_nt_wide_b_budget_invariant_bitwise() {
+        let mut rng = Pcg64::seed_from_u64(32);
+        let a = DenseMat::gaussian(37, 29, &mut rng);
+        let b = DenseMat::gaussian(301, 29, &mut rng); // 38 panels → parallel pack
+        let mut want = DenseMat::zeros(37, 301);
+        matmul_nt_into_packed(&a, &b, &mut want);
+        for budget in [1usize, 2, 3] {
+            let mut got = DenseMat::zeros(37, 301);
+            got.fill(13.0);
+            with_thread_budget(budget, || matmul_nt_into_packed(&a, &b, &mut got));
+            for (x, y) in want.data().iter().zip(got.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "budget={budget}");
+            }
+        }
+        let mut oracle = DenseMat::zeros(37, 301);
+        matmul_nt_into_unpacked(&a, &b, &mut oracle);
+        let err = want.diff_fro(&oracle);
+        assert!(err < 1e-12 * (1.0 + oracle.fro_norm()), "err={err}");
     }
 
     /// Zero-padding of the masked edge panel must contribute exact

@@ -86,6 +86,64 @@ pub struct SymPacked {
     mean: f64,
 }
 
+/// Block layout of the packed upper triangle: (nb, per-tile prefix
+/// offsets, total stored elements). One definition shared by every
+/// constructor, so the dense and streaming scatter paths can never
+/// drift apart.
+fn block_layout(m: usize, block: usize) -> (usize, Vec<usize>, usize) {
+    let nb = m.div_ceil(block);
+    let npairs = nb * (nb + 1) / 2;
+    let bdim = |b: usize| (m - b * block).min(block);
+    let mut block_off = Vec::with_capacity(npairs + 1);
+    let mut total = 0usize;
+    for ib in 0..nb {
+        for jb in ib..nb {
+            block_off.push(total);
+            total += bdim(ib) * bdim(jb);
+        }
+    }
+    block_off.push(total);
+    (nb, block_off, total)
+}
+
+/// Aggregate statistics (Σv, Σv², max) over packed storage: tiles in
+/// block-row-major order, row-major within each tile — the ONE canonical
+/// accumulation order every constructor shares (off-diagonal tiles
+/// weighted twice for the mirrored half), which is what makes the cached
+/// stats bitwise-identical across construction paths.
+fn packed_stats(nb: usize, block_off: &[usize], data: &[f64]) -> (f64, f64, f64) {
+    let (mut sum, mut ss, mut mx) = (0.0f64, 0.0f64, f64::NEG_INFINITY);
+    let mut p = 0;
+    for ib in 0..nb {
+        for jb in ib..nb {
+            let bd = &data[block_off[p]..block_off[p + 1]];
+            if ib == jb {
+                // each stored diagonal-tile entry (mirrored lower ones
+                // included) is one entry of the full matrix
+                for &v in bd {
+                    sum += v;
+                    ss += v * v;
+                    if v > mx {
+                        mx = v;
+                    }
+                }
+            } else {
+                // each stored off-diagonal entry appears twice in the
+                // mirrored matrix
+                for &v in bd {
+                    sum += 2.0 * v;
+                    ss += 2.0 * v * v;
+                    if v > mx {
+                        mx = v;
+                    }
+                }
+            }
+            p += 1;
+        }
+    }
+    (sum, ss, mx)
+}
+
 impl SymPacked {
     /// Pack the upper triangle of a square matrix with the production
     /// block size (the SYMM cache block). For entries where X[i,j] and
@@ -100,21 +158,9 @@ impl SymPacked {
         let (m, mc) = x.shape();
         assert_eq!(m, mc, "SymPacked: X must be square, got {:?}", x.shape());
         assert!(block >= 1, "SymPacked: block size must be positive");
-        let nb = m.div_ceil(block);
-        let npairs = nb * (nb + 1) / 2;
-        let bdim = |b: usize| (m - b * block).min(block);
-        let mut block_off = Vec::with_capacity(npairs + 1);
-        let mut total = 0usize;
-        for ib in 0..nb {
-            for jb in ib..nb {
-                block_off.push(total);
-                total += bdim(ib) * bdim(jb);
-            }
-        }
-        block_off.push(total);
+        let (nb, block_off, total) = block_layout(m, block);
         let mut data = vec![0.0; total];
         let xd = x.data();
-        let (mut sum, mut ss, mut mx) = (0.0f64, 0.0f64, f64::NEG_INFINITY);
         let mut p = 0;
         for ib in 0..nb {
             let i0 = ib * block;
@@ -126,38 +172,24 @@ impl SymPacked {
                 let bd = &mut data[block_off[p]..block_off[p + 1]];
                 if ib == jb {
                     // diagonal tile stored full; lower entries mirrored
-                    // from the upper triangle. Each entry of the tile is
-                    // an entry of X exactly once in the stats.
+                    // from the upper triangle ("upper wins")
                     for i in i0..i1 {
                         let dst = &mut bd[(i - i0) * bj..(i - i0 + 1) * bj];
                         for j in j0..j1 {
-                            let v = if i <= j { xd[i * m + j] } else { xd[j * m + i] };
-                            dst[j - j0] = v;
-                            sum += v;
-                            ss += v * v;
-                            if v > mx {
-                                mx = v;
-                            }
+                            dst[j - j0] =
+                                if i <= j { xd[i * m + j] } else { xd[j * m + i] };
                         }
                     }
                 } else {
-                    // off-diagonal tile: every entry appears twice in
-                    // the mirrored matrix.
                     for i in i0..i1 {
-                        let src = &xd[i * m + j0..i * m + j1];
-                        bd[(i - i0) * bj..(i - i0 + 1) * bj].copy_from_slice(src);
-                        for &v in src {
-                            sum += 2.0 * v;
-                            ss += 2.0 * v * v;
-                            if v > mx {
-                                mx = v;
-                            }
-                        }
+                        bd[(i - i0) * bj..(i - i0 + 1) * bj]
+                            .copy_from_slice(&xd[i * m + j0..i * m + j1]);
                     }
                 }
                 p += 1;
             }
         }
+        let (sum, ss, mx) = packed_stats(nb, &block_off, &data);
         SymPacked {
             m,
             block,
@@ -170,10 +202,69 @@ impl SymPacked {
         }
     }
 
-    /// Pack a sparse symmetric matrix, densifying through
-    /// [`CsrMat::to_dense`] (the full array is transient — only the
-    /// packed triangle stays resident).
+    /// Pack a sparse symmetric matrix by **streaming** the CSR upper
+    /// triangle straight into the block panels — no transient
+    /// `to_dense()`, so a huge sparse-to-dense promotion never holds the
+    /// full m² square array (peak resident: the packed triangle plus the
+    /// CSR itself). Bitwise-identical to the densifying path
+    /// ([`SymPacked::from_csr_via_dense`], the pinning oracle): the
+    /// scatter writes exactly the entries the dense pack would copy
+    /// (upper triangle wins, diagonal-tile lower entries mirrored from
+    /// the upper), and the aggregate statistics are accumulated in a
+    /// second pass over the packed storage — which IS the dense pack's
+    /// iteration order (tiles block-row-major, row-major within a tile).
     pub fn from_csr(x: &CsrMat) -> SymPacked {
+        SymPacked::from_csr_with_block(x, SYMM_BLOCK)
+    }
+
+    /// Streaming CSR construction with an explicit block size (exposed
+    /// so tests can exercise multi-tile and edge-tile layouts).
+    pub fn from_csr_with_block(x: &CsrMat, block: usize) -> SymPacked {
+        let (m, mc) = (x.rows(), x.cols());
+        assert_eq!(m, mc, "SymPacked: X must be square, got {m}x{mc}");
+        assert!(block >= 1, "SymPacked: block size must be positive");
+        let (nb, block_off, total) = block_layout(m, block);
+        let bdim = |b: usize| (m - b * block).min(block);
+        let mut data = vec![0.0; total];
+        // Scatter the stored upper triangle; tiles strictly below the
+        // block diagonal are never materialized, and lower entries inside
+        // a diagonal tile come from mirroring the upper value — exactly
+        // the "upper wins" rule of the dense pack.
+        for i in 0..m {
+            let (cols, vals) = x.row(i);
+            let ib = i / block;
+            let li = i - ib * block;
+            let start = cols.partition_point(|&j| j < i);
+            for (&j, &v) in cols[start..].iter().zip(&vals[start..]) {
+                let jb = j / block;
+                let p = ib * (2 * nb - ib + 1) / 2 + (jb - ib);
+                let bj = bdim(jb);
+                let tile = &mut data[block_off[p]..block_off[p + 1]];
+                let lj = j - jb * block;
+                tile[li * bj + lj] = v;
+                if jb == ib && j != i {
+                    tile[lj * bj + li] = v;
+                }
+            }
+        }
+        let (sum, ss, mx) = packed_stats(nb, &block_off, &data);
+        SymPacked {
+            m,
+            block,
+            nb,
+            data,
+            block_off,
+            fro_sq: ss,
+            max: mx,
+            mean: sum / (m * m) as f64,
+        }
+    }
+
+    /// The pre-streaming construction — densify through
+    /// [`CsrMat::to_dense`], then pack. Kept as the pinning oracle for
+    /// [`SymPacked::from_csr`]; materializes the full m² array, so use it
+    /// only on shapes where that is acceptable.
+    pub fn from_csr_via_dense(x: &CsrMat) -> SymPacked {
         SymPacked::from_dense(&x.to_dense())
     }
 
@@ -536,6 +627,102 @@ mod tests {
             let err = got.diff_fro(&want);
             assert!(err < 1e-12 * (1.0 + want.fro_norm()), "block={block}: err={err}");
         }
+    }
+
+    /// The streaming CSR construction is bitwise-identical to the
+    /// densifying oracle — packed data, offsets, and all three cached
+    /// aggregate statistics — across block sizes, densities, and an
+    /// asymmetric input (upper-wins semantics).
+    #[test]
+    fn from_csr_streamed_matches_densifying_path_bitwise() {
+        let mut rng = Pcg64::seed_from_u64(41);
+        for (n, density) in [(1usize, 1.0), (7, 0.5), (45, 0.3), (90, 0.05)] {
+            let mut trips = Vec::new();
+            for i in 0..n {
+                for j in i..n {
+                    if rng.uniform() < density {
+                        let v = rng.gaussian();
+                        trips.push((i, j, v));
+                        if i != j {
+                            trips.push((j, i, v));
+                        }
+                    }
+                }
+            }
+            // a few asymmetric strays: lower-only entries must vanish,
+            // upper-only entries must win and mirror into diagonal tiles
+            if n > 10 {
+                trips.push((n - 1, 0, 7.5)); // lower-only → dropped
+                trips.push((2, 3, -4.25)); // upper-only inside a tile
+            }
+            let sp = CsrMat::from_coo(n, n, trips);
+            for block in [4usize, 8, 32, 256] {
+                let streamed = SymPacked::from_csr_with_block(&sp, block);
+                let oracle = SymPacked::from_dense_with_block(&sp.to_dense(), block);
+                assert_eq!(streamed.block_off, oracle.block_off, "n={n} block={block}");
+                assert_eq!(
+                    streamed.data.len(),
+                    oracle.data.len(),
+                    "n={n} block={block}"
+                );
+                for (i, (a, b)) in streamed.data.iter().zip(&oracle.data).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "n={n} block={block}: packed element {i}"
+                    );
+                }
+                assert_eq!(streamed.fro_sq.to_bits(), oracle.fro_sq.to_bits());
+                assert_eq!(streamed.max.to_bits(), oracle.max.to_bits());
+                assert_eq!(streamed.mean.to_bits(), oracle.mean.to_bits());
+            }
+        }
+        // the production entry (default block) routes through the stream
+        let sp = CsrMat::from_coo(3, 3, vec![(0, 1, 2.0), (1, 0, 2.0), (2, 2, 1.0)]);
+        let a = SymPacked::from_csr(&sp);
+        let b = SymPacked::from_csr_via_dense(&sp);
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    /// Large-sparse smoke: a matrix whose square array would be ~69 MB
+    /// streams into the packed triangle directly, and the operator
+    /// agrees with the sparse SpMM.
+    #[test]
+    fn from_csr_streamed_large_sparse_smoke() {
+        let m = 3000;
+        let mut rng = Pcg64::seed_from_u64(43);
+        let mut trips = Vec::new();
+        for _ in 0..6 * m {
+            let i = rng.below(m);
+            let j = rng.below(m);
+            let v = 1.0 + rng.uniform();
+            trips.push((i, j, v));
+            if i != j {
+                trips.push((j, i, v));
+            }
+        }
+        for i in 0..m {
+            trips.push((i, i, 2.0)); // keep the diagonal populated
+        }
+        let sp = CsrMat::from_coo(m, m, trips);
+        let packed = SymPacked::from_csr(&sp);
+        assert!(
+            packed.packed_len() < m * m * 3 / 5,
+            "packed triangle must stay well under the square array"
+        );
+        let fro_sp = CsrMat::fro_norm_sq(&sp);
+        let fro_pk = SymOp::fro_norm_sq(&packed);
+        assert!(
+            (fro_sp - fro_pk).abs() <= 1e-9 * (1.0 + fro_sp),
+            "fro {fro_sp} vs {fro_pk}"
+        );
+        let f = DenseMat::gaussian(m, 3, &mut rng);
+        let want = sp.spmm(&f);
+        let got = SymOp::apply(&packed, &f);
+        let err = got.diff_fro(&want);
+        assert!(err < 1e-10 * (1.0 + want.fro_norm()), "err={err}");
     }
 
     /// Construction from CSR matches construction from the densified

@@ -7,17 +7,20 @@
 //! allocated each of them afresh — O(m·k) heap churn, thousands of times
 //! per solve. [`IterWorkspace`] holds all of those buffers, sized once
 //! from (m, k) (plus the LvS sample budget s), so the steady-state
-//! iteration of every driver — ANLS/HALS/MU ([`run_alternating_loop`]),
-//! LvS, PGNCG, Compressed — performs **no heap allocation**: X·F products
-//! land in [`IterWorkspace::y`] via [`SymOp::apply_into`], Gram matrices
-//! in [`IterWorkspace::g`] via [`gram_into`], and the update rules draw
-//! their scratch from [`UpdateScratch`].
+//! iteration of every solver engine driven by the shared outer loop
+//! ([`run_solver`]) — ANLS/HALS/MU, LvS, PGNCG, Compressed — and of the
+//! frozen reference loops ([`run_alternating_loop`]) performs **no heap
+//! allocation**: X·F products land in [`IterWorkspace::y`] via
+//! [`SymOp::apply_into`], Gram matrices in [`IterWorkspace::g`] via
+//! [`gram_into`], and the update rules draw their scratch from
+//! [`UpdateScratch`].
 //!
 //! The protocol is enforced by tests that run several iterations and
 //! assert the buffer data pointers ([`IterWorkspace::buffer_ptrs`]) are
 //! bit-identical before and after — a reallocation (or a buffer replaced
 //! by assignment) would move them.
 //!
+//! [`run_solver`]: crate::symnmf::engine::run_solver
 //! [`run_alternating_loop`]: crate::symnmf::anls::run_alternating_loop
 //! [`SymOp::apply_into`]: crate::randnla::SymOp::apply_into
 //! [`gram_into`]: crate::linalg::blas::gram_into

@@ -8,12 +8,18 @@
 //! model calling the L1 Pallas kernels. The operator participates in the
 //! zero-allocation dispatch protocol of [`SymOp`]: the m×m input literal
 //! is converted once and cached, and the skinny-factor f32 staging buffer
-//! is reused across every call of a solve.
+//! is reused across every call of a solve. [`PjrtSymOp::solve`] drives a
+//! method's resumable engine ([`crate::symnmf::engine`]) directly over
+//! the operator — deadlines, pause/resume, and per-iteration telemetry
+//! on the accelerator path.
 
+use crate::coordinator::driver::Method;
 use crate::linalg::{blas, DenseMat};
 use crate::randnla::SymOp;
 use crate::runtime::backend as xla;
 use crate::runtime::pjrt::{literal_from_mat_buffered, Input, PjrtRuntime};
+use crate::symnmf::engine::{Checkpoint, EngineRun, RunControl};
+use crate::symnmf::options::SymNmfOptions;
 use std::cell::RefCell;
 use std::collections::HashSet;
 use std::rc::Rc;
@@ -91,6 +97,23 @@ impl PjrtSymOp {
                 None
             }
         }
+    }
+
+    /// Drive a SymNMF method's engine directly over this operator: every
+    /// X·F product of the solve dispatches through the PJRT artifact
+    /// path (with native fallback), and the run carries the full engine
+    /// contract — deadline stopping, cooperative pausing, checkpoint
+    /// resume. This is the request-scoped serving shape: a traffic
+    /// handler can run with a per-request deadline, ship the checkpoint,
+    /// and resume on the next request.
+    pub fn solve(
+        &self,
+        method: Method,
+        opts: &SymNmfOptions,
+        ctrl: &RunControl,
+        resume: Option<&Checkpoint>,
+    ) -> EngineRun {
+        method.run_controlled(self, opts, ctrl, resume)
     }
 
     fn warn_fallback(&self, k: usize) {

@@ -11,9 +11,13 @@
 //! factored approximation) and Compressed-NMF (projected products).
 
 use crate::linalg::{blas, DenseMat, IterWorkspace};
-use crate::nls::update_into;
+use crate::nls::{update_into, UpdateRule};
 use crate::randnla::SymOp;
 use crate::symnmf::convergence::{normalized_residual, projected_gradient_norm_sym};
+use crate::symnmf::engine::{
+    run_solver, workspace_for, Checkpoint, EngineRun, EngineState, RunControl, SolveSpec,
+    SolverEngine, Stage, StepOutcome, TraceSink,
+};
 use crate::symnmf::init::initial_factor;
 use crate::symnmf::metrics::{IterRecord, StopRule, SymNmfResult};
 use crate::symnmf::options::SymNmfOptions;
@@ -74,11 +78,16 @@ pub fn resolve_alpha<X: SymOp + ?Sized>(x: &X, opts: &SymNmfOptions) -> f64 {
     opts.alpha.unwrap_or_else(|| x.max_value())
 }
 
-/// The shared alternating loop. `x` is whatever operator the caller wants
-/// the iteration to see (true X, LAI, …); `metrics` always measures
-/// against the true X. `setup_secs` pre-loads the clock (LAI build time).
-/// Sizes a fresh [`IterWorkspace`] from (m, k) and delegates to
-/// [`run_alternating_loop_ws`].
+/// The pre-engine alternating loop, kept verbatim as the **frozen
+/// reference oracle** the engine path is pinned against (and as the
+/// legacy arm of the `engine_step_overhead` bench). Production entry
+/// points run [`AltEngine`] under [`run_solver`] instead. `x` is
+/// whatever operator the caller wants the iteration to see (true X,
+/// LAI, …); `metrics` always measures against the true X. `setup_secs`
+/// pre-loads the clock (LAI build time). Sizes a fresh [`IterWorkspace`]
+/// from (m, k) and delegates to [`run_alternating_loop_ws`].
+///
+/// [`run_solver`]: crate::symnmf::engine::run_solver
 #[allow(clippy::too_many_arguments)]
 pub fn run_alternating_loop(
     x: &dyn SymOp,
@@ -166,29 +175,140 @@ pub fn run_alternating_loop_ws(
     SymNmfResult { label, h, w, records, phases, setup_secs }
 }
 
+/// The alternating-updating methods as a [`SolverEngine`]: one step is
+/// the full W-then-H alternating iteration of Eq. 2.4 against any
+/// [`SymOp`] — the true X (the "BPP"/"HALS"/"MU" baselines), the
+/// factored LAI, or any other operator. Stateless between steps except
+/// for the factor pair, so its checkpoint is just (H, W).
+pub struct AltEngine<'a> {
+    x: &'a dyn SymOp,
+    alpha: f64,
+    rule: UpdateRule,
+    w: DenseMat,
+    h: DenseMat,
+}
+
+impl<'a> AltEngine<'a> {
+    pub fn new(x: &'a dyn SymOp, alpha: f64, rule: UpdateRule, h0: DenseMat) -> AltEngine<'a> {
+        AltEngine { x, alpha, rule, w: h0.clone(), h: h0 }
+    }
+}
+
+impl SolverEngine for AltEngine<'_> {
+    fn h(&self) -> &DenseMat {
+        &self.h
+    }
+
+    fn w(&self) -> &DenseMat {
+        &self.w
+    }
+
+    fn step(&mut self, ws: &mut IterWorkspace) -> StepOutcome {
+        let mut mm = 0.0;
+        let mut solve = 0.0;
+
+        // --- W update: G = HᵀH + αI, Y = X·H + αH ---
+        let t = Stopwatch::start();
+        self.x.apply_into(&self.h, &mut ws.y);
+        blas::gram_into(&self.h, &mut ws.g);
+        mm += t.elapsed_secs();
+        ws.g.add_diag(self.alpha);
+        ws.y.axpy(self.alpha, &self.h);
+        let t = Stopwatch::start();
+        update_into(self.rule, &ws.g, &ws.y, &mut self.w, &mut ws.update);
+        solve += t.elapsed_secs();
+
+        // --- H update: G = WᵀW + αI, Y = X·W + αW ---
+        let t = Stopwatch::start();
+        self.x.apply_into(&self.w, &mut ws.y);
+        blas::gram_into(&self.w, &mut ws.g);
+        mm += t.elapsed_secs();
+        ws.g.add_diag(self.alpha);
+        ws.y.axpy(self.alpha, &self.w);
+        let t = Stopwatch::start();
+        update_into(self.rule, &ws.g, &ws.y, &mut self.h, &mut ws.update);
+        solve += t.elapsed_secs();
+
+        StepOutcome { mm_secs: mm, solve_secs: solve, ..StepOutcome::default() }
+    }
+
+    fn save(&self) -> EngineState {
+        EngineState { h: self.h.clone(), w: Some(self.w.clone()), rng: None }
+    }
+
+    fn load(&mut self, st: &EngineState) {
+        assert_eq!(st.h.shape(), self.h.shape(), "AltEngine::load: H shape mismatch");
+        self.h = st.h.clone();
+        self.w = match &st.w {
+            Some(w) => {
+                assert_eq!(w.shape(), self.h.shape(), "AltEngine::load: W shape mismatch");
+                w.clone()
+            }
+            // warm start: re-derive W = H, as the legacy entry did
+            None => self.h.clone(),
+        };
+    }
+}
+
 /// Standard SymNMF via regularized ANLS/HALS/MU on the exact X
-/// (the paper's deterministic baselines "BPP" and "HALS").
+/// (the paper's deterministic baselines "BPP" and "HALS") — thin wrapper
+/// over the engine path, honoring the `SYMNMF_DEADLINE_MS` environment
+/// deadline.
 pub fn symnmf_anls<X: SymOp>(x: &X, opts: &SymNmfOptions) -> SymNmfResult {
+    symnmf_anls_run(x, opts, &RunControl::from_env(), None, None).result
+}
+
+/// The controlled engine entry: deadline/pause budgets, checkpoint
+/// resume, and per-iteration tracing. `resume` must come from a run over
+/// the same X and options.
+pub fn symnmf_anls_run<X: SymOp>(
+    x: &X,
+    opts: &SymNmfOptions,
+    ctrl: &RunControl,
+    resume: Option<&Checkpoint>,
+    trace: Option<&mut dyn TraceSink>,
+) -> EngineRun {
     let mut rng = Pcg64::seed_from_u64(opts.seed);
     let alpha = resolve_alpha(x, opts);
     let h0 = initial_factor(x, opts, &mut rng);
-    let metrics = Metrics::new(x, true);
-    run_alternating_loop(
-        x,
-        alpha,
-        opts,
-        h0,
-        &metrics,
-        opts.rule.label().to_string(),
-        0.0,
-        PhaseTimer::new(),
-    )
+    let x: &dyn SymOp = x;
+    let mut spec = SolveSpec {
+        stages: vec![Stage {
+            engine: Box::new(AltEngine::new(x, alpha, opts.rule, h0)),
+            label: opts.rule.label().to_string(),
+        }],
+        metrics: Metrics::new(x, true),
+        setup_secs: 0.0,
+        phases: PhaseTimer::new(),
+    };
+    let mut ws = workspace_for(&spec);
+    run_solver(&mut spec, opts, ctrl, resume, trace, &mut ws)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::nls::UpdateRule;
+    use crate::symnmf::engine::{assert_results_bitwise_eq, RunStatus, VecSink};
+
+    /// The frozen pre-engine entry point (the oracle of the pinning
+    /// tests): seed → α → H₀ → legacy alternating loop.
+    fn symnmf_anls_reference<X: SymOp>(x: &X, opts: &SymNmfOptions) -> SymNmfResult {
+        let mut rng = Pcg64::seed_from_u64(opts.seed);
+        let alpha = resolve_alpha(x, opts);
+        let h0 = initial_factor(x, opts, &mut rng);
+        let metrics = Metrics::new(x, true);
+        run_alternating_loop(
+            x,
+            alpha,
+            opts,
+            h0,
+            &metrics,
+            opts.rule.label().to_string(),
+            0.0,
+            PhaseTimer::new(),
+        )
+    }
 
     /// A symmetric nonnegative matrix with planted rank-k structure.
     pub fn planted(m: usize, k: usize, noise: f64, seed: u64) -> DenseMat {
@@ -270,6 +390,147 @@ mod tests {
             );
             assert!(res.h.is_nonneg());
         }
+    }
+
+    /// Acceptance: the engine wrapper is bitwise-identical to the frozen
+    /// pre-refactor loop for every update rule — residual history,
+    /// factors, iteration count, and label.
+    #[test]
+    fn engine_path_pinned_bitwise_to_reference() {
+        for rule in [UpdateRule::Bpp, UpdateRule::Hals, UpdateRule::Mu] {
+            for (m, k) in [(40, 2), (56, 7)] {
+                let x = planted(m, k, 0.05, 11);
+                let mut opts = SymNmfOptions::new(k).with_rule(rule).with_seed(4);
+                opts.max_iters = 12;
+                let oracle = symnmf_anls_reference(&x, &opts);
+                let engine =
+                    symnmf_anls_run(&x, &opts, &RunControl::unlimited(), None, None);
+                assert_results_bitwise_eq(
+                    &oracle,
+                    &engine.result,
+                    &format!("anls {rule:?} m={m} k={k}"),
+                );
+                assert!(engine.completed());
+            }
+        }
+    }
+
+    /// Acceptance: checkpoint → serialize → resume reproduces the
+    /// uninterrupted run bitwise at k ∈ {2, 7}.
+    #[test]
+    fn checkpoint_resume_reproduces_uninterrupted_run() {
+        for k in [2usize, 7] {
+            let x = planted(8 * k, k, 0.05, 3);
+            let mut opts = SymNmfOptions::new(k).with_seed(6);
+            opts.max_iters = 10;
+            let full = symnmf_anls_run(&x, &opts, &RunControl::unlimited(), None, None);
+            let paused = symnmf_anls_run(
+                &x,
+                &opts,
+                &RunControl::unlimited().with_max_steps(3),
+                None,
+                None,
+            );
+            assert_eq!(paused.checkpoint.status, RunStatus::Paused);
+            assert_eq!(paused.result.iters(), 3);
+            let cp = Checkpoint::parse(&paused.checkpoint.serialize()).expect("roundtrip");
+            let resumed =
+                symnmf_anls_run(&x, &opts, &RunControl::unlimited(), Some(&cp), None);
+            assert!(resumed.completed());
+            assert_results_bitwise_eq(&full.result, &resumed.result, &format!("k={k}"));
+        }
+    }
+
+    /// Acceptance: a deadline of 0 returns the initial iterate without
+    /// stepping, and the checkpoint it leaves behind resumes to the full
+    /// run bitwise.
+    #[test]
+    fn deadline_zero_returns_initial_iterate() {
+        let x = planted(40, 3, 0.0, 7);
+        let mut opts = SymNmfOptions::new(3).with_seed(2);
+        opts.max_iters = 8;
+        let run = symnmf_anls_run(
+            &x,
+            &opts,
+            &RunControl::unlimited().with_deadline(0.0),
+            None,
+            None,
+        );
+        assert_eq!(run.checkpoint.status, RunStatus::Deadline);
+        assert!(run.result.records.is_empty(), "no iteration may run");
+        // the returned iterate IS the §5 initialization
+        let mut rng = Pcg64::seed_from_u64(opts.seed);
+        let h0 = initial_factor(&x, &opts, &mut rng);
+        for (a, b) in run.result.h.data().iter().zip(h0.data()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "H must be the initial iterate");
+        }
+        let full = symnmf_anls_run(&x, &opts, &RunControl::unlimited(), None, None);
+        let resumed = symnmf_anls_run(
+            &x,
+            &opts,
+            &RunControl::unlimited(),
+            Some(&run.checkpoint),
+            None,
+        );
+        assert_results_bitwise_eq(&full.result, &resumed.result, "deadline-0 resume");
+    }
+
+    /// The trace sink observes exactly the records that land in the
+    /// result, plus the stage label.
+    #[test]
+    fn trace_sink_streams_the_history() {
+        let x = planted(30, 3, 0.1, 5);
+        let mut opts = SymNmfOptions::new(3);
+        opts.max_iters = 6;
+        let mut sink = VecSink::default();
+        let run = symnmf_anls_run(
+            &x,
+            &opts,
+            &RunControl::unlimited(),
+            None,
+            Some(&mut sink),
+        );
+        assert_eq!(sink.stages, vec!["BPP".to_string()]);
+        assert_eq!(sink.records.len(), run.result.iters());
+        for (a, b) in sink.records.iter().zip(&run.result.records) {
+            assert_eq!(a.iter, b.iter);
+            assert_eq!(a.residual.to_bits(), b.residual.to_bits());
+        }
+    }
+
+    /// The engine outer loop keeps the zero-allocation contract: the
+    /// shared workspace buffers must not move across a multi-iteration
+    /// engine run.
+    #[test]
+    fn engine_workspace_buffers_stable() {
+        let x = planted(40, 3, 0.0, 9);
+        let mut opts = SymNmfOptions::new(3).with_rule(UpdateRule::Hals).with_seed(1);
+        opts.max_iters = 3;
+        let mut rng = Pcg64::seed_from_u64(opts.seed);
+        let alpha = resolve_alpha(&x, &opts);
+        let h0 = initial_factor(&x, &opts, &mut rng);
+        let xd: &dyn SymOp = &x;
+        let mut spec = SolveSpec {
+            stages: vec![Stage {
+                engine: Box::new(AltEngine::new(xd, alpha, opts.rule, h0)),
+                label: "ws-test".to_string(),
+            }],
+            metrics: Metrics::new(xd, true),
+            setup_secs: 0.0,
+            phases: PhaseTimer::new(),
+        };
+        let mut ws = workspace_for(&spec);
+        let before = ws.buffer_ptrs();
+        let run = run_solver(
+            &mut spec,
+            &opts,
+            &RunControl::unlimited(),
+            None,
+            None,
+            &mut ws,
+        );
+        assert_eq!(run.result.iters(), 3, "patience must not fire in 3 iters");
+        assert_eq!(ws.buffer_ptrs(), before, "workspace buffers moved in the engine loop");
     }
 
     #[test]

@@ -15,18 +15,169 @@
 //! two behave nearly identically, which Table 2 (and our bench) confirms.
 
 use crate::linalg::{blas, DenseMat, IterWorkspace};
-use crate::nls::update_into;
+use crate::nls::{update_into, UpdateRule};
 use crate::randnla::rrf::{ada_rrf, rrf};
 use crate::randnla::SymOp;
 use crate::symnmf::anls::{resolve_alpha, Metrics};
+use crate::symnmf::engine::{
+    run_solver, workspace_for, Checkpoint, EngineRun, EngineState, RunControl, SolveSpec,
+    SolverEngine, Stage, StepOutcome, TraceSink,
+};
 use crate::symnmf::init::initial_factor;
-use crate::symnmf::metrics::{IterRecord, StopRule, SymNmfResult};
+#[cfg(test)]
+use crate::symnmf::metrics::{IterRecord, StopRule};
+use crate::symnmf::metrics::SymNmfResult;
 use crate::symnmf::options::{PowerIter, SymNmfOptions};
 use crate::util::rng::Pcg64;
-use crate::util::timer::{PhaseTimer, Stopwatch, PHASE_MM, PHASE_SOLVE};
+#[cfg(test)]
+use crate::util::timer::PHASE_SOLVE;
+use crate::util::timer::{PhaseTimer, Stopwatch, PHASE_MM};
 
-/// Compressed SymNMF ("Comp-<rule>").
+/// Compressed SymNMF as a [`SolverEngine`]: the RRF basis Q and the
+/// projected data Bᵀ = X·Q are built once at init (the setup phase); one
+/// step is the full W-then-H iteration over the projected normal
+/// equations. The l×k projection scratch lives in the engine (the shared
+/// workspace is sized for k-wide factors).
+pub struct CompressedEngine {
+    q: DenseMat,
+    bt: DenseMat,
+    alpha: f64,
+    rule: UpdateRule,
+    /// l×k scratch for QᵀF
+    qtf: DenseMat,
+    w: DenseMat,
+    h: DenseMat,
+}
+
+impl CompressedEngine {
+    pub fn new(
+        q: DenseMat,
+        bt: DenseMat,
+        alpha: f64,
+        rule: UpdateRule,
+        h0: DenseMat,
+    ) -> CompressedEngine {
+        let l = q.cols();
+        let k = h0.cols();
+        CompressedEngine {
+            q,
+            bt,
+            alpha,
+            rule,
+            qtf: DenseMat::zeros(l, k),
+            w: h0.clone(),
+            h: h0,
+        }
+    }
+}
+
+impl SolverEngine for CompressedEngine {
+    fn h(&self) -> &DenseMat {
+        &self.h
+    }
+
+    fn w(&self) -> &DenseMat {
+        &self.w
+    }
+
+    fn step(&mut self, ws: &mut IterWorkspace) -> StepOutcome {
+        let mut mm = 0.0;
+        let mut solve = 0.0;
+
+        // --- W update from H ---
+        let t = Stopwatch::start();
+        blas::matmul_tn_into(&self.q, &self.h, &mut self.qtf); // QᵀH, l×k
+        blas::gram_into(&self.qtf, &mut ws.g); // Hᵀ·QQᵀ·H
+        blas::matmul_into(&self.bt, &self.qtf, &mut ws.y); // (XQ)·(QᵀH)
+        mm += t.elapsed_secs();
+        ws.g.add_diag(self.alpha);
+        ws.y.axpy(self.alpha, &self.h);
+        let t = Stopwatch::start();
+        update_into(self.rule, &ws.g, &ws.y, &mut self.w, &mut ws.update);
+        solve += t.elapsed_secs();
+
+        // --- H update from W ---
+        let t = Stopwatch::start();
+        blas::matmul_tn_into(&self.q, &self.w, &mut self.qtf);
+        blas::gram_into(&self.qtf, &mut ws.g);
+        blas::matmul_into(&self.bt, &self.qtf, &mut ws.y);
+        mm += t.elapsed_secs();
+        ws.g.add_diag(self.alpha);
+        ws.y.axpy(self.alpha, &self.w);
+        let t = Stopwatch::start();
+        update_into(self.rule, &ws.g, &ws.y, &mut self.h, &mut ws.update);
+        solve += t.elapsed_secs();
+
+        StepOutcome { mm_secs: mm, solve_secs: solve, ..StepOutcome::default() }
+    }
+
+    fn save(&self) -> EngineState {
+        EngineState { h: self.h.clone(), w: Some(self.w.clone()), rng: None }
+    }
+
+    fn load(&mut self, st: &EngineState) {
+        assert_eq!(st.h.shape(), self.h.shape(), "CompressedEngine::load: H shape");
+        self.h = st.h.clone();
+        self.w = match &st.w {
+            Some(w) => {
+                assert_eq!(w.shape(), self.h.shape(), "CompressedEngine::load: W shape");
+                w.clone()
+            }
+            None => self.h.clone(),
+        };
+    }
+}
+
+/// Compressed SymNMF ("Comp-<rule>") — thin wrapper over the engine path
+/// (`SYMNMF_DEADLINE_MS` honored).
 pub fn compressed_symnmf<X: SymOp>(x: &X, opts: &SymNmfOptions) -> SymNmfResult {
+    compressed_symnmf_run(x, opts, &RunControl::from_env(), None, None).result
+}
+
+/// The controlled engine entry: the RRF + projection setup recomputes
+/// deterministically on resume; the checkpoint carries (H, W).
+pub fn compressed_symnmf_run<X: SymOp>(
+    x: &X,
+    opts: &SymNmfOptions,
+    ctrl: &RunControl,
+    resume: Option<&Checkpoint>,
+    trace: Option<&mut dyn TraceSink>,
+) -> EngineRun {
+    let xd: &dyn SymOp = x;
+    let mut rng = Pcg64::seed_from_u64(opts.seed);
+    let alpha = resolve_alpha(x, opts);
+    let l = opts.sketch_width();
+    let mut phases = PhaseTimer::new();
+
+    // --- setup: one RRF + B = QᵀX (timed) ---
+    let sw = Stopwatch::start();
+    let basis = match opts.power {
+        PowerIter::Static(q) => rrf(x, l, q, &mut rng),
+        PowerIter::Adaptive { q_max, tol } => ada_rrf(x, l, q_max, tol, &mut rng),
+    };
+    let q = basis.q_basis;
+    // B = QᵀX = (X·Q)ᵀ for symmetric X → store Bᵀ = X·Q (m×l)
+    let bt = x.apply(&q);
+    let setup_secs = sw.elapsed_secs();
+    phases.add(PHASE_MM, std::time::Duration::from_secs_f64(setup_secs));
+
+    let h0 = initial_factor(x, opts, &mut rng);
+    let mut spec = SolveSpec {
+        stages: vec![Stage {
+            engine: Box::new(CompressedEngine::new(q, bt, alpha, opts.rule, h0)),
+            label: format!("Comp-{}", opts.rule.label()),
+        }],
+        metrics: Metrics::new(xd, true),
+        setup_secs,
+        phases,
+    };
+    let mut ws = workspace_for(&spec);
+    run_solver(&mut spec, opts, ctrl, resume, trace, &mut ws)
+}
+
+/// The frozen pre-engine Compressed loop (pinning oracle).
+#[cfg(test)]
+fn compressed_symnmf_reference<X: SymOp>(x: &X, opts: &SymNmfOptions) -> SymNmfResult {
     let mut rng = Pcg64::seed_from_u64(opts.seed);
     let alpha = resolve_alpha(x, opts);
     let k = opts.k;
@@ -111,8 +262,71 @@ pub fn compressed_symnmf<X: SymOp>(x: &X, opts: &SymNmfOptions) -> SymNmfResult 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nls::UpdateRule;
+    use crate::symnmf::engine::{assert_results_bitwise_eq, RunStatus};
     use crate::symnmf::lai::lai_symnmf;
+
+    /// Acceptance: the engine wrapper is bitwise-identical to the frozen
+    /// pre-refactor loop.
+    #[test]
+    fn engine_path_pinned_bitwise_to_reference() {
+        for (m, k) in [(40, 2), (63, 7)] {
+            let x = planted(m, k, 19);
+            let mut opts = SymNmfOptions::new(k)
+                .with_rule(UpdateRule::Hals)
+                .with_seed(23);
+            opts.max_iters = 10;
+            let oracle = compressed_symnmf_reference(&x, &opts);
+            let engine =
+                compressed_symnmf_run(&x, &opts, &RunControl::unlimited(), None, None);
+            assert_results_bitwise_eq(&oracle, &engine.result, &format!("comp k={k}"));
+        }
+    }
+
+    /// Acceptance: checkpoint/resume bitwise (the RRF setup recomputes
+    /// deterministically on resume) + deadline-0 initial iterate.
+    #[test]
+    fn checkpoint_resume_and_deadline() {
+        for k in [2usize, 7] {
+            let x = planted(9 * k, k, 29);
+            let mut opts = SymNmfOptions::new(k).with_seed(31);
+            opts.max_iters = 8;
+            let full = compressed_symnmf_run(&x, &opts, &RunControl::unlimited(), None, None);
+            let paused = compressed_symnmf_run(
+                &x,
+                &opts,
+                &RunControl::unlimited().with_max_steps(3),
+                None,
+                None,
+            );
+            assert_eq!(paused.checkpoint.status, RunStatus::Paused);
+            let cp = Checkpoint::parse(&paused.checkpoint.serialize()).expect("roundtrip");
+            let resumed =
+                compressed_symnmf_run(&x, &opts, &RunControl::unlimited(), Some(&cp), None);
+            assert_results_bitwise_eq(&full.result, &resumed.result, &format!("comp k={k}"));
+
+            let dead = compressed_symnmf_run(
+                &x,
+                &opts,
+                &RunControl::unlimited().with_deadline(0.0),
+                None,
+                None,
+            );
+            assert_eq!(dead.checkpoint.status, RunStatus::Deadline);
+            assert!(dead.result.records.is_empty());
+            let resumed = compressed_symnmf_run(
+                &x,
+                &opts,
+                &RunControl::unlimited(),
+                Some(&dead.checkpoint),
+                None,
+            );
+            assert_results_bitwise_eq(
+                &full.result,
+                &resumed.result,
+                &format!("comp deadline-0 k={k}"),
+            );
+        }
+    }
 
     fn planted(m: usize, k: usize, seed: u64) -> DenseMat {
         let mut rng = Pcg64::seed_from_u64(seed);

@@ -1,0 +1,910 @@
+//! The resumable solver engine: one step-driven outer loop for every
+//! SymNMF method.
+//!
+//! Every method in the paper — ANLS/HALS/MU (§2.1.1), PGNCG (§2.1.3),
+//! LAI-SymNMF (§3), LvS-SymNMF (§4), Compressed-NMF (App. B.1) — shares
+//! the same skeleton: initialize H, repeat an alternating update, stop on
+//! a residual-based rule. The seed implementation gave each driver a
+//! private copy of that outer loop, so cross-cutting features (wall-clock
+//! deadlines, mid-solve snapshots, warm-start chaining like §3.3's
+//! LAI → IR refinement) had to be re-implemented per method. This module
+//! owns the loop once; the methods reduce to *engines* that know how to
+//! advance the iterate by one step.
+//!
+//! ## The state machine
+//!
+//! ```text
+//!   init:   an entry wrapper (symnmf_anls, lvs_symnmf, …) seeds the RNG,
+//!           resolves α, draws H₀, builds one engine per stage and a
+//!           [`SolveSpec`] (stages + metrics + setup time).
+//!
+//!   step:   [`run_solver`] drives the active stage's
+//!           [`SolverEngine::step`] — one full outer iteration (both
+//!           half-updates for alternating methods), all scratch drawn
+//!           from the shared [`IterWorkspace`] — and receives a
+//!           [`StepOutcome`] (per-phase seconds + sampler stats).
+//!
+//!   outcome: the loop evaluates exact metrics off the clock, emits one
+//!           [`IterRecord`] (to the history AND to an optional
+//!           [`TraceSink`]), and feeds the residual to the stage's
+//!           [`ConvergencePolicy`] (the §5.1 stopping rule + iteration
+//!           cap). A converged or capped stage hands its H to the next
+//!           stage as a warm start (that is how LAI-IR is *composed*
+//!           rather than special-cased); after the last stage the run is
+//!           complete.
+//!
+//!   checkpoint: before every step the loop honors the [`RunControl`]
+//!           budget — a wall-clock **deadline** on the algorithm clock
+//!           (setup included, so a deadline of 0 returns the initial
+//!           iterate without stepping) or a step quota for cooperative
+//!           pausing. Interrupted or not, the run returns a serializable
+//!           [`Checkpoint`] of (H, W, iteration counters, RNG state,
+//!           stopping-rule state, residual history); resuming from it —
+//!           even after a JSON round-trip through another process —
+//!           reproduces the uninterrupted run bitwise (times excepted:
+//!           they are wall-clock observations, not state).
+//! ```
+//!
+//! ## Bitwise contract
+//!
+//! For a fixed process configuration the engine path is pinned
+//! bit-for-bit against the frozen pre-refactor loops (kept as reference
+//! oracles in each method module): identical RNG draw sequence, identical
+//! kernel-call order, identical stopping decisions. Deadlines and pauses
+//! only ever cut the iteration sequence short — they never perturb the
+//! iterations that do run.
+
+use crate::linalg::{DenseMat, IterWorkspace};
+use crate::symnmf::anls::Metrics;
+use crate::symnmf::metrics::{IterRecord, StopRule, SymNmfResult};
+use crate::symnmf::options::SymNmfOptions;
+use crate::util::json::Json;
+use crate::util::rng::RngState;
+use crate::util::timer::{PhaseTimer, Stopwatch, PHASE_MM, PHASE_SAMPLING, PHASE_SOLVE};
+use std::time::Duration;
+
+/// What one engine step reports back to the outer loop: per-phase seconds
+/// (the Fig. 3 categories) and, for samplers, the hybrid statistics of
+/// Fig. 6. The outer loop owns everything else — wall clock, metrics,
+/// records, stopping.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepOutcome {
+    pub mm_secs: f64,
+    pub solve_secs: f64,
+    pub sample_secs: f64,
+    /// (deterministic fraction, θ/k), averaged over the W and H samplers
+    pub hybrid_stats: Option<(f64, f64)>,
+}
+
+/// Serializable snapshot of one engine's resumable iterate state.
+#[derive(Clone, Debug)]
+pub struct EngineState {
+    pub h: DenseMat,
+    /// `None` when W aliases H (PGNCG) or for warm starts (the engine
+    /// re-derives W = H, exactly like the legacy warm-start entry).
+    pub w: Option<DenseMat>,
+    /// present only for engines that draw randomness per step (LvS)
+    pub rng: Option<RngState>,
+}
+
+/// One SymNMF method as a stepper. Construction corresponds to the
+/// `init` arrow of the module-header state machine; [`step`] advances the
+/// iterate by one full outer iteration against the shared workspace;
+/// [`save`]/[`load`] snapshot and restore everything a resumed run needs
+/// to replay the remaining iterations bitwise.
+///
+/// [`step`]: SolverEngine::step
+/// [`save`]: SolverEngine::save
+/// [`load`]: SolverEngine::load
+pub trait SolverEngine {
+    /// Current H iterate.
+    fn h(&self) -> &DenseMat;
+
+    /// Current W iterate; aliases H for methods that maintain only H.
+    fn w(&self) -> &DenseMat;
+
+    /// One outer iteration (both half-updates for alternating methods).
+    /// All per-iteration products, Grams and update scratch must come
+    /// from `ws` — the steady-state loop allocates nothing.
+    fn step(&mut self, ws: &mut IterWorkspace) -> StepOutcome;
+
+    /// Row-sample budget s (sizes the workspace gather buffer); 0 for
+    /// methods that never sample.
+    fn sample_budget(&self) -> usize {
+        0
+    }
+
+    /// Snapshot the resumable state.
+    fn save(&self) -> EngineState;
+
+    /// Restore from a [`SolverEngine::save`] snapshot (or a warm start
+    /// carrying only H). Shapes must match the engine's problem.
+    fn load(&mut self, st: &EngineState);
+}
+
+/// Stage-level convergence policy — `convergence`'s §5.1 stopping rule
+/// plus the outer iteration cap, folded into one resumable object. Each
+/// stage of a chain gets a fresh policy (matching the legacy IR loops,
+/// which restarted the stopping rule on the true-X continuation).
+pub struct ConvergencePolicy {
+    max_iters: usize,
+    rule: StopRule,
+}
+
+impl ConvergencePolicy {
+    pub fn from_opts(opts: &SymNmfOptions) -> ConvergencePolicy {
+        ConvergencePolicy {
+            max_iters: opts.max_iters,
+            rule: StopRule::new(opts.tol, opts.patience),
+        }
+    }
+
+    /// Rebuild mid-run from the checkpointed `(best, stall)` state.
+    pub fn from_state(opts: &SymNmfOptions, best: f64, stall: usize) -> ConvergencePolicy {
+        ConvergencePolicy {
+            max_iters: opts.max_iters,
+            rule: StopRule::from_state(opts.tol, opts.patience, best, stall),
+        }
+    }
+
+    pub fn max_iters(&self) -> usize {
+        self.max_iters
+    }
+
+    /// Feed the residual of the iteration that just finished; true when
+    /// the stage should stop.
+    pub fn observe(&mut self, residual: f64) -> bool {
+        self.rule.update(residual)
+    }
+
+    /// Resumable `(best, stall)` state.
+    pub fn state(&self) -> (f64, usize) {
+        self.rule.state()
+    }
+}
+
+/// Run budget honored before every step: a wall-clock deadline on the
+/// algorithm clock (setup + iterations — so a deadline of 0 returns the
+/// initial iterate without stepping) and/or a step quota for cooperative
+/// pausing. Both produce a resumable [`Checkpoint`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunControl {
+    pub deadline_secs: Option<f64>,
+    pub max_steps: Option<usize>,
+}
+
+impl RunControl {
+    /// No budget: run to convergence (the legacy behavior).
+    pub fn unlimited() -> RunControl {
+        RunControl::default()
+    }
+
+    /// The environment contract: `SYMNMF_DEADLINE_MS` (milliseconds)
+    /// imposes a deadline on every solve that goes through the plain
+    /// entry points — how CI exercises the deadline path under the full
+    /// integration suite without touching call sites. An unset or empty
+    /// variable means no deadline; a malformed or negative value panics
+    /// loudly rather than silently disabling the deadline a CI job or
+    /// operator asked for.
+    pub fn from_env() -> RunControl {
+        let deadline_secs = match std::env::var("SYMNMF_DEADLINE_MS") {
+            Err(_) => None,
+            Ok(v) if v.trim().is_empty() => None,
+            Ok(v) => match v.trim().parse::<f64>() {
+                Ok(ms) if ms >= 0.0 => Some(ms / 1000.0),
+                _ => panic!(
+                    "SYMNMF_DEADLINE_MS must be a nonnegative number of \
+                     milliseconds, got {v:?}"
+                ),
+            },
+        };
+        RunControl { deadline_secs, max_steps: None }
+    }
+
+    pub fn with_deadline(mut self, secs: f64) -> RunControl {
+        self.deadline_secs = Some(secs);
+        self
+    }
+
+    pub fn with_max_steps(mut self, n: usize) -> RunControl {
+        self.max_steps = Some(n);
+        self
+    }
+}
+
+/// How a run ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunStatus {
+    /// every stage ran to its stopping rule (or iteration cap)
+    Completed,
+    /// the wall-clock deadline expired; resume to continue
+    Deadline,
+    /// the step quota was exhausted; resume to continue
+    Paused,
+}
+
+impl RunStatus {
+    fn as_str(&self) -> &'static str {
+        match self {
+            RunStatus::Completed => "completed",
+            RunStatus::Deadline => "deadline",
+            RunStatus::Paused => "paused",
+        }
+    }
+
+    fn parse(s: &str) -> Result<RunStatus, String> {
+        match s {
+            "completed" => Ok(RunStatus::Completed),
+            "deadline" => Ok(RunStatus::Deadline),
+            "paused" => Ok(RunStatus::Paused),
+            other => Err(format!("unknown run status {other:?}")),
+        }
+    }
+}
+
+/// Per-iteration observer: every finished iteration's [`IterRecord`]
+/// (residual, projected-gradient norm, per-phase seconds) streams through
+/// here as it is produced — the once ad-hoc per-driver history vectors
+/// are now emitted from this single point. A sink observes the
+/// iterations of **this run**: a fresh run streams everything the result
+/// will contain; a resumed run streams only the post-resume iterations
+/// (the restored prefix lives in the checkpoint's — and the final
+/// result's — records, it is not replayed).
+pub trait TraceSink {
+    /// A stage began (its §5 label). Also fired for the first stage.
+    fn on_stage(&mut self, _label: &str) {}
+
+    /// One outer iteration finished.
+    fn on_record(&mut self, rec: &IterRecord);
+}
+
+/// A [`TraceSink`] that collects everything (tests, ad-hoc tooling).
+#[derive(Default)]
+pub struct VecSink {
+    pub stages: Vec<String>,
+    pub records: Vec<IterRecord>,
+}
+
+impl TraceSink for VecSink {
+    fn on_stage(&mut self, label: &str) {
+        self.stages.push(label.to_string());
+    }
+
+    fn on_record(&mut self, rec: &IterRecord) {
+        self.records.push(rec.clone());
+    }
+}
+
+/// One stage of a solve: an engine plus its §5 label. Multi-stage specs
+/// express warm-start chaining — stage i+1 starts from stage i's final H
+/// (the generalized §3.3 Iterative Refinement).
+pub struct Stage<'a> {
+    pub engine: Box<dyn SolverEngine + 'a>,
+    pub label: String,
+}
+
+/// Everything [`run_solver`] needs besides options and budget: the stage
+/// chain, the exact-metric evaluator (always against the TRUE X), and the
+/// setup cost already on the clock (LAI/RRF build time).
+pub struct SolveSpec<'a> {
+    pub stages: Vec<Stage<'a>>,
+    pub metrics: Metrics<'a>,
+    pub setup_secs: f64,
+    pub phases: PhaseTimer,
+}
+
+/// Serializable mid-run snapshot: enough to resume the solve in another
+/// process and reproduce the uninterrupted run bitwise (wall-clock fields
+/// excepted). Produced by every [`run_solver`] call — a completed run's
+/// checkpoint simply reports [`RunStatus::Completed`].
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub status: RunStatus,
+    /// active stage index
+    pub stage: usize,
+    /// iterations completed within the active stage
+    pub stage_iter: usize,
+    /// global iterations completed (= records.len())
+    pub iter: usize,
+    /// algorithm clock (setup + iteration seconds) — wall-clock, resumed
+    /// runs continue the timeline from here
+    pub clock: f64,
+    /// active stage's stopping-rule state
+    pub stop_best: f64,
+    pub stop_stall: usize,
+    /// active engine's iterate state (H, W, RNG)
+    pub state: EngineState,
+    /// residual history so far
+    pub records: Vec<IterRecord>,
+}
+
+/// Result of one [`run_solver`] call: the (possibly partial) solver
+/// result plus the checkpoint to resume it.
+pub struct EngineRun {
+    pub result: SymNmfResult,
+    pub checkpoint: Checkpoint,
+}
+
+impl EngineRun {
+    /// True unless a deadline or pause cut the run short.
+    pub fn completed(&self) -> bool {
+        self.checkpoint.status == RunStatus::Completed
+    }
+}
+
+/// The shared outer loop (see the module header for the state machine).
+///
+/// Drives the stage chain of `spec` under the `ctrl` budget, optionally
+/// resuming from a prior checkpoint (the spec must have been rebuilt from
+/// the same X and options — setup recomputes deterministically; the
+/// checkpoint then overwrites the iterate state). All per-iteration
+/// buffers come from `ws`, pre-sized by the caller via
+/// [`workspace_for`]; the steady-state loop performs no heap allocation
+/// beyond the record history.
+pub fn run_solver(
+    spec: &mut SolveSpec<'_>,
+    opts: &SymNmfOptions,
+    ctrl: &RunControl,
+    resume: Option<&Checkpoint>,
+    mut trace: Option<&mut dyn TraceSink>,
+    ws: &mut IterWorkspace,
+) -> EngineRun {
+    let SolveSpec { stages, metrics, setup_secs, phases } = spec;
+    let nstages = stages.len();
+    assert!(nstages >= 1, "run_solver: need at least one stage");
+
+    let mut stage;
+    let mut stage_iter;
+    let mut iter;
+    let mut clock;
+    let mut records: Vec<IterRecord>;
+    let mut policy;
+    let mut finished = false;
+    match resume {
+        Some(cp) => {
+            assert!(cp.stage < nstages, "checkpoint stage {} out of range", cp.stage);
+            stage = cp.stage;
+            stage_iter = cp.stage_iter;
+            iter = cp.iter;
+            clock = cp.clock;
+            records = cp.records.clone();
+            policy = ConvergencePolicy::from_state(opts, cp.stop_best, cp.stop_stall);
+            stages[stage].engine.load(&cp.state);
+            finished = cp.status == RunStatus::Completed;
+            if !finished {
+                // the sink contract: every record a sink observes belongs
+                // to the most recently announced stage
+                if let Some(t) = trace.as_deref_mut() {
+                    t.on_stage(&stages[stage].label);
+                }
+            }
+        }
+        None => {
+            stage = 0;
+            stage_iter = 0;
+            iter = 0;
+            clock = *setup_secs;
+            records = Vec::new();
+            policy = ConvergencePolicy::from_opts(opts);
+            if let Some(t) = trace.as_deref_mut() {
+                t.on_stage(&stages[0].label);
+            }
+        }
+    }
+
+    let mut steps_this_run = 0usize;
+    let mut status = RunStatus::Completed;
+    if !finished {
+        'run: loop {
+            while stage_iter < policy.max_iters() {
+                if ctrl.deadline_secs.is_some_and(|d| clock >= d) {
+                    status = RunStatus::Deadline;
+                    break 'run;
+                }
+                if ctrl.max_steps.is_some_and(|n| steps_this_run >= n) {
+                    status = RunStatus::Paused;
+                    break 'run;
+                }
+                let engine = stages[stage].engine.as_mut();
+                let sw = Stopwatch::start();
+                let out = engine.step(ws);
+                clock += sw.elapsed_secs();
+                phases.add(PHASE_MM, Duration::from_secs_f64(out.mm_secs));
+                phases.add(PHASE_SOLVE, Duration::from_secs_f64(out.solve_secs));
+                if out.sample_secs > 0.0 {
+                    phases.add(PHASE_SAMPLING, Duration::from_secs_f64(out.sample_secs));
+                }
+
+                // metrics off the clock (workspace buffers are free here)
+                let (res, pg) = metrics.eval_ws(engine.w(), engine.h(), ws);
+                let rec = IterRecord {
+                    iter,
+                    time_secs: clock,
+                    residual: res,
+                    proj_grad: pg,
+                    phase_secs: (out.mm_secs, out.solve_secs, out.sample_secs),
+                    hybrid_stats: out.hybrid_stats,
+                };
+                if let Some(t) = trace.as_deref_mut() {
+                    t.on_record(&rec);
+                }
+                records.push(rec);
+                iter += 1;
+                stage_iter += 1;
+                steps_this_run += 1;
+                if policy.observe(res) {
+                    break;
+                }
+            }
+            // stage converged or hit its cap
+            if stage + 1 >= nstages {
+                break 'run;
+            }
+            // warm-start the next stage from this stage's final H (the
+            // legacy IR entries pass H and re-derive W = H)
+            let warm = EngineState {
+                h: stages[stage].engine.h().clone(),
+                w: None,
+                rng: None,
+            };
+            stage += 1;
+            stages[stage].engine.load(&warm);
+            stage_iter = 0;
+            policy = ConvergencePolicy::from_opts(opts);
+            if let Some(t) = trace.as_deref_mut() {
+                t.on_stage(&stages[stage].label);
+            }
+        }
+    } else if let Some(cp) = resume {
+        status = cp.status;
+    }
+
+    // The checkpoint is materialized eagerly: one records clone plus two
+    // factor clones (engine.save) per SOLVE — microseconds against the
+    // m²k products of even a single iteration, and it keeps EngineRun a
+    // plain owned value (no lazy-snapshot lifetime coupling to the
+    // engine). The plain entry points that drop it pay the same noise.
+    let engine = stages[stage].engine.as_ref();
+    let (stop_best, stop_stall) = policy.state();
+    let checkpoint = Checkpoint {
+        status,
+        stage,
+        stage_iter,
+        iter,
+        clock,
+        stop_best,
+        stop_stall,
+        state: engine.save(),
+        records: records.clone(),
+    };
+    let result = SymNmfResult {
+        // the ACTIVE stage's label: on completed runs this is the final
+        // stage (identical to the legacy labeling); on interrupted runs
+        // it truthfully names the stage that was executing — a deadlined
+        // LAI-IR run that never reached refinement reports "LAI-…", not
+        // "LAI-…-IR".
+        label: stages[stage].label.clone(),
+        h: engine.h().clone(),
+        w: engine.w().clone(),
+        records,
+        phases: phases.clone(),
+        setup_secs: *setup_secs,
+    };
+    EngineRun { result, checkpoint }
+}
+
+/// Size the shared iteration workspace for a stage chain: (m, k) from the
+/// first stage's H, the gather budget from the largest sampler.
+pub fn workspace_for(spec: &SolveSpec<'_>) -> IterWorkspace {
+    let (m, k) = spec.stages[0].engine.h().shape();
+    let s = spec
+        .stages
+        .iter()
+        .map(|st| st.engine.sample_budget())
+        .max()
+        .unwrap_or(0);
+    IterWorkspace::with_samples(m, k, s)
+}
+
+// ---------------------------------------------------------------------
+// Checkpoint serialization.
+//
+// f64 payloads that must survive bitwise (factors, residuals, RNG state,
+// stopping state) are encoded as fixed-width lowercase hex of their IEEE
+// bits — `Json::Num` would round-trip too (Rust's shortest-repr Display),
+// but hex is proof against any downstream printer and handles NaN/Inf.
+// Wall-clock fields are plain numbers: they are observations, not state.
+// ---------------------------------------------------------------------
+
+fn hex_f64(x: f64) -> Json {
+    Json::Str(format!("{:016x}", x.to_bits()))
+}
+
+fn unhex_f64(j: &Json) -> Result<f64, String> {
+    let s = j.as_str().ok_or_else(|| "expected f64 hex string".to_string())?;
+    u64::from_str_radix(s, 16)
+        .map(f64::from_bits)
+        .map_err(|e| format!("bad f64 hex {s:?}: {e}"))
+}
+
+fn hex_u128(x: u128) -> Json {
+    Json::Str(format!("{x:032x}"))
+}
+
+fn unhex_u128(j: &Json) -> Result<u128, String> {
+    let s = j.as_str().ok_or_else(|| "expected u128 hex string".to_string())?;
+    u128::from_str_radix(s, 16).map_err(|e| format!("bad u128 hex {s:?}: {e}"))
+}
+
+fn num(j: Option<&Json>, what: &str) -> Result<f64, String> {
+    j.and_then(Json::as_f64).ok_or_else(|| format!("missing number {what}"))
+}
+
+fn mat_to_json(m: &DenseMat) -> Json {
+    use std::fmt::Write as _;
+    let mut bits = String::with_capacity(16 * m.data().len());
+    for v in m.data() {
+        let _ = write!(bits, "{:016x}", v.to_bits());
+    }
+    Json::obj(vec![
+        ("rows", Json::Num(m.rows() as f64)),
+        ("cols", Json::Num(m.cols() as f64)),
+        ("bits", Json::Str(bits)),
+    ])
+}
+
+fn mat_from_json(j: &Json) -> Result<DenseMat, String> {
+    let rows = num(j.get("rows"), "mat.rows")? as usize;
+    let cols = num(j.get("cols"), "mat.cols")? as usize;
+    let bits = j
+        .get("bits")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "missing mat.bits".to_string())?;
+    if !bits.is_ascii() {
+        // guards the fixed-offset slicing below: a multi-byte character
+        // straddling a 16-byte boundary would otherwise panic
+        return Err("mat.bits must be ASCII hex".to_string());
+    }
+    // checked size math: corrupted dims must yield Err, never an
+    // overflow panic (debug) or a wrapped-through length check (release)
+    let count = rows
+        .checked_mul(cols)
+        .filter(|&n| n.checked_mul(16) == Some(bits.len()))
+        .ok_or_else(|| {
+            format!("mat.bits length {} != 16·{rows}·{cols}", bits.len())
+        })?;
+    let mut data = Vec::with_capacity(count);
+    for c in 0..count {
+        let s = &bits[16 * c..16 * (c + 1)];
+        let b = u64::from_str_radix(s, 16).map_err(|e| format!("bad mat hex {s:?}: {e}"))?;
+        data.push(f64::from_bits(b));
+    }
+    Ok(DenseMat::from_vec(rows, cols, data))
+}
+
+fn record_to_json(r: &IterRecord) -> Json {
+    let (mm, solve, sample) = r.phase_secs;
+    Json::obj(vec![
+        ("iter", Json::Num(r.iter as f64)),
+        ("time_secs", Json::Num(r.time_secs)),
+        ("residual", hex_f64(r.residual)),
+        (
+            "proj_grad",
+            r.proj_grad.map(hex_f64).unwrap_or(Json::Null),
+        ),
+        (
+            "phase_secs",
+            Json::Arr(vec![Json::Num(mm), Json::Num(solve), Json::Num(sample)]),
+        ),
+        (
+            "hybrid",
+            r.hybrid_stats
+                .map(|(a, b)| Json::Arr(vec![hex_f64(a), hex_f64(b)]))
+                .unwrap_or(Json::Null),
+        ),
+    ])
+}
+
+fn record_from_json(j: &Json) -> Result<IterRecord, String> {
+    let phase = j
+        .get("phase_secs")
+        .and_then(Json::as_arr)
+        .filter(|a| a.len() == 3)
+        .ok_or_else(|| "missing record.phase_secs[3]".to_string())?;
+    let hybrid = match j.get("hybrid") {
+        None | Some(Json::Null) => None,
+        Some(Json::Arr(a)) if a.len() == 2 => {
+            Some((unhex_f64(&a[0])?, unhex_f64(&a[1])?))
+        }
+        Some(other) => return Err(format!("bad record.hybrid {other:?}")),
+    };
+    let proj_grad = match j.get("proj_grad") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(unhex_f64(v)?),
+    };
+    Ok(IterRecord {
+        iter: num(j.get("iter"), "record.iter")? as usize,
+        time_secs: num(j.get("time_secs"), "record.time_secs")?,
+        residual: unhex_f64(
+            j.get("residual")
+                .ok_or_else(|| "missing record.residual".to_string())?,
+        )?,
+        proj_grad,
+        phase_secs: (
+            num(Some(&phase[0]), "phase[0]")?,
+            num(Some(&phase[1]), "phase[1]")?,
+            num(Some(&phase[2]), "phase[2]")?,
+        ),
+        hybrid_stats: hybrid,
+    })
+}
+
+impl Checkpoint {
+    pub fn to_json(&self) -> Json {
+        let rng = match &self.state.rng {
+            Some(r) => Json::obj(vec![
+                ("state", hex_u128(r.state)),
+                ("inc", hex_u128(r.inc)),
+                (
+                    "spare",
+                    r.gauss_spare.map(hex_f64).unwrap_or(Json::Null),
+                ),
+            ]),
+            None => Json::Null,
+        };
+        Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            ("status", Json::Str(self.status.as_str().to_string())),
+            ("stage", Json::Num(self.stage as f64)),
+            ("stage_iter", Json::Num(self.stage_iter as f64)),
+            ("iter", Json::Num(self.iter as f64)),
+            ("clock", Json::Num(self.clock)),
+            ("stop_best", hex_f64(self.stop_best)),
+            ("stop_stall", Json::Num(self.stop_stall as f64)),
+            ("h", mat_to_json(&self.state.h)),
+            (
+                "w",
+                self.state
+                    .w
+                    .as_ref()
+                    .map(mat_to_json)
+                    .unwrap_or(Json::Null),
+            ),
+            ("rng", rng),
+            (
+                "records",
+                Json::Arr(self.records.iter().map(record_to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Checkpoint, String> {
+        let version = num(j.get("version"), "version")? as usize;
+        if version != 1 {
+            return Err(format!("unsupported checkpoint version {version}"));
+        }
+        let status = RunStatus::parse(
+            j.get("status")
+                .and_then(Json::as_str)
+                .ok_or_else(|| "missing status".to_string())?,
+        )?;
+        let w = match j.get("w") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(mat_from_json(v)?),
+        };
+        let rng = match j.get("rng") {
+            None | Some(Json::Null) => None,
+            Some(v) => {
+                let spare = match v.get("spare") {
+                    None | Some(Json::Null) => None,
+                    Some(s) => Some(unhex_f64(s)?),
+                };
+                Some(RngState {
+                    state: unhex_u128(
+                        v.get("state").ok_or_else(|| "missing rng.state".to_string())?,
+                    )?,
+                    inc: unhex_u128(
+                        v.get("inc").ok_or_else(|| "missing rng.inc".to_string())?,
+                    )?,
+                    gauss_spare: spare,
+                })
+            }
+        };
+        let records = j
+            .get("records")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "missing records".to_string())?
+            .iter()
+            .map(record_from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        let iter = num(j.get("iter"), "iter")? as usize;
+        // cheap internal-consistency validation at the parse boundary —
+        // a corrupted checkpoint should fail here with Err, not as a
+        // panic deep inside run_solver (stage bounds and factor shapes
+        // are still checked there, against the rebuilt spec)
+        if iter != records.len() {
+            return Err(format!(
+                "inconsistent checkpoint: iter = {iter} but {} records",
+                records.len()
+            ));
+        }
+        Ok(Checkpoint {
+            status,
+            stage: num(j.get("stage"), "stage")? as usize,
+            stage_iter: num(j.get("stage_iter"), "stage_iter")? as usize,
+            iter,
+            clock: num(j.get("clock"), "clock")?,
+            stop_best: unhex_f64(
+                j.get("stop_best").ok_or_else(|| "missing stop_best".to_string())?,
+            )?,
+            stop_stall: num(j.get("stop_stall"), "stop_stall")? as usize,
+            state: EngineState {
+                h: mat_from_json(
+                    j.get("h").ok_or_else(|| "missing h".to_string())?,
+                )?,
+                w,
+                rng,
+            },
+            records,
+        })
+    }
+
+    /// Serialize to a JSON string (the inverse of [`Checkpoint::parse`]).
+    pub fn serialize(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Parse a serialized checkpoint.
+    pub fn parse(s: &str) -> Result<Checkpoint, String> {
+        Checkpoint::from_json(&Json::parse(s)?)
+    }
+}
+
+/// Assert two results are bitwise-identical in everything the engine
+/// contract pins: residual history (+ hybrid stats), factors, iteration
+/// count, and label. Wall-clock fields are exempt. Shared by the
+/// per-method pinning and resume tests.
+#[cfg(test)]
+pub(crate) fn assert_results_bitwise_eq(a: &SymNmfResult, b: &SymNmfResult, what: &str) {
+    assert_eq!(a.label, b.label, "{what}: label");
+    assert_eq!(a.iters(), b.iters(), "{what}: iteration count");
+    for (i, (ra, rb)) in a.records.iter().zip(&b.records).enumerate() {
+        assert_eq!(ra.iter, rb.iter, "{what}: record {i} index");
+        assert_eq!(
+            ra.residual.to_bits(),
+            rb.residual.to_bits(),
+            "{what}: residual at iter {i}"
+        );
+        match (ra.proj_grad, rb.proj_grad) {
+            (Some(x), Some(y)) => {
+                assert_eq!(x.to_bits(), y.to_bits(), "{what}: proj_grad at iter {i}")
+            }
+            (None, None) => {}
+            _ => panic!("{what}: proj_grad presence differs at iter {i}"),
+        }
+        match (ra.hybrid_stats, rb.hybrid_stats) {
+            (Some((x1, x2)), Some((y1, y2))) => {
+                assert_eq!(x1.to_bits(), y1.to_bits(), "{what}: hybrid.0 at iter {i}");
+                assert_eq!(x2.to_bits(), y2.to_bits(), "{what}: hybrid.1 at iter {i}");
+            }
+            (None, None) => {}
+            _ => panic!("{what}: hybrid presence differs at iter {i}"),
+        }
+    }
+    assert_eq!(a.h.shape(), b.h.shape(), "{what}: H shape");
+    for (x, y) in a.h.data().iter().zip(b.h.data()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: H bits");
+    }
+    assert_eq!(a.w.shape(), b.w.shape(), "{what}: W shape");
+    for (x, y) in a.w.data().iter().zip(b.w.data()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: W bits");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn policy_caps_and_stops() {
+        let mut opts = SymNmfOptions::new(3);
+        opts.max_iters = 10;
+        opts.tol = 1e-4;
+        opts.patience = 2;
+        let mut p = ConvergencePolicy::from_opts(&opts);
+        assert_eq!(p.max_iters(), 10);
+        assert!(!p.observe(0.5));
+        assert!(!p.observe(0.5)); // stall 1
+        assert!(p.observe(0.5)); // stall 2 → stop
+        // restored state picks up mid-stall
+        let (best, stall) = p.state();
+        let mut q = ConvergencePolicy::from_state(&opts, best, stall);
+        assert_eq!(q.state(), p.state());
+        assert!(q.observe(0.5), "restored rule is already at the threshold");
+    }
+
+    #[test]
+    fn run_control_env_and_builders() {
+        let c = RunControl::unlimited();
+        assert!(c.deadline_secs.is_none() && c.max_steps.is_none());
+        let c = RunControl::unlimited().with_deadline(1.5).with_max_steps(7);
+        assert_eq!(c.deadline_secs, Some(1.5));
+        assert_eq!(c.max_steps, Some(7));
+    }
+
+    #[test]
+    fn checkpoint_json_roundtrips_bitwise() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        for _ in 0..3 {
+            rng.gaussian(); // leave a Box–Muller spare in the snapshot
+        }
+        let h = DenseMat::gaussian(4, 3, &mut rng);
+        let w = DenseMat::gaussian(4, 3, &mut rng);
+        let cp = Checkpoint {
+            status: RunStatus::Paused,
+            stage: 1,
+            stage_iter: 2,
+            iter: 2, // must equal records.len() (validated at parse)
+            clock: 0.1234567890123,
+            stop_best: f64::INFINITY,
+            stop_stall: 3,
+            state: EngineState {
+                h: h.clone(),
+                w: Some(w.clone()),
+                rng: Some(rng.state()),
+            },
+            records: vec![
+                IterRecord {
+                    iter: 0,
+                    time_secs: 0.5,
+                    residual: 0.1 + 1e-17, // oddball bits
+                    proj_grad: Some(2.5e-3),
+                    phase_secs: (0.1, 0.2, 0.0),
+                    hybrid_stats: None,
+                },
+                IterRecord {
+                    iter: 1,
+                    time_secs: 0.9,
+                    residual: f64::NAN,
+                    proj_grad: None,
+                    phase_secs: (0.0, 0.0, 0.0),
+                    hybrid_stats: Some((0.25, 0.75)),
+                },
+            ],
+        };
+        let text = cp.serialize();
+        let back = Checkpoint::parse(&text).expect("parse");
+        assert_eq!(back.status, cp.status);
+        assert_eq!(back.stage, 1);
+        assert_eq!(back.stage_iter, 2);
+        assert_eq!(back.iter, 2);
+        assert_eq!(back.stop_best.to_bits(), cp.stop_best.to_bits());
+        assert_eq!(back.stop_stall, 3);
+        assert_eq!(back.state.rng, cp.state.rng);
+        for (a, b) in cp.state.h.data().iter().zip(back.state.h.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in w.data().iter().zip(back.state.w.as_ref().unwrap().data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(back.records.len(), 2);
+        assert_eq!(
+            back.records[0].residual.to_bits(),
+            cp.records[0].residual.to_bits()
+        );
+        assert_eq!(back.records[0].proj_grad.unwrap().to_bits(), 2.5e-3f64.to_bits());
+        assert!(back.records[1].residual.is_nan(), "NaN must survive hex encoding");
+        assert_eq!(
+            back.records[1].hybrid_stats.unwrap().1.to_bits(),
+            0.75f64.to_bits()
+        );
+    }
+
+    #[test]
+    fn checkpoint_parse_rejects_garbage() {
+        assert!(Checkpoint::parse("{}").is_err());
+        assert!(Checkpoint::parse("[1,2]").is_err());
+        assert!(Checkpoint::parse("{\"status\":\"nope\"}").is_err());
+    }
+}

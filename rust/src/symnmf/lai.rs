@@ -11,7 +11,12 @@
 use crate::linalg::{blas, DenseMat};
 use crate::randnla::evd::{apx_evd, apx_evd_adaptive, ApxEvd};
 use crate::randnla::SymOp;
-use crate::symnmf::anls::{resolve_alpha, run_alternating_loop, Metrics};
+use crate::symnmf::anls::{resolve_alpha, AltEngine, Metrics};
+#[cfg(test)]
+use crate::symnmf::anls::run_alternating_loop;
+use crate::symnmf::engine::{
+    run_solver, workspace_for, Checkpoint, EngineRun, RunControl, SolveSpec, Stage, TraceSink,
+};
 use crate::symnmf::init::initial_factor;
 use crate::symnmf::metrics::SymNmfResult;
 use crate::symnmf::options::{PowerIter, SymNmfOptions};
@@ -117,8 +122,57 @@ pub fn build_lai<X: SymOp>(
 }
 
 /// LAI-SymNMF with alternating updates (Alg. LAI-SymNMF); set
-/// `opts.refine` for the "-IR" variants of §5.1.
+/// `opts.refine` for the "-IR" variants of §5.1. Thin wrapper over the
+/// engine chain (`SYMNMF_DEADLINE_MS` honored).
 pub fn lai_symnmf<X: SymOp>(x: &X, opts: &SymNmfOptions) -> SymNmfResult {
+    lai_symnmf_run(x, opts, &RunControl::from_env(), None, None).result
+}
+
+/// The controlled engine entry. LAI-SymNMF is engine *composition*: the
+/// RRF/Apx-EVD build is the setup phase, stage 0 is the shared
+/// [`AltEngine`] over the factored [`LaiOp`], and Iterative Refinement
+/// (§3.3) is simply a second [`AltEngine`] stage over the true X that
+/// the shared outer loop warm-starts from stage 0's final H — no
+/// LAI-specific loop code remains.
+pub fn lai_symnmf_run<X: SymOp>(
+    x: &X,
+    opts: &SymNmfOptions,
+    ctrl: &RunControl,
+    resume: Option<&Checkpoint>,
+    trace: Option<&mut dyn TraceSink>,
+) -> EngineRun {
+    let xd: &dyn SymOp = x;
+    let mut rng = Pcg64::seed_from_u64(opts.seed);
+    let alpha = resolve_alpha(x, opts);
+    let mut phases = PhaseTimer::new();
+    let (lai, setup_secs, _evd) = build_lai(x, opts, &mut rng, &mut phases);
+    let h0 = initial_factor(x, opts, &mut rng);
+    let base_label = format!("LAI-{}", opts.rule.label());
+    let mut stages: Vec<Stage<'_>> = vec![Stage {
+        engine: Box::new(AltEngine::new(&lai, alpha, opts.rule, h0.clone())),
+        label: base_label.clone(),
+    }];
+    if opts.refine {
+        stages.push(Stage {
+            engine: Box::new(AltEngine::new(xd, alpha, opts.rule, h0)),
+            label: format!("{base_label}-IR"),
+        });
+    }
+    let mut spec = SolveSpec {
+        stages,
+        metrics: Metrics::new(xd, true),
+        setup_secs,
+        phases,
+    };
+    let mut ws = workspace_for(&spec);
+    run_solver(&mut spec, opts, ctrl, resume, trace, &mut ws)
+}
+
+/// The frozen pre-engine LAI(-IR) entry (pinning oracle): legacy
+/// alternating loop over the LAI, then an explicit IR continuation with
+/// stitched records.
+#[cfg(test)]
+pub(crate) fn lai_symnmf_reference<X: SymOp>(x: &X, opts: &SymNmfOptions) -> SymNmfResult {
     let mut rng = Pcg64::seed_from_u64(opts.seed);
     let alpha = resolve_alpha(x, opts);
     let mut phases = PhaseTimer::new();
@@ -173,13 +227,15 @@ pub fn lai_symnmf<X: SymOp>(x: &X, opts: &SymNmfOptions) -> SymNmfResult {
     result
 }
 
-/// Helper: view a concrete SymOp as a trait object (run_alternating_loop
+/// Helper: view a concrete SymOp as a trait object (the reference loop
 /// takes &dyn).
+#[cfg(test)]
 trait AsDyn: SymOp + Sized {
     fn as_dyn(&self) -> &dyn SymOp {
         self
     }
 }
+#[cfg(test)]
 impl<T: SymOp> AsDyn for T {}
 
 #[cfg(test)]
@@ -239,6 +295,87 @@ mod tests {
                 exact.min_residual()
             );
             assert!(lai.setup_secs > 0.0);
+        }
+    }
+
+    /// Acceptance: the engine chain is bitwise-identical to the frozen
+    /// pre-refactor LAI(-IR) entry — the IR warm start through the
+    /// shared outer loop reproduces the legacy stitching exactly.
+    #[test]
+    fn engine_path_pinned_bitwise_to_reference() {
+        use crate::symnmf::engine::{assert_results_bitwise_eq, RunControl};
+        for (m, k) in [(30, 2), (63, 7)] {
+            let x = planted(m, k, 13);
+            for refine in [false, true] {
+                let mut opts = SymNmfOptions::new(k)
+                    .with_rule(UpdateRule::Hals)
+                    .with_seed(17);
+                opts.max_iters = 9;
+                opts.refine = refine;
+                let oracle = lai_symnmf_reference(&x, &opts);
+                let engine = lai_symnmf_run(&x, &opts, &RunControl::unlimited(), None, None);
+                assert_results_bitwise_eq(
+                    &oracle,
+                    &engine.result,
+                    &format!("lai refine={refine} k={k}"),
+                );
+            }
+        }
+    }
+
+    /// Acceptance: checkpoint/resume bitwise across BOTH stages of the
+    /// IR chain, plus deadline-0 initial iterate.
+    #[test]
+    fn checkpoint_resume_and_deadline() {
+        use crate::symnmf::engine::{assert_results_bitwise_eq, RunControl, RunStatus};
+        for k in [2usize, 7] {
+            let x = planted(10 * k, k, 23);
+            let mut opts = SymNmfOptions::new(k).with_rule(UpdateRule::Hals).with_seed(5);
+            opts.max_iters = 6;
+            opts.refine = true;
+            let full = lai_symnmf_run(&x, &opts, &RunControl::unlimited(), None, None);
+            for steps in [2usize, opts.max_iters + 1] {
+                let paused = lai_symnmf_run(
+                    &x,
+                    &opts,
+                    &RunControl::unlimited().with_max_steps(steps),
+                    None,
+                    None,
+                );
+                if steps < full.result.iters() {
+                    assert_eq!(paused.checkpoint.status, RunStatus::Paused);
+                }
+                let cp =
+                    Checkpoint::parse(&paused.checkpoint.serialize()).expect("roundtrip");
+                let resumed =
+                    lai_symnmf_run(&x, &opts, &RunControl::unlimited(), Some(&cp), None);
+                assert_results_bitwise_eq(
+                    &full.result,
+                    &resumed.result,
+                    &format!("lai-ir k={k} pause@{steps}"),
+                );
+            }
+            let dead = lai_symnmf_run(
+                &x,
+                &opts,
+                &RunControl::unlimited().with_deadline(0.0),
+                None,
+                None,
+            );
+            assert_eq!(dead.checkpoint.status, RunStatus::Deadline);
+            assert!(dead.result.records.is_empty());
+            let resumed = lai_symnmf_run(
+                &x,
+                &opts,
+                &RunControl::unlimited(),
+                Some(&dead.checkpoint),
+                None,
+            );
+            assert_results_bitwise_eq(
+                &full.result,
+                &resumed.result,
+                &format!("lai deadline-0 k={k}"),
+            );
         }
     }
 

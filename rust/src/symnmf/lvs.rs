@@ -17,10 +17,14 @@
 //! no speedup while τ = 1/s makes the method competitive (§5.2, Fig. 2).
 
 use crate::linalg::{blas, DenseMat, IterWorkspace};
-use crate::nls::update_into;
+use crate::nls::{update_into, UpdateRule};
 use crate::randnla::leverage::{sample_hybrid, SampleMatrix};
 use crate::randnla::SymOp;
 use crate::symnmf::anls::{resolve_alpha, Metrics};
+use crate::symnmf::engine::{
+    run_solver, workspace_for, Checkpoint, EngineRun, EngineState, RunControl, SolveSpec,
+    SolverEngine, Stage, StepOutcome, TraceSink,
+};
 #[cfg(test)]
 use crate::symnmf::init::init_factor;
 use crate::symnmf::init::initial_factor;
@@ -37,22 +41,185 @@ fn sample_factor(f: &DenseMat, s: usize, tau: f64, rng: &mut Pcg64) -> SampleMat
     sample_hybrid(&lev, s, tau, rng)
 }
 
-/// LvS-SymNMF. Works for any [`SymOp`]; designed for sparse X where
-/// `sampled_apply_into` costs O(s·nnz_row·k). Sizes the workspace
-/// (including the s×k gather buffer) once and delegates to
-/// [`lvs_symnmf_ws`].
-pub fn lvs_symnmf<X: SymOp>(x: &X, opts: &SymNmfOptions) -> SymNmfResult {
-    let m = x.dim();
-    let s = opts.effective_samples(m);
-    let mut ws = IterWorkspace::with_samples(m, opts.k, s);
-    lvs_symnmf_ws(x, opts, &mut ws)
+/// The §5 label of an LvS configuration, shared by the engine wrapper
+/// and the frozen reference loop.
+fn lvs_label(opts: &SymNmfOptions) -> String {
+    let tau_label = match opts.tau {
+        crate::symnmf::options::Tau::Fixed(t) if (t - 1.0).abs() < 1e-12 => "τ=1".to_string(),
+        crate::symnmf::options::Tau::Fixed(t) => format!("τ={t}"),
+        crate::symnmf::options::Tau::OneOverS => "τ=1/s".to_string(),
+    };
+    format!("LvS-{} ({tau_label})", opts.rule.label())
 }
 
-/// LvS-SymNMF against a caller-provided workspace: the update loop's
-/// sampled products, Gram matrices and update-rule scratch all come from
-/// `ws` — no per-iteration O(m·k) allocation. (The sampler itself still
-/// builds its index/scale vectors per draw; those are O(s) and belong to
-/// the sampling phase, not the kernel core.)
+/// LvS-SymNMF as a [`SolverEngine`]: one step is the full
+/// sample-H/update-W then sample-W/update-H iteration of Alg.
+/// LvS-SymNMF. The engine owns the sampling RNG, so its checkpoint
+/// carries (H, W, RNG state) — a resumed run replays the exact remaining
+/// sample draws.
+pub struct LvsEngine<'a> {
+    x: &'a dyn SymOp,
+    alpha: f64,
+    rule: UpdateRule,
+    s: usize,
+    tau: f64,
+    rng: Pcg64,
+    w: DenseMat,
+    h: DenseMat,
+}
+
+impl<'a> LvsEngine<'a> {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        x: &'a dyn SymOp,
+        alpha: f64,
+        rule: UpdateRule,
+        s: usize,
+        tau: f64,
+        rng: Pcg64,
+        h0: DenseMat,
+    ) -> LvsEngine<'a> {
+        LvsEngine { x, alpha, rule, s, tau, rng, w: h0.clone(), h: h0 }
+    }
+}
+
+impl SolverEngine for LvsEngine<'_> {
+    fn h(&self) -> &DenseMat {
+        &self.h
+    }
+
+    fn w(&self) -> &DenseMat {
+        &self.w
+    }
+
+    fn sample_budget(&self) -> usize {
+        self.s
+    }
+
+    fn step(&mut self, ws: &mut IterWorkspace) -> StepOutcome {
+        let k = self.h.cols();
+        let mut t_mm = 0.0;
+        let mut t_solve = 0.0;
+        let mut t_sample = 0.0;
+
+        // --- sample on H, update W (lines 4–10) ---
+        let t = Stopwatch::start();
+        let sm_h = sample_factor(&self.h, self.s, self.tau, &mut self.rng);
+        self.h.gather_rows_scaled_into(&sm_h.indices, &sm_h.scales, &mut ws.sf);
+        t_sample += t.elapsed_secs();
+
+        let t = Stopwatch::start();
+        self.x
+            .sampled_apply_into(&self.h, &sm_h.indices, &sm_h.weights_sq(), &mut ws.y);
+        ws.y.axpy(self.alpha, &self.h);
+        blas::gram_into(&ws.sf, &mut ws.g);
+        t_mm += t.elapsed_secs();
+        ws.g.add_diag(self.alpha);
+        let t = Stopwatch::start();
+        update_into(self.rule, &ws.g, &ws.y, &mut self.w, &mut ws.update);
+        t_solve += t.elapsed_secs();
+
+        // --- sample on W, update H (lines 11–17) ---
+        let t = Stopwatch::start();
+        let sm_w = sample_factor(&self.w, self.s, self.tau, &mut self.rng);
+        self.w.gather_rows_scaled_into(&sm_w.indices, &sm_w.scales, &mut ws.sf);
+        t_sample += t.elapsed_secs();
+
+        let t = Stopwatch::start();
+        self.x
+            .sampled_apply_into(&self.w, &sm_w.indices, &sm_w.weights_sq(), &mut ws.y);
+        ws.y.axpy(self.alpha, &self.w);
+        blas::gram_into(&ws.sf, &mut ws.g);
+        t_mm += t.elapsed_secs();
+        ws.g.add_diag(self.alpha);
+        let t = Stopwatch::start();
+        update_into(self.rule, &ws.g, &ws.y, &mut self.h, &mut ws.update);
+        t_solve += t.elapsed_secs();
+
+        let det_frac =
+            0.5 * (sm_h.deterministic_fraction() + sm_w.deterministic_fraction());
+        let theta_over_k = 0.5 * (sm_h.theta + sm_w.theta) / k as f64;
+        StepOutcome {
+            mm_secs: t_mm,
+            solve_secs: t_solve,
+            sample_secs: t_sample,
+            hybrid_stats: Some((det_frac, theta_over_k)),
+        }
+    }
+
+    fn save(&self) -> EngineState {
+        EngineState {
+            h: self.h.clone(),
+            w: Some(self.w.clone()),
+            rng: Some(self.rng.state()),
+        }
+    }
+
+    fn load(&mut self, st: &EngineState) {
+        assert_eq!(st.h.shape(), self.h.shape(), "LvsEngine::load: H shape mismatch");
+        self.h = st.h.clone();
+        self.w = match &st.w {
+            Some(w) => {
+                assert_eq!(w.shape(), self.h.shape(), "LvsEngine::load: W shape mismatch");
+                w.clone()
+            }
+            None => self.h.clone(),
+        };
+        // LvS has no RNG-free warm-start path (it is never a later chain
+        // stage): a state without the sampler RNG is a defective
+        // checkpoint, and silently keeping the fresh stream would break
+        // the bitwise-resume contract without any signal.
+        let r = st
+            .rng
+            .as_ref()
+            .expect("LvsEngine::load: checkpoint must carry the sampler RNG state");
+        self.rng = Pcg64::from_state(r);
+    }
+}
+
+/// LvS-SymNMF. Works for any [`SymOp`]; designed for sparse X where
+/// `sampled_apply_into` costs O(s·nnz_row·k). Thin wrapper over the
+/// engine path (`SYMNMF_DEADLINE_MS` honored).
+pub fn lvs_symnmf<X: SymOp>(x: &X, opts: &SymNmfOptions) -> SymNmfResult {
+    lvs_symnmf_run(x, opts, &RunControl::from_env(), None, None).result
+}
+
+/// The controlled engine entry: deadline/pause budgets, checkpoint
+/// resume (including the sampler's RNG state), per-iteration tracing.
+pub fn lvs_symnmf_run<X: SymOp>(
+    x: &X,
+    opts: &SymNmfOptions,
+    ctrl: &RunControl,
+    resume: Option<&Checkpoint>,
+    trace: Option<&mut dyn TraceSink>,
+) -> EngineRun {
+    let mut rng = Pcg64::seed_from_u64(opts.seed);
+    let alpha = resolve_alpha(x, opts);
+    let m = x.dim();
+    let s = opts.effective_samples(m);
+    let tau = opts.tau.value(s);
+    let h0 = initial_factor(x, opts, &mut rng);
+    let x: &dyn SymOp = x;
+    let mut spec = SolveSpec {
+        stages: vec![Stage {
+            engine: Box::new(LvsEngine::new(x, alpha, opts.rule, s, tau, rng, h0)),
+            label: lvs_label(opts),
+        }],
+        metrics: Metrics::new(x, true),
+        setup_secs: 0.0,
+        phases: PhaseTimer::new(),
+    };
+    let mut ws = workspace_for(&spec);
+    run_solver(&mut spec, opts, ctrl, resume, trace, &mut ws)
+}
+
+/// The frozen pre-engine LvS loop against a caller-provided workspace,
+/// kept verbatim as the **reference oracle** the engine path is pinned
+/// against. The update loop's sampled products, Gram matrices and
+/// update-rule scratch all come from `ws` — no per-iteration O(m·k)
+/// allocation. (The sampler itself still builds its index/scale vectors
+/// per draw; those are O(s) and belong to the sampling phase, not the
+/// kernel core.)
 pub fn lvs_symnmf_ws<X: SymOp>(
     x: &X,
     opts: &SymNmfOptions,
@@ -73,12 +240,7 @@ pub fn lvs_symnmf_ws<X: SymOp>(
     let mut phases = PhaseTimer::new();
     let mut clock = 0.0;
 
-    let tau_label = match opts.tau {
-        crate::symnmf::options::Tau::Fixed(t) if (t - 1.0).abs() < 1e-12 => "τ=1".to_string(),
-        crate::symnmf::options::Tau::Fixed(t) => format!("τ={t}"),
-        crate::symnmf::options::Tau::OneOverS => "τ=1/s".to_string(),
-    };
-    let label = format!("LvS-{} ({tau_label})", opts.rule.label());
+    let label = lvs_label(opts);
 
     for iter in 0..opts.max_iters {
         let sw = Stopwatch::start();
@@ -207,6 +369,84 @@ mod tests {
             before,
             "LvS workspace buffers moved during the update loop"
         );
+    }
+
+    /// Acceptance: the engine wrapper is bitwise-identical to the frozen
+    /// pre-refactor loop — identical sample draws, residual history,
+    /// factors, hybrid stats, and label.
+    #[test]
+    fn engine_path_pinned_bitwise_to_reference() {
+        use crate::symnmf::engine::assert_results_bitwise_eq;
+        for (k, m) in [(2usize, 60), (7, 105)] {
+            let x = planted_sparse(m, k.max(3), 21);
+            let mut opts = SymNmfOptions::new(k)
+                .with_rule(UpdateRule::Hals)
+                .with_seed(13);
+            opts.max_iters = 8;
+            opts.samples = Some(m / 2);
+            let s = opts.effective_samples(x.rows());
+            let mut ws = IterWorkspace::with_samples(x.rows(), k, s);
+            let oracle = lvs_symnmf_ws(&x, &opts, &mut ws);
+            let engine = lvs_symnmf_run(&x, &opts, &RunControl::unlimited(), None, None);
+            assert_results_bitwise_eq(&oracle, &engine.result, &format!("lvs k={k}"));
+        }
+    }
+
+    /// Acceptance: checkpoint → serialize → resume reproduces the
+    /// uninterrupted run bitwise (the RNG state in the checkpoint is what
+    /// keeps the remaining sample draws identical), and a deadline of 0
+    /// returns the initial iterate without stepping.
+    #[test]
+    fn checkpoint_resume_and_deadline() {
+        use crate::symnmf::engine::{assert_results_bitwise_eq, RunStatus};
+        for k in [2usize, 7] {
+            let m = 15 * k;
+            let x = planted_sparse(m, k.max(3), 31);
+            let mut opts = SymNmfOptions::new(k)
+                .with_rule(UpdateRule::Hals)
+                .with_seed(17);
+            opts.max_iters = 7;
+            opts.samples = Some(m / 2);
+            let full = lvs_symnmf_run(&x, &opts, &RunControl::unlimited(), None, None);
+            let paused = lvs_symnmf_run(
+                &x,
+                &opts,
+                &RunControl::unlimited().with_max_steps(2),
+                None,
+                None,
+            );
+            assert_eq!(paused.checkpoint.status, RunStatus::Paused);
+            assert!(
+                paused.checkpoint.state.rng.is_some(),
+                "LvS checkpoints must carry the sampler RNG"
+            );
+            let cp = Checkpoint::parse(&paused.checkpoint.serialize()).expect("roundtrip");
+            let resumed =
+                lvs_symnmf_run(&x, &opts, &RunControl::unlimited(), Some(&cp), None);
+            assert_results_bitwise_eq(&full.result, &resumed.result, &format!("lvs k={k}"));
+
+            let dead = lvs_symnmf_run(
+                &x,
+                &opts,
+                &RunControl::unlimited().with_deadline(0.0),
+                None,
+                None,
+            );
+            assert_eq!(dead.checkpoint.status, RunStatus::Deadline);
+            assert!(dead.result.records.is_empty());
+            let resumed = lvs_symnmf_run(
+                &x,
+                &opts,
+                &RunControl::unlimited(),
+                Some(&dead.checkpoint),
+                None,
+            );
+            assert_results_bitwise_eq(
+                &full.result,
+                &resumed.result,
+                &format!("lvs deadline-0 k={k}"),
+            );
+        }
     }
 
     #[test]

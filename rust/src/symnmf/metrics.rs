@@ -89,6 +89,18 @@ impl StopRule {
         StopRule { tol, patience, best: f64::INFINITY, stall: 0 }
     }
 
+    /// Resumable internal state `(best, stall)` — serialized into solver
+    /// checkpoints so a resumed run applies the identical stopping
+    /// decisions the uninterrupted run would have.
+    pub fn state(&self) -> (f64, usize) {
+        (self.best, self.stall)
+    }
+
+    /// Rebuild a rule mid-run from its serialized `(best, stall)` state.
+    pub fn from_state(tol: f64, patience: usize, best: f64, stall: usize) -> Self {
+        StopRule { tol, patience, best, stall }
+    }
+
     /// Feed the residual of the iteration that just finished; returns
     /// true when the algorithm should stop.
     pub fn update(&mut self, residual: f64) -> bool {

@@ -15,11 +15,17 @@
 //! All methods speak [`crate::randnla::SymOp`], share the Update(G, Y)
 //! solver toolbox ([`crate::nls`]), the §5 initialization ([`init`]) and
 //! the App. C stopping criteria ([`convergence`]); per-iteration metrics
-//! land in [`metrics`].
+//! land in [`metrics`]. Every method executes as a step-driven
+//! [`engine::SolverEngine`] inside the shared resumable outer loop of
+//! [`engine`] — wall-clock deadlines, checkpoint/resume, and
+//! per-iteration [`engine::TraceSink`] telemetry come from that one loop;
+//! the `symnmf_*` entry points are thin wrappers over it, pinned bitwise
+//! to the frozen pre-engine reference loops kept in each module.
 
 pub mod anls;
 pub mod compressed;
 pub mod convergence;
+pub mod engine;
 pub mod init;
 pub mod lai;
 pub mod lvs;
@@ -27,5 +33,8 @@ pub mod metrics;
 pub mod options;
 pub mod pgncg;
 
+pub use engine::{
+    Checkpoint, EngineRun, RunControl, RunStatus, SolverEngine, StepOutcome, TraceSink,
+};
 pub use metrics::{IterRecord, SymNmfResult};
 pub use options::SymNmfOptions;

@@ -19,16 +19,26 @@
 use crate::linalg::{blas, DenseMat, IterWorkspace};
 use crate::randnla::SymOp;
 use crate::symnmf::anls::Metrics;
+use crate::symnmf::engine::{
+    run_solver, workspace_for, Checkpoint, EngineRun, EngineState, RunControl, SolveSpec,
+    SolverEngine, Stage, StepOutcome, TraceSink,
+};
 use crate::symnmf::init::initial_factor;
 use crate::symnmf::lai::build_lai;
-use crate::symnmf::metrics::{IterRecord, StopRule, SymNmfResult};
+#[cfg(test)]
+use crate::symnmf::metrics::{IterRecord, StopRule};
+use crate::symnmf::metrics::SymNmfResult;
 use crate::symnmf::options::SymNmfOptions;
 use crate::util::rng::Pcg64;
-use crate::util::timer::{PhaseTimer, Stopwatch, PHASE_MM, PHASE_SOLVE};
+#[cfg(test)]
+use crate::util::timer::{PHASE_MM, PHASE_SOLVE};
+use crate::util::timer::{PhaseTimer, Stopwatch};
 
 /// Pre-sized buffers for the CG inner solve — allocated once per
-/// [`run_pgncg_loop`], reused across every outer iteration and every CG
-/// step (the PGNCG face of the zero-allocation kernel core).
+/// [`PgncgEngine`] (and per reference-loop run), reused across every
+/// outer iteration and every CG step (the PGNCG face of the
+/// zero-allocation kernel core). Carries no cross-iteration state: every
+/// buffer is fully rewritten before it is read each step.
 struct CgWorkspace {
     /// m×k: CG right-hand side / residual R
     r: DenseMat,
@@ -107,8 +117,67 @@ fn cg_direction(h: &DenseMat, g: &DenseMat, r0: DenseMat, iters: usize) -> Dense
     cg.z
 }
 
-/// Shared PGNCG loop over any operator (`x_iter` drives the iteration,
-/// `metrics` measures against the true X).
+/// PGNCG as a [`SolverEngine`]: one step is one projected Gauss–Newton
+/// outer iteration (X·H product, CG inner solve, projected update).
+/// PGNCG maintains only H (W aliases it) and the CG workspace carries no
+/// cross-iteration state, so its checkpoint is just H.
+pub struct PgncgEngine<'a> {
+    x: &'a dyn SymOp,
+    cg_iters: usize,
+    h: DenseMat,
+    cg: CgWorkspace,
+}
+
+impl<'a> PgncgEngine<'a> {
+    pub fn new(x: &'a dyn SymOp, cg_iters: usize, h0: DenseMat) -> PgncgEngine<'a> {
+        let (m, k) = h0.shape();
+        PgncgEngine { x, cg_iters, h: h0, cg: CgWorkspace::new(m, k) }
+    }
+}
+
+impl SolverEngine for PgncgEngine<'_> {
+    fn h(&self) -> &DenseMat {
+        &self.h
+    }
+
+    fn w(&self) -> &DenseMat {
+        &self.h
+    }
+
+    fn step(&mut self, ws: &mut IterWorkspace) -> StepOutcome {
+        let t = Stopwatch::start();
+        self.x.apply_into(&self.h, &mut ws.y); // X·H
+        blas::gram_into(&self.h, &mut ws.g); // G = HᵀH
+        let mm = t.elapsed_secs();
+
+        let t = Stopwatch::start();
+        // CG right-hand side R₀ = 2(XH − H·G), see the module header
+        blas::matmul_into(&self.h, &ws.g, &mut self.cg.hg);
+        self.cg.r.copy_from(&ws.y);
+        self.cg.r.axpy(-1.0, &self.cg.hg);
+        self.cg.r.scale(2.0);
+        cg_direction_ws(&self.h, &ws.g, self.cg_iters, &mut self.cg);
+        self.h.axpy(1.0, &self.cg.z);
+        self.h.project_nonneg();
+        let solve = t.elapsed_secs();
+
+        StepOutcome { mm_secs: mm, solve_secs: solve, ..StepOutcome::default() }
+    }
+
+    fn save(&self) -> EngineState {
+        EngineState { h: self.h.clone(), w: None, rng: None }
+    }
+
+    fn load(&mut self, st: &EngineState) {
+        assert_eq!(st.h.shape(), self.h.shape(), "PgncgEngine::load: H shape mismatch");
+        self.h = st.h.clone();
+    }
+}
+
+/// The frozen pre-engine PGNCG loop, kept verbatim as the **reference
+/// oracle** the engine path is pinned against (`x_iter` drives the
+/// iteration, `metrics` measures against the true X).
+#[cfg(test)]
 fn run_pgncg_loop(
     x_iter: &dyn SymOp,
     opts: &SymNmfOptions,
@@ -171,72 +240,234 @@ fn run_pgncg_loop(
     SymNmfResult { label, h: h.clone(), w: h, records, phases, setup_secs }
 }
 
-/// PGNCG-SymNMF on the exact X (the paper's "PGNCG" baseline).
+/// PGNCG-SymNMF on the exact X (the paper's "PGNCG" baseline) — thin
+/// wrapper over the engine path (`SYMNMF_DEADLINE_MS` honored).
 pub fn pgncg_symnmf<X: SymOp>(x: &X, opts: &SymNmfOptions) -> SymNmfResult {
-    let mut rng = Pcg64::seed_from_u64(opts.seed);
-    let h0 = initial_factor(x, opts, &mut rng);
-    let metrics = Metrics::new(x, true);
-    run_pgncg_loop(
-        x,
-        opts,
-        h0,
-        &metrics,
-        "PGNCG".to_string(),
-        0.0,
-        PhaseTimer::new(),
-    )
+    pgncg_symnmf_run(x, opts, &RunControl::from_env(), None, None).result
 }
 
-/// LAI-PGNCG-SymNMF (App. B.2): identical loop against the factored LAI;
-/// with `opts.refine`, iterative refinement on the true X afterwards
-/// ("PGNCG-IR" rows of Table 2).
+/// The controlled engine entry for exact PGNCG.
+pub fn pgncg_symnmf_run<X: SymOp>(
+    x: &X,
+    opts: &SymNmfOptions,
+    ctrl: &RunControl,
+    resume: Option<&Checkpoint>,
+    trace: Option<&mut dyn TraceSink>,
+) -> EngineRun {
+    let mut rng = Pcg64::seed_from_u64(opts.seed);
+    let h0 = initial_factor(x, opts, &mut rng);
+    let x: &dyn SymOp = x;
+    let mut spec = SolveSpec {
+        stages: vec![Stage {
+            engine: Box::new(PgncgEngine::new(x, opts.cg_iters, h0)),
+            label: "PGNCG".to_string(),
+        }],
+        metrics: Metrics::new(x, true),
+        setup_secs: 0.0,
+        phases: PhaseTimer::new(),
+    };
+    let mut ws = workspace_for(&spec);
+    run_solver(&mut spec, opts, ctrl, resume, trace, &mut ws)
+}
+
+/// LAI-PGNCG-SymNMF (App. B.2): the same engine against the factored
+/// LAI; with `opts.refine`, a second warm-started stage on the true X
+/// ("PGNCG-IR" rows of Table 2). Thin wrapper over the engine chain
+/// (`SYMNMF_DEADLINE_MS` honored).
 pub fn lai_pgncg_symnmf<X: SymOp>(x: &X, opts: &SymNmfOptions) -> SymNmfResult {
+    lai_pgncg_symnmf_run(x, opts, &RunControl::from_env(), None, None).result
+}
+
+/// The controlled engine entry for LAI-PGNCG (± IR): the RRF build is
+/// the setup phase; refinement is engine *composition* — a second
+/// [`PgncgEngine`] stage over the true X, warm-started by the shared
+/// outer loop.
+pub fn lai_pgncg_symnmf_run<X: SymOp>(
+    x: &X,
+    opts: &SymNmfOptions,
+    ctrl: &RunControl,
+    resume: Option<&Checkpoint>,
+    trace: Option<&mut dyn TraceSink>,
+) -> EngineRun {
+    let xd: &dyn SymOp = x;
     let mut rng = Pcg64::seed_from_u64(opts.seed);
     let mut phases = PhaseTimer::new();
     let (lai, setup_secs, _evd) = build_lai(x, opts, &mut rng, &mut phases);
     let h0 = initial_factor(x, opts, &mut rng);
-    let metrics = Metrics::new(x, true);
-    let result = run_pgncg_loop(
-        &lai,
-        opts,
-        h0,
-        &metrics,
-        "LAI-PGNCG".to_string(),
+    let mut stages: Vec<Stage<'_>> = vec![Stage {
+        engine: Box::new(PgncgEngine::new(&lai, opts.cg_iters, h0.clone())),
+        label: "LAI-PGNCG".to_string(),
+    }];
+    if opts.refine {
+        stages.push(Stage {
+            engine: Box::new(PgncgEngine::new(xd, opts.cg_iters, h0)),
+            label: "LAI-PGNCG-IR".to_string(),
+        });
+    }
+    let mut spec = SolveSpec {
+        stages,
+        metrics: Metrics::new(xd, true),
         setup_secs,
         phases,
-    );
-    if !opts.refine {
-        return result;
-    }
-    let clock = result.total_secs();
-    let refined = run_pgncg_loop(
-        x,
-        opts,
-        result.h.clone(),
-        &metrics,
-        "LAI-PGNCG-IR".to_string(),
-        clock,
-        result.phases.clone(),
-    );
-    let mut records = result.records;
-    let offset = records.len();
-    records.extend(refined.records.into_iter().map(|mut r| {
-        r.iter += offset;
-        r
-    }));
-    SymNmfResult {
-        label: "LAI-PGNCG-IR".to_string(),
-        h: refined.h,
-        w: refined.w,
-        records,
-        phases: refined.phases,
-        setup_secs,
-    }
+    };
+    let mut ws = workspace_for(&spec);
+    run_solver(&mut spec, opts, ctrl, resume, trace, &mut ws)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::symnmf::engine::{assert_results_bitwise_eq, RunStatus};
+
+    /// The frozen pre-engine "PGNCG" entry (pinning oracle).
+    fn pgncg_symnmf_reference<X: SymOp>(x: &X, opts: &SymNmfOptions) -> SymNmfResult {
+        let mut rng = Pcg64::seed_from_u64(opts.seed);
+        let h0 = initial_factor(x, opts, &mut rng);
+        let metrics = Metrics::new(x, true);
+        run_pgncg_loop(x, opts, h0, &metrics, "PGNCG".to_string(), 0.0, PhaseTimer::new())
+    }
+
+    /// The frozen pre-engine "LAI-PGNCG(-IR)" entry (pinning oracle):
+    /// LAI build → PGNCG loop → optional IR continuation with stitched
+    /// records.
+    fn lai_pgncg_symnmf_reference<X: SymOp>(x: &X, opts: &SymNmfOptions) -> SymNmfResult {
+        let mut rng = Pcg64::seed_from_u64(opts.seed);
+        let mut phases = PhaseTimer::new();
+        let (lai, setup_secs, _evd) = build_lai(x, opts, &mut rng, &mut phases);
+        let h0 = initial_factor(x, opts, &mut rng);
+        let metrics = Metrics::new(x, true);
+        let result = run_pgncg_loop(
+            &lai,
+            opts,
+            h0,
+            &metrics,
+            "LAI-PGNCG".to_string(),
+            setup_secs,
+            phases,
+        );
+        if !opts.refine {
+            return result;
+        }
+        let clock = result.total_secs();
+        let refined = run_pgncg_loop(
+            x,
+            opts,
+            result.h.clone(),
+            &metrics,
+            "LAI-PGNCG-IR".to_string(),
+            clock,
+            result.phases.clone(),
+        );
+        let mut records = result.records;
+        let offset = records.len();
+        records.extend(refined.records.into_iter().map(|mut r| {
+            r.iter += offset;
+            r
+        }));
+        SymNmfResult {
+            label: "LAI-PGNCG-IR".to_string(),
+            h: refined.h,
+            w: refined.w,
+            records,
+            phases: refined.phases,
+            setup_secs,
+        }
+    }
+
+    /// Acceptance: engine wrappers pinned bitwise to the frozen loops —
+    /// exact PGNCG and both LAI variants (the IR chain exercises the
+    /// engine-composition warm start).
+    #[test]
+    fn engine_path_pinned_bitwise_to_reference() {
+        for (m, k) in [(30, 2), (56, 7)] {
+            let x = planted(m, k, 8);
+            let mut opts = SymNmfOptions::new(k).with_seed(9);
+            opts.max_iters = 10;
+            opts.cg_iters = 8;
+            let oracle = pgncg_symnmf_reference(&x, &opts);
+            let engine = pgncg_symnmf_run(&x, &opts, &RunControl::unlimited(), None, None);
+            assert_results_bitwise_eq(&oracle, &engine.result, &format!("pgncg k={k}"));
+            for refine in [false, true] {
+                opts.refine = refine;
+                let oracle = lai_pgncg_symnmf_reference(&x, &opts);
+                let engine =
+                    lai_pgncg_symnmf_run(&x, &opts, &RunControl::unlimited(), None, None);
+                assert_results_bitwise_eq(
+                    &oracle,
+                    &engine.result,
+                    &format!("lai-pgncg refine={refine} k={k}"),
+                );
+            }
+        }
+    }
+
+    /// Acceptance: checkpoint/resume bitwise + deadline-0 initial-iterate
+    /// for PGNCG and the two-stage LAI-PGNCG-IR chain (pausing inside
+    /// stage 0 AND inside stage 1).
+    #[test]
+    fn checkpoint_resume_and_deadline() {
+        for k in [2usize, 7] {
+            let x = planted(12 * k, k, 6);
+            let mut opts = SymNmfOptions::new(k).with_seed(3);
+            opts.max_iters = 6;
+            opts.cg_iters = 6;
+            opts.refine = true;
+            let full = lai_pgncg_symnmf_run(&x, &opts, &RunControl::unlimited(), None, None);
+            assert!(full.result.iters() > opts.max_iters, "IR stage must add iterations");
+            // pause points: inside the LAI stage (2 steps) and inside the
+            // IR stage (max_iters + 2 steps)
+            for steps in [2usize, opts.max_iters + 2] {
+                let paused = lai_pgncg_symnmf_run(
+                    &x,
+                    &opts,
+                    &RunControl::unlimited().with_max_steps(steps),
+                    None,
+                    None,
+                );
+                if steps < full.result.iters() {
+                    assert_eq!(paused.checkpoint.status, RunStatus::Paused);
+                    assert_eq!(paused.result.iters(), steps);
+                }
+                let cp =
+                    Checkpoint::parse(&paused.checkpoint.serialize()).expect("roundtrip");
+                let resumed = lai_pgncg_symnmf_run(
+                    &x,
+                    &opts,
+                    &RunControl::unlimited(),
+                    Some(&cp),
+                    None,
+                );
+                assert_results_bitwise_eq(
+                    &full.result,
+                    &resumed.result,
+                    &format!("lai-pgncg-ir k={k} pause@{steps}"),
+                );
+            }
+
+            let pg_full = pgncg_symnmf_run(&x, &opts, &RunControl::unlimited(), None, None);
+            let dead = pgncg_symnmf_run(
+                &x,
+                &opts,
+                &RunControl::unlimited().with_deadline(0.0),
+                None,
+                None,
+            );
+            assert_eq!(dead.checkpoint.status, RunStatus::Deadline);
+            assert!(dead.result.records.is_empty());
+            let resumed = pgncg_symnmf_run(
+                &x,
+                &opts,
+                &RunControl::unlimited(),
+                Some(&dead.checkpoint),
+                None,
+            );
+            assert_results_bitwise_eq(
+                &pg_full.result,
+                &resumed.result,
+                &format!("pgncg deadline-0 k={k}"),
+            );
+        }
+    }
 
     fn planted(m: usize, k: usize, seed: u64) -> DenseMat {
         let mut rng = Pcg64::seed_from_u64(seed);

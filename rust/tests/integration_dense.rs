@@ -88,6 +88,42 @@ fn randomized_methods_preserve_quality_vs_exact() {
     );
 }
 
+/// End-to-end engine semantics through the driver: a zero-deadline solve
+/// returns the unstepped initial iterate; resuming its checkpoint — after
+/// a serialize/parse round-trip — completes to the unlimited run bitwise.
+/// (CI additionally re-runs this whole suite under
+/// `SYMNMF_DEADLINE_MS=60000`, which routes every plain-entry solve
+/// through the deadline path without firing it.)
+#[test]
+fn engine_deadline_and_resume_through_driver() {
+    use symnmf::symnmf::{Checkpoint, RunControl};
+    let w = wos_workload(80, 4);
+    let mut opts = SymNmfOptions::new(4).with_seed(5);
+    opts.max_iters = 8;
+    for method in [
+        Method::Exact(UpdateRule::Hals),
+        Method::Lai { rule: UpdateRule::Hals, refine: true },
+    ] {
+        let full =
+            method.run_controlled(&w.adjacency, &opts, &RunControl::unlimited(), None);
+        assert!(full.completed(), "{}", method.label());
+        let dead = method.run_controlled(
+            &w.adjacency,
+            &opts,
+            &RunControl::unlimited().with_deadline(0.0),
+            None,
+        );
+        assert_eq!(dead.result.iters(), 0, "{}: deadline 0 must not step", method.label());
+        let cp = Checkpoint::parse(&dead.checkpoint.serialize()).expect("roundtrip");
+        let resumed =
+            method.run_controlled(&w.adjacency, &opts, &RunControl::unlimited(), Some(&cp));
+        assert_eq!(full.result.iters(), resumed.result.iters(), "{}", method.label());
+        for (a, b) in full.result.h.data().iter().zip(resumed.result.h.data()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{}: H differs", method.label());
+        }
+    }
+}
+
 #[test]
 fn spectral_baseline_runs_on_wos() {
     let w = wos_workload(120, 4);

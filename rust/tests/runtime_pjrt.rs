@@ -6,12 +6,14 @@
 //! artifact directory is missing so plain `cargo test` stays green.
 
 use std::rc::Rc;
+use symnmf::coordinator::Method;
 use symnmf::linalg::{blas, DenseMat};
-use symnmf::nls::hals;
+use symnmf::nls::{hals, UpdateRule};
 use symnmf::randnla::SymOp;
 use symnmf::runtime::exec::{hals_sweep_pjrt, lai_products_pjrt, PjrtSymOp};
 use symnmf::runtime::registry::Registry;
 use symnmf::runtime::PjrtRuntime;
+use symnmf::symnmf::{RunControl, SymNmfOptions};
 use symnmf::util::rng::Pcg64;
 
 fn runtime() -> Option<Rc<PjrtRuntime>> {
@@ -64,6 +66,42 @@ fn symop_apply_dispatches_to_pjrt_and_falls_back() {
     let y = op.apply(&f5);
     assert_eq!(op.stats.borrow().native_calls, 1);
     assert!(y.diff_fro(&blas::matmul(&x, &f5)) < 1e-12);
+}
+
+/// The engine-driven serving shape: a full SymNMF solve over the PJRT
+/// operator (artifact dispatch per product, native fallback otherwise),
+/// with pause → resume reproducing the uninterrupted run bitwise.
+#[test]
+fn engine_solve_over_pjrt_operator_pauses_and_resumes() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg64::seed_from_u64(9);
+    let h = DenseMat::uniform(64, 4, 1.0, &mut rng);
+    let mut x = blas::matmul_nt(&h, &h);
+    x.symmetrize();
+    let op = PjrtSymOp::new(x, rt);
+    // k=8 matches the products_m64_k8 artifact; other widths fall back
+    let mut opts = SymNmfOptions::new(8).with_seed(3);
+    opts.max_iters = 5;
+    let method = Method::Exact(UpdateRule::Hals);
+    let full = op.solve(method, &opts, &RunControl::unlimited(), None);
+    assert!(full.completed());
+    assert!(full.result.h.is_nonneg());
+    let paused = op.solve(
+        method,
+        &opts,
+        &RunControl::unlimited().with_max_steps(2),
+        None,
+    );
+    let resumed = op.solve(
+        method,
+        &opts,
+        &RunControl::unlimited(),
+        Some(&paused.checkpoint),
+    );
+    assert_eq!(full.result.iters(), resumed.result.iters());
+    for (a, b) in full.result.h.data().iter().zip(resumed.result.h.data()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "resume must be bitwise on the PJRT path");
+    }
 }
 
 #[test]

@@ -5,11 +5,13 @@ Compares the freshly generated BENCH_kernels.json against the committed
 baseline, prints the per-kernel GFLOP/s delta table, and fails (exit 1)
 when any gated kernel row regresses by more than the allowed fraction.
 
-Every (op, shape) row present in BOTH files with a positive measured
-GFLOP/s is gated, except rows on the noisy allowlist: end-to-end trial
-drivers and sub-millisecond micro rows bounce too much on shared CI
-runners for a hard gate (their deltas are still printed). Rows without a
-GFLOP/s rate (timing-only records) are reported but never gated.
+Every (op, shape) row present in BOTH files is gated, except rows on the
+noisy allowlist: end-to-end trial drivers and sub-millisecond micro rows
+bounce too much on shared CI runners for a hard gate (their deltas are
+still printed). Rows with a positive GFLOP/s rate are gated on that rate
+dropping; timing-only rows (gflops == 0, e.g. construction passes like
+`from_csr_streamed`) are gated on secs_per_iter growing by more than the
+allowed fraction.
 
 Bootstrap behaviour: if the baseline has no measured rows at all (e.g.
 the committed file is the empty bootstrap placeholder produced before
@@ -23,7 +25,8 @@ import sys
 
 # Rows exempt from the hard gate: wall-clock trial drivers (scheduling
 # noise), sampling/solve micro-benches dominated by allocation and RNG,
-# and the PJRT round-trip (artifact availability varies by runner).
+# sub-millisecond packing passes, and the PJRT round-trip (artifact
+# availability varies by runner).
 DEFAULT_ALLOW_NOISY = [
     "trials_serial",
     "trials_batched",
@@ -31,6 +34,7 @@ DEFAULT_ALLOW_NOISY = [
     "sampled_spmm_into",
     "leverage_scores",
     "bpp_multi_into",
+    "pack_b_panels_par",
     "pjrt_products",
     "native_products",
 ]
@@ -77,9 +81,11 @@ def main():
         op, shape = key
         c = cur[key]
         cg = c.get("gflops", 0.0)
+        cs = c.get("secs_per_iter", 0.0)
         b = base.get(key)
         bg_str, delta, verdict = "-", "  (new)", "-"
         if b is not None and b.get("gflops", 0.0) > 0.0:
+            # rate-gated row: fail when GFLOP/s drops past the floor
             bgf = b["gflops"]
             bg_str = f"{bgf:10.2f}"
             delta = f"{100.0 * (cg - bgf) / bgf:+7.1f}%"
@@ -99,9 +105,36 @@ def main():
                     )
                 else:
                     verdict = "ok"
+        elif b is not None and b.get("secs_per_iter", 0.0) > 0.0:
+            # timing-gated row (baseline has no rate — even if the current
+            # run gained one, keep gating on time so the row never
+            # silently falls out of the gate): fail when secs/iter grows
+            # past the ceiling
+            bs = b["secs_per_iter"]
+            delta = f"{100.0 * (cs - bs) / bs:+7.1f}%"
+            if cs <= 0.0:
+                verdict = "skip (no time)"
+            elif op in allow_noisy:
+                verdict = "skip (noisy)"
+            else:
+                gated += 1
+                ceiling = bs * (1.0 + args.max_regression)
+                if cs > ceiling:
+                    verdict = "FAIL"
+                    failures.append(
+                        f"{op} [{shape}] regressed: {cs:.6f} s/iter > "
+                        f"{ceiling:.6f} s/iter ({bs:.6f} baseline, "
+                        f"+{args.max_regression:.0%} allowed)"
+                    )
+                else:
+                    verdict = "ok (time)"
         print(f"{op:<24} {shape:<24} {bg_str:>10} {cg:>10.2f} {delta:>8}  {verdict}")
 
-    measured_base = [r for r in base.values() if r.get("gflops", 0.0) > 0.0]
+    measured_base = [
+        r
+        for r in base.values()
+        if r.get("gflops", 0.0) > 0.0 or r.get("secs_per_iter", 0.0) > 0.0
+    ]
     if not measured_base:
         print(
             "NOTICE: baseline has no measured rows (bootstrap placeholder) "
@@ -117,7 +150,11 @@ def main():
     # otherwise renaming or dropping a bench section silently un-gates it.
     for key in sorted(base):
         op, shape = key
-        if key in cur or op in allow_noisy or base[key].get("gflops", 0.0) <= 0.0:
+        gated_row = (
+            base[key].get("gflops", 0.0) > 0.0
+            or base[key].get("secs_per_iter", 0.0) > 0.0
+        )
+        if key in cur or op in allow_noisy or not gated_row:
             continue
         failures.append(
             f"gated baseline row {op} [{shape}] is missing from the "
