@@ -12,9 +12,12 @@
 //! writes results/fig1_convergence.csv and results/table2.txt
 
 use symnmf::clustering::ari::adjusted_rand_index;
-use symnmf::coordinator::driver::{batch_trials_enabled, packed_x_enabled, run_trials_dense};
+use symnmf::coordinator::driver::{
+    batch_trials_enabled, packed_x_enabled, run_trials_dense, run_trials_streamed,
+};
 use symnmf::coordinator::experiments::{fig1_table2_methods, wos_options, wos_workload};
 use symnmf::coordinator::report;
+use symnmf::symnmf::trace::TraceFormat;
 use symnmf::util::rng::Pcg64;
 use symnmf::util::timer::Stopwatch;
 
@@ -34,12 +37,23 @@ fn main() {
     // SYMNMF_PACKED_X=1 additionally stages the adjacency as the
     // packed-triangular SymPacked, so all k seeds share ONE half-sized
     // resident X (see coordinator::driver::run_trials_dense).
+    // SYMNMF_STREAM_TRACE=<dir> routes each trial through the serve
+    // scheduler with a per-trial streaming JSONL sink: the convergence
+    // curves land in <dir>/<label>_t<trial>.jsonl flushed per iteration,
+    // so a monitoring tail can plot them MID-RUN instead of waiting for
+    // the CSV extracted from the results afterwards (per-seed results
+    // stay bitwise-identical; timings reflect shared-machine wall clock
+    // like the batched driver).
     let batched = batch_trials_enabled();
+    let stream_dir = std::env::var("SYMNMF_STREAM_TRACE")
+        .ok()
+        .filter(|s| !s.is_empty());
 
     println!(
-        "== Fig. 1 / Table 2 bench: WoS dense workload ({docs} docs, {trials} trials{}{}) ==",
+        "== Fig. 1 / Table 2 bench: WoS dense workload ({docs} docs, {trials} trials{}{}{}) ==",
         if batched { ", batched" } else { "" },
-        if packed_x_enabled() { ", packed X" } else { "" }
+        if packed_x_enabled() { ", packed X" } else { "" },
+        if stream_dir.is_some() { ", streaming traces" } else { "" }
     );
     let w = wos_workload(docs, 1);
     let mut opts = wos_options().with_seed(10);
@@ -48,8 +62,26 @@ fn main() {
     let mut all = Vec::new();
     for method in fig1_table2_methods() {
         let t = Stopwatch::start();
-        let stats =
-            run_trials_dense(method, &w.adjacency, &opts, Some(&w.labels), trials, batched);
+        let stats = match &stream_dir {
+            Some(dir) => run_trials_streamed(
+                method,
+                &w.adjacency,
+                &opts,
+                Some(&w.labels),
+                trials,
+                std::path::Path::new(dir),
+                TraceFormat::Jsonl,
+            )
+            .expect("streaming trial driver"),
+            None => run_trials_dense(
+                method,
+                &w.adjacency,
+                &opts,
+                Some(&w.labels),
+                trials,
+                batched,
+            ),
+        };
         println!(
             "  {:<14} mean {:5.1} iters  {:7.3}s  min-res {:.4}  ARI {:.3}  [bench wall {:.1}s]",
             stats.label,

@@ -22,8 +22,11 @@ use symnmf::nls::{bpp, hals, UpdateRule};
 use symnmf::randnla::leverage::sample_hybrid;
 use symnmf::randnla::SymOp;
 use symnmf::runtime::{PjrtRuntime, PjrtSymOp};
+use symnmf::serve::{JobSpec, Scheduler, SchedulerConfig};
 use symnmf::sparse::CsrMat;
 use symnmf::symnmf::anls::{resolve_alpha, run_alternating_loop, symnmf_anls, Metrics};
+use symnmf::symnmf::engine::{Checkpoint, EngineState, RunControl, RunStatus};
+use symnmf::symnmf::metrics::IterRecord;
 use symnmf::symnmf::init::initial_factor;
 use symnmf::symnmf::options::SymNmfOptions;
 use symnmf::util::bench::{bench, gflops, BenchResult};
@@ -442,6 +445,92 @@ fn main() {
     });
     println!("{}", r_pack.report());
     record(&mut records, "pack_b_panels_par", "2048x256", &r_pack, 0.0);
+
+    // --- serve path: scheduler-sliced solve vs one-shot engine run ---
+    // A fixed-length 6-iteration HALS solve driven as a serve job in 6
+    // single-step slices (checkpoint clone + requeue per slice) against
+    // the same solve in one direct engine call — the delta is the
+    // serving layer's slice overhead.
+    let (srv_m, srv_k) = (256usize, 8usize);
+    let srv_x = {
+        let hh = DenseMat::uniform(srv_m, srv_k, 1.0, &mut rng);
+        let mut x = blas::matmul_nt(&hh, &hh);
+        x.symmetrize();
+        x
+    };
+    let mut srv_opts = SymNmfOptions::new(srv_k).with_seed(3);
+    srv_opts.max_iters = 6;
+    srv_opts.patience = 1000; // fixed length: measure slicing, not stopping
+    let srv_method = Method::Exact(UpdateRule::Hals);
+    let r_direct = bench(
+        &format!("direct engine run ({srv_m}², k={srv_k}, 6 iters)"),
+        1,
+        5,
+        || {
+            std::hint::black_box(srv_method.run_controlled(
+                &srv_x,
+                &srv_opts,
+                &RunControl::unlimited(),
+                None,
+            ));
+        },
+    );
+    println!("{}", r_direct.report());
+    let r_sliced = bench("serve-sliced run (same solve, 6 slices of 1)", 1, 5, || {
+        let mut sched = Scheduler::new(SchedulerConfig {
+            slice_steps: Some(1),
+            ..SchedulerConfig::default()
+        });
+        let h = sched
+            .submit(&srv_x, JobSpec::new("bench", srv_method, srv_opts.clone()))
+            .expect("submit");
+        sched.drain();
+        std::hint::black_box(h.outcome().expect("drained").result.iters());
+    });
+    println!(
+        "{}   ({:.1}% of direct)",
+        r_sliced.report(),
+        100.0 * r_sliced.median / r_direct.median.max(1e-300)
+    );
+    record(
+        &mut records,
+        "serve_slice_overhead",
+        &format!("{srv_m}x{srv_m} k={srv_k} 6x1"),
+        &r_sliced,
+        0.0,
+    );
+
+    // --- checkpoint serialize + parse (the job-store hot path) ---
+    let big_cp = Checkpoint {
+        status: RunStatus::Paused,
+        stage: 0,
+        stage_iter: 50,
+        iter: 50,
+        clock: 1.0,
+        stop_best: 0.1,
+        stop_stall: 0,
+        state: EngineState {
+            h: DenseMat::gaussian(2048, 32, &mut rng),
+            w: Some(DenseMat::gaussian(2048, 32, &mut rng)),
+            rng: None,
+        },
+        records: (0..50)
+            .map(|i| IterRecord {
+                iter: i,
+                time_secs: 0.1 * (i + 1) as f64,
+                residual: 1.0 / (i + 2) as f64,
+                proj_grad: Some(1e-3),
+                phase_secs: (0.05, 0.04, 0.0),
+                hybrid_stats: None,
+            })
+            .collect(),
+    };
+    let r_cp = bench("checkpoint serialize+parse (2048x32, 50 records)", 1, 5, || {
+        let text = big_cp.serialize();
+        std::hint::black_box(Checkpoint::parse(&text).expect("parse"));
+    });
+    println!("{}", r_cp.report());
+    record(&mut records, "checkpoint_save_load", "2048x32x50", &r_cp, 0.0);
 
     // --- sampled SpMM (LvS inner product, s = 0.05·n) ---
     let h = DenseMat::gaussian(n, k, &mut rng);

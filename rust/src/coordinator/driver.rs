@@ -10,23 +10,26 @@
 //!
 //! All dispatch drives the resumable solver engine
 //! ([`crate::symnmf::engine`]) directly: [`Method::run_controlled`]
-//! exposes deadline/pause budgets and checkpoint resume per solve, and
-//! [`run_trials_batched_controlled`] extends that to whole trial fleets
-//! (one checkpoint per seed). The plain entry points honor the
-//! `SYMNMF_DEADLINE_MS` environment deadline.
+//! exposes deadline/pause/cancel budgets and checkpoint resume per
+//! solve, and [`run_trials_batched_controlled`] extends that to whole
+//! trial fleets (one checkpoint per seed) by submitting each trial as a
+//! job to the serving scheduler ([`crate::serve`]) — batch experiments
+//! and the serving path share one code path. The plain entry points
+//! honor the `SYMNMF_DEADLINE_MS` environment deadline.
 
 use crate::clustering::ari::adjusted_rand_index;
 use crate::linalg::{DenseMat, SymPacked};
 use crate::nls::UpdateRule;
 use crate::randnla::SymOp;
-use crate::util::threadpool::{num_threads, parallel_map_into, with_thread_budget};
+use crate::serve::{sanitize_id, JobSpec, Scheduler, SchedulerConfig};
 use crate::symnmf::anls::symnmf_anls_run;
 use crate::symnmf::compressed::compressed_symnmf_run;
-use crate::symnmf::engine::{Checkpoint, EngineRun, RunControl};
+use crate::symnmf::engine::{Checkpoint, EngineRun, RunControl, TraceSink};
 use crate::symnmf::lai::lai_symnmf_run;
 use crate::symnmf::lvs::lvs_symnmf_run;
 use crate::symnmf::options::{SymNmfOptions, Tau};
 use crate::symnmf::pgncg::{lai_pgncg_symnmf_run, pgncg_symnmf_run};
+use crate::symnmf::trace::TraceFormat;
 use crate::symnmf::SymNmfResult;
 
 /// Every §5 algorithm variant.
@@ -86,10 +89,10 @@ impl Method {
         self.run_controlled(x, base, &RunControl::from_env(), None).result
     }
 
-    /// Drive the method's engine directly: explicit deadline/pause
-    /// budget, optional checkpoint resume. All method dispatch funnels
-    /// through here — [`Method::run`] and the trial drivers are thin
-    /// layers on top, so every method gets deadline stopping and
+    /// Drive the method's engine directly: explicit deadline/pause/
+    /// cancel budget, optional checkpoint resume. All method dispatch
+    /// funnels through here — [`Method::run`] and the trial drivers are
+    /// thin layers on top, so every method gets deadline stopping and
     /// pause/resume from the one shared outer loop.
     pub fn run_controlled<X: SymOp>(
         &self,
@@ -98,30 +101,45 @@ impl Method {
         ctrl: &RunControl,
         resume: Option<&Checkpoint>,
     ) -> EngineRun {
+        self.run_controlled_traced(x, base, ctrl, resume, None)
+    }
+
+    /// [`Method::run_controlled`] with per-iteration streaming: every
+    /// finished iteration's record goes through `trace` as it is
+    /// produced (the serving layer hangs its JSONL/CSV file sinks and
+    /// its cancellation hooks here).
+    pub fn run_controlled_traced<X: SymOp>(
+        &self,
+        x: &X,
+        base: &SymNmfOptions,
+        ctrl: &RunControl,
+        resume: Option<&Checkpoint>,
+        trace: Option<&mut dyn TraceSink>,
+    ) -> EngineRun {
         let mut opts = base.clone();
         match *self {
             Method::Exact(rule) => {
                 opts.rule = rule;
-                symnmf_anls_run(x, &opts, ctrl, resume, None)
+                symnmf_anls_run(x, &opts, ctrl, resume, trace)
             }
             Method::Lai { rule, refine } => {
                 opts.rule = rule;
                 opts.refine = refine;
-                lai_symnmf_run(x, &opts, ctrl, resume, None)
+                lai_symnmf_run(x, &opts, ctrl, resume, trace)
             }
             Method::Comp(rule) => {
                 opts.rule = rule;
-                compressed_symnmf_run(x, &opts, ctrl, resume, None)
+                compressed_symnmf_run(x, &opts, ctrl, resume, trace)
             }
-            Method::Pgncg => pgncg_symnmf_run(x, &opts, ctrl, resume, None),
+            Method::Pgncg => pgncg_symnmf_run(x, &opts, ctrl, resume, trace),
             Method::LaiPgncg { refine } => {
                 opts.refine = refine;
-                lai_pgncg_symnmf_run(x, &opts, ctrl, resume, None)
+                lai_pgncg_symnmf_run(x, &opts, ctrl, resume, trace)
             }
             Method::Lvs { rule, tau } => {
                 opts.rule = rule;
                 opts.tau = tau;
-                lvs_symnmf_run(x, &opts, ctrl, resume, None)
+                lvs_symnmf_run(x, &opts, ctrl, resume, trace)
             }
         }
     }
@@ -254,11 +272,19 @@ pub fn run_trials_batched<X: SymOp + Sync>(
 }
 
 /// Batched multi-seed trials under an explicit engine budget — the
-/// driver face of the resumable solver engine. Every trial worker drives
-/// its method's engine through [`Method::run_controlled`], so the whole
-/// fleet gets **deadline stopping and pause/resume for free**: an
-/// interrupted call returns one [`Checkpoint`] per trial (same seed
-/// schedule as [`run_trials`]), and passing those checkpoints back as
+/// driver face of the resumable solver engine, expressed as a **fleet of
+/// serve jobs**: every trial is one [`crate::serve::JobSpec`] (same seed
+/// schedule as [`run_trials`], the caller's budget as the job budget,
+/// the caller's cancel token shared fleet-wide) submitted to a
+/// [`Scheduler`] with no slice granularity, so each trial runs exactly
+/// one engine slice under the caller's [`RunControl`]. Batch experiments
+/// and the serving path are therefore one code path — the scheduler owns
+/// the worker split (min(nt, trials) workers, `with_thread_budget(nt /
+/// workers)` inside each) that the pre-serve driver implemented by hand.
+///
+/// The whole fleet gets **deadline stopping, cancellation, and
+/// pause/resume for free**: an interrupted call returns one
+/// [`Checkpoint`] per trial, and passing those checkpoints back as
 /// `resume` continues every trial bitwise where it stopped — the
 /// concatenated fleet equals an uninterrupted run bit for bit (a test
 /// pins this), because the budget machinery only ever cuts iteration
@@ -276,30 +302,66 @@ pub fn run_trials_batched_controlled<X: SymOp + Sync>(
     if let Some(cps) = resume {
         assert_eq!(cps.len(), trials, "need one checkpoint per trial");
     }
-    let nt = num_threads();
-    let workers = nt.min(trials).max(1);
-    let inner = (nt / workers).max(1);
-    let mut slots: Vec<Option<EngineRun>> = (0..trials).map(|_| None).collect();
-    parallel_map_into(&mut slots, 1, |t, slot| {
-        // The budget is set on the trial worker's own thread, so every
-        // kernel the solver runs on this worker sees the split width.
-        *slot = Some(with_thread_budget(inner, || {
-            method.run_controlled(
-                x,
-                &trial_options(base, t),
-                ctrl,
-                resume.map(|cps| &cps[t]),
-            )
-        }));
-    });
+    let mut sched = Scheduler::new(SchedulerConfig::default());
+    let handles: Vec<_> = (0..trials)
+        .map(|t| {
+            let mut spec =
+                JobSpec::new(format!("trial-{t}"), method, trial_options(base, t));
+            spec.deadline_secs = ctrl.deadline_secs;
+            spec.max_steps = ctrl.max_steps;
+            spec.cancel = ctrl.cancel.clone();
+            spec.resume = resume.map(|cps| cps[t].clone());
+            sched.submit(x, spec).expect("trial job submission cannot fail")
+        })
+        .collect();
+    sched.drain();
     let mut results = Vec::with_capacity(trials);
     let mut checkpoints = Vec::with_capacity(trials);
-    for slot in slots {
-        let run = slot.expect("every trial slot is written");
-        results.push(run.result);
-        checkpoints.push(run.checkpoint);
+    for h in &handles {
+        let o = h.outcome().expect("drained trial job has an outcome");
+        results.push(o.result);
+        checkpoints.push(o.checkpoint);
     }
     (aggregate(method.label(), results, labels), checkpoints)
+}
+
+/// [`run_trials`] with per-trial streaming telemetry: each trial runs as
+/// a serve job whose convergence records stream to
+/// `<dir>/<label>_t<trial>.<ext>` (flushed per record — the curves are
+/// on disk mid-run, not extracted afterwards). Seed schedule and
+/// per-trial results are bitwise-identical to the plain drivers; like
+/// [`run_trials_batched`], trials share the machine, so per-trial
+/// `mean_time` reflects contended wall clock.
+pub fn run_trials_streamed<X: SymOp + Sync>(
+    method: Method,
+    x: &X,
+    base: &SymNmfOptions,
+    labels: Option<&[usize]>,
+    trials: usize,
+    dir: &std::path::Path,
+    format: TraceFormat,
+) -> Result<MethodStats, String> {
+    assert!(trials >= 1);
+    std::fs::create_dir_all(dir).map_err(|e| format!("create trace dir {dir:?}: {e}"))?;
+    let ext = match format {
+        TraceFormat::Jsonl => "jsonl",
+        TraceFormat::Csv => "csv",
+    };
+    let stem = sanitize_id(&method.label());
+    let mut sched = Scheduler::new(SchedulerConfig::default());
+    let handles: Vec<_> = (0..trials)
+        .map(|t| {
+            let spec = JobSpec::new(format!("{stem}-t{t}"), method, trial_options(base, t))
+                .with_trace(dir.join(format!("{stem}_t{t}.{ext}")), format);
+            sched.submit(x, spec)
+        })
+        .collect::<Result<_, _>>()?;
+    sched.drain();
+    let results = handles
+        .iter()
+        .map(|h| h.outcome().expect("drained job has an outcome").result)
+        .collect();
+    Ok(aggregate(method.label(), results, labels))
 }
 
 /// Is the packed-X staging option on? `SYMNMF_PACKED_X=1` makes the
@@ -647,6 +709,59 @@ mod tests {
                 assert_eq!(va.to_bits(), vb.to_bits());
             }
         }
+    }
+
+    /// The streaming trial driver is bitwise the serial driver, and the
+    /// per-trial trace files hold the full residual history (flushed per
+    /// record) by the time the drain returns.
+    #[test]
+    fn streamed_trials_bitwise_match_serial_and_write_curves() {
+        use crate::util::json::Json;
+        let (x, labels) = planted(40, 2, 17);
+        let mut opts = SymNmfOptions::new(2);
+        opts.max_iters = 5;
+        let method = Method::Exact(UpdateRule::Hals);
+        let dir = std::env::temp_dir()
+            .join(format!("symnmf-stream-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let serial = run_trials(method, &x, &opts, Some(&labels), 2);
+        let streamed = run_trials_streamed(
+            method,
+            &x,
+            &opts,
+            Some(&labels),
+            2,
+            &dir,
+            TraceFormat::Jsonl,
+        )
+        .expect("streamed driver");
+        for (t, (a, b)) in serial.trials.iter().zip(&streamed.trials).enumerate() {
+            assert_eq!(a.iters(), b.iters(), "trial {t}");
+            for (va, vb) in a.h.data().iter().zip(b.h.data()) {
+                assert_eq!(va.to_bits(), vb.to_bits(), "trial {t}: H differs");
+            }
+            // the streamed file's iter lines reproduce the residual
+            // history bitwise (via the residual_hex field)
+            let path = dir.join(format!("HALS_t{t}.jsonl"));
+            let text = std::fs::read_to_string(&path).expect("trace file");
+            let hexes: Vec<String> = text
+                .lines()
+                .map(|l| Json::parse(l).expect("parseable line"))
+                .filter(|j| j.get("type").and_then(Json::as_str) == Some("iter"))
+                .map(|j| {
+                    j.get("residual_hex").and_then(Json::as_str).unwrap().to_string()
+                })
+                .collect();
+            assert_eq!(hexes.len(), a.iters(), "trial {t}: one line per iteration");
+            for (r, hex) in a.records.iter().zip(&hexes) {
+                assert_eq!(
+                    &format!("{:016x}", r.residual.to_bits()),
+                    hex,
+                    "trial {t}: streamed residual differs"
+                );
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -38,6 +38,7 @@ pub mod linalg;
 pub mod nls;
 pub mod randnla;
 pub mod runtime;
+pub mod serve;
 pub mod sparse;
 pub mod symnmf;
 pub mod util;

@@ -1,20 +1,29 @@
 //! `symnmf` CLI — run SymNMF methods on generated workloads or
-//! MatrixMarket graphs, inspect artifacts, and print runtime diagnostics.
+//! MatrixMarket graphs, serve job fleets through the slice scheduler,
+//! inspect artifacts, and print runtime diagnostics.
 //!
 //! Examples:
 //!   symnmf run --workload wos --docs 800 --method lai-hals --trials 3
 //!   symnmf run --workload oag --m 5000 --method lvs-hals --tau 0.001
 //!   symnmf run --input graph.mtx --k 8 --method bpp
+//!   symnmf serve --jobs jobs.jsonl --store ckpts --slice-steps 2
 //!   symnmf artifacts            # list loaded AOT artifacts
 //!   symnmf info                 # platform / runtime diagnostics
 
+use std::collections::BTreeMap;
 use symnmf::coordinator::driver::{run_trials, Method};
 use symnmf::coordinator::{experiments, report};
+use symnmf::linalg::DenseMat;
 use symnmf::nls::UpdateRule;
 use symnmf::runtime::registry::Registry;
 use symnmf::runtime::PjrtRuntime;
+use symnmf::serve::{sanitize_id, JobHandle, JobSpec, JobStore, Scheduler, SchedulerConfig};
+use symnmf::sparse::CsrMat;
 use symnmf::symnmf::options::{SymNmfOptions, Tau};
+use symnmf::symnmf::trace::{num_or_null, TraceFormat};
 use symnmf::util::cli::Args;
+use symnmf::util::json::Json;
+use symnmf::util::table::Table;
 
 fn parse_method(s: &str, tau: Tau) -> Option<Method> {
     let s = s.to_ascii_lowercase();
@@ -99,6 +108,248 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// One resident workload operator, built once and shared by every job
+/// that references it.
+enum ServeOp {
+    Dense(DenseMat),
+    Sparse(CsrMat),
+}
+
+fn spec_str<'a>(j: &'a Json, key: &str, default: &'a str) -> &'a str {
+    j.get(key).and_then(Json::as_str).unwrap_or(default)
+}
+
+fn spec_usize(j: &Json, key: &str) -> Option<usize> {
+    j.get(key).and_then(Json::as_usize)
+}
+
+/// Workload cache key: one operator per (workload, size, data seed).
+fn workload_key(j: &Json) -> Result<String, String> {
+    let workload = spec_str(j, "workload", "wos");
+    let data_seed = spec_usize(j, "data_seed").unwrap_or(1);
+    match workload {
+        "wos" => Ok(format!("wos:{}:{data_seed}", spec_usize(j, "docs").unwrap_or(200))),
+        "oag" => Ok(format!("oag:{}:{data_seed}", spec_usize(j, "m").unwrap_or(300))),
+        other => Err(format!("unknown workload {other:?} (wos|oag)")),
+    }
+}
+
+fn build_workload(j: &Json) -> ServeOp {
+    let data_seed = spec_usize(j, "data_seed").unwrap_or(1) as u64;
+    match spec_str(j, "workload", "wos") {
+        "wos" => {
+            let docs = spec_usize(j, "docs").unwrap_or(200);
+            ServeOp::Dense(experiments::wos_workload(docs, data_seed).adjacency)
+        }
+        _ => {
+            let m = spec_usize(j, "m").unwrap_or(300);
+            ServeOp::Sparse(experiments::oag_workload(m, data_seed).adj)
+        }
+    }
+}
+
+/// Build one job spec from a JSONL line of the `serve --jobs` file.
+fn job_from_spec(j: &Json, store: Option<&JobStore>, resume: bool) -> Result<JobSpec, String> {
+    let id = j
+        .get("id")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "job line needs a string \"id\"".to_string())?
+        .to_string();
+    let tau = match j.get("tau").and_then(Json::as_f64) {
+        Some(t) => Tau::Fixed(t),
+        None => Tau::OneOverS,
+    };
+    let method_name = spec_str(j, "method", "bpp");
+    let method = parse_method(method_name, tau)
+        .ok_or_else(|| format!("job {id:?}: unknown method {method_name:?}"))?;
+    let mut opts = match (spec_usize(j, "k"), spec_str(j, "workload", "wos")) {
+        (Some(k), _) => SymNmfOptions::new(k),
+        (None, "wos") => experiments::wos_options(),
+        (None, _) => experiments::oag_options(),
+    };
+    opts.seed = spec_usize(j, "seed").unwrap_or(0) as u64;
+    if let Some(n) = spec_usize(j, "max_iters") {
+        opts.max_iters = n;
+    }
+    if let Some(s) = spec_usize(j, "samples") {
+        opts.samples = Some(s);
+    }
+    let mut spec = JobSpec::new(id.clone(), method, opts);
+    if let Some(p) = j.get("priority").and_then(Json::as_f64) {
+        spec.priority = p as i64;
+    }
+    if let Some(ms) = j.get("deadline_ms").and_then(Json::as_f64) {
+        spec.deadline_secs = Some(ms / 1000.0);
+    }
+    spec.max_steps = spec_usize(j, "max_steps");
+    spec.cancel_after_iters = spec_usize(j, "cancel_after");
+    if let Some(path) = j.get("trace").and_then(Json::as_str) {
+        let format = TraceFormat::parse(spec_str(j, "trace_format", "jsonl"))?;
+        spec.trace = Some((std::path::PathBuf::from(path), format));
+    }
+    if resume {
+        if let Some(store) = store {
+            if let Some((gen, cp)) = store.load_latest(&id)? {
+                println!("  {id}: resuming from stored generation {gen} (iter {})", cp.iter);
+                spec.resume = Some(cp);
+            }
+        }
+    }
+    Ok(spec)
+}
+
+fn job_report_row(h: &JobHandle) -> (Vec<String>, Json) {
+    let o = h.outcome().expect("drained job has an outcome");
+    let final_res = o.result.final_residual();
+    let row = vec![
+        h.name().to_string(),
+        o.result.label.clone(),
+        o.status.as_str().to_string(),
+        o.slices.to_string(),
+        o.checkpoint.iter.to_string(),
+        format!("{final_res:.6}"),
+        format!("{:.3}s", o.checkpoint.clock),
+    ];
+    let json = Json::obj(vec![
+        ("id", Json::Str(h.name().to_string())),
+        ("label", Json::Str(o.result.label.clone())),
+        ("status", Json::Str(o.status.as_str().to_string())),
+        ("run_status", Json::Str(o.run_status.as_str().to_string())),
+        ("slices", Json::Num(o.slices as f64)),
+        ("steps", Json::Num(o.steps as f64)),
+        ("iters", Json::Num(o.checkpoint.iter as f64)),
+        // num_or_null: a zero-record job reports NaN/inf residuals, and
+        // the in-repo JSON printer would emit them as bare invalid
+        // tokens; the hex field stays bitwise-exact either way
+        ("final_residual", num_or_null(final_res)),
+        (
+            "final_residual_hex",
+            Json::Str(format!("{:016x}", final_res.to_bits())),
+        ),
+        ("min_residual", num_or_null(o.result.min_residual())),
+        ("clock_secs", Json::Num(o.checkpoint.clock)),
+    ]);
+    (row, json)
+}
+
+/// `symnmf serve`: submit jobs from a JSONL spec, drain them through the
+/// slice scheduler, optionally resume cancelled jobs, report per job.
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let jobs_path = args
+        .get("jobs")
+        .ok_or_else(|| "serve requires --jobs <spec.jsonl>".to_string())?;
+    let text = std::fs::read_to_string(jobs_path)
+        .map_err(|e| format!("read {jobs_path:?}: {e}"))?;
+    let mut lines = Vec::new();
+    for (no, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| format!("{jobs_path}:{}: {e}", no + 1))?;
+        lines.push(j);
+    }
+    if lines.is_empty() {
+        return Err(format!("{jobs_path}: no job lines"));
+    }
+
+    let store = match args.get("store") {
+        Some(dir) => {
+            let keep = args.get_usize("keep", 1);
+            Some(JobStore::open(std::path::Path::new(dir))?.with_keep(keep))
+        }
+        None => None,
+    };
+    let resume = args.has_flag("resume");
+    if resume && store.is_none() {
+        return Err("--resume needs --store".to_string());
+    }
+
+    // every distinct workload is built once and resident once, shared by
+    // all jobs that name it
+    let mut ops: BTreeMap<String, ServeOp> = BTreeMap::new();
+    for j in &lines {
+        let key = workload_key(j)?;
+        if !ops.contains_key(&key) {
+            println!("building workload {key}...");
+            ops.insert(key, build_workload(j));
+        }
+    }
+
+    let cfg = SchedulerConfig {
+        workers: args.get("workers").map(|w| {
+            w.parse().unwrap_or_else(|_| panic!("--workers expects an integer, got {w:?}"))
+        }),
+        slice_steps: args.get("slice-steps").map(|s| {
+            s.parse()
+                .unwrap_or_else(|_| panic!("--slice-steps expects an integer, got {s:?}"))
+        }),
+        slice_secs: args.get("slice-ms").map(|s| {
+            s.parse::<f64>()
+                .unwrap_or_else(|_| panic!("--slice-ms expects a number, got {s:?}"))
+                / 1000.0
+        }),
+        store: store.clone(),
+        slim_checkpoints: args.has_flag("slim"),
+    };
+    let mut sched = Scheduler::new(cfg);
+    let mut handles: Vec<JobHandle> = Vec::new();
+    let mut seen = std::collections::BTreeSet::new();
+    for j in &lines {
+        let spec = job_from_spec(j, store.as_ref(), resume)?;
+        // uniqueness is checked on the SANITIZED id — the store keys
+        // checkpoint files by it, so "a.b" and "a b" must not be allowed
+        // to share (and GC) one checkpoint lineage
+        if !seen.insert(sanitize_id(&spec.name)) {
+            return Err(format!(
+                "duplicate job id {:?} (ids collide after sanitization)",
+                spec.name
+            ));
+        }
+        let key = workload_key(j)?;
+        let h = match ops.get(&key).expect("workload built above") {
+            ServeOp::Dense(x) => sched.submit(x, spec)?,
+            ServeOp::Sparse(x) => sched.submit(x, spec)?,
+        };
+        handles.push(h);
+    }
+
+    println!("draining {} jobs...", handles.len());
+    sched.drain();
+    if args.has_flag("resume-cancelled") {
+        let cancelled: Vec<&JobHandle> = handles
+            .iter()
+            .filter(|h| h.poll() == symnmf::serve::JobStatus::Cancelled)
+            .collect();
+        if !cancelled.is_empty() {
+            println!("resuming {} cancelled job(s)...", cancelled.len());
+            for h in cancelled {
+                sched.resume(h)?;
+            }
+            sched.drain();
+        }
+    }
+
+    let mut table = Table::new(&["Job", "Alg.", "Status", "Slices", "Iters", "Final-Res", "Clock"]);
+    let mut reports = Vec::new();
+    for h in &handles {
+        let (row, json) = job_report_row(h);
+        table.row(&row);
+        reports.push(json);
+    }
+    println!("{}", table.render());
+    if let Some(path) = args.get("report") {
+        let doc = Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            ("jobs", Json::Arr(reports)),
+        ]);
+        std::fs::write(path, format!("{doc}\n"))
+            .map_err(|e| format!("write {path:?}: {e}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn cmd_artifacts() -> Result<(), String> {
     let dir = Registry::default_dir();
     let reg = Registry::load(&dir)?;
@@ -135,8 +386,17 @@ USAGE:
   symnmf run [--workload wos|oag] [--method M] [--trials N] [--seed S]
              [--docs N | --m N] [--tau T] [--max-iters N]
              [--input graph.mtx --k K]
+  symnmf serve --jobs spec.jsonl [--store DIR] [--keep N] [--workers N]
+               [--slice-steps N] [--slice-ms MS] [--report out.json]
+               [--slim] [--resume] [--resume-cancelled]
   symnmf artifacts      list AOT artifacts
   symnmf info           runtime diagnostics
+
+SERVE JOB SPEC (one JSON object per line; # comments allowed):
+  {\"id\": \"j1\", \"workload\": \"oag\", \"m\": 300, \"data_seed\": 7,
+   \"method\": \"hals\", \"seed\": 3, \"max_iters\": 20, \"priority\": 1,
+   \"deadline_ms\": 10000, \"cancel_after\": 4,
+   \"trace\": \"results/j1.jsonl\", \"trace_format\": \"jsonl\"}
 
 METHODS:
   bpp hals mu pgncg lai-<rule>[-ir] comp-<rule> lvs-<rule> lai-pgncg[-ir]
@@ -147,6 +407,7 @@ fn main() {
     let args = Args::from_env();
     let result = match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
+        Some("serve") => cmd_serve(&args),
         Some("artifacts") => cmd_artifacts(),
         Some("info") => cmd_info(),
         _ => {

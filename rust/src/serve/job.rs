@@ -1,0 +1,275 @@
+//! Job descriptions and handles for the serving layer.
+//!
+//! A [`JobSpec`] is the unit of work a client submits: *which* solve to
+//! run (operator reference + [`Method`] + [`SymNmfOptions`]) and *under
+//! what service terms* (priority, total algorithm-clock deadline, step
+//! budget, checkpoint slimming, trace streaming). Submission returns a
+//! [`JobHandle`] — the client-side face of the job — whose API is
+//! deliberately tiny: `poll` (non-blocking status), `cancel` (trip the
+//! job's [`CancelToken`]; the engine aborts at the next step boundary),
+//! and `await_result` (block until the job reaches a terminal status and
+//! return its [`JobOutcome`]). Handles are cheap `Arc` clones and safe to
+//! use from any thread, including while the scheduler is draining.
+
+use crate::coordinator::driver::Method;
+use crate::symnmf::engine::{CancelToken, Checkpoint, RunStatus};
+use crate::symnmf::metrics::SymNmfResult;
+use crate::symnmf::options::SymNmfOptions;
+use crate::symnmf::trace::TraceFormat;
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Everything a client supplies to run one solve as a serve job.
+#[derive(Clone)]
+pub struct JobSpec {
+    /// Store key and report label; must be unique within a scheduler
+    /// when a [`crate::serve::JobStore`] is configured (checkpoint files
+    /// are keyed by it).
+    pub name: String,
+    pub method: Method,
+    pub opts: SymNmfOptions,
+    /// Higher runs first; ties broken by earliest deadline, then FIFO.
+    pub priority: i64,
+    /// Total budget on the *algorithm clock* (setup + iteration seconds,
+    /// accumulated across slices and resubmissions via the checkpoint's
+    /// `clock`). Reaching it suspends the job with its checkpoint.
+    pub deadline_secs: Option<f64>,
+    /// Total engine-step budget for this submission (counted across
+    /// slices). Reaching it suspends the job with its checkpoint.
+    pub max_steps: Option<usize>,
+    /// Ops/test hook: trip the job's cancel token once the global
+    /// iteration count reaches this value (deterministic mid-flight
+    /// cancellation — see [`crate::symnmf::trace::CancelAfterSink`]).
+    /// One-shot: disarmed after it fires, so the job can be resumed.
+    pub cancel_after_iters: Option<usize>,
+    /// Share an external token (e.g. one token cancelling a whole
+    /// fleet). A fresh private token is created when `None`.
+    pub cancel: Option<CancelToken>,
+    /// Resume from a prior checkpoint (full or factor-only slim).
+    pub resume: Option<Checkpoint>,
+    /// Stream per-iteration telemetry to this file, flushed per record.
+    pub trace: Option<(PathBuf, TraceFormat)>,
+}
+
+impl JobSpec {
+    pub fn new(name: impl Into<String>, method: Method, opts: SymNmfOptions) -> JobSpec {
+        JobSpec {
+            name: name.into(),
+            method,
+            opts,
+            priority: 0,
+            deadline_secs: None,
+            max_steps: None,
+            cancel_after_iters: None,
+            cancel: None,
+            resume: None,
+            trace: None,
+        }
+    }
+
+    pub fn with_priority(mut self, p: i64) -> JobSpec {
+        self.priority = p;
+        self
+    }
+
+    pub fn with_deadline(mut self, secs: f64) -> JobSpec {
+        self.deadline_secs = Some(secs);
+        self
+    }
+
+    pub fn with_max_steps(mut self, n: usize) -> JobSpec {
+        self.max_steps = Some(n);
+        self
+    }
+
+    pub fn with_cancel_after(mut self, iters: usize) -> JobSpec {
+        self.cancel_after_iters = Some(iters);
+        self
+    }
+
+    pub fn with_cancel_token(mut self, token: CancelToken) -> JobSpec {
+        self.cancel = Some(token);
+        self
+    }
+
+    pub fn with_resume(mut self, cp: Checkpoint) -> JobSpec {
+        self.resume = Some(cp);
+        self
+    }
+
+    pub fn with_trace(mut self, path: PathBuf, format: TraceFormat) -> JobSpec {
+        self.trace = Some((path, format));
+        self
+    }
+}
+
+/// Scheduler-side lifecycle of a job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    /// waiting in the ready queue for a worker
+    Queued,
+    /// a worker is driving a slice right now
+    Running,
+    /// the job's own budget (deadline or step quota) is exhausted;
+    /// resumable from its checkpoint
+    Suspended,
+    /// every stage ran to its stopping rule
+    Completed,
+    /// the cancel token fired; resumable from its checkpoint
+    Cancelled,
+}
+
+impl JobStatus {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Suspended => "suspended",
+            JobStatus::Completed => "completed",
+            JobStatus::Cancelled => "cancelled",
+        }
+    }
+
+    /// Terminal for a drain: the scheduler will not run the job again
+    /// unless it is explicitly resumed.
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            JobStatus::Suspended | JobStatus::Completed | JobStatus::Cancelled
+        )
+    }
+}
+
+/// What a finished (terminal) job hands back: the possibly-partial solver
+/// result, the checkpoint to resume it, and slice accounting.
+#[derive(Clone)]
+pub struct JobOutcome {
+    pub status: JobStatus,
+    /// how the *last slice* ended
+    pub run_status: RunStatus,
+    pub result: SymNmfResult,
+    pub checkpoint: Checkpoint,
+    /// engine slices driven (across cancel/resume)
+    pub slices: usize,
+    /// engine steps run under this scheduler (excludes a resume
+    /// checkpoint's prior iterations)
+    pub steps: usize,
+}
+
+/// Mutable per-job state, behind the job's mutex.
+pub(crate) struct JobCore {
+    pub(crate) status: JobStatus,
+    pub(crate) checkpoint: Option<Checkpoint>,
+    pub(crate) result: Option<SymNmfResult>,
+    pub(crate) run_status: Option<RunStatus>,
+    pub(crate) slices: usize,
+    pub(crate) steps_used: usize,
+    /// latest persisted store generation (0 = none yet)
+    pub(crate) gen: u64,
+    /// the one-shot cancel-after hook; `None` once fired
+    pub(crate) cancel_hook: Option<usize>,
+}
+
+/// Shared job object: immutable service terms + the mutex-guarded core.
+pub(crate) struct JobInner {
+    pub(crate) id: usize,
+    pub(crate) name: String,
+    pub(crate) priority: i64,
+    pub(crate) deadline_secs: Option<f64>,
+    pub(crate) max_steps: Option<usize>,
+    pub(crate) cancel: CancelToken,
+    pub(crate) core: Mutex<JobCore>,
+    pub(crate) done: Condvar,
+}
+
+impl JobInner {
+    pub(crate) fn new(id: usize, spec: &JobSpec) -> JobInner {
+        JobInner {
+            id,
+            name: spec.name.clone(),
+            priority: spec.priority,
+            deadline_secs: spec.deadline_secs,
+            max_steps: spec.max_steps,
+            cancel: spec.cancel.clone().unwrap_or_default(),
+            core: Mutex::new(JobCore {
+                status: JobStatus::Queued,
+                checkpoint: spec.resume.clone(),
+                result: None,
+                run_status: None,
+                slices: 0,
+                steps_used: 0,
+                gen: 0,
+                cancel_hook: spec.cancel_after_iters,
+            }),
+            done: Condvar::new(),
+        }
+    }
+
+    fn outcome_locked(core: &JobCore) -> Option<JobOutcome> {
+        if !core.status.is_terminal() {
+            return None;
+        }
+        Some(JobOutcome {
+            status: core.status,
+            run_status: core.run_status?,
+            result: core.result.clone()?,
+            checkpoint: core.checkpoint.clone()?,
+            slices: core.slices,
+            steps: core.steps_used,
+        })
+    }
+}
+
+/// Client-side face of a submitted job. Cheap to clone; usable from any
+/// thread.
+#[derive(Clone)]
+pub struct JobHandle {
+    pub(crate) inner: Arc<JobInner>,
+}
+
+impl JobHandle {
+    pub fn id(&self) -> usize {
+        self.inner.id
+    }
+
+    pub fn name(&self) -> &str {
+        &self.inner.name
+    }
+
+    /// Non-blocking status snapshot.
+    pub fn poll(&self) -> JobStatus {
+        self.inner.core.lock().unwrap().status
+    }
+
+    /// Trip the job's cancel token. The engine aborts at the next step
+    /// boundary and the job lands in [`JobStatus::Cancelled`] with a
+    /// valid checkpoint; a queued job is cancelled by its next (trivial)
+    /// slice. Idempotent.
+    pub fn cancel(&self) {
+        self.inner.cancel.cancel();
+    }
+
+    /// The latest checkpoint, if any slice has run (or a resume
+    /// checkpoint was supplied).
+    pub fn checkpoint(&self) -> Option<Checkpoint> {
+        self.inner.core.lock().unwrap().checkpoint.clone()
+    }
+
+    /// Terminal outcome if the job has reached one, without blocking.
+    pub fn outcome(&self) -> Option<JobOutcome> {
+        JobInner::outcome_locked(&self.inner.core.lock().unwrap())
+    }
+
+    /// Block until the job reaches a terminal status (completed,
+    /// suspended, or cancelled — the scheduler must be draining on some
+    /// thread, or have drained already) and return its outcome.
+    pub fn await_result(&self) -> JobOutcome {
+        let mut core = self.inner.core.lock().unwrap();
+        loop {
+            if let Some(o) = JobInner::outcome_locked(&core) {
+                return o;
+            }
+            core = self.inner.done.wait(core).unwrap();
+        }
+    }
+}

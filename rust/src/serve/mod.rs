@@ -1,0 +1,68 @@
+//! Request-scoped serving over the resumable solver engines: job store,
+//! cancellation-aware scheduler, and streaming traces.
+//!
+//! The paper's premise is that randomized SymNMF is fast enough to run
+//! as a *routine service* on large graphs; PR 4's engine contract
+//! (`symnmf::engine`) made every method a step-driven, deadline-aware,
+//! checkpointable solve. This module is the serving layer on top: it
+//! accepts `(X ref, Method, SymNmfOptions, deadline, priority)` jobs and
+//! drives them through `Method::run_controlled` in **budgeted slices**.
+//!
+//! ## The slice / checkpoint / resume contract
+//!
+//! ```text
+//!   submit ──► Queued ──► Running ──(slice budget hit)──► Queued ...
+//!                │            │
+//!                │            ├─(stages converged)──► Completed
+//!                │            ├─(job budget hit)────► Suspended ─resume─► Queued
+//!                │            └─(cancel token)──────► Cancelled ─resume─► Queued
+//!                └─ cancel() just trips the token; the engine aborts
+//!                   at the next step boundary, checkpoint intact
+//! ```
+//!
+//! * A **slice** is one `run_controlled` call under a [`RunControl`]
+//!   that intersects the scheduler's granularity
+//!   ([`SchedulerConfig::slice_steps`] / [`SchedulerConfig::slice_secs`])
+//!   with the job's own remaining deadline/step budget, plus the job's
+//!   [`CancelToken`]. The engine's guarantee — interruption only ever
+//!   *cuts the iteration sequence short, never perturbs the iterations
+//!   that run* — lifts to the job level: a job driven in any number of
+//!   slices, including a cancel and a resume in the middle, produces
+//!   **bitwise-identical H, W, and residual history** to the
+//!   uninterrupted `Method::run` call (pinned per method, at k ∈ {2, 7},
+//!   by `tests/integration_serve.rs`).
+//! * Every slice ends in a [`Checkpoint`]; with a [`JobStore`]
+//!   configured it is persisted as a new *generation* keyed by job name
+//!   (atomic temp+rename write), and superseded generations are
+//!   garbage-collected. Factor-only **slim** checkpoints
+//!   (`slim_checkpoints`, wire version 2) drop the residual history for
+//!   fleets that stream it through trace sinks instead.
+//! * A per-job streaming trace sink ([`crate::symnmf::trace`]) lives
+//!   across slices (and appends when a job is submitted with a resume
+//!   checkpoint) and flushes per record, so the stitched file's
+//!   iteration records equal the uninterrupted run's history exactly
+//!   (stage lines re-announce once per resumed slice) — even if the
+//!   process dies mid-slice, the prefix is parseable.
+//! * The worker pool splits the machine like the batched trial driver
+//!   (`with_thread_budget(nt / workers)` around every slice), keeping
+//!   kernel FP geometry pinned to the logical thread count — which is
+//!   exactly why the bitwise contract survives concurrency. The batch
+//!   experiment driver (`coordinator::driver::run_trials_batched_controlled`)
+//!   is itself expressed as a fleet of serve jobs, so batch experiments
+//!   and the serving path share this one code path.
+//!
+//! The `symnmf serve` CLI mode (see `main.rs`) submits jobs from a JSONL
+//! spec, drains them to completion, optionally resumes cancelled jobs,
+//! and emits per-job reports.
+//!
+//! [`RunControl`]: crate::symnmf::engine::RunControl
+//! [`CancelToken`]: crate::symnmf::engine::CancelToken
+//! [`Checkpoint`]: crate::symnmf::engine::Checkpoint
+
+pub mod job;
+pub mod scheduler;
+pub mod store;
+
+pub use job::{JobHandle, JobOutcome, JobSpec, JobStatus};
+pub use scheduler::{Scheduler, SchedulerConfig};
+pub use store::{sanitize_id, JobStore};

@@ -1,0 +1,591 @@
+//! The cancellation-aware slice scheduler.
+//!
+//! [`Scheduler`] multiplexes submitted jobs over a bounded worker pool:
+//! each worker repeatedly pops the best runnable job (highest priority,
+//! then earliest deadline, then FIFO), drives **one budgeted slice** of
+//! it through the job's solver closure (which wraps
+//! [`crate::coordinator::driver::Method::run_controlled_traced`]),
+//! persists the resulting checkpoint
+//! to the optional [`JobStore`], and either finalizes the job or puts it
+//! back in the queue. The worker pool splits the machine exactly like
+//! the batched trial driver: with `nt = current_threads()` and `w`
+//! workers, each slice runs under [`with_thread_budget`]`(nt / w)`, so
+//! total OS-thread demand stays ≈ `nt` while kernel FP geometry remains
+//! pinned to the logical width (the bitwise guarantee).
+//!
+//! A slice's [`RunControl`] is the *intersection* of the scheduler's
+//! slice granularity ([`SchedulerConfig::slice_steps`] /
+//! [`SchedulerConfig::slice_secs`]) and the job's own remaining budget,
+//! plus the job's [`CancelToken`]. Because the engine contract says
+//! interruption never perturbs the iterations that do run, a job driven
+//! in any number of slices — including a cancel and a resume in the
+//! middle — finishes with bitwise-identical factors and residual history
+//! to the uninterrupted solve (the serve integration suite pins this for
+//! every method).
+
+use crate::randnla::SymOp;
+use crate::serve::job::{JobHandle, JobInner, JobSpec, JobStatus};
+use crate::serve::store::JobStore;
+use crate::symnmf::engine::{Checkpoint, EngineRun, RunControl, RunStatus, TraceSink};
+use crate::symnmf::trace::{open_sink, CancelAfterSink};
+use crate::util::threadpool::{current_threads, with_thread_budget};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Scheduler policy knobs.
+#[derive(Default)]
+pub struct SchedulerConfig {
+    /// Worker-pool cap; `None` → min(physical width, runnable jobs),
+    /// exactly the batched trial driver's split.
+    pub workers: Option<usize>,
+    /// Engine steps per slice (≥ 1). `None` with `slice_secs` unset
+    /// means a job runs its whole remaining budget in one slice.
+    pub slice_steps: Option<usize>,
+    /// Algorithm-clock seconds per slice (> 0): each slice's deadline is
+    /// the job's checkpointed clock plus this much, so every slice makes
+    /// progress (the deadline check runs *before* a step).
+    pub slice_secs: Option<f64>,
+    /// Persist every slice's checkpoint here, keyed by job name.
+    pub store: Option<JobStore>,
+    /// Persist factor-only (version 2) checkpoints — for fleets whose
+    /// history streams through trace sinks.
+    pub slim_checkpoints: bool,
+}
+
+/// Max-heap key: higher priority first, then earlier deadline, then FIFO.
+#[derive(PartialEq, Eq)]
+struct ReadyKey {
+    priority: i64,
+    /// `Option<f64>` deadline mapped monotonically onto u64 (None = MAX)
+    deadline_key: u64,
+    seq: u64,
+    job: usize,
+}
+
+fn deadline_key(d: Option<f64>) -> u64 {
+    match d {
+        None => u64::MAX,
+        // nonnegative finite f64s compare like their bit patterns
+        Some(x) => x.max(0.0).to_bits(),
+    }
+}
+
+impl Ord for ReadyKey {
+    fn cmp(&self, other: &ReadyKey) -> Ordering {
+        self.priority
+            .cmp(&other.priority)
+            .then_with(|| other.deadline_key.cmp(&self.deadline_key))
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for ReadyKey {
+    fn partial_cmp(&self, other: &ReadyKey) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+struct QueueState {
+    ready: BinaryHeap<ReadyKey>,
+    running: usize,
+}
+
+/// One job's solver, type-erased at submission: (slice control, resume
+/// point, trace) → the slice's [`EngineRun`]. Captures the `&'x X`
+/// operator reference, the method, and the options.
+type Runner<'x> = Box<
+    dyn Fn(&RunControl, Option<&Checkpoint>, Option<&mut dyn TraceSink>) -> EngineRun
+        + Sync
+        + 'x,
+>;
+
+/// A job's persistent streaming sink, shared with the worker that is
+/// currently (exclusively) driving the job.
+type SharedSink = Mutex<Option<Box<dyn TraceSink + Send>>>;
+
+/// The serving scheduler. `'x` is the lifetime of the operator
+/// references jobs run against — submit borrows them, so every operator
+/// must outlive the scheduler.
+pub struct Scheduler<'x> {
+    cfg: SchedulerConfig,
+    jobs: Vec<Arc<JobInner>>,
+    runners: Vec<Runner<'x>>,
+    /// per-job persistent streaming sink (lives across slices, so a
+    /// stitched trace file equals the uninterrupted run's history)
+    sinks: Vec<SharedSink>,
+    queue: Mutex<QueueState>,
+    work: Condvar,
+    seq: AtomicU64,
+}
+
+impl<'x> Scheduler<'x> {
+    pub fn new(cfg: SchedulerConfig) -> Scheduler<'x> {
+        if let Some(n) = cfg.slice_steps {
+            assert!(n >= 1, "slice_steps must be >= 1");
+        }
+        if let Some(s) = cfg.slice_secs {
+            assert!(s > 0.0, "slice_secs must be > 0");
+        }
+        Scheduler {
+            cfg,
+            jobs: Vec::new(),
+            runners: Vec::new(),
+            sinks: Vec::new(),
+            queue: Mutex::new(QueueState { ready: BinaryHeap::new(), running: 0 }),
+            work: Condvar::new(),
+            seq: AtomicU64::new(0),
+        }
+    }
+
+    pub fn job_count(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Submit one job against operator `x`. Returns its handle; the job
+    /// runs when [`Scheduler::drain`] is driven.
+    pub fn submit<X: SymOp + Sync + ?Sized>(
+        &mut self,
+        x: &'x X,
+        spec: JobSpec,
+    ) -> Result<JobHandle, String> {
+        if spec.name.is_empty() {
+            return Err("job name must be nonempty".to_string());
+        }
+        let sink = match &spec.trace {
+            // resumed jobs append after the pre-resume prefix on disk;
+            // fresh jobs start a fresh file
+            Some((path, format)) => Some(open_sink(path, *format, spec.resume.is_some())?),
+            None => None,
+        };
+        let id = self.jobs.len();
+        let inner = Arc::new(JobInner::new(id, &spec));
+        // continue the store's generation numbering: a resumed job must
+        // write generations ABOVE the persisted ones, or GC (which keeps
+        // the numerically newest) would delete the fresh checkpoints and
+        // retain the stale pre-resume one
+        if let Some(store) = &self.cfg.store {
+            if let Some(&g) = store.generations(&inner.name)?.last() {
+                inner.core.lock().unwrap().gen = g;
+            }
+        }
+        let method = spec.method;
+        let opts = spec.opts;
+        self.runners.push(Box::new(
+            move |ctrl: &RunControl,
+                  resume: Option<&Checkpoint>,
+                  trace: Option<&mut dyn TraceSink>| {
+                method.run_controlled_traced(&x, &opts, ctrl, resume, trace)
+            },
+        ));
+        self.sinks.push(Mutex::new(sink));
+        self.jobs.push(Arc::clone(&inner));
+        self.enqueue(id, inner.priority, inner.deadline_secs);
+        Ok(JobHandle { inner })
+    }
+
+    /// Put a suspended or cancelled job back in the ready queue,
+    /// clearing its cancel flag so the resumed slices can run. (The
+    /// reset is shared: resuming one job of a fleet that shares an
+    /// external token clears that token.) Resumption opens a fresh
+    /// budget epoch: a `max_steps` budget grants that many steps again;
+    /// a job suspended on its algorithm-clock deadline re-suspends
+    /// immediately unless the caller raised the deadline out of band.
+    pub fn resume(&self, handle: &JobHandle) -> Result<(), String> {
+        let job = self
+            .jobs
+            .get(handle.id())
+            .filter(|j| Arc::ptr_eq(j, &handle.inner))
+            .ok_or_else(|| "handle does not belong to this scheduler".to_string())?;
+        {
+            let mut core = job.core.lock().unwrap();
+            match core.status {
+                JobStatus::Suspended | JobStatus::Cancelled => {
+                    core.status = JobStatus::Queued;
+                    core.steps_used = 0;
+                }
+                s => {
+                    return Err(format!(
+                        "cannot resume a job in status {:?}",
+                        s.as_str()
+                    ))
+                }
+            }
+        }
+        job.cancel.reset();
+        self.enqueue(job.id, job.priority, job.deadline_secs);
+        Ok(())
+    }
+
+    fn enqueue(&self, job: usize, priority: i64, deadline: Option<f64>) {
+        let key = ReadyKey {
+            priority,
+            deadline_key: deadline_key(deadline),
+            seq: self.seq.fetch_add(1, AtomicOrdering::Relaxed),
+            job,
+        };
+        self.queue.lock().unwrap().ready.push(key);
+        self.work.notify_all();
+    }
+
+    /// Run queued jobs to a terminal status (completed, suspended on
+    /// their own budget, or cancelled), multiplexing slices over the
+    /// worker pool. Returns when the ready queue is empty and no slice
+    /// is in flight. Idempotent: draining with nothing queued is a
+    /// no-op, and jobs resumed afterwards need another drain.
+    pub fn drain(&self) {
+        let nt = current_threads();
+        let pending = self.queue.lock().unwrap().ready.len();
+        if pending == 0 {
+            return;
+        }
+        let workers = self
+            .cfg
+            .workers
+            .unwrap_or(usize::MAX)
+            .min(nt)
+            .min(pending)
+            .max(1);
+        let inner_width = (nt / workers).max(1);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| self.worker(inner_width));
+            }
+        });
+    }
+
+    fn worker(&self, inner_width: usize) {
+        loop {
+            let j = {
+                let mut q = self.queue.lock().unwrap();
+                loop {
+                    if let Some(key) = q.ready.pop() {
+                        q.running += 1;
+                        break key.job;
+                    }
+                    if q.running == 0 {
+                        // nothing runnable and nothing in flight that
+                        // could requeue — the drain is over
+                        return;
+                    }
+                    q = self.work.wait(q).unwrap();
+                }
+            };
+            let requeue = self.run_slice(j, inner_width);
+            {
+                let mut q = self.queue.lock().unwrap();
+                q.running -= 1;
+                if requeue {
+                    let job = &self.jobs[j];
+                    q.ready.push(ReadyKey {
+                        priority: job.priority,
+                        deadline_key: deadline_key(job.deadline_secs),
+                        seq: self.seq.fetch_add(1, AtomicOrdering::Relaxed),
+                        job: j,
+                    });
+                }
+            }
+            self.work.notify_all();
+        }
+    }
+
+    /// Drive one slice of job `j`; returns whether the job goes back in
+    /// the ready queue.
+    fn run_slice(&self, j: usize, inner_width: usize) -> bool {
+        let job = &self.jobs[j];
+        let (resume_cp, steps_used, hook, gen) = {
+            let mut core = job.core.lock().unwrap();
+            core.status = JobStatus::Running;
+            (core.checkpoint.clone(), core.steps_used, core.cancel_hook, core.gen)
+        };
+        let start_clock = resume_cp.as_ref().map(|c| c.clock).unwrap_or(0.0);
+        let start_iter = resume_cp.as_ref().map(|c| c.iter).unwrap_or(0);
+
+        // slice budget = scheduler granularity ∩ the job's remaining budget
+        let remaining_steps = job.max_steps.map(|n| n.saturating_sub(steps_used));
+        let slice_steps = match (remaining_steps, self.cfg.slice_steps) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        let slice_deadline = match (job.deadline_secs, self.cfg.slice_secs) {
+            (Some(d), Some(s)) => Some(d.min(start_clock + s)),
+            (Some(d), None) => Some(d),
+            (None, Some(s)) => Some(start_clock + s),
+            (None, None) => None,
+        };
+        let ctrl = RunControl {
+            deadline_secs: slice_deadline,
+            max_steps: slice_steps,
+            cancel: Some(job.cancel.clone()),
+        };
+
+        let run = {
+            let mut sink_guard = self.sinks[j].lock().unwrap();
+            let inner_sink = sink_guard.as_deref_mut().map(|s| s as &mut dyn TraceSink);
+            with_thread_budget(inner_width, || match hook {
+                // the one-shot mid-flight cancellation hook, counting
+                // iterations globally across slices
+                Some(n) if start_iter < n => {
+                    let mut wrap = CancelAfterSink::resuming(
+                        job.cancel.clone(),
+                        n,
+                        start_iter,
+                        inner_sink,
+                    );
+                    (self.runners[j])(&ctrl, resume_cp.as_ref(), Some(&mut wrap))
+                }
+                Some(_) => {
+                    // threshold already satisfied (including n = 0):
+                    // cancel before the first step of this slice
+                    job.cancel.cancel();
+                    (self.runners[j])(&ctrl, resume_cp.as_ref(), inner_sink)
+                }
+                None => (self.runners[j])(&ctrl, resume_cp.as_ref(), inner_sink),
+            })
+        };
+
+        // persist the new generation before publishing the state — a
+        // crash after the store write at worst re-runs one slice
+        let mut gen_now = gen;
+        if let Some(store) = &self.cfg.store {
+            gen_now = gen + 1;
+            if let Err(e) =
+                store.save(&job.name, gen_now, &run.checkpoint, self.cfg.slim_checkpoints)
+            {
+                // telemetry/persistence loss must not kill the solve
+                eprintln!("[serve] checkpoint save failed for {:?}: {e}", job.name);
+                gen_now = gen;
+            }
+        }
+
+        let st = run.checkpoint.status;
+        let mut core = job.core.lock().unwrap();
+        core.slices += 1;
+        core.steps_used += run.checkpoint.iter - start_iter;
+        core.gen = gen_now;
+        core.run_status = Some(st);
+        if let Some(n) = hook {
+            if st == RunStatus::Cancelled && run.checkpoint.iter >= n {
+                core.cancel_hook = None; // fired — disarm for resumption
+            }
+        }
+        let requeue = match st {
+            RunStatus::Completed => {
+                core.status = JobStatus::Completed;
+                false
+            }
+            RunStatus::Cancelled => {
+                core.status = JobStatus::Cancelled;
+                false
+            }
+            RunStatus::Deadline => {
+                // the engine's deadline fired: the job's own budget, or
+                // merely this slice's?
+                if job.deadline_secs.is_some_and(|d| run.checkpoint.clock >= d) {
+                    core.status = JobStatus::Suspended;
+                    false
+                } else {
+                    core.status = JobStatus::Queued;
+                    true
+                }
+            }
+            RunStatus::Paused => {
+                if job.max_steps.is_some_and(|n| core.steps_used >= n) {
+                    core.status = JobStatus::Suspended;
+                    false
+                } else {
+                    core.status = JobStatus::Queued;
+                    true
+                }
+            }
+        };
+        core.checkpoint = Some(run.checkpoint);
+        core.result = Some(run.result);
+        drop(core);
+        if !requeue {
+            job.done.notify_all();
+        }
+        requeue
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::driver::Method;
+    use crate::linalg::{blas, DenseMat};
+    use crate::nls::UpdateRule;
+    use crate::symnmf::options::SymNmfOptions;
+    use crate::util::rng::Pcg64;
+
+    fn planted(m: usize, k: usize, seed: u64) -> DenseMat {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let h = DenseMat::uniform(m, k, 1.0, &mut rng);
+        let mut x = blas::matmul_nt(&h, &h);
+        x.symmetrize();
+        x
+    }
+
+    fn opts(k: usize, max_iters: usize, seed: u64) -> SymNmfOptions {
+        let mut o = SymNmfOptions::new(k).with_seed(seed);
+        o.max_iters = max_iters;
+        o
+    }
+
+    #[test]
+    fn single_job_drains_to_completion() {
+        let x = planted(30, 3, 1);
+        let mut sched = Scheduler::new(SchedulerConfig::default());
+        let h = sched
+            .submit(
+                &x,
+                JobSpec::new("solo", Method::Exact(UpdateRule::Hals), opts(3, 6, 2)),
+            )
+            .expect("submit");
+        assert_eq!(h.poll(), JobStatus::Queued);
+        sched.drain();
+        let o = h.await_result();
+        assert_eq!(o.status, JobStatus::Completed);
+        assert_eq!(o.run_status, RunStatus::Completed);
+        assert_eq!(o.slices, 1, "no slicing configured: one slice runs it all");
+        assert!(o.result.iters() >= 1);
+        assert!(o.result.h.is_nonneg());
+    }
+
+    /// Slicing at slice_steps=2 must reproduce the one-shot run bitwise
+    /// and count its slices.
+    #[test]
+    fn sliced_run_matches_oneshot_bitwise() {
+        let x = planted(30, 3, 5);
+        let o = opts(3, 7, 4);
+        let method = Method::Exact(UpdateRule::Bpp);
+        let full = method
+            .run_controlled(&x, &o, &RunControl::unlimited(), None)
+            .result;
+        let mut sched = Scheduler::new(SchedulerConfig {
+            slice_steps: Some(2),
+            ..SchedulerConfig::default()
+        });
+        let h = sched.submit(&x, JobSpec::new("sliced", method, o)).unwrap();
+        sched.drain();
+        let got = h.await_result();
+        assert_eq!(got.status, JobStatus::Completed);
+        assert!(got.slices >= 3, "7 iters at 2/slice needs >= 3 slices");
+        assert_eq!(got.result.iters(), full.iters());
+        for (a, b) in full.h.data().iter().zip(got.result.h.data()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "sliced H != one-shot H");
+        }
+        for (ra, rb) in full.records.iter().zip(&got.result.records) {
+            assert_eq!(ra.residual.to_bits(), rb.residual.to_bits());
+        }
+    }
+
+    /// A job-level step budget suspends (not completes) with a resumable
+    /// checkpoint; resume + drain finishes it bitwise.
+    #[test]
+    fn job_budget_suspends_then_resumes() {
+        let x = planted(28, 2, 9);
+        let o = opts(2, 6, 3);
+        let method = Method::Exact(UpdateRule::Hals);
+        let full = method
+            .run_controlled(&x, &o, &RunControl::unlimited(), None)
+            .result;
+        let mut sched = Scheduler::new(SchedulerConfig {
+            slice_steps: Some(1),
+            ..SchedulerConfig::default()
+        });
+        let h = sched
+            .submit(&x, JobSpec::new("budgeted", method, o).with_max_steps(2))
+            .unwrap();
+        sched.drain();
+        let o1 = h.await_result();
+        assert_eq!(o1.status, JobStatus::Suspended);
+        assert_eq!(o1.steps, 2, "step budget must stop after 2 steps");
+        assert_eq!(o1.slices, 2, "1 step per slice");
+        // resume opens a fresh 2-step epoch; the run needs 6 iterations,
+        // so two more epochs finish it
+        sched.resume(&h).expect("resume");
+        sched.drain();
+        let o2 = h.await_result();
+        assert_eq!(o2.status, JobStatus::Suspended);
+        assert_eq!(o2.steps, 2, "fresh epoch grants max_steps again");
+        assert_eq!(o2.checkpoint.iter, 4, "4 iterations done in total");
+        sched.resume(&h).expect("resume");
+        sched.drain();
+        let o3 = h.await_result();
+        assert_eq!(o3.status, JobStatus::Completed, "6-iter run done in 3 epochs");
+        for (a, b) in full.h.data().iter().zip(o3.result.h.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    /// The ready-queue ordering contract: priority first (higher wins),
+    /// then earliest deadline, then FIFO submission order.
+    #[test]
+    fn ready_queue_orders_by_priority_deadline_fifo() {
+        let mut heap = BinaryHeap::new();
+        let mut push = |priority, deadline, seq, job| {
+            heap.push(ReadyKey { priority, deadline_key: deadline_key(deadline), seq, job })
+        };
+        push(0, None, 0, 0); // low priority, no deadline, submitted first
+        push(2, Some(9.0), 1, 1); // mid priority, late deadline
+        push(2, Some(1.0), 2, 2); // mid priority, early deadline
+        push(5, None, 3, 3); // high priority
+        push(2, Some(1.0), 4, 4); // ties job 2 → FIFO after it
+        let order: Vec<usize> = std::iter::from_fn(|| heap.pop().map(|k| k.job)).collect();
+        assert_eq!(order, vec![3, 2, 4, 1, 0]);
+        // deadline_key is monotone where it matters
+        assert!(deadline_key(Some(0.5)) < deadline_key(Some(2.0)));
+        assert!(deadline_key(Some(1e9)) < deadline_key(None));
+    }
+
+    /// `cancel_after_iters = 0` means "before the first step": the job
+    /// cancels with the initial iterate, and (the hook being one-shot)
+    /// resumes to completion.
+    #[test]
+    fn cancel_after_zero_fires_before_first_step() {
+        let x = planted(24, 2, 15);
+        let o = opts(2, 5, 8);
+        let method = Method::Exact(UpdateRule::Bpp);
+        let mut sched = Scheduler::new(SchedulerConfig::default());
+        let h = sched
+            .submit(&x, JobSpec::new("cancel0", method, o).with_cancel_after(0))
+            .unwrap();
+        sched.drain();
+        let o1 = h.await_result();
+        assert_eq!(o1.status, JobStatus::Cancelled);
+        assert_eq!(o1.result.iters(), 0, "threshold 0 is satisfied at start");
+        sched.resume(&h).expect("resume");
+        sched.drain();
+        assert_eq!(h.await_result().status, JobStatus::Completed);
+    }
+
+    /// Cancelling a queued job before the drain yields the initial
+    /// iterate with a valid, resumable checkpoint.
+    #[test]
+    fn cancel_before_first_step_then_resume() {
+        let x = planted(26, 2, 11);
+        let o = opts(2, 5, 6);
+        let method = Method::Exact(UpdateRule::Hals);
+        let full = method
+            .run_controlled(&x, &o, &RunControl::unlimited(), None)
+            .result;
+        let mut sched = Scheduler::new(SchedulerConfig::default());
+        let h = sched.submit(&x, JobSpec::new("early", method, o)).unwrap();
+        h.cancel();
+        sched.drain();
+        let o1 = h.await_result();
+        assert_eq!(o1.status, JobStatus::Cancelled);
+        assert_eq!(o1.run_status, RunStatus::Cancelled);
+        assert_eq!(o1.result.iters(), 0, "no step may run");
+        assert_eq!(o1.checkpoint.iter, 0);
+        sched.resume(&h).expect("resume");
+        sched.drain();
+        let o2 = h.await_result();
+        assert_eq!(o2.status, JobStatus::Completed);
+        for (a, b) in full.h.data().iter().zip(o2.result.h.data()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "resumed-from-0 H != full H");
+        }
+    }
+}

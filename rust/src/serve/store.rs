@@ -1,0 +1,247 @@
+//! Filesystem-backed checkpoint persistence, keyed by job id.
+//!
+//! Layout: one JSON file per (job, generation) under the store
+//! directory — `<id>.g<gen 8-digit>.ckpt.json`, written atomically
+//! (temp file + rename) so a reader never observes a torn checkpoint.
+//! Every save bumps the generation and then garbage-collects superseded
+//! generations beyond the configured retention (default: keep only the
+//! newest), because full checkpoints embed the factors — and, in the
+//! full (version 1) encoding, the whole residual history — at 16 hex
+//! chars per f64: without GC a long-running job would accumulate
+//! `O(generations · m·k)` of dead bytes. Factor-only *slim* (version 2)
+//! checkpoints drop the history for fleets that stream it to a
+//! [`crate::symnmf::trace`] sink instead.
+//!
+//! Job ids are sanitized into a conservative filename alphabet
+//! ([`sanitize_id`]) so an id arriving from a network spec can never
+//! escape the store directory.
+
+use crate::symnmf::engine::Checkpoint;
+use std::path::{Path, PathBuf};
+
+/// Map an arbitrary job id onto the store's filename alphabet:
+/// `[A-Za-z0-9_-]`, everything else replaced by `_`, empty ids become
+/// `"job"`. Distinct ids can collide after sanitization; submitters that
+/// care (the CLI does) should use clean ids.
+pub fn sanitize_id(id: &str) -> String {
+    let s: String = id
+        .chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '-' || c == '_' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect();
+    if s.is_empty() {
+        "job".to_string()
+    } else {
+        s
+    }
+}
+
+/// A directory of per-job checkpoint generations.
+#[derive(Clone, Debug)]
+pub struct JobStore {
+    dir: PathBuf,
+    keep: usize,
+}
+
+impl JobStore {
+    /// Open (creating if needed) a store rooted at `dir`, retaining one
+    /// generation per job.
+    pub fn open(dir: &Path) -> Result<JobStore, String> {
+        std::fs::create_dir_all(dir).map_err(|e| format!("create store dir {dir:?}: {e}"))?;
+        Ok(JobStore { dir: dir.to_path_buf(), keep: 1 })
+    }
+
+    /// Retain the newest `keep` generations per job (floored at 1).
+    pub fn with_keep(mut self, keep: usize) -> JobStore {
+        self.keep = keep.max(1);
+        self
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn file_name(id: &str, gen: u64) -> String {
+        format!("{}.g{gen:08}.ckpt.json", sanitize_id(id))
+    }
+
+    /// Path a given (job, generation) lives at.
+    pub fn path_for(&self, id: &str, gen: u64) -> PathBuf {
+        self.dir.join(JobStore::file_name(id, gen))
+    }
+
+    /// Persist one checkpoint generation (atomic: temp + rename), then
+    /// GC generations beyond the retention. `slim` selects the
+    /// factor-only version-2 encoding.
+    pub fn save(
+        &self,
+        id: &str,
+        gen: u64,
+        cp: &Checkpoint,
+        slim: bool,
+    ) -> Result<PathBuf, String> {
+        let path = self.path_for(id, gen);
+        let tmp = path.with_extension("json.tmp");
+        let text = if slim { cp.serialize_slim() } else { cp.serialize() };
+        std::fs::write(&tmp, text).map_err(|e| format!("write {tmp:?}: {e}"))?;
+        std::fs::rename(&tmp, &path).map_err(|e| format!("rename to {path:?}: {e}"))?;
+        self.gc(id)?;
+        Ok(path)
+    }
+
+    /// Generations currently on disk for a job, ascending.
+    pub fn generations(&self, id: &str) -> Result<Vec<u64>, String> {
+        let prefix = format!("{}.g", sanitize_id(id));
+        let suffix = ".ckpt.json";
+        let mut gens = Vec::new();
+        let entries = std::fs::read_dir(&self.dir)
+            .map_err(|e| format!("read store dir {:?}: {e}", self.dir))?;
+        for entry in entries {
+            let entry = entry.map_err(|e| format!("read store dir entry: {e}"))?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(rest) = name.strip_prefix(&prefix) else { continue };
+            let Some(digits) = rest.strip_suffix(suffix) else { continue };
+            if let Ok(g) = digits.parse::<u64>() {
+                gens.push(g);
+            }
+        }
+        gens.sort_unstable();
+        Ok(gens)
+    }
+
+    /// Load the newest persisted generation, if any.
+    pub fn load_latest(&self, id: &str) -> Result<Option<(u64, Checkpoint)>, String> {
+        let Some(&gen) = self.generations(id)?.last() else {
+            return Ok(None);
+        };
+        let path = self.path_for(id, gen);
+        let text =
+            std::fs::read_to_string(&path).map_err(|e| format!("read {path:?}: {e}"))?;
+        let cp = Checkpoint::parse(&text).map_err(|e| format!("parse {path:?}: {e}"))?;
+        Ok(Some((gen, cp)))
+    }
+
+    /// Remove superseded generations beyond the retention; returns how
+    /// many files were deleted.
+    pub fn gc(&self, id: &str) -> Result<usize, String> {
+        let gens = self.generations(id)?;
+        if gens.len() <= self.keep {
+            return Ok(0);
+        }
+        let doomed = &gens[..gens.len() - self.keep];
+        let mut removed = 0;
+        for &g in doomed {
+            let path = self.path_for(id, g);
+            std::fs::remove_file(&path).map_err(|e| format!("remove {path:?}: {e}"))?;
+            removed += 1;
+        }
+        Ok(removed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::DenseMat;
+    use crate::symnmf::engine::{EngineState, RunStatus};
+    use crate::symnmf::metrics::IterRecord;
+    use crate::util::rng::Pcg64;
+
+    fn tmp_store(name: &str) -> JobStore {
+        let dir = std::env::temp_dir()
+            .join(format!("symnmf-store-{}-{name}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        JobStore::open(&dir).expect("open store")
+    }
+
+    fn sample_cp(seed: u64, iters: usize) -> Checkpoint {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        Checkpoint {
+            status: RunStatus::Paused,
+            stage: 0,
+            stage_iter: iters,
+            iter: iters,
+            clock: 0.5,
+            stop_best: 0.33,
+            stop_stall: 1,
+            state: EngineState {
+                h: DenseMat::gaussian(6, 2, &mut rng),
+                w: Some(DenseMat::gaussian(6, 2, &mut rng)),
+                rng: None,
+            },
+            records: (0..iters)
+                .map(|i| IterRecord {
+                    iter: i,
+                    time_secs: 0.1 * (i + 1) as f64,
+                    residual: 1.0 / (i + 2) as f64,
+                    proj_grad: None,
+                    phase_secs: (0.0, 0.0, 0.0),
+                    hybrid_stats: None,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn sanitizes_hostile_ids() {
+        assert_eq!(sanitize_id("trial-3"), "trial-3");
+        assert_eq!(sanitize_id("../../etc/passwd"), "______etc_passwd");
+        assert_eq!(sanitize_id("a b/c"), "a_b_c");
+        assert_eq!(sanitize_id(""), "job");
+    }
+
+    #[test]
+    fn save_load_roundtrips_and_gcs_superseded_generations() {
+        let store = tmp_store("gc").with_keep(2);
+        let cp3 = sample_cp(3, 3);
+        for (gen, iters) in [(1u64, 1usize), (2, 2), (3, 3)] {
+            store
+                .save("job-a", gen, &sample_cp(gen, iters), false)
+                .expect("save");
+        }
+        // keep=2: generation 1 must be gone, 2 and 3 retained
+        assert_eq!(store.generations("job-a").unwrap(), vec![2, 3]);
+        let (gen, back) = store.load_latest("job-a").unwrap().expect("latest");
+        assert_eq!(gen, 3);
+        assert_eq!(back.iter, 3);
+        assert_eq!(back.records.len(), 3);
+        for (a, b) in cp3.state.h.data().iter().zip(back.state.h.data()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "factors must round-trip bitwise");
+        }
+        // unknown job: no generations, no latest
+        assert!(store.generations("ghost").unwrap().is_empty());
+        assert!(store.load_latest("ghost").unwrap().is_none());
+        std::fs::remove_dir_all(store.dir()).ok();
+    }
+
+    #[test]
+    fn default_retention_keeps_only_newest() {
+        let store = tmp_store("keep1");
+        for gen in 1..=4u64 {
+            store.save("j", gen, &sample_cp(gen, 1), false).expect("save");
+        }
+        assert_eq!(store.generations("j").unwrap(), vec![4]);
+        std::fs::remove_dir_all(store.dir()).ok();
+    }
+
+    #[test]
+    fn slim_saves_parse_without_records() {
+        let store = tmp_store("slim");
+        let cp = sample_cp(9, 4);
+        let path = store.save("s", 1, &cp, true).expect("save slim");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"version\":2"));
+        let (_, back) = store.load_latest("s").unwrap().expect("latest");
+        assert!(back.records.is_empty(), "slim checkpoints drop the history");
+        assert_eq!(back.iter, 4, "but keep the global iteration counter");
+        // slim is strictly smaller than the full encoding of the same state
+        assert!(text.len() < cp.serialize().len());
+        std::fs::remove_dir_all(store.dir()).ok();
+    }
+}

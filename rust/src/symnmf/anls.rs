@@ -475,6 +475,59 @@ mod tests {
         assert_results_bitwise_eq(&full.result, &resumed.result, "deadline-0 resume");
     }
 
+    /// Satellite acceptance: a cancel token set before the first step
+    /// returns the initial iterate with a valid checkpoint, and a
+    /// mid-run cancel (tripped deterministically by a trace-sink hook)
+    /// aborts at the next step boundary — both resume to the
+    /// uninterrupted run bitwise.
+    #[test]
+    fn cancel_token_aborts_and_resumes_bitwise() {
+        use crate::symnmf::engine::CancelToken;
+        use crate::symnmf::trace::CancelAfterSink;
+        let x = planted(40, 3, 0.05, 13);
+        let mut opts = SymNmfOptions::new(3).with_seed(8);
+        opts.max_iters = 8;
+        let full = symnmf_anls_run(&x, &opts, &RunControl::unlimited(), None, None);
+
+        // cancel before the first step
+        let tok = CancelToken::new();
+        tok.cancel();
+        let cancelled = symnmf_anls_run(
+            &x,
+            &opts,
+            &RunControl::unlimited().with_cancel(tok),
+            None,
+            None,
+        );
+        assert_eq!(cancelled.checkpoint.status, RunStatus::Cancelled);
+        assert_eq!(cancelled.result.iters(), 0, "no step may run");
+        let cp = Checkpoint::parse(&cancelled.checkpoint.serialize()).expect("roundtrip");
+        let resumed = symnmf_anls_run(&x, &opts, &RunControl::unlimited(), Some(&cp), None);
+        assert_results_bitwise_eq(&full.result, &resumed.result, "anls cancel-0 resume");
+
+        // cancel mid-run: the hook fires after the 2nd record, the
+        // engine aborts before step 3
+        let tok = CancelToken::new();
+        let mut hook = CancelAfterSink::new(tok.clone(), 2);
+        let cancelled = symnmf_anls_run(
+            &x,
+            &opts,
+            &RunControl::unlimited().with_cancel(tok),
+            None,
+            Some(&mut hook),
+        );
+        assert_eq!(cancelled.checkpoint.status, RunStatus::Cancelled);
+        assert_eq!(cancelled.result.iters(), 2, "abort at the next step boundary");
+        let resumed = symnmf_anls_run(
+            &x,
+            &opts,
+            &RunControl::unlimited(),
+            Some(&cancelled.checkpoint),
+            None,
+        );
+        assert_results_bitwise_eq(&full.result, &resumed.result, "anls mid-cancel resume");
+    }
+
     /// The trace sink observes exactly the records that land in the
     /// result, plus the stage label.
     #[test]

@@ -282,6 +282,55 @@ mod tests {
         }
     }
 
+    /// Satellite acceptance: cancel-before-first-step and mid-run cancel
+    /// both leave resumable checkpoints completing to the uninterrupted
+    /// run bitwise (the compressed sketch rebuilds deterministically).
+    #[test]
+    fn cancel_token_aborts_and_resumes_bitwise() {
+        use crate::symnmf::engine::CancelToken;
+        use crate::symnmf::trace::CancelAfterSink;
+        let x = planted(36, 3, 41);
+        let mut opts = SymNmfOptions::new(3).with_seed(12);
+        opts.max_iters = 7;
+        let full = compressed_symnmf_run(&x, &opts, &RunControl::unlimited(), None, None);
+
+        let tok = CancelToken::new();
+        tok.cancel();
+        let cancelled = compressed_symnmf_run(
+            &x,
+            &opts,
+            &RunControl::unlimited().with_cancel(tok),
+            None,
+            None,
+        );
+        assert_eq!(cancelled.checkpoint.status, RunStatus::Cancelled);
+        assert_eq!(cancelled.result.iters(), 0);
+        let resumed = compressed_symnmf_run(
+            &x,
+            &opts,
+            &RunControl::unlimited(),
+            Some(&cancelled.checkpoint),
+            None,
+        );
+        assert_results_bitwise_eq(&full.result, &resumed.result, "comp cancel-0 resume");
+
+        let tok = CancelToken::new();
+        let mut hook = CancelAfterSink::new(tok.clone(), 2);
+        let cancelled = compressed_symnmf_run(
+            &x,
+            &opts,
+            &RunControl::unlimited().with_cancel(tok),
+            None,
+            Some(&mut hook),
+        );
+        assert_eq!(cancelled.checkpoint.status, RunStatus::Cancelled);
+        assert_eq!(cancelled.result.iters(), 2);
+        let cp = Checkpoint::parse(&cancelled.checkpoint.serialize()).expect("roundtrip");
+        let resumed =
+            compressed_symnmf_run(&x, &opts, &RunControl::unlimited(), Some(&cp), None);
+        assert_results_bitwise_eq(&full.result, &resumed.result, "comp mid-cancel resume");
+    }
+
     /// Acceptance: checkpoint/resume bitwise (the RRF setup recomputes
     /// deterministically on resume) + deadline-0 initial iterate.
     #[test]

@@ -61,6 +61,8 @@ use crate::symnmf::options::SymNmfOptions;
 use crate::util::json::Json;
 use crate::util::rng::RngState;
 use crate::util::timer::{PhaseTimer, Stopwatch, PHASE_MM, PHASE_SAMPLING, PHASE_SOLVE};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// What one engine step reports back to the outer loop: per-phase seconds
@@ -163,14 +165,55 @@ impl ConvergencePolicy {
     }
 }
 
+/// Cooperative cancellation flag, shared between a controller (a serving
+/// loop, a request handler, a trace-sink hook) and the engine loop. The
+/// loop checks it **between steps** — before every step, alongside the
+/// deadline and quota checks — so a cancel never tears a half-finished
+/// iteration: the run aborts at the next step boundary with
+/// [`RunStatus::Cancelled`] and a fully valid, resumable [`Checkpoint`].
+/// Cancelling before the first step returns the initial iterate
+/// unstepped (exactly like a deadline of 0).
+///
+/// Clones share one flag (it is an `Arc<AtomicBool>`), so the same token
+/// can be handed to many trial workers and cancel a whole fleet at once.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request cancellation. Idempotent; takes effect at the next
+    /// between-steps check of every run holding a clone of this token.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+
+    /// Clear the flag so the token can gate a resumed run. Only the
+    /// controller that owns the job should reset — racing a reset
+    /// against an in-flight run turns a cancel into a no-op.
+    pub fn reset(&self) {
+        self.0.store(false, Ordering::Release);
+    }
+}
+
 /// Run budget honored before every step: a wall-clock deadline on the
 /// algorithm clock (setup + iterations — so a deadline of 0 returns the
-/// initial iterate without stepping) and/or a step quota for cooperative
-/// pausing. Both produce a resumable [`Checkpoint`].
-#[derive(Clone, Copy, Debug, Default)]
+/// initial iterate without stepping), a step quota for cooperative
+/// pausing, and/or a [`CancelToken`] for mid-flight aborts. All three
+/// produce a resumable [`Checkpoint`].
+#[derive(Clone, Debug, Default)]
 pub struct RunControl {
     pub deadline_secs: Option<f64>,
     pub max_steps: Option<usize>,
+    /// checked between steps; a set flag aborts with
+    /// [`RunStatus::Cancelled`] (checkpoint still returned)
+    pub cancel: Option<CancelToken>,
 }
 
 impl RunControl {
@@ -198,7 +241,7 @@ impl RunControl {
                 ),
             },
         };
-        RunControl { deadline_secs, max_steps: None }
+        RunControl { deadline_secs, max_steps: None, cancel: None }
     }
 
     pub fn with_deadline(mut self, secs: f64) -> RunControl {
@@ -208,6 +251,11 @@ impl RunControl {
 
     pub fn with_max_steps(mut self, n: usize) -> RunControl {
         self.max_steps = Some(n);
+        self
+    }
+
+    pub fn with_cancel(mut self, token: CancelToken) -> RunControl {
+        self.cancel = Some(token);
         self
     }
 }
@@ -221,14 +269,17 @@ pub enum RunStatus {
     Deadline,
     /// the step quota was exhausted; resume to continue
     Paused,
+    /// a [`CancelToken`] fired between steps; resume to continue
+    Cancelled,
 }
 
 impl RunStatus {
-    fn as_str(&self) -> &'static str {
+    pub fn as_str(&self) -> &'static str {
         match self {
             RunStatus::Completed => "completed",
             RunStatus::Deadline => "deadline",
             RunStatus::Paused => "paused",
+            RunStatus::Cancelled => "cancelled",
         }
     }
 
@@ -237,6 +288,7 @@ impl RunStatus {
             "completed" => Ok(RunStatus::Completed),
             "deadline" => Ok(RunStatus::Deadline),
             "paused" => Ok(RunStatus::Paused),
+            "cancelled" => Ok(RunStatus::Cancelled),
             other => Err(format!("unknown run status {other:?}")),
         }
     }
@@ -397,6 +449,13 @@ pub fn run_solver(
     if !finished {
         'run: loop {
             while stage_iter < policy.max_iters() {
+                // cancel outranks the other budgets: a controller that
+                // cancels wants the checkpoint to say so, even if the
+                // deadline would also have fired at this boundary
+                if ctrl.cancel.as_ref().is_some_and(|c| c.is_cancelled()) {
+                    status = RunStatus::Cancelled;
+                    break 'run;
+                }
                 if ctrl.deadline_secs.is_some_and(|d| clock >= d) {
                     status = RunStatus::Deadline;
                     break 'run;
@@ -639,8 +698,30 @@ fn record_from_json(j: &Json) -> Result<IterRecord, String> {
     })
 }
 
+/// Checkpoint wire versions. **Version 1** is the full checkpoint: every
+/// field including the residual-history records — resuming reproduces the
+/// complete stitched history in the final result. **Version 2** is the
+/// *factor-only* slim variant: identical resumable iterate state (H, W,
+/// RNG, counters, stopping state) but the records are dropped — for
+/// long-running fleets whose history already streams to a
+/// [`TraceSink`], where re-embedding every iteration's f64 hex in every
+/// generation of checkpoint is pure write amplification. A run resumed
+/// from a slim checkpoint is still bitwise-exact in factors and future
+/// residuals; its result simply contains only the post-resume records.
+pub const CHECKPOINT_VERSION_FULL: usize = 1;
+pub const CHECKPOINT_VERSION_SLIM: usize = 2;
+
 impl Checkpoint {
     pub fn to_json(&self) -> Json {
+        self.to_json_versioned(false)
+    }
+
+    /// Factor-only (version 2) encoding — see [`CHECKPOINT_VERSION_SLIM`].
+    pub fn to_json_slim(&self) -> Json {
+        self.to_json_versioned(true)
+    }
+
+    fn to_json_versioned(&self, slim: bool) -> Json {
         let rng = match &self.state.rng {
             Some(r) => Json::obj(vec![
                 ("state", hex_u128(r.state)),
@@ -652,8 +733,13 @@ impl Checkpoint {
             ]),
             None => Json::Null,
         };
-        Json::obj(vec![
-            ("version", Json::Num(1.0)),
+        let version = if slim {
+            CHECKPOINT_VERSION_SLIM
+        } else {
+            CHECKPOINT_VERSION_FULL
+        };
+        let mut fields = vec![
+            ("version", Json::Num(version as f64)),
             ("status", Json::Str(self.status.as_str().to_string())),
             ("stage", Json::Num(self.stage as f64)),
             ("stage_iter", Json::Num(self.stage_iter as f64)),
@@ -671,17 +757,23 @@ impl Checkpoint {
                     .unwrap_or(Json::Null),
             ),
             ("rng", rng),
-            (
+        ];
+        if !slim {
+            fields.push((
                 "records",
                 Json::Arr(self.records.iter().map(record_to_json).collect()),
-            ),
-        ])
+            ));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<Checkpoint, String> {
         let version = num(j.get("version"), "version")? as usize;
-        if version != 1 {
-            return Err(format!("unsupported checkpoint version {version}"));
+        if version != CHECKPOINT_VERSION_FULL && version != CHECKPOINT_VERSION_SLIM {
+            return Err(format!(
+                "unsupported checkpoint version {version} (supported: \
+                 {CHECKPOINT_VERSION_FULL} = full, {CHECKPOINT_VERSION_SLIM} = factor-only)"
+            ));
         }
         let status = RunStatus::parse(
             j.get("status")
@@ -710,19 +802,26 @@ impl Checkpoint {
                 })
             }
         };
-        let records = j
-            .get("records")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| "missing records".to_string())?
-            .iter()
-            .map(record_from_json)
-            .collect::<Result<Vec<_>, _>>()?;
+        let records = if version == CHECKPOINT_VERSION_SLIM {
+            // factor-only: the history was dropped on purpose (it lives
+            // in a trace sink); `iter` alone keeps record numbering
+            // global on resume
+            Vec::new()
+        } else {
+            j.get("records")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| "missing records".to_string())?
+                .iter()
+                .map(record_from_json)
+                .collect::<Result<Vec<_>, _>>()?
+        };
         let iter = num(j.get("iter"), "iter")? as usize;
         // cheap internal-consistency validation at the parse boundary —
         // a corrupted checkpoint should fail here with Err, not as a
         // panic deep inside run_solver (stage bounds and factor shapes
-        // are still checked there, against the rebuilt spec)
-        if iter != records.len() {
+        // are still checked there, against the rebuilt spec). Slim
+        // checkpoints are exempt: dropping the records is their point.
+        if version == CHECKPOINT_VERSION_FULL && iter != records.len() {
             return Err(format!(
                 "inconsistent checkpoint: iter = {iter} but {} records",
                 records.len()
@@ -754,7 +853,15 @@ impl Checkpoint {
         self.to_json().to_string()
     }
 
-    /// Parse a serialized checkpoint.
+    /// Serialize the factor-only (version 2) form — resumable iterate
+    /// state without the residual history. [`Checkpoint::parse`] reads
+    /// both versions.
+    pub fn serialize_slim(&self) -> String {
+        self.to_json_slim().to_string()
+    }
+
+    /// Parse a serialized checkpoint (version 1 full or version 2
+    /// factor-only); unknown versions are rejected with a clear error.
     pub fn parse(s: &str) -> Result<Checkpoint, String> {
         Checkpoint::from_json(&Json::parse(s)?)
     }
@@ -827,10 +934,23 @@ mod tests {
     #[test]
     fn run_control_env_and_builders() {
         let c = RunControl::unlimited();
-        assert!(c.deadline_secs.is_none() && c.max_steps.is_none());
+        assert!(c.deadline_secs.is_none() && c.max_steps.is_none() && c.cancel.is_none());
         let c = RunControl::unlimited().with_deadline(1.5).with_max_steps(7);
         assert_eq!(c.deadline_secs, Some(1.5));
         assert_eq!(c.max_steps, Some(7));
+        let c = RunControl::unlimited().with_cancel(CancelToken::new());
+        assert!(c.cancel.is_some());
+    }
+
+    #[test]
+    fn cancel_token_is_shared_and_resettable() {
+        let a = CancelToken::new();
+        let b = a.clone();
+        assert!(!a.is_cancelled() && !b.is_cancelled());
+        b.cancel();
+        assert!(a.is_cancelled(), "clones must share one flag");
+        a.reset();
+        assert!(!b.is_cancelled(), "reset must clear the shared flag");
     }
 
     #[test]
@@ -906,5 +1026,75 @@ mod tests {
         assert!(Checkpoint::parse("{}").is_err());
         assert!(Checkpoint::parse("[1,2]").is_err());
         assert!(Checkpoint::parse("{\"status\":\"nope\"}").is_err());
+    }
+
+    /// Factor-only (version 2) round-trip: iterate state survives
+    /// bitwise, the records are gone, and the version marker is honest.
+    #[test]
+    fn slim_checkpoint_roundtrips_factors_without_records() {
+        let mut rng = Pcg64::seed_from_u64(11);
+        let h = DenseMat::gaussian(5, 2, &mut rng);
+        let cp = Checkpoint {
+            status: RunStatus::Cancelled,
+            stage: 0,
+            stage_iter: 4,
+            iter: 4,
+            clock: 1.5,
+            stop_best: 0.25,
+            stop_stall: 1,
+            state: EngineState {
+                h: h.clone(),
+                w: None,
+                rng: Some(rng.state()),
+            },
+            records: vec![IterRecord {
+                iter: 0,
+                time_secs: 0.1,
+                residual: 0.5,
+                proj_grad: None,
+                phase_secs: (0.0, 0.0, 0.0),
+                hybrid_stats: None,
+            }],
+        };
+        let text = cp.serialize_slim();
+        assert!(!text.contains("records"), "slim form must drop the history");
+        let back = Checkpoint::parse(&text).expect("slim parse");
+        assert_eq!(back.status, RunStatus::Cancelled);
+        assert_eq!(back.iter, 4, "global iteration counter survives");
+        assert!(back.records.is_empty(), "slim checkpoints carry no records");
+        assert_eq!(back.stop_best.to_bits(), cp.stop_best.to_bits());
+        assert_eq!(back.state.rng, cp.state.rng);
+        for (a, b) in h.data().iter().zip(back.state.h.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // the slim form is much smaller than the full form once a real
+        // history accumulates — here it just must not be larger
+        assert!(text.len() < cp.serialize().len());
+    }
+
+    #[test]
+    fn checkpoint_parse_rejects_unknown_version() {
+        // take a valid checkpoint and bump its version marker
+        let cp = Checkpoint {
+            status: RunStatus::Completed,
+            stage: 0,
+            stage_iter: 0,
+            iter: 0,
+            clock: 0.0,
+            stop_best: f64::INFINITY,
+            stop_stall: 0,
+            state: EngineState {
+                h: DenseMat::zeros(2, 1),
+                w: None,
+                rng: None,
+            },
+            records: Vec::new(),
+        };
+        let text = cp.serialize().replacen("\"version\":1", "\"version\":3", 1);
+        let err = Checkpoint::parse(&text).expect_err("version 3 must be rejected");
+        assert!(
+            err.contains("unsupported checkpoint version 3"),
+            "error must name the bad version: {err}"
+        );
     }
 }

@@ -379,6 +379,59 @@ mod tests {
         }
     }
 
+    /// Satellite acceptance: cancel-before-first-step and a mid-run
+    /// cancel that lands INSIDE the IR stage chain both leave resumable
+    /// checkpoints that complete to the uninterrupted run bitwise.
+    #[test]
+    fn cancel_token_aborts_and_resumes_bitwise() {
+        use crate::symnmf::engine::{
+            assert_results_bitwise_eq, CancelToken, RunControl, RunStatus,
+        };
+        use crate::symnmf::trace::CancelAfterSink;
+        let x = planted(40, 2, 37);
+        let mut opts = SymNmfOptions::new(2).with_rule(UpdateRule::Hals).with_seed(9);
+        opts.max_iters = 5;
+        opts.refine = true; // two warm-started stages
+        let full = lai_symnmf_run(&x, &opts, &RunControl::unlimited(), None, None);
+
+        let tok = CancelToken::new();
+        tok.cancel();
+        let cancelled = lai_symnmf_run(
+            &x,
+            &opts,
+            &RunControl::unlimited().with_cancel(tok),
+            None,
+            None,
+        );
+        assert_eq!(cancelled.checkpoint.status, RunStatus::Cancelled);
+        assert_eq!(cancelled.result.iters(), 0);
+        let resumed = lai_symnmf_run(
+            &x,
+            &opts,
+            &RunControl::unlimited(),
+            Some(&cancelled.checkpoint),
+            None,
+        );
+        assert_results_bitwise_eq(&full.result, &resumed.result, "lai cancel-0 resume");
+
+        // cancel after the LAI stage's cap (5 records) — the abort lands
+        // in the IR continuation stage
+        let tok = CancelToken::new();
+        let mut hook = CancelAfterSink::new(tok.clone(), opts.max_iters + 1);
+        let cancelled = lai_symnmf_run(
+            &x,
+            &opts,
+            &RunControl::unlimited().with_cancel(tok),
+            None,
+            Some(&mut hook),
+        );
+        assert_eq!(cancelled.checkpoint.status, RunStatus::Cancelled);
+        assert_eq!(cancelled.checkpoint.stage, 1, "abort inside the IR stage");
+        let cp = Checkpoint::parse(&cancelled.checkpoint.serialize()).expect("roundtrip");
+        let resumed = lai_symnmf_run(&x, &opts, &RunControl::unlimited(), Some(&cp), None);
+        assert_results_bitwise_eq(&full.result, &resumed.result, "lai mid-cancel resume");
+    }
+
     #[test]
     fn ir_continues_and_improves_or_matches() {
         let x = planted(60, 3, 4);

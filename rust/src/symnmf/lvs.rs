@@ -449,6 +449,60 @@ mod tests {
         }
     }
 
+    /// Satellite acceptance: cancel-before-first-step and mid-run cancel
+    /// both resume bitwise — the cancelled checkpoint's RNG state keeps
+    /// the remaining leverage-score sample draws identical.
+    #[test]
+    fn cancel_token_aborts_and_resumes_bitwise() {
+        use crate::symnmf::engine::{assert_results_bitwise_eq, CancelToken, RunStatus};
+        use crate::symnmf::trace::CancelAfterSink;
+        let m = 60;
+        let x = planted_sparse(m, 3, 47);
+        let mut opts = SymNmfOptions::new(3).with_rule(UpdateRule::Hals).with_seed(19);
+        opts.max_iters = 7;
+        opts.samples = Some(m / 2);
+        let full = lvs_symnmf_run(&x, &opts, &RunControl::unlimited(), None, None);
+
+        let tok = CancelToken::new();
+        tok.cancel();
+        let cancelled = lvs_symnmf_run(
+            &x,
+            &opts,
+            &RunControl::unlimited().with_cancel(tok),
+            None,
+            None,
+        );
+        assert_eq!(cancelled.checkpoint.status, RunStatus::Cancelled);
+        assert_eq!(cancelled.result.iters(), 0);
+        let resumed = lvs_symnmf_run(
+            &x,
+            &opts,
+            &RunControl::unlimited(),
+            Some(&cancelled.checkpoint),
+            None,
+        );
+        assert_results_bitwise_eq(&full.result, &resumed.result, "lvs cancel-0 resume");
+
+        let tok = CancelToken::new();
+        let mut hook = CancelAfterSink::new(tok.clone(), 2);
+        let cancelled = lvs_symnmf_run(
+            &x,
+            &opts,
+            &RunControl::unlimited().with_cancel(tok),
+            None,
+            Some(&mut hook),
+        );
+        assert_eq!(cancelled.checkpoint.status, RunStatus::Cancelled);
+        assert_eq!(cancelled.result.iters(), 2);
+        assert!(
+            cancelled.checkpoint.state.rng.is_some(),
+            "cancelled LvS checkpoints must carry the sampler RNG"
+        );
+        let cp = Checkpoint::parse(&cancelled.checkpoint.serialize()).expect("roundtrip");
+        let resumed = lvs_symnmf_run(&x, &opts, &RunControl::unlimited(), Some(&cp), None);
+        assert_results_bitwise_eq(&full.result, &resumed.result, "lvs mid-cancel resume");
+    }
+
     #[test]
     fn hybrid_stats_recorded() {
         let x = planted_sparse(80, 4, 3);

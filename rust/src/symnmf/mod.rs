@@ -32,9 +32,12 @@ pub mod lvs;
 pub mod metrics;
 pub mod options;
 pub mod pgncg;
+pub mod trace;
 
 pub use engine::{
-    Checkpoint, EngineRun, RunControl, RunStatus, SolverEngine, StepOutcome, TraceSink,
+    CancelToken, Checkpoint, EngineRun, RunControl, RunStatus, SolverEngine, StepOutcome,
+    TraceSink,
 };
+pub use trace::{CancelAfterSink, CsvSink, JsonlSink, TraceFormat};
 pub use metrics::{IterRecord, SymNmfResult};
 pub use options::SymNmfOptions;

@@ -477,6 +477,80 @@ mod tests {
         x
     }
 
+    /// Satellite acceptance: cancel-before-first-step and mid-run cancel
+    /// for PGNCG (and the LAI-PGNCG chain), both resuming bitwise.
+    #[test]
+    fn cancel_token_aborts_and_resumes_bitwise() {
+        use crate::symnmf::engine::CancelToken;
+        use crate::symnmf::trace::CancelAfterSink;
+        let x = planted(36, 3, 43);
+        let mut opts = SymNmfOptions::new(3).with_seed(21);
+        opts.max_iters = 6;
+        opts.cg_iters = 5;
+        let full = pgncg_symnmf_run(&x, &opts, &RunControl::unlimited(), None, None);
+
+        let tok = CancelToken::new();
+        tok.cancel();
+        let cancelled = pgncg_symnmf_run(
+            &x,
+            &opts,
+            &RunControl::unlimited().with_cancel(tok),
+            None,
+            None,
+        );
+        assert_eq!(cancelled.checkpoint.status, RunStatus::Cancelled);
+        assert_eq!(cancelled.result.iters(), 0);
+        let resumed = pgncg_symnmf_run(
+            &x,
+            &opts,
+            &RunControl::unlimited(),
+            Some(&cancelled.checkpoint),
+            None,
+        );
+        assert_results_bitwise_eq(&full.result, &resumed.result, "pgncg cancel-0 resume");
+
+        let tok = CancelToken::new();
+        let mut hook = CancelAfterSink::new(tok.clone(), 2);
+        let cancelled = pgncg_symnmf_run(
+            &x,
+            &opts,
+            &RunControl::unlimited().with_cancel(tok),
+            None,
+            Some(&mut hook),
+        );
+        assert_eq!(cancelled.checkpoint.status, RunStatus::Cancelled);
+        assert_eq!(cancelled.result.iters(), 2);
+        let cp = Checkpoint::parse(&cancelled.checkpoint.serialize()).expect("roundtrip");
+        let resumed = pgncg_symnmf_run(&x, &opts, &RunControl::unlimited(), Some(&cp), None);
+        assert_results_bitwise_eq(&full.result, &resumed.result, "pgncg mid-cancel resume");
+
+        // the two-stage chain: cancel lands mid-flight, resume completes
+        opts.refine = true;
+        let full = lai_pgncg_symnmf_run(&x, &opts, &RunControl::unlimited(), None, None);
+        let tok = CancelToken::new();
+        let mut hook = CancelAfterSink::new(tok.clone(), 3);
+        let cancelled = lai_pgncg_symnmf_run(
+            &x,
+            &opts,
+            &RunControl::unlimited().with_cancel(tok),
+            None,
+            Some(&mut hook),
+        );
+        assert_eq!(cancelled.checkpoint.status, RunStatus::Cancelled);
+        let resumed = lai_pgncg_symnmf_run(
+            &x,
+            &opts,
+            &RunControl::unlimited(),
+            Some(&cancelled.checkpoint),
+            None,
+        );
+        assert_results_bitwise_eq(
+            &full.result,
+            &resumed.result,
+            "lai-pgncg mid-cancel resume",
+        );
+    }
+
     #[test]
     fn pgncg_converges_on_planted() {
         let x = planted(50, 3, 1);

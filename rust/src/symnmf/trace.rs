@@ -1,0 +1,434 @@
+//! Streaming [`TraceSink`]s: convergence telemetry written to disk **as
+//! it is produced**, one flushed line per iteration.
+//!
+//! The engine loop emits every [`IterRecord`] through its optional
+//! [`TraceSink`] the moment the iteration finishes. The in-process
+//! [`crate::symnmf::engine::VecSink`] collects; the sinks here *stream*:
+//! [`JsonlSink`] writes one JSON object per line, [`CsvSink`] one CSV
+//! row, and both flush after **every** record. That per-record flush is
+//! the whole contract — if the writing process dies mid-run (OOM-killed
+//! worker, pre-empted spot node), the prefix already on disk is complete,
+//! parseable, and ends at an iteration boundary. A monitoring tail can
+//! plot a convergence curve while the solve is still running, and the
+//! serving layer ([`crate::serve`]) relies on the same property to keep a
+//! job's trace file exact across pause/cancel/resume slices: each slice
+//! appends only its own post-resume records, so the stitched file's
+//! **iteration records** equal the uninterrupted run's history exactly.
+//! (Stage lines are re-announced once per resumed slice — the engine
+//! re-states the active stage so every record a sink observes belongs to
+//! the most recently announced stage — so consumers should key on the
+//! `iter` records, not count `stage` lines.)
+//!
+//! Write errors do not kill the solve: the sink latches the first error,
+//! stops writing, and reports it through `error()` — telemetry loss must
+//! never cost the factorization itself.
+//!
+//! [`CancelAfterSink`] is the cancellation hook built on the same
+//! observation point: it trips a [`CancelToken`] once a target number of
+//! records has streamed past, which is how tests and the `serve`
+//! CLI cancel a solve mid-flight *deterministically* (the engine checks
+//! the token between steps, so "cancel after record n" always aborts
+//! before step n+1 regardless of wall clock).
+
+use crate::symnmf::engine::{CancelToken, TraceSink};
+use crate::symnmf::metrics::IterRecord;
+use crate::util::json::Json;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+/// On-disk trace encodings understood by the serving layer and CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceFormat {
+    Jsonl,
+    Csv,
+}
+
+impl TraceFormat {
+    pub fn parse(s: &str) -> Result<TraceFormat, String> {
+        match s {
+            "jsonl" => Ok(TraceFormat::Jsonl),
+            "csv" => Ok(TraceFormat::Csv),
+            other => Err(format!("unknown trace format {other:?} (jsonl|csv)")),
+        }
+    }
+}
+
+/// Open a boxed streaming sink of the given format (the serving layer's
+/// one construction point).
+pub fn open_sink(
+    path: &Path,
+    format: TraceFormat,
+    append: bool,
+) -> Result<Box<dyn TraceSink + Send>, String> {
+    Ok(match format {
+        TraceFormat::Jsonl => Box::new(if append {
+            JsonlSink::append(path)?
+        } else {
+            JsonlSink::create(path)?
+        }),
+        TraceFormat::Csv => Box::new(if append {
+            CsvSink::append(path)?
+        } else {
+            CsvSink::create(path)?
+        }),
+    })
+}
+
+/// Plain numeric field, or `null` when the value is not finite — the
+/// in-repo JSON printer would otherwise emit bare `NaN`/`inf` tokens and
+/// break parseability of the output. Exact bits always travel in the
+/// `*_hex` companions. Shared with the CLI's per-job report writer.
+pub fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+fn create_writer(path: &Path, append: bool) -> Result<BufWriter<File>, String> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| format!("create trace dir {dir:?}: {e}"))?;
+        }
+    }
+    let file = if append {
+        std::fs::OpenOptions::new().create(true).append(true).open(path)
+    } else {
+        File::create(path)
+    };
+    file.map(BufWriter::new)
+        .map_err(|e| format!("create trace file {path:?}: {e}"))
+}
+
+/// JSONL streaming sink: one `{"type":"stage",...}` line per stage
+/// transition, one `{"type":"iter",...}` line per finished iteration,
+/// flushed per line. The residual is written both as a plain number (for
+/// plotting) and as IEEE-bit hex (`residual_hex`, for bitwise trajectory
+/// comparison across stitched slices).
+pub struct JsonlSink {
+    path: PathBuf,
+    out: Option<BufWriter<File>>,
+    stage: String,
+    error: Option<String>,
+}
+
+impl JsonlSink {
+    /// Create (truncating any existing file).
+    pub fn create(path: &Path) -> Result<JsonlSink, String> {
+        JsonlSink::open(path, false)
+    }
+
+    /// Open for appending — resumed jobs add their post-resume records
+    /// after the pre-resume prefix instead of truncating it.
+    pub fn append(path: &Path) -> Result<JsonlSink, String> {
+        JsonlSink::open(path, true)
+    }
+
+    fn open(path: &Path, append: bool) -> Result<JsonlSink, String> {
+        Ok(JsonlSink {
+            path: path.to_path_buf(),
+            out: Some(create_writer(path, append)?),
+            stage: String::new(),
+            error: None,
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// First write/flush error, if any — the sink stops writing after it
+    /// (and warns once on stderr, since boxed `dyn TraceSink` consumers
+    /// cannot reach this accessor).
+    pub fn error(&self) -> Option<&str> {
+        self.error.as_deref()
+    }
+
+    fn emit(&mut self, line: &Json) {
+        let Some(out) = self.out.as_mut() else { return };
+        let res = writeln!(out, "{line}").and_then(|()| out.flush());
+        if let Err(e) = res {
+            eprintln!("[trace] stream to {:?} stopped: {e}", self.path);
+            self.error = Some(format!("write {:?}: {e}", self.path));
+            self.out = None;
+        }
+    }
+}
+
+impl TraceSink for JsonlSink {
+    fn on_stage(&mut self, label: &str) {
+        self.stage = label.to_string();
+        let line = Json::obj(vec![
+            ("type", Json::Str("stage".to_string())),
+            ("label", Json::Str(label.to_string())),
+        ]);
+        self.emit(&line);
+    }
+
+    fn on_record(&mut self, rec: &IterRecord) {
+        let (mm, solve, sample) = rec.phase_secs;
+        let line = Json::obj(vec![
+            ("type", Json::Str("iter".to_string())),
+            ("stage", Json::Str(self.stage.clone())),
+            ("iter", Json::Num(rec.iter as f64)),
+            ("time_secs", Json::Num(rec.time_secs)),
+            ("residual", num_or_null(rec.residual)),
+            (
+                "residual_hex",
+                Json::Str(format!("{:016x}", rec.residual.to_bits())),
+            ),
+            (
+                "proj_grad",
+                rec.proj_grad.map(num_or_null).unwrap_or(Json::Null),
+            ),
+            ("mm_secs", Json::Num(mm)),
+            ("solve_secs", Json::Num(solve)),
+            ("sample_secs", Json::Num(sample)),
+            (
+                "hybrid",
+                rec.hybrid_stats
+                    .map(|(a, b)| Json::Arr(vec![num_or_null(a), num_or_null(b)]))
+                    .unwrap_or(Json::Null),
+            ),
+        ]);
+        self.emit(&line);
+    }
+}
+
+/// CSV streaming sink: a fixed header written at creation, one row per
+/// iteration, flushed per row.
+pub struct CsvSink {
+    path: PathBuf,
+    out: Option<BufWriter<File>>,
+    stage: String,
+    error: Option<String>,
+}
+
+/// The [`CsvSink`] column schema.
+pub const CSV_HEADER: &str =
+    "stage,iter,time_secs,residual,proj_grad,mm_secs,solve_secs,sample_secs";
+
+impl CsvSink {
+    /// Create (truncating any existing file) and write the header.
+    pub fn create(path: &Path) -> Result<CsvSink, String> {
+        CsvSink::open(path, false)
+    }
+
+    /// Open for appending; the header is written only when the file is
+    /// new or empty, so a resumed job continues the existing table.
+    pub fn append(path: &Path) -> Result<CsvSink, String> {
+        CsvSink::open(path, true)
+    }
+
+    fn open(path: &Path, append: bool) -> Result<CsvSink, String> {
+        let mut out = create_writer(path, append)?;
+        let has_prefix = append
+            && std::fs::metadata(path).map(|m| m.len() > 0).unwrap_or(false);
+        if !has_prefix {
+            writeln!(out, "{CSV_HEADER}")
+                .and_then(|()| out.flush())
+                .map_err(|e| format!("write {path:?}: {e}"))?;
+        }
+        Ok(CsvSink {
+            path: path.to_path_buf(),
+            out: Some(out),
+            stage: String::new(),
+            error: None,
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn error(&self) -> Option<&str> {
+        self.error.as_deref()
+    }
+}
+
+impl TraceSink for CsvSink {
+    fn on_stage(&mut self, label: &str) {
+        // CSV has no stage rows; the label becomes a column value
+        self.stage = label.to_string();
+    }
+
+    fn on_record(&mut self, rec: &IterRecord) {
+        let Some(out) = self.out.as_mut() else { return };
+        let (mm, solve, sample) = rec.phase_secs;
+        let pg = rec.proj_grad.map(|p| p.to_string()).unwrap_or_default();
+        let res = writeln!(
+            out,
+            "{},{},{},{},{},{},{},{}",
+            self.stage, rec.iter, rec.time_secs, rec.residual, pg, mm, solve, sample
+        )
+        .and_then(|()| out.flush());
+        if let Err(e) = res {
+            eprintln!("[trace] stream to {:?} stopped: {e}", self.path);
+            self.error = Some(format!("write {:?}: {e}", self.path));
+            self.out = None;
+        }
+    }
+}
+
+/// Trips a [`CancelToken`] once the **global** iteration count reaches
+/// `after` — "global" meaning `base + records seen`, where `base` is the
+/// iteration count already in the resume checkpoint, so the threshold
+/// means the same thing whether the run is fresh or a later slice.
+/// Records (and stage transitions) are forwarded to the optional inner
+/// sink first, so the record that crosses the threshold is still
+/// streamed before the engine sees the flag at the next step boundary.
+pub struct CancelAfterSink<'a> {
+    token: CancelToken,
+    after: usize,
+    seen: usize,
+    inner: Option<&'a mut dyn TraceSink>,
+}
+
+impl<'a> CancelAfterSink<'a> {
+    pub fn new(token: CancelToken, after: usize) -> CancelAfterSink<'a> {
+        CancelAfterSink { token, after, seen: 0, inner: None }
+    }
+
+    /// Start the count at `base` (the resume checkpoint's `iter`) and
+    /// forward everything to `inner`.
+    pub fn resuming(
+        token: CancelToken,
+        after: usize,
+        base: usize,
+        inner: Option<&'a mut dyn TraceSink>,
+    ) -> CancelAfterSink<'a> {
+        CancelAfterSink { token, after, seen: base, inner }
+    }
+}
+
+impl TraceSink for CancelAfterSink<'_> {
+    fn on_stage(&mut self, label: &str) {
+        if let Some(inner) = self.inner.as_deref_mut() {
+            inner.on_stage(label);
+        }
+    }
+
+    fn on_record(&mut self, rec: &IterRecord) {
+        if let Some(inner) = self.inner.as_deref_mut() {
+            inner.on_record(rec);
+        }
+        self.seen += 1;
+        if self.seen >= self.after {
+            self.token.cancel();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(iter: usize, residual: f64) -> IterRecord {
+        IterRecord {
+            iter,
+            time_secs: 0.25 * (iter + 1) as f64,
+            residual,
+            proj_grad: (iter % 2 == 0).then_some(1e-3),
+            phase_secs: (0.1, 0.2, 0.0),
+            hybrid_stats: None,
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("symnmf-trace-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn jsonl_sink_streams_parseable_lines() {
+        let path = tmp("jsonl-basic.jsonl");
+        let mut sink = JsonlSink::create(&path).expect("create");
+        sink.on_stage("BPP");
+        sink.on_record(&rec(0, 0.5));
+        sink.on_record(&rec(1, 0.25));
+        assert!(sink.error().is_none());
+        drop(sink);
+        let text = std::fs::read_to_string(&path).expect("read");
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let stage = Json::parse(lines[0]).expect("stage line");
+        assert_eq!(stage.get("type").and_then(Json::as_str), Some("stage"));
+        assert_eq!(stage.get("label").and_then(Json::as_str), Some("BPP"));
+        let it = Json::parse(lines[2]).expect("iter line");
+        assert_eq!(it.get("iter").and_then(Json::as_usize), Some(1));
+        assert_eq!(it.get("stage").and_then(Json::as_str), Some("BPP"));
+        assert_eq!(
+            it.get("residual_hex").and_then(Json::as_str),
+            Some(format!("{:016x}", 0.25f64.to_bits()).as_str())
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// The flush-per-record contract: kill the writer mid-run (no Drop,
+    /// no final flush — the sink is leaked) and the prefix already on
+    /// disk must be complete and parseable line by line.
+    #[test]
+    fn killed_writer_leaves_parseable_prefix() {
+        let path = tmp("jsonl-killed.jsonl");
+        let mut sink = JsonlSink::create(&path).expect("create");
+        sink.on_stage("HALS");
+        for i in 0..5 {
+            sink.on_record(&rec(i, 1.0 / (i + 1) as f64));
+        }
+        // simulate the process dying: never run Drop (which would flush
+        // BufWriter's buffer) — only the per-record flushes count
+        std::mem::forget(sink);
+        let text = std::fs::read_to_string(&path).expect("read");
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 6, "1 stage + 5 records must be on disk");
+        for (i, line) in lines.iter().enumerate() {
+            let j = Json::parse(line)
+                .unwrap_or_else(|e| panic!("line {i} unparseable: {e}"));
+            if i > 0 {
+                assert_eq!(j.get("iter").and_then(Json::as_usize), Some(i - 1));
+            }
+        }
+        std::fs::remove_file(&path).ok();
+
+        // same property for the CSV sink
+        let path = tmp("csv-killed.csv");
+        let mut sink = CsvSink::create(&path).expect("create");
+        sink.on_stage("HALS");
+        for i in 0..4 {
+            sink.on_record(&rec(i, 0.5));
+        }
+        std::mem::forget(sink);
+        let text = std::fs::read_to_string(&path).expect("read");
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 5, "header + 4 rows must be on disk");
+        assert_eq!(lines[0], CSV_HEADER);
+        for row in &lines[1..] {
+            assert_eq!(
+                row.split(',').count(),
+                CSV_HEADER.split(',').count(),
+                "row has the header's column count: {row}"
+            );
+            assert!(row.starts_with("HALS,"));
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn cancel_after_fires_at_global_count() {
+        let tok = CancelToken::new();
+        let mut sink = CancelAfterSink::new(tok.clone(), 3);
+        sink.on_record(&rec(0, 0.9));
+        sink.on_record(&rec(1, 0.8));
+        assert!(!tok.is_cancelled());
+        sink.on_record(&rec(2, 0.7));
+        assert!(tok.is_cancelled(), "third record must trip the token");
+
+        // resuming form: base already counts the checkpointed records
+        let tok = CancelToken::new();
+        let mut sink = CancelAfterSink::resuming(tok.clone(), 3, 2, None);
+        sink.on_record(&rec(2, 0.7));
+        assert!(tok.is_cancelled(), "base 2 + 1 record reaches the threshold");
+    }
+}

@@ -1,0 +1,306 @@
+//! Serving-layer acceptance: jobs driven through the scheduler in
+//! budgeted slices — including a mid-flight cancel and a resume — must
+//! reproduce the uninterrupted solve **bitwise** for every method, and
+//! checkpoints/traces must survive the filesystem round trip.
+
+use symnmf::coordinator::driver::Method;
+use symnmf::linalg::{blas, DenseMat};
+use symnmf::nls::UpdateRule;
+use symnmf::serve::{JobSpec, JobStatus, JobStore, Scheduler, SchedulerConfig};
+use symnmf::symnmf::options::{SymNmfOptions, Tau};
+use symnmf::symnmf::trace::TraceFormat;
+use symnmf::symnmf::SymNmfResult;
+use symnmf::util::json::Json;
+use symnmf::util::rng::Pcg64;
+
+fn planted(m: usize, k: usize, seed: u64) -> DenseMat {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let h = DenseMat::uniform(m, k, 1.0, &mut rng);
+    let mut x = blas::matmul_nt(&h, &h);
+    x.symmetrize();
+    x
+}
+
+/// Bitwise equality of everything the engine contract pins (wall-clock
+/// fields exempt) — a local copy of the crate-internal test helper.
+fn assert_bitwise(a: &SymNmfResult, b: &SymNmfResult, what: &str) {
+    assert_eq!(a.label, b.label, "{what}: label");
+    assert_eq!(a.iters(), b.iters(), "{what}: iteration count");
+    for (i, (ra, rb)) in a.records.iter().zip(&b.records).enumerate() {
+        assert_eq!(ra.iter, rb.iter, "{what}: record {i} index");
+        assert_eq!(
+            ra.residual.to_bits(),
+            rb.residual.to_bits(),
+            "{what}: residual at iter {i}"
+        );
+        assert_eq!(
+            ra.proj_grad.map(f64::to_bits),
+            rb.proj_grad.map(f64::to_bits),
+            "{what}: proj_grad at iter {i}"
+        );
+        assert_eq!(
+            ra.hybrid_stats.map(|(p, q)| (p.to_bits(), q.to_bits())),
+            rb.hybrid_stats.map(|(p, q)| (p.to_bits(), q.to_bits())),
+            "{what}: hybrid stats at iter {i}"
+        );
+    }
+    assert_eq!(a.h.shape(), b.h.shape(), "{what}: H shape");
+    for (x, y) in a.h.data().iter().zip(b.h.data()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: H bits");
+    }
+    assert_eq!(a.w.shape(), b.w.shape(), "{what}: W shape");
+    for (x, y) in a.w.data().iter().zip(b.w.data()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: W bits");
+    }
+}
+
+fn methods_under_test() -> Vec<Method> {
+    vec![
+        Method::Exact(UpdateRule::Bpp),
+        Method::Exact(UpdateRule::Hals),
+        Method::Lai { rule: UpdateRule::Hals, refine: true },
+        Method::Comp(UpdateRule::Hals),
+        Method::Pgncg,
+        Method::LaiPgncg { refine: true },
+        Method::Lvs { rule: UpdateRule::Hals, tau: Tau::OneOverS },
+    ]
+}
+
+fn opts_for(k: usize, m: usize) -> SymNmfOptions {
+    let mut opts = SymNmfOptions::new(k).with_seed(5);
+    opts.max_iters = 8;
+    opts.samples = Some(m / 2); // LvS sample budget on these small m
+    opts.cg_iters = 5;
+    opts
+}
+
+/// THE acceptance criterion: for every method at k ∈ {2, 7}, a job
+/// driven through the scheduler in ≥ 3 slices — one of which is cut by a
+/// mid-flight cancel, then resumed — produces bitwise-identical H, W,
+/// and residual history to the uninterrupted [`Method::run`] call.
+#[test]
+fn every_method_sliced_cancelled_resumed_is_bitwise_exact() {
+    for k in [2usize, 7] {
+        let m = 10 * k;
+        let x = planted(m, k, 100 + k as u64);
+        let opts = opts_for(k, m);
+        for method in methods_under_test() {
+            let what = format!("{} k={k}", method.label());
+            let full = method.run(&x, &opts);
+
+            let mut sched = Scheduler::new(SchedulerConfig {
+                slice_steps: Some(2),
+                ..SchedulerConfig::default()
+            });
+            let spec = JobSpec::new("acceptance", method, opts.clone())
+                .with_cancel_after(3);
+            let h = sched.submit(&x, spec).expect("submit");
+            sched.drain();
+            assert_eq!(h.poll(), JobStatus::Cancelled, "{what}: cancel hook");
+            let mid = h.outcome().expect("cancelled outcome");
+            assert_eq!(
+                mid.checkpoint.iter, 3,
+                "{what}: the hook fires after record 3, the engine aborts \
+                 before step 4"
+            );
+            sched.resume(&h).expect("resume");
+            sched.drain();
+            let done = h.await_result();
+            assert_eq!(done.status, JobStatus::Completed, "{what}");
+            assert!(
+                done.slices >= 3,
+                "{what}: needs >= 3 slices, got {}",
+                done.slices
+            );
+            assert_bitwise(&full, &done.result, &what);
+        }
+    }
+}
+
+/// Checkpoints survive the store round trip across *scheduler restarts*:
+/// suspend a job, build a fresh scheduler over the same store, resume
+/// from the persisted generation, and land bitwise on the uninterrupted
+/// run. Also pins generation GC.
+#[test]
+fn store_backed_restart_resumes_bitwise_and_gcs() {
+    let dir = std::env::temp_dir()
+        .join(format!("symnmf-serve-it-store-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let x = planted(30, 3, 77);
+    let mut opts = SymNmfOptions::new(3).with_seed(2);
+    opts.max_iters = 7;
+    let method = Method::Exact(UpdateRule::Hals);
+    let full = method.run(&x, &opts);
+
+    // session 1: 2-step slices, suspend after 4 steps, checkpoints persisted
+    {
+        let store = JobStore::open(&dir).expect("open store");
+        let mut sched = Scheduler::new(SchedulerConfig {
+            slice_steps: Some(2),
+            store: Some(store),
+            ..SchedulerConfig::default()
+        });
+        let h = sched
+            .submit(&x, JobSpec::new("restartable", method, opts.clone()).with_max_steps(4))
+            .expect("submit");
+        sched.drain();
+        let o = h.await_result();
+        assert_eq!(o.status, JobStatus::Suspended);
+        assert_eq!(o.checkpoint.iter, 4);
+    }
+
+    // the store holds exactly one (GC'd) generation for the job
+    let store = JobStore::open(&dir).expect("reopen store");
+    let gens = store.generations("restartable").expect("generations");
+    assert_eq!(gens.len(), 1, "superseded generations must be GC'd: {gens:?}");
+    let (_, cp) = store.load_latest("restartable").expect("load").expect("present");
+    assert_eq!(cp.iter, 4);
+
+    // session 2: a fresh scheduler (fresh process in real life) over the
+    // SAME store resumes from the persisted checkpoint and completes
+    // bitwise — and its new generations must continue ABOVE the
+    // persisted numbering, or GC would delete the fresh checkpoints in
+    // favor of the stale pre-restart one
+    let gen_before = *gens.last().unwrap();
+    {
+        let store = JobStore::open(&dir).expect("open store again");
+        let mut sched = Scheduler::new(SchedulerConfig {
+            store: Some(store),
+            ..SchedulerConfig::default()
+        });
+        let h = sched
+            .submit(
+                &x,
+                JobSpec::new("restartable", method, opts.clone()).with_resume(cp),
+            )
+            .expect("submit resumed");
+        sched.drain();
+        let o = h.await_result();
+        assert_eq!(o.status, JobStatus::Completed);
+        assert_bitwise(&full, &o.result, "store-backed restart");
+    }
+    let store = JobStore::open(&dir).expect("final reopen");
+    let gens = store.generations("restartable").expect("generations");
+    assert_eq!(gens.len(), 1);
+    assert!(
+        gens[0] > gen_before,
+        "restart must continue generation numbering ({} !> {gen_before})",
+        gens[0]
+    );
+    let (_, final_cp) = store.load_latest("restartable").expect("load").expect("present");
+    assert_eq!(
+        final_cp.iter,
+        full.iters(),
+        "the retained generation is the completed state, not the stale one"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A slim (factor-only) store still resumes to bitwise-identical factors
+/// and future residuals; only the pre-resume history is absent from the
+/// final result (it lives in the trace stream instead).
+#[test]
+fn slim_store_resumes_factors_bitwise() {
+    let dir = std::env::temp_dir()
+        .join(format!("symnmf-serve-it-slim-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let x = planted(28, 2, 55);
+    let mut opts = SymNmfOptions::new(2).with_seed(9);
+    opts.max_iters = 6;
+    let method = Method::Exact(UpdateRule::Bpp);
+    let full = method.run(&x, &opts);
+    {
+        let store = JobStore::open(&dir).expect("open store");
+        let mut sched = Scheduler::new(SchedulerConfig {
+            store: Some(store),
+            slim_checkpoints: true,
+            ..SchedulerConfig::default()
+        });
+        let h = sched
+            .submit(&x, JobSpec::new("slim-job", method, opts.clone()).with_max_steps(3))
+            .expect("submit");
+        sched.drain();
+        assert_eq!(h.await_result().status, JobStatus::Suspended);
+    }
+    let store = JobStore::open(&dir).expect("reopen");
+    let (_, cp) = store.load_latest("slim-job").expect("load").expect("present");
+    assert!(cp.records.is_empty(), "slim checkpoint drops the history");
+    assert_eq!(cp.iter, 3);
+    let mut sched = Scheduler::new(SchedulerConfig::default());
+    let h = sched
+        .submit(&x, JobSpec::new("slim-job", method, opts).with_resume(cp))
+        .expect("submit");
+    sched.drain();
+    let o = h.await_result();
+    assert_eq!(o.status, JobStatus::Completed);
+    // records: only the post-resume tail, globally numbered
+    assert_eq!(o.result.records.first().map(|r| r.iter), Some(3));
+    let tail = &full.records[3..];
+    assert_eq!(o.result.records.len(), tail.len());
+    for (a, b) in tail.iter().zip(&o.result.records) {
+        assert_eq!(a.residual.to_bits(), b.residual.to_bits(), "slim resume residuals");
+    }
+    for (a, b) in full.h.data().iter().zip(o.result.h.data()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "slim resume H bits");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A job's persistent JSONL trace stitched across slices (including a
+/// cancel + resume) equals the uninterrupted run's residual history,
+/// record for record, bitwise (via the residual_hex field).
+#[test]
+fn stitched_trace_stream_equals_uninterrupted_history() {
+    let dir = std::env::temp_dir()
+        .join(format!("symnmf-serve-it-trace-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).expect("mkdir");
+    let trace_path = dir.join("job.jsonl");
+    let x = planted(30, 3, 91);
+    let mut opts = SymNmfOptions::new(3).with_seed(6);
+    opts.max_iters = 7;
+    let method = Method::Exact(UpdateRule::Hals);
+    let full = method.run(&x, &opts);
+
+    let mut sched = Scheduler::new(SchedulerConfig {
+        slice_steps: Some(2),
+        ..SchedulerConfig::default()
+    });
+    let spec = JobSpec::new("traced", method, opts)
+        .with_cancel_after(3)
+        .with_trace(trace_path.clone(), TraceFormat::Jsonl);
+    let h = sched.submit(&x, spec).expect("submit");
+    sched.drain();
+    assert_eq!(h.poll(), JobStatus::Cancelled);
+    sched.resume(&h).expect("resume");
+    sched.drain();
+    let o = h.await_result();
+    assert_eq!(o.status, JobStatus::Completed);
+
+    let text = std::fs::read_to_string(&trace_path).expect("trace file");
+    let iters: Vec<(usize, String)> = text
+        .lines()
+        .map(|l| Json::parse(l).expect("parseable trace line"))
+        .filter(|j| j.get("type").and_then(Json::as_str) == Some("iter"))
+        .map(|j| {
+            (
+                j.get("iter").and_then(Json::as_usize).unwrap(),
+                j.get("residual_hex").and_then(Json::as_str).unwrap().to_string(),
+            )
+        })
+        .collect();
+    assert_eq!(
+        iters.len(),
+        full.iters(),
+        "stitched stream must cover the whole history exactly once"
+    );
+    for (i, (r, (iter, hex))) in full.records.iter().zip(&iters).enumerate() {
+        assert_eq!(r.iter, *iter, "record {i} numbering");
+        assert_eq!(
+            &format!("{:016x}", r.residual.to_bits()),
+            hex,
+            "record {i} residual"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
