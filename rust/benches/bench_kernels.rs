@@ -17,7 +17,7 @@
 use std::rc::Rc;
 use symnmf::coordinator::driver::{run_trials, run_trials_batched};
 use symnmf::coordinator::Method;
-use symnmf::linalg::{blas, qr, DenseMat, PanelBuf, SymPacked};
+use symnmf::linalg::{blas, qr, simd, DenseMat, KernelIsa, PanelBuf, Precision, SymPacked};
 use symnmf::nls::{bpp, hals, UpdateRule};
 use symnmf::randnla::leverage::sample_hybrid;
 use symnmf::randnla::SymOp;
@@ -25,6 +25,7 @@ use symnmf::runtime::{PjrtRuntime, PjrtSymOp};
 use symnmf::serve::{JobSpec, Scheduler, SchedulerConfig};
 use symnmf::sparse::CsrMat;
 use symnmf::symnmf::anls::{resolve_alpha, run_alternating_loop, symnmf_anls, Metrics};
+use symnmf::symnmf::compressed::compressed_symnmf;
 use symnmf::symnmf::engine::{Checkpoint, EngineState, RunControl, RunStatus};
 use symnmf::symnmf::metrics::IterRecord;
 use symnmf::symnmf::init::initial_factor;
@@ -74,6 +75,11 @@ fn write_json(records: &[Record]) {
     let doc = Json::obj(vec![
         ("version", Json::Num(1.0)),
         ("bench", Json::Str("kernels".to_string())),
+        // provenance: rows measured under a different dispatch (or on a
+        // different box) are not comparable — the regression gate skips
+        // cross-ISA/hostname diffs instead of flagging phantom deltas.
+        ("isa", Json::Str(simd::active().as_str().to_string())),
+        ("hostname", Json::Str(simd::hostname())),
         ("kernels", Json::Arr(arr)),
     ]);
     let path = repo_root().join("BENCH_kernels.json");
@@ -162,8 +168,10 @@ fn main() {
         m2 * m2,
         100.0 * xp.packed_len() as f64 / (m2 * m2) as f64
     );
+    // scalar-pinned baseline row: stable across hosts, the SIMD row below
+    // shows the dispatch win on this box.
     let r_packedx = bench(&format!("packed X·F apply_into ({m2}x{m2}, k={k2})"), 1, 5, || {
-        xp.apply_into(&f2, &mut out2);
+        xp.apply_blocked_into_isa(KernelIsa::Scalar, &f2, &mut out2);
     });
     println!("{}   {:.2} GF/s", r_packedx.report(), gflops(flops2, r_packedx.median));
     record(
@@ -171,6 +179,18 @@ fn main() {
         "symm_packed_apply_into",
         &format!("{m2}x{m2}·{m2}x{k2}"),
         &r_packedx,
+        flops2,
+    );
+    let r_packedx_simd =
+        bench(&format!("packed X·F simd [{}] ({m2}x{m2}, k={k2})", simd::active().as_str()), 1, 5, || {
+            xp.apply_into(&f2, &mut out2);
+        });
+    println!("{}   {:.2} GF/s", r_packedx_simd.report(), gflops(flops2, r_packedx_simd.median));
+    record(
+        &mut records,
+        "symm_packed_simd",
+        &format!("{m2}x{m2}·{m2}x{k2}"),
+        &r_packedx_simd,
         flops2,
     );
     println!(
@@ -185,10 +205,22 @@ fn main() {
     let mut nt_c = DenseMat::zeros(m2, m2);
     let nt_flops = 2.0 * (m2 * m2 * k2) as f64;
     let r_pk = bench(&format!("matmul_nt packed   ({m2}x{k2} · {m2}x{k2}ᵀ)"), 1, 5, || {
-        blas::matmul_nt_into_packed(&nt_a, &nt_b, &mut nt_c);
+        blas::matmul_nt_into_packed_isa(KernelIsa::Scalar, &nt_a, &nt_b, &mut nt_c);
     });
     println!("{}   {:.2} GF/s", r_pk.report(), gflops(nt_flops, r_pk.median));
     record(&mut records, "matmul_nt_packed", &format!("{m2}x{k2}·{m2}x{k2}T"), &r_pk, nt_flops);
+    let r_pk_simd =
+        bench(&format!("matmul_nt simd [{}] ({m2}x{k2} · {m2}x{k2}ᵀ)", simd::active().as_str()), 1, 5, || {
+            blas::matmul_nt_into_packed(&nt_a, &nt_b, &mut nt_c);
+        });
+    println!("{}   {:.2} GF/s", r_pk_simd.report(), gflops(nt_flops, r_pk_simd.median));
+    record(
+        &mut records,
+        "matmul_nt_simd",
+        &format!("{m2}x{k2}·{m2}x{k2}T"),
+        &r_pk_simd,
+        nt_flops,
+    );
     let r_un = bench(&format!("matmul_nt unpacked ({m2}x{k2} · {m2}x{k2}ᵀ)"), 1, 5, || {
         blas::matmul_nt_into_unpacked(&nt_a, &nt_b, &mut nt_c);
     });
@@ -267,10 +299,17 @@ fn main() {
     let hals_flops = 2.0 * (hm * k * k) as f64;
     let mut hw = hals_w0.clone();
     let r_hals = bench(&format!("HALS row-major sweep ({hm}x{k})"), 2, 9, || {
-        hals::hals_sweep(&hals_g, &hals_y, &mut hw);
+        hals::hals_sweep_isa(KernelIsa::Scalar, &hals_g, &hals_y, &mut hw);
     });
     println!("{}   {:.2} GF/s", r_hals.report(), gflops(hals_flops, r_hals.median));
     record(&mut records, "hals_rowmajor", &format!("{hm}x{k}"), &r_hals, hals_flops);
+    let mut hw_simd = hals_w0.clone();
+    let r_hals_simd =
+        bench(&format!("HALS simd sweep [{}] ({hm}x{k})", simd::active().as_str()), 2, 9, || {
+            hals::hals_sweep(&hals_g, &hals_y, &mut hw_simd);
+        });
+    println!("{}   {:.2} GF/s", r_hals_simd.report(), gflops(hals_flops, r_hals_simd.median));
+    record(&mut records, "hals_sweep_simd", &format!("{hm}x{k}"), &r_hals_simd, hals_flops);
     let mut hw_ref = hals_w0.clone();
     let r_hals_ref = bench(&format!("HALS transpose-staged ({hm}x{k})"), 2, 9, || {
         hals::hals_sweep_reference(&hals_g, &hals_y, &mut hw_ref);
@@ -286,6 +325,35 @@ fn main() {
         &format!("{hm}x{k}"),
         &r_hals_ref,
         hals_flops,
+    );
+
+    // --- compressed solve, f64 vs f32 sketched GEMMs ---
+    // Same workload either way; the f32 row shows what staging the inner
+    // Q/ B̃ᵀ products in single precision (f64 accumulation) buys.
+    let (cx, copts) = {
+        let mut crng = Pcg64::seed_from_u64(9);
+        let ch = DenseMat::uniform(512, 8, 1.0, &mut crng);
+        let mut cx = blas::matmul_nt(&ch, &ch);
+        cx.symmetrize();
+        let mut o = SymNmfOptions::new(8).with_rule(UpdateRule::Hals).with_seed(5);
+        o.max_iters = 15;
+        (cx, o)
+    };
+    let o64 = copts.clone().with_precision(Precision::F64);
+    let r_c64 = bench("compressed f64 (512², k=8, 15 iters)", 1, 5, || {
+        std::hint::black_box(compressed_symnmf(&cx, &o64));
+    });
+    println!("{}", r_c64.report());
+    record(&mut records, "compressed_f64", "512x512 k=8", &r_c64, 0.0);
+    let o32 = copts.clone().with_precision(Precision::F32);
+    let r_c32 = bench("compressed f32 (512², k=8, 15 iters)", 1, 5, || {
+        std::hint::black_box(compressed_symnmf(&cx, &o32));
+    });
+    println!("{}", r_c32.report());
+    record(&mut records, "compressed_f32", "512x512 k=8", &r_c32, 0.0);
+    println!(
+        "compressed f32 vs f64 solve: {:.2}% time",
+        100.0 * r_c32.median / r_c64.median.max(1e-300)
     );
 
     // --- batched vs serial multi-seed trials (shared X, 4 seeds) ---
@@ -524,6 +592,7 @@ fn main() {
                 hybrid_stats: None,
             })
             .collect(),
+        isa: Some(simd::active().as_str().to_string()),
     };
     let r_cp = bench("checkpoint serialize+parse (2048x32, 50 records)", 1, 5, || {
         let text = big_cp.serialize();

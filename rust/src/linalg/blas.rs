@@ -60,15 +60,48 @@
 //! one is available; partitioning is balanced and deterministic (see
 //! [`crate::util::threadpool`]).
 //!
+//! **Dispatch tiers (PR 6).** The scalar kernels in this module are the
+//! permanent correctness oracles; the hot ones also exist as explicit
+//! SIMD bodies behind the runtime dispatch in [`crate::linalg::simd`]
+//! (AVX-512F / AVX2+FMA / NEON, selected once per process from
+//! `SYMNMF_KERNEL` or feature detection). Two numeric tiers:
+//!
+//! * *bitwise tier* — [`dot`]/[`axpy`] (and the f32 widening axpy of
+//!   the sketched pipelines) are dispatched through SIMD bodies that
+//!   reproduce this module's FP operation order exactly (separate
+//!   mul+add, lanes mirroring the 4-way unrolled accumulators, scalar
+//!   reduction order), so every cross-path bitwise pin in the test
+//!   suite holds on any tier;
+//! * *FMA tier* — the packed NT microkernel, the SYMM tile product,
+//!   [`gram_into`] and the HALS row update contract each step to one
+//!   rounding. Per output element the accumulation stays t-sequential,
+//!   so each variant is pinned to its scalar oracle at **1e-12
+//!   relative** by the parity suite (shapes m,k ∈ {1,2,3,7,8,9,31,33,
+//!   65}); they are *not* bitwise-equal across tiers, which is why the
+//!   active ISA is recorded in checkpoints and trace stage lines.
+//!
+//! The `*_isa` entry points take an explicit [`KernelIsa`] so tests can
+//! pin every supported tier against the oracle in one process; the
+//! un-suffixed functions resolve [`crate::linalg::simd::active`] once
+//! per call and are what the solvers use.
+//!
+//! **f32 accumulation policy.** `SYMNMF_PRECISION=f32` (sketched
+//! pipelines only) stages operands as f32 and runs f32 multiplies, but
+//! every accumulation — including the Gram/residual/stop-rule math —
+//! stays f64: each step is `acc_64 += f64(x_32 * y_32)`, an exactly
+//! widened f32 product. See [`crate::linalg::simd::widening_axpy_f32`].
+//!
 //! [`PanelBuf`]: crate::linalg::workspace::PanelBuf
+//! [`KernelIsa`]: crate::linalg::simd::KernelIsa
 
+use crate::linalg::simd::{self, KernelIsa};
 use crate::linalg::workspace::PanelBuf;
 use crate::linalg::DenseMat;
 use crate::util::threadpool::{current_threads, num_threads, parallel_for_chunks, SendPtr};
 use std::cell::RefCell;
 
 /// Panel width of the packed NT microkernel (output columns per tile).
-const NR: usize = 8;
+pub(crate) const NR: usize = 8;
 
 thread_local! {
     /// Reusable packing target for the tile-major B panels of
@@ -118,8 +151,9 @@ pub fn matmul_into(a: &DenseMat, b: &DenseMat, c: &mut DenseMat) {
             let panels: &[f64] = dst;
             let adata = a.data();
             let cptr = SendPtr(c.data_mut().as_mut_ptr());
+            let isa = simd::active();
             parallel_for_chunks(m, 64, move |lo, hi| {
-                packed_nt_rows(adata, ka, panels, n, lo, hi, cptr);
+                simd::packed_nt_rows_isa(isa, adata, ka, panels, n, lo, hi, cptr);
             });
         });
         return;
@@ -243,7 +277,12 @@ fn pack_b_panels(b: &[f64], p: usize, n: usize, dst: &mut [f64]) {
 /// load — the layout the autovectorizer turns into full-width FMA
 /// vectors. Each output element accumulates sequentially over `t`, so
 /// the per-element FP order matches the unpacked 2×4 tile.
-fn packed_nt_rows(
+///
+/// This is the scalar oracle of the dispatched
+/// [`crate::linalg::simd::packed_nt_rows_isa`] — its body must stay
+/// untouched so the SIMD tiers keep a fixed reference.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn packed_nt_rows(
     a: &[f64],
     p: usize,
     panels: &[f64],
@@ -464,6 +503,9 @@ pub fn matmul_tn_into(a: &DenseMat, b: &DenseMat, c: &mut DenseMat) {
     assert_eq!(c.shape(), (p, n));
     c.data_mut().fill(0.0);
     let cdata = c.data_mut();
+    // bitwise-tier dispatch: simd::axpy reproduces the scalar axpy
+    // exactly, so the TN product stays bitwise-stable across ISAs.
+    let isa = simd::active();
     for i in 0..m {
         let arow = a.row(i);
         let brow = b.row(i);
@@ -471,7 +513,7 @@ pub fn matmul_tn_into(a: &DenseMat, b: &DenseMat, c: &mut DenseMat) {
             if ait == 0.0 {
                 continue;
             }
-            axpy(ait, brow, &mut cdata[t * n..(t + 1) * n]);
+            simd::axpy(isa, ait, brow, &mut cdata[t * n..(t + 1) * n]);
         }
     }
 }
@@ -503,6 +545,19 @@ pub fn matmul_nt_into(a: &DenseMat, b: &DenseMat, c: &mut DenseMat) {
 /// reference on shapes the dispatcher would route elsewhere, and so
 /// benches can compare the two directly.
 pub fn matmul_nt_into_packed(a: &DenseMat, b: &DenseMat, c: &mut DenseMat) {
+    matmul_nt_into_packed_isa(simd::active(), a, b, c);
+}
+
+/// [`matmul_nt_into_packed`] with an explicit kernel tier — the parity
+/// suite pins every supported tier against the scalar oracle through
+/// this entry point, and bitwise tests pin the Scalar tier against the
+/// unpacked reference.
+pub fn matmul_nt_into_packed_isa(
+    isa: KernelIsa,
+    a: &DenseMat,
+    b: &DenseMat,
+    c: &mut DenseMat,
+) {
     let (m, p) = a.shape();
     let (n, pb) = b.shape();
     assert_eq!(p, pb, "matmul_nt: {:?} x {:?}ᵀ", a.shape(), b.shape());
@@ -515,7 +570,7 @@ pub fn matmul_nt_into_packed(a: &DenseMat, b: &DenseMat, c: &mut DenseMat) {
         let adata = a.data();
         let cptr = SendPtr(c.data_mut().as_mut_ptr());
         parallel_for_chunks(m, 64, move |lo, hi| {
-            packed_nt_rows(adata, p, panels, n, lo, hi, cptr);
+            simd::packed_nt_rows_isa(isa, adata, p, panels, n, lo, hi, cptr);
         });
     });
 }
@@ -550,6 +605,14 @@ pub fn gram(f: &DenseMat) -> DenseMat {
 ///
 /// [`IterWorkspace`]: crate::linalg::workspace::IterWorkspace
 pub fn gram_into(f: &DenseMat, g: &mut DenseMat) {
+    gram_into_isa(simd::active(), f, g);
+}
+
+/// [`gram_into`] with an explicit kernel tier (FMA tier: the upper-
+/// triangle row update runs on [`simd::axpy_fma`]; the Scalar tier is
+/// bitwise-identical to the historical scalar loop, which was already
+/// an axpy over the `u ≥ t` row segment).
+pub fn gram_into_isa(isa: KernelIsa, f: &DenseMat, g: &mut DenseMat) {
     let (m, k) = f.shape();
     assert_eq!(g.shape(), (k, k), "gram_into: output must be {k}x{k}");
     {
@@ -563,9 +626,7 @@ pub fn gram_into(f: &DenseMat, g: &mut DenseMat) {
                     continue;
                 }
                 let grow = &mut gd[t * k..(t + 1) * k];
-                for u in t..k {
-                    grow[u] += v * row[u];
-                }
+                simd::axpy_fma(isa, v, &row[t..], &mut grow[t..]);
             }
         }
     }
@@ -741,6 +802,19 @@ pub fn symm_tall_into(x: &DenseMat, f: &DenseMat, out: &mut DenseMat) {
 /// pair-pool harness ([`pair_pool_accumulate`]) — deterministic for a
 /// given process configuration, independent of thread budgets.
 pub fn symm_tall_into_blocked(x: &DenseMat, f: &DenseMat, out: &mut DenseMat, block: usize) {
+    symm_tall_into_blocked_isa(simd::active(), x, f, out, block);
+}
+
+/// [`symm_tall_into_blocked`] with an explicit kernel tier (FMA tier:
+/// the per-row tile update runs on [`simd::axpy_fma`]; the Scalar tier
+/// reproduces the historical scalar kernel bitwise).
+pub fn symm_tall_into_blocked_isa(
+    isa: KernelIsa,
+    x: &DenseMat,
+    f: &DenseMat,
+    out: &mut DenseMat,
+    block: usize,
+) {
     let (m, mc) = x.shape();
     assert_eq!(m, mc, "symm_tall_into: X must be square, got {:?}", x.shape());
     let (mf, k) = f.shape();
@@ -757,7 +831,7 @@ pub fn symm_tall_into_blocked(x: &DenseMat, f: &DenseMat, out: &mut DenseMat, bl
     let fd = f.data();
     pair_pool_accumulate(m, k, npairs, out, |p, acc| {
         let (ib, jb) = pair_to_blocks(p, nb);
-        symm_block_pair(xd, fd, m, k, block, ib, jb, acc);
+        symm_block_pair(isa, xd, fd, m, k, block, ib, jb, acc);
     });
 }
 
@@ -768,6 +842,7 @@ pub fn symm_tall_into_blocked(x: &DenseMat, f: &DenseMat, out: &mut DenseMat, bl
 /// acc[I] += X[I,J]·F[J] and acc[J] += X[I,J]ᵀ·F[I].
 #[allow(clippy::too_many_arguments)]
 fn symm_block_pair(
+    isa: KernelIsa,
     xd: &[f64],
     fd: &[f64],
     m: usize,
@@ -788,7 +863,7 @@ fn symm_block_pair(
             for (jj, &v) in xrow.iter().enumerate() {
                 if v != 0.0 {
                     let j = j0 + jj;
-                    axpy(v, &fd[j * k..(j + 1) * k], acci);
+                    simd::axpy_fma(isa, v, &fd[j * k..(j + 1) * k], acci);
                 }
             }
         }
@@ -804,8 +879,8 @@ fn symm_block_pair(
         for (jj, &v) in xrow.iter().enumerate() {
             if v != 0.0 {
                 let j = j0 + jj;
-                axpy(v, &fd[j * k..(j + 1) * k], acci);
-                axpy(v, fi, &mut acc_j[(j - j0) * k..(j - j0 + 1) * k]);
+                simd::axpy_fma(isa, v, &fd[j * k..(j + 1) * k], acci);
+                simd::axpy_fma(isa, v, fi, &mut acc_j[(j - j0) * k..(j - j0 + 1) * k]);
             }
         }
     }
@@ -1007,12 +1082,113 @@ mod tests {
         let a = DenseMat::gaussian(6, 300, &mut rng);
         let b = DenseMat::gaussian(1, 300, &mut rng);
         let mut c = DenseMat::zeros(6, 1);
-        matmul_nt_into_packed(&a, &b, &mut c);
+        // pinned to the Scalar tier: the bitwise claim below compares
+        // against the unpacked scalar oracle, and FMA tiers are only
+        // 1e-12-pinned, not bitwise.
+        matmul_nt_into_packed_isa(simd::KernelIsa::Scalar, &a, &b, &mut c);
         let mut want = DenseMat::zeros(6, 1);
         matmul_nt_into_unpacked(&a, &b, &mut want);
         for (x, y) in c.data().iter().zip(want.data()) {
             // single-column output: both kernels accumulate t-sequentially
             assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    /// The issue's scalar-vs-SIMD parity grid for the packed NT
+    /// microkernel: every supported tier vs the Scalar oracle at
+    /// m,n ∈ {1,2,3,7,8,9,31,33,65} (all mask widths and tile tails),
+    /// 1e-12 relative.
+    #[test]
+    fn packed_nt_simd_tiers_match_scalar_oracle() {
+        let mut rng = Pcg64::seed_from_u64(71);
+        let p = 37;
+        for m in [1usize, 2, 3, 7, 8, 9, 31, 33, 65] {
+            for n in [1usize, 2, 3, 7, 8, 9, 31, 33, 65] {
+                let a = DenseMat::gaussian(m, p, &mut rng);
+                let b = DenseMat::gaussian(n, p, &mut rng);
+                let mut want = DenseMat::zeros(m, n);
+                matmul_nt_into_packed_isa(simd::KernelIsa::Scalar, &a, &b, &mut want);
+                for isa in simd::supported() {
+                    let mut got = DenseMat::zeros(m, n);
+                    got.fill(7.0); // stale data must be overwritten
+                    matmul_nt_into_packed_isa(isa, &a, &b, &mut got);
+                    let err = got.diff_fro(&want);
+                    assert!(
+                        err < 1e-12 * (1.0 + want.fro_norm()),
+                        "isa={isa:?} m={m} n={n}: err={err}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Parity grid for the dispatched Gram kernel: every supported tier
+    /// vs the Scalar oracle, 1e-12 relative (the Scalar tier itself is
+    /// bitwise-identical to the historical loop).
+    #[test]
+    fn gram_simd_tiers_match_scalar_oracle() {
+        let mut rng = Pcg64::seed_from_u64(72);
+        for m in [1usize, 2, 3, 7, 8, 9, 31, 33, 65] {
+            for k in [1usize, 2, 3, 7, 8, 9, 31, 33, 65] {
+                let f = DenseMat::gaussian(m, k, &mut rng);
+                let mut want = DenseMat::zeros(k, k);
+                gram_into_isa(simd::KernelIsa::Scalar, &f, &mut want);
+                for isa in simd::supported() {
+                    let mut got = DenseMat::zeros(k, k);
+                    gram_into_isa(isa, &f, &mut got);
+                    let err = got.diff_fro(&want);
+                    assert!(
+                        err < 1e-12 * (1.0 + want.fro_norm()),
+                        "isa={isa:?} m={m} k={k}: err={err}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Parity grid for the dispatched blocked SYMM: every supported
+    /// tier vs the Scalar oracle across mask-edge shapes, 1e-12.
+    #[test]
+    fn symm_simd_tiers_match_scalar_oracle() {
+        let mut rng = Pcg64::seed_from_u64(73);
+        for m in [1usize, 3, 9, 31, 33, 65] {
+            let x = random_symmetric(m, &mut rng);
+            for k in [1usize, 2, 7, 8, 9, 33] {
+                let f = DenseMat::gaussian(m, k, &mut rng);
+                let mut want = DenseMat::zeros(m, k);
+                symm_tall_into_blocked_isa(simd::KernelIsa::Scalar, &x, &f, &mut want, 8);
+                for isa in simd::supported() {
+                    let mut got = DenseMat::zeros(m, k);
+                    got.fill(-2.0);
+                    symm_tall_into_blocked_isa(isa, &x, &f, &mut got, 8);
+                    let err = got.diff_fro(&want);
+                    assert!(
+                        err < 1e-12 * (1.0 + want.fro_norm()),
+                        "isa={isa:?} m={m} k={k}: err={err}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// A fixed dispatch choice must be exactly reproducible: repeated
+    /// calls under each forced tier give bitwise-identical output (the
+    /// recorded-ISA resume contract relies on this).
+    #[test]
+    fn forced_tiers_are_bitwise_reproducible_run_to_run() {
+        let mut rng = Pcg64::seed_from_u64(74);
+        let a = DenseMat::gaussian(33, 37, &mut rng);
+        let b = DenseMat::gaussian(31, 37, &mut rng);
+        for isa in simd::supported() {
+            let mut first = DenseMat::zeros(33, 31);
+            matmul_nt_into_packed_isa(isa, &a, &b, &mut first);
+            for _ in 0..2 {
+                let mut again = DenseMat::zeros(33, 31);
+                matmul_nt_into_packed_isa(isa, &a, &b, &mut again);
+                for (x, y) in first.data().iter().zip(again.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "isa={isa:?}");
+                }
+            }
         }
     }
 

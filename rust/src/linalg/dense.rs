@@ -293,13 +293,17 @@ impl DenseMat {
         }
     }
 
-    /// f32 copy (PJRT boundary).
+    /// f32 copy (PJRT boundary; also the staging downcast of the
+    /// reduced-precision compute path of the sketched pipelines — see
+    /// [`crate::linalg::simd`]'s f32 tier, whose GEMMs consume these
+    /// buffers with f64 accumulation).
     pub fn to_f32(&self) -> Vec<f32> {
         self.data.iter().map(|&x| x as f32).collect()
     }
 
-    /// f32 conversion into a reusable buffer (PJRT boundary, hot-path
-    /// form: the staging allocation happens once per solve, not per call).
+    /// f32 conversion into a reusable buffer (PJRT boundary and the
+    /// `SYMNMF_PRECISION=f32` staging path, hot-path form: the staging
+    /// allocation happens once per solve, not per call).
     pub fn write_f32_into(&self, out: &mut Vec<f32>) {
         out.clear();
         out.reserve(self.data.len());

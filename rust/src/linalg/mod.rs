@@ -8,7 +8,10 @@
 //! zero-allocation per-iteration buffer workspace ([`workspace`]) behind
 //! the `apply_into` kernel dispatch protocol, and the packed-triangular
 //! symmetric storage ([`packed`]) that halves the resident footprint of
-//! the dense data matrix.
+//! the dense data matrix. The hot kernels are runtime-dispatched over
+//! explicit SIMD tiers ([`simd`]: AVX-512F/AVX2+FMA/NEON with the
+//! scalar bodies kept as oracles, selected once per process from
+//! `SYMNMF_KERNEL` or feature detection).
 
 pub mod blas;
 pub mod chol;
@@ -16,8 +19,10 @@ pub mod dense;
 pub mod eig;
 pub mod packed;
 pub mod qr;
+pub mod simd;
 pub mod workspace;
 
 pub use dense::DenseMat;
 pub use packed::SymPacked;
-pub use workspace::{IterWorkspace, PanelBuf, UpdateScratch};
+pub use simd::{KernelIsa, Precision};
+pub use workspace::{F32Buf, IterWorkspace, PanelBuf, UpdateScratch};

@@ -62,6 +62,7 @@
 //! [`pair_pool_accumulate`]: crate::linalg::blas
 
 use crate::linalg::blas::{axpy, pair_pool_accumulate, pair_to_blocks, SYMM_BLOCK};
+use crate::linalg::simd::{self, KernelIsa};
 use crate::linalg::DenseMat;
 use crate::randnla::SymOp;
 use crate::sparse::CsrMat;
@@ -336,6 +337,14 @@ impl SymPacked {
     ///
     /// [`symm_tall_into_blocked`]: crate::linalg::blas::symm_tall_into_blocked
     pub fn apply_blocked_into(&self, f: &DenseMat, out: &mut DenseMat) {
+        self.apply_blocked_into_isa(simd::active(), f, out);
+    }
+
+    /// [`apply_blocked_into`](Self::apply_blocked_into) with an explicit
+    /// kernel tier (FMA tier: per-tile row updates run on
+    /// [`simd::axpy_fma`]; the Scalar tier reproduces the historical
+    /// kernel bitwise) — the parity suite's entry point.
+    pub fn apply_blocked_into_isa(&self, isa: KernelIsa, f: &DenseMat, out: &mut DenseMat) {
         let m = self.m;
         let (mf, k) = f.shape();
         assert_eq!(m, mf, "SymPacked::apply: X is {m}x{m} but F has {mf} rows");
@@ -349,13 +358,21 @@ impl SymPacked {
         let fd = f.data();
         pair_pool_accumulate(m, k, npairs, out, |p, acc| {
             let (ib, jb) = pair_to_blocks(p, nb);
-            self.tile_pair_apply(fd, k, ib, jb, acc);
+            self.tile_pair_apply(isa, fd, k, ib, jb, acc);
         });
     }
 
     /// Apply one stored tile (ib, jb) to F, accumulating into the m×k
     /// accumulator — the packed twin of the dense `symm_block_pair`.
-    fn tile_pair_apply(&self, fd: &[f64], k: usize, ib: usize, jb: usize, acc: &mut [f64]) {
+    fn tile_pair_apply(
+        &self,
+        isa: KernelIsa,
+        fd: &[f64],
+        k: usize,
+        ib: usize,
+        jb: usize,
+        acc: &mut [f64],
+    ) {
         let block = self.block;
         let m = self.m;
         let i0 = ib * block;
@@ -371,7 +388,7 @@ impl SymPacked {
                 for (jj, &v) in xrow.iter().enumerate() {
                     if v != 0.0 {
                         let j = j0 + jj;
-                        axpy(v, &fd[j * k..(j + 1) * k], acci);
+                        simd::axpy_fma(isa, v, &fd[j * k..(j + 1) * k], acci);
                     }
                 }
             }
@@ -388,8 +405,8 @@ impl SymPacked {
             for (jj, &v) in xrow.iter().enumerate() {
                 if v != 0.0 {
                     let j = j0 + jj;
-                    axpy(v, &fd[j * k..(j + 1) * k], acci);
-                    axpy(v, fi, &mut acc_j[(j - j0) * k..(j - j0 + 1) * k]);
+                    simd::axpy_fma(isa, v, &fd[j * k..(j + 1) * k], acci);
+                    simd::axpy_fma(isa, v, fi, &mut acc_j[(j - j0) * k..(j - j0 + 1) * k]);
                 }
             }
         }
@@ -540,6 +557,33 @@ mod tests {
                     assert!(
                         err < 1e-12 * (1.0 + want.fro_norm()),
                         "m={m} k={k} block={block}: err={err}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The issue's scalar-vs-SIMD parity grid for the packed apply:
+    /// every supported tier vs the forced-Scalar oracle at 1e-12 across
+    /// mask-edge shapes.
+    #[test]
+    fn apply_simd_tiers_match_scalar_oracle() {
+        let mut rng = Pcg64::seed_from_u64(41);
+        for m in [1usize, 2, 3, 7, 8, 9, 31, 33, 65] {
+            let x = random_symmetric(m, &mut rng);
+            for k in [1usize, 3, 8, 9, 33] {
+                let f = DenseMat::gaussian(m, k, &mut rng);
+                let sp = SymPacked::from_dense_with_block(&x, 8);
+                let mut want = DenseMat::zeros(m, k);
+                sp.apply_blocked_into_isa(KernelIsa::Scalar, &f, &mut want);
+                for isa in simd::supported() {
+                    let mut got = DenseMat::zeros(m, k);
+                    got.fill(5.0); // stale data must be overwritten
+                    sp.apply_blocked_into_isa(isa, &f, &mut got);
+                    let err = got.diff_fro(&want);
+                    assert!(
+                        err < 1e-12 * (1.0 + want.fro_norm()),
+                        "isa={isa:?} m={m} k={k}: err={err}"
                     );
                 }
             }

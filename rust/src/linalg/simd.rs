@@ -1,0 +1,1234 @@
+//! Runtime-dispatched SIMD kernel tiers over the scalar oracles in
+//! [`crate::linalg::blas`].
+//!
+//! **Dispatch model.** The active instruction set is selected exactly
+//! once per process ([`active`]): detection prefers AVX-512F, then
+//! AVX2+FMA on x86_64, NEON on aarch64, and falls back to scalar
+//! everywhere else. `SYMNMF_KERNEL=scalar|avx2|avx512|neon|auto`
+//! overrides detection; forcing an ISA the host cannot execute (or a
+//! name the dispatcher does not know) panics rather than silently
+//! degrading, mirroring the fail-loud policy of the engine's
+//! `RunControl` env parsing. Because the choice is process-wide and
+//! immutable, a fixed dispatch is bitwise-reproducible run-to-run — the
+//! property the checkpoint layer records (`Checkpoint.isa`) so a resume
+//! on different hardware can force the original kernel instead of
+//! silently breaking the bitwise-resume guarantee.
+//!
+//! **Two numeric tiers.** Every dispatched routine belongs to one of:
+//!
+//! * **bitwise tier** ([`dot`], [`axpy`], [`widening_axpy_f32`]): the
+//!   SIMD body reproduces the scalar oracle's FP operation order
+//!   exactly — multiplies and adds stay separate (no FMA contraction),
+//!   vector lanes mirror the scalar code's 4-way unrolled accumulators
+//!   (`acc0..acc3`), and the horizontal reduction applies the same
+//!   left-associated `((l0+l1)+l2)+l3` sum the scalar path uses. These
+//!   variants are pinned **bitwise** against the oracle, so routines
+//!   whose cross-path tests demand exact equality (Cholesky/QR/eig
+//!   pivoting, the HALS reference pins, trace reproducibility) can run
+//!   vectorized without perturbing a single bit.
+//! * **FMA tier** ([`dot_fma`], [`axpy_fma`], [`packed_nt_rows_isa`]):
+//!   fused multiply-add contracts each `acc += x*b` step to one rounding
+//!   instead of two. Per output element the accumulation stays
+//!   t-sequential (lane `jj` of the NT tile only ever accumulates column
+//!   `jj`), so the drift per step is at most one ulp of the running sum
+//!   — well inside the 1e-12 relative pin the parity suite enforces at
+//!   every masked-edge shape. FMA-tier kernels back the throughput
+//!   paths: the packed NT microkernel (widened 2×8 → 4×8 on AVX2,
+//!   4×8-on-one-register on AVX-512F), the blocked SYMM tile product,
+//!   `gram_into`, and the HALS row update.
+//!
+//! **f32 compute tier.** The sketched pipelines (Compressed, LAI) can
+//! opt into `SYMNMF_PRECISION=f32` ([`Precision`]): sketch operands are
+//! staged as f32 and the inner GEMMs run f32 multiplies — halving memory
+//! traffic and doubling SIMD lanes — while every accumulation and all
+//! residual/stop-rule evaluation stays f64. [`widening_axpy_f32`]
+//! implements the policy kernel: `y[j] += f64(alpha_32 * x_32[j])`, an
+//! f32 product widened exactly to f64 before the f64 add. The widening
+//! is exact and element-independent, so the SIMD variant is bitwise
+//! equal to the scalar one — precision loss comes only from the f32
+//! product itself, which the driver-level residual-gap test bounds.
+
+use crate::linalg::blas;
+use crate::linalg::DenseMat;
+use crate::util::threadpool::{parallel_for_chunks, SendPtr};
+use std::sync::OnceLock;
+
+/// An instruction-set tier the kernel dispatcher can select.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelIsa {
+    /// Portable scalar Rust — the correctness oracle, always supported.
+    Scalar,
+    /// x86_64 AVX2 + FMA (256-bit vectors, fused multiply-add).
+    Avx2,
+    /// x86_64 AVX-512F (512-bit vectors, masked stores).
+    Avx512,
+    /// aarch64 Advanced SIMD (128-bit vectors).
+    Neon,
+}
+
+impl KernelIsa {
+    /// Stable lowercase name — the `SYMNMF_KERNEL` vocabulary, and the
+    /// string recorded in checkpoints, traces and bench headers.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelIsa::Scalar => "scalar",
+            KernelIsa::Avx2 => "avx2",
+            KernelIsa::Avx512 => "avx512",
+            KernelIsa::Neon => "neon",
+        }
+    }
+
+    /// Inverse of [`as_str`](Self::as_str) (case-insensitive). `None`
+    /// for names outside the dispatch vocabulary.
+    pub fn parse(s: &str) -> Option<KernelIsa> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelIsa::Scalar),
+            "avx2" => Some(KernelIsa::Avx2),
+            "avx512" => Some(KernelIsa::Avx512),
+            "neon" => Some(KernelIsa::Neon),
+            _ => None,
+        }
+    }
+
+    /// Can the current host execute this tier's instructions?
+    pub fn is_supported(self) -> bool {
+        match self {
+            KernelIsa::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            KernelIsa::Avx2 => {
+                is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+            }
+            #[cfg(target_arch = "x86_64")]
+            KernelIsa::Avx512 => is_x86_feature_detected!("avx512f"),
+            #[cfg(target_arch = "aarch64")]
+            KernelIsa::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+}
+
+/// The best tier the host supports: AVX-512F > AVX2+FMA > NEON > scalar.
+pub fn detect() -> KernelIsa {
+    for isa in [KernelIsa::Avx512, KernelIsa::Avx2, KernelIsa::Neon] {
+        if isa.is_supported() {
+            return isa;
+        }
+    }
+    KernelIsa::Scalar
+}
+
+/// Every tier the host supports, best first, scalar always last — the
+/// iteration domain of the scalar-vs-SIMD parity suite.
+pub fn supported() -> Vec<KernelIsa> {
+    let mut out = Vec::new();
+    for isa in [KernelIsa::Avx512, KernelIsa::Avx2, KernelIsa::Neon] {
+        if isa.is_supported() {
+            out.push(isa);
+        }
+    }
+    out.push(KernelIsa::Scalar);
+    out
+}
+
+/// Resolve an optional `SYMNMF_KERNEL` override to a usable tier.
+/// Unset, empty, or `auto` → [`detect`]; a known-but-unsupported name or
+/// an unknown name panics (fail-loud: a forced kernel that silently fell
+/// back would break the bitwise-resume contract it exists to protect).
+pub fn resolve(forced: Option<&str>) -> KernelIsa {
+    let raw = forced.map(str::trim).unwrap_or("");
+    if raw.is_empty() || raw.eq_ignore_ascii_case("auto") {
+        return detect();
+    }
+    match KernelIsa::parse(raw) {
+        Some(isa) if isa.is_supported() => isa,
+        Some(isa) => {
+            let avail: Vec<&str> = supported().iter().map(|i| i.as_str()).collect();
+            panic!(
+                "SYMNMF_KERNEL={}: {} is not supported on this host \
+                 (supported: {})",
+                raw,
+                isa.as_str(),
+                avail.join(", ")
+            );
+        }
+        None => panic!(
+            "SYMNMF_KERNEL={raw}: expected scalar|avx2|avx512|neon|auto"
+        ),
+    }
+}
+
+static ACTIVE: OnceLock<KernelIsa> = OnceLock::new();
+
+/// The process-wide dispatch choice, selected once on first use from
+/// `SYMNMF_KERNEL` (or feature detection when unset). Immutable for the
+/// process lifetime, so a fixed environment gives bitwise-reproducible
+/// kernels run-to-run.
+pub fn active() -> KernelIsa {
+    *ACTIVE.get_or_init(|| {
+        let forced = std::env::var("SYMNMF_KERNEL").ok();
+        resolve(forced.as_deref())
+    })
+}
+
+/// Best-effort host name for bench/baseline provenance (`HOSTNAME` env,
+/// then the kernel's hostname file, then `"unknown"`). Never fails.
+pub fn hostname() -> String {
+    if let Ok(h) = std::env::var("HOSTNAME") {
+        let t = h.trim();
+        if !t.is_empty() {
+            return t.to_string();
+        }
+    }
+    if let Ok(h) = std::fs::read_to_string("/proc/sys/kernel/hostname") {
+        let t = h.trim();
+        if !t.is_empty() {
+            return t.to_string();
+        }
+    }
+    "unknown".to_string()
+}
+
+/// Compute precision of the sketched pipelines' inner GEMMs (see the
+/// module header's f32 tier). Accumulation and residual evaluation are
+/// f64 under both settings; `F32` changes only the staged operand
+/// storage and the per-element product.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    F64,
+    F32,
+}
+
+impl Precision {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f64" => Some(Precision::F64),
+            "f32" => Some(Precision::F32),
+            _ => None,
+        }
+    }
+
+    /// Read `SYMNMF_PRECISION` (unset/empty → `F64`); panics on values
+    /// outside `f64|f32`, mirroring the fail-loud env policy.
+    pub fn from_env() -> Precision {
+        match std::env::var("SYMNMF_PRECISION") {
+            Err(_) => Precision::F64,
+            Ok(raw) => {
+                let t = raw.trim();
+                if t.is_empty() {
+                    return Precision::F64;
+                }
+                Precision::parse(t).unwrap_or_else(|| {
+                    panic!("SYMNMF_PRECISION={t}: expected f64|f32")
+                })
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bitwise tier: SIMD bodies that reproduce the scalar FP order exactly.
+// ---------------------------------------------------------------------
+
+/// Dispatched dot product — **bitwise-equal** to [`blas::dot`] on every
+/// tier (see module header). `isa` must come from [`supported`] /
+/// [`active`] / [`resolve`].
+#[inline]
+pub fn dot(isa: KernelIsa, x: &[f64], y: &[f64]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if matches!(isa, KernelIsa::Avx2 | KernelIsa::Avx512) {
+        // AVX-512 routes to the 256-bit body on purpose: the 4-lane
+        // grouping is what makes the reduction bitwise-equal to scalar.
+        // SAFETY: `isa` is supported on this host by the caller contract,
+        // and avx512f implies avx2.
+        return unsafe { x86::dot_avx2(x, y) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if isa == KernelIsa::Neon {
+        // SAFETY: as above.
+        return unsafe { neon::dot_neon(x, y) };
+    }
+    let _ = isa;
+    blas::dot(x, y)
+}
+
+/// Dispatched axpy — **bitwise-equal** to [`blas::axpy`] on every tier
+/// (element-independent mul+add; no reduction to reorder).
+#[inline]
+pub fn axpy(isa: KernelIsa, alpha: f64, x: &[f64], y: &mut [f64]) {
+    #[cfg(target_arch = "x86_64")]
+    if matches!(isa, KernelIsa::Avx2 | KernelIsa::Avx512) {
+        // SAFETY: caller contract as in [`dot`].
+        return unsafe { x86::axpy_avx2(alpha, x, y) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if isa == KernelIsa::Neon {
+        // SAFETY: as above.
+        return unsafe { neon::axpy_neon(alpha, x, y) };
+    }
+    let _ = isa;
+    blas::axpy(alpha, x, y)
+}
+
+/// The f32-tier policy kernel: `y[j] += f64(alpha * x[j])` — f32
+/// product, exact widening, f64 accumulate. Element-independent, so the
+/// SIMD variants are **bitwise-equal** to the scalar body.
+#[inline]
+pub fn widening_axpy_f32(isa: KernelIsa, alpha: f32, x: &[f32], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if matches!(isa, KernelIsa::Avx2 | KernelIsa::Avx512) {
+        // SAFETY: caller contract as in [`dot`].
+        return unsafe { x86::widening_axpy_f32_avx2(alpha, x, y) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if isa == KernelIsa::Neon {
+        // SAFETY: as above.
+        return unsafe { neon::widening_axpy_f32_neon(alpha, x, y) };
+    }
+    let _ = isa;
+    for (xi, yi) in x.iter().zip(y.iter_mut()) {
+        *yi += f64::from(alpha * *xi);
+    }
+}
+
+// ---------------------------------------------------------------------
+// FMA tier: contracted multiply-adds, pinned to scalar at 1e-12.
+// ---------------------------------------------------------------------
+
+/// Dispatched dot product on the FMA tier (one rounding per step;
+/// 1e-12-pinned against [`blas::dot`], not bitwise). Backs the HALS row
+/// update.
+#[inline]
+pub fn dot_fma(isa: KernelIsa, x: &[f64], y: &[f64]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if matches!(isa, KernelIsa::Avx2 | KernelIsa::Avx512) {
+        // SAFETY: caller contract as in [`dot`].
+        return unsafe { x86::dot_fma_avx2(x, y) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if isa == KernelIsa::Neon {
+        // SAFETY: as above.
+        return unsafe { neon::dot_fma_neon(x, y) };
+    }
+    let _ = isa;
+    blas::dot(x, y)
+}
+
+/// Dispatched axpy on the FMA tier (1e-12-pinned against
+/// [`blas::axpy`]). Backs the SYMM tile product and `gram_into`.
+#[inline]
+pub fn axpy_fma(isa: KernelIsa, alpha: f64, x: &[f64], y: &mut [f64]) {
+    #[cfg(target_arch = "x86_64")]
+    if matches!(isa, KernelIsa::Avx2 | KernelIsa::Avx512) {
+        // SAFETY: caller contract as in [`dot`].
+        return unsafe { x86::axpy_fma_avx2(alpha, x, y) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if isa == KernelIsa::Neon {
+        // SAFETY: as above.
+        return unsafe { neon::axpy_fma_neon(alpha, x, y) };
+    }
+    let _ = isa;
+    blas::axpy(alpha, x, y)
+}
+
+/// Dispatched packed NT microkernel: writes C rows `[lo, hi)` of
+/// C = A·B̃ᵀ over the tile-major panels of `blas::pack_bt_panels`/
+/// `pack_b_panels`. The scalar tier is the untouched 2×8 oracle
+/// [`blas::packed_nt_rows`]; AVX2 widens to a 4×8 FMA tile, AVX-512F
+/// keeps 4×8 with one 512-bit register per row and a masked edge store,
+/// NEON runs 2×8 on 128-bit FMA lanes. Per output element the
+/// accumulation is t-sequential on every tier, so each variant is
+/// 1e-12-pinned against the oracle at all masked-edge shapes.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn packed_nt_rows_isa(
+    isa: KernelIsa,
+    a: &[f64],
+    p: usize,
+    panels: &[f64],
+    n: usize,
+    lo: usize,
+    hi: usize,
+    cptr: SendPtr,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if isa == KernelIsa::Avx512 {
+            // SAFETY: caller contract as in [`dot`]; row ranges [lo, hi)
+            // are disjoint across workers (same contract as the oracle).
+            return unsafe { x86::packed_nt_rows_avx512(a, p, panels, n, lo, hi, cptr) };
+        }
+        if isa == KernelIsa::Avx2 {
+            // SAFETY: as above.
+            return unsafe { x86::packed_nt_rows_avx2(a, p, panels, n, lo, hi, cptr) };
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    if isa == KernelIsa::Neon {
+        // SAFETY: as above.
+        return unsafe { neon::packed_nt_rows_neon(a, p, panels, n, lo, hi, cptr) };
+    }
+    let _ = isa;
+    blas::packed_nt_rows(a, p, panels, n, lo, hi, cptr);
+}
+
+// ---------------------------------------------------------------------
+// f32 compute tier: staged-operand GEMMs with f64 accumulation.
+// ---------------------------------------------------------------------
+
+/// C = A·B where both operands are staged f32 (A: m×p, B: p×n, both
+/// row-major) and C accumulates in f64 — the compressed pipeline's
+/// `B̂ᵀ·(QᵀH)` product under `SYMNMF_PRECISION=f32`. Row-parallel like
+/// [`blas::matmul_into`]; every per-element step is the
+/// [`widening_axpy_f32`] policy kernel, so results are identical across
+/// ISAs and deterministic at any thread budget (row-disjoint writes).
+pub fn matmul_f32_into(
+    isa: KernelIsa,
+    a: &[f32],
+    m: usize,
+    p: usize,
+    b: &[f32],
+    n: usize,
+    c: &mut DenseMat,
+) {
+    assert_eq!(a.len(), m * p, "matmul_f32: A must be {m}x{p}");
+    assert_eq!(b.len(), p * n, "matmul_f32: B must be {p}x{n}");
+    assert_eq!(c.shape(), (m, n), "matmul_f32: output must be {m}x{n}");
+    let cptr = SendPtr(c.data_mut().as_mut_ptr());
+    parallel_for_chunks(m, 64, move |lo, hi| {
+        for i in lo..hi {
+            let arow = &a[i * p..(i + 1) * p];
+            // SAFETY: rows [lo, hi) are disjoint across workers.
+            let crow = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i * n), n) };
+            crow.fill(0.0);
+            for (kk, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                widening_axpy_f32(isa, aik, &b[kk * n..(kk + 1) * n], crow);
+            }
+        }
+    });
+}
+
+/// C = Aᵀ·B with staged f32 operands (A: m×p, B: m×n row-major → C: p×n
+/// f64) — the compressed pipeline's `QᵀH` sketch product under
+/// `SYMNMF_PRECISION=f32`. Serial row-streaming like
+/// [`blas::matmul_tn_into`]; per-element steps go through
+/// [`widening_axpy_f32`].
+pub fn matmul_tn_f32_into(
+    isa: KernelIsa,
+    a: &[f32],
+    m: usize,
+    p: usize,
+    b: &[f32],
+    n: usize,
+    c: &mut DenseMat,
+) {
+    assert_eq!(a.len(), m * p, "matmul_tn_f32: A must be {m}x{p}");
+    assert_eq!(b.len(), m * n, "matmul_tn_f32: B must be {m}x{n}");
+    assert_eq!(c.shape(), (p, n), "matmul_tn_f32: output must be {p}x{n}");
+    let cdata = c.data_mut();
+    cdata.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * p..(i + 1) * p];
+        let brow = &b[i * n..(i + 1) * n];
+        for (t, &ait) in arow.iter().enumerate() {
+            if ait == 0.0 {
+                continue;
+            }
+            widening_axpy_f32(isa, ait, brow, &mut cdata[t * n..(t + 1) * n]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// x86_64 bodies.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use crate::linalg::blas::NR;
+    use crate::util::threadpool::SendPtr;
+    use std::arch::x86_64::*;
+
+    /// Bitwise-equal AVX2 dot: one 256-bit accumulator whose four lanes
+    /// reproduce the scalar body's `acc0..acc3` exactly (separate mul
+    /// and add — FMA contraction would change the rounding), reduced in
+    /// the scalar order `((l0+l1)+l2)+l3`, identical sequential tail.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_avx2(x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let chunks = n / 4 * 4;
+        let xp = x.as_ptr();
+        let yp = y.as_ptr();
+        let mut acc = _mm256_setzero_pd();
+        let mut t = 0;
+        while t < chunks {
+            let xv = _mm256_loadu_pd(xp.add(t));
+            let yv = _mm256_loadu_pd(yp.add(t));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(xv, yv));
+            t += 4;
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        let mut s = ((lanes[0] + lanes[1]) + lanes[2]) + lanes[3];
+        for j in chunks..n {
+            s += x[j] * y[j];
+        }
+        s
+    }
+
+    /// Bitwise-equal AVX2 axpy (element-independent mul+add).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy_avx2(alpha: f64, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let chunks = n / 4 * 4;
+        let av = _mm256_set1_pd(alpha);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut t = 0;
+        while t < chunks {
+            let xv = _mm256_loadu_pd(xp.add(t));
+            let yv = _mm256_loadu_pd(yp.add(t));
+            _mm256_storeu_pd(yp.add(t), _mm256_add_pd(yv, _mm256_mul_pd(av, xv)));
+            t += 4;
+        }
+        for j in chunks..n {
+            y[j] += alpha * x[j];
+        }
+    }
+
+    /// FMA-tier dot (contracted steps; 1e-12-pinned, not bitwise).
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn dot_fma_avx2(x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let chunks = n / 4 * 4;
+        let xp = x.as_ptr();
+        let yp = y.as_ptr();
+        let mut acc = _mm256_setzero_pd();
+        let mut t = 0;
+        while t < chunks {
+            let xv = _mm256_loadu_pd(xp.add(t));
+            let yv = _mm256_loadu_pd(yp.add(t));
+            acc = _mm256_fmadd_pd(xv, yv, acc);
+            t += 4;
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        let mut s = ((lanes[0] + lanes[1]) + lanes[2]) + lanes[3];
+        for j in chunks..n {
+            s += x[j] * y[j];
+        }
+        s
+    }
+
+    /// FMA-tier axpy (contracted steps; 1e-12-pinned, not bitwise).
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn axpy_fma_avx2(alpha: f64, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let chunks = n / 4 * 4;
+        let av = _mm256_set1_pd(alpha);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut t = 0;
+        while t < chunks {
+            let xv = _mm256_loadu_pd(xp.add(t));
+            let yv = _mm256_loadu_pd(yp.add(t));
+            _mm256_storeu_pd(yp.add(t), _mm256_fmadd_pd(av, xv, yv));
+            t += 4;
+        }
+        for j in chunks..n {
+            y[j] += alpha * x[j];
+        }
+    }
+
+    /// Masked tile store: full 8-wide store on interior panels, staged
+    /// through a stack buffer on the edge panel (w < 8) — the SIMD
+    /// version of the oracle's `copy_from_slice(&acc[..w])`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn store_masked_256(dst: *mut f64, w: usize, lo: __m256d, hi: __m256d) {
+        if w == NR {
+            _mm256_storeu_pd(dst, lo);
+            _mm256_storeu_pd(dst.add(4), hi);
+        } else {
+            let mut buf = [0.0f64; NR];
+            _mm256_storeu_pd(buf.as_mut_ptr(), lo);
+            _mm256_storeu_pd(buf.as_mut_ptr().add(4), hi);
+            std::ptr::copy_nonoverlapping(buf.as_ptr(), dst, w);
+        }
+    }
+
+    /// AVX2+FMA packed NT microkernel, widened to a 4×8 tile: four A
+    /// rows against one panel, eight 256-bit accumulators; each
+    /// reduction step is two contiguous panel loads, four broadcasts and
+    /// eight FMAs. 2-row and 1-row tails mirror the oracle's structure.
+    #[target_feature(enable = "avx2,fma")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn packed_nt_rows_avx2(
+        a: &[f64],
+        p: usize,
+        panels: &[f64],
+        n: usize,
+        lo: usize,
+        hi: usize,
+        cptr: SendPtr,
+    ) {
+        let np = n.div_ceil(NR);
+        let mut i = lo;
+        while i + 4 <= hi {
+            let a0 = a[i * p..(i + 1) * p].as_ptr();
+            let a1 = a[(i + 1) * p..(i + 2) * p].as_ptr();
+            let a2 = a[(i + 2) * p..(i + 3) * p].as_ptr();
+            let a3 = a[(i + 3) * p..(i + 4) * p].as_ptr();
+            for jp in 0..np {
+                let j0 = jp * NR;
+                let w = (n - j0).min(NR);
+                let pb = panels[jp * NR * p..(jp + 1) * NR * p].as_ptr();
+                let mut c0l = _mm256_setzero_pd();
+                let mut c0h = _mm256_setzero_pd();
+                let mut c1l = _mm256_setzero_pd();
+                let mut c1h = _mm256_setzero_pd();
+                let mut c2l = _mm256_setzero_pd();
+                let mut c2h = _mm256_setzero_pd();
+                let mut c3l = _mm256_setzero_pd();
+                let mut c3h = _mm256_setzero_pd();
+                for t in 0..p {
+                    let bl = _mm256_loadu_pd(pb.add(t * NR));
+                    let bh = _mm256_loadu_pd(pb.add(t * NR + 4));
+                    let x0 = _mm256_set1_pd(*a0.add(t));
+                    c0l = _mm256_fmadd_pd(x0, bl, c0l);
+                    c0h = _mm256_fmadd_pd(x0, bh, c0h);
+                    let x1 = _mm256_set1_pd(*a1.add(t));
+                    c1l = _mm256_fmadd_pd(x1, bl, c1l);
+                    c1h = _mm256_fmadd_pd(x1, bh, c1h);
+                    let x2 = _mm256_set1_pd(*a2.add(t));
+                    c2l = _mm256_fmadd_pd(x2, bl, c2l);
+                    c2h = _mm256_fmadd_pd(x2, bh, c2h);
+                    let x3 = _mm256_set1_pd(*a3.add(t));
+                    c3l = _mm256_fmadd_pd(x3, bl, c3l);
+                    c3h = _mm256_fmadd_pd(x3, bh, c3h);
+                }
+                // SAFETY: rows [lo, hi) are disjoint across workers.
+                store_masked_256(cptr.0.add(i * n + j0), w, c0l, c0h);
+                store_masked_256(cptr.0.add((i + 1) * n + j0), w, c1l, c1h);
+                store_masked_256(cptr.0.add((i + 2) * n + j0), w, c2l, c2h);
+                store_masked_256(cptr.0.add((i + 3) * n + j0), w, c3l, c3h);
+            }
+            i += 4;
+        }
+        while i + 2 <= hi {
+            let a0 = a[i * p..(i + 1) * p].as_ptr();
+            let a1 = a[(i + 1) * p..(i + 2) * p].as_ptr();
+            for jp in 0..np {
+                let j0 = jp * NR;
+                let w = (n - j0).min(NR);
+                let pb = panels[jp * NR * p..(jp + 1) * NR * p].as_ptr();
+                let mut c0l = _mm256_setzero_pd();
+                let mut c0h = _mm256_setzero_pd();
+                let mut c1l = _mm256_setzero_pd();
+                let mut c1h = _mm256_setzero_pd();
+                for t in 0..p {
+                    let bl = _mm256_loadu_pd(pb.add(t * NR));
+                    let bh = _mm256_loadu_pd(pb.add(t * NR + 4));
+                    let x0 = _mm256_set1_pd(*a0.add(t));
+                    c0l = _mm256_fmadd_pd(x0, bl, c0l);
+                    c0h = _mm256_fmadd_pd(x0, bh, c0h);
+                    let x1 = _mm256_set1_pd(*a1.add(t));
+                    c1l = _mm256_fmadd_pd(x1, bl, c1l);
+                    c1h = _mm256_fmadd_pd(x1, bh, c1h);
+                }
+                store_masked_256(cptr.0.add(i * n + j0), w, c0l, c0h);
+                store_masked_256(cptr.0.add((i + 1) * n + j0), w, c1l, c1h);
+            }
+            i += 2;
+        }
+        if i < hi {
+            let a0 = a[i * p..(i + 1) * p].as_ptr();
+            for jp in 0..np {
+                let j0 = jp * NR;
+                let w = (n - j0).min(NR);
+                let pb = panels[jp * NR * p..(jp + 1) * NR * p].as_ptr();
+                let mut cl = _mm256_setzero_pd();
+                let mut ch = _mm256_setzero_pd();
+                for t in 0..p {
+                    let bl = _mm256_loadu_pd(pb.add(t * NR));
+                    let bh = _mm256_loadu_pd(pb.add(t * NR + 4));
+                    let x0 = _mm256_set1_pd(*a0.add(t));
+                    cl = _mm256_fmadd_pd(x0, bl, cl);
+                    ch = _mm256_fmadd_pd(x0, bh, ch);
+                }
+                store_masked_256(cptr.0.add(i * n + j0), w, cl, ch);
+            }
+        }
+    }
+
+    /// AVX-512F packed NT microkernel: 4×8 tile with one 512-bit
+    /// accumulator per row; the masked edge store is a single
+    /// `_mm512_mask_storeu_pd` with the low-w bitmask.
+    #[target_feature(enable = "avx512f")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn packed_nt_rows_avx512(
+        a: &[f64],
+        p: usize,
+        panels: &[f64],
+        n: usize,
+        lo: usize,
+        hi: usize,
+        cptr: SendPtr,
+    ) {
+        let np = n.div_ceil(NR);
+        let mut i = lo;
+        while i + 4 <= hi {
+            let a0 = a[i * p..(i + 1) * p].as_ptr();
+            let a1 = a[(i + 1) * p..(i + 2) * p].as_ptr();
+            let a2 = a[(i + 2) * p..(i + 3) * p].as_ptr();
+            let a3 = a[(i + 3) * p..(i + 4) * p].as_ptr();
+            for jp in 0..np {
+                let j0 = jp * NR;
+                let w = (n - j0).min(NR);
+                let mask = ((1u16 << w) - 1) as u8;
+                let pb = panels[jp * NR * p..(jp + 1) * NR * p].as_ptr();
+                let mut c0 = _mm512_setzero_pd();
+                let mut c1 = _mm512_setzero_pd();
+                let mut c2 = _mm512_setzero_pd();
+                let mut c3 = _mm512_setzero_pd();
+                for t in 0..p {
+                    let bv = _mm512_loadu_pd(pb.add(t * NR));
+                    c0 = _mm512_fmadd_pd(_mm512_set1_pd(*a0.add(t)), bv, c0);
+                    c1 = _mm512_fmadd_pd(_mm512_set1_pd(*a1.add(t)), bv, c1);
+                    c2 = _mm512_fmadd_pd(_mm512_set1_pd(*a2.add(t)), bv, c2);
+                    c3 = _mm512_fmadd_pd(_mm512_set1_pd(*a3.add(t)), bv, c3);
+                }
+                // SAFETY: rows [lo, hi) are disjoint across workers.
+                _mm512_mask_storeu_pd(cptr.0.add(i * n + j0), mask, c0);
+                _mm512_mask_storeu_pd(cptr.0.add((i + 1) * n + j0), mask, c1);
+                _mm512_mask_storeu_pd(cptr.0.add((i + 2) * n + j0), mask, c2);
+                _mm512_mask_storeu_pd(cptr.0.add((i + 3) * n + j0), mask, c3);
+            }
+            i += 4;
+        }
+        while i + 2 <= hi {
+            let a0 = a[i * p..(i + 1) * p].as_ptr();
+            let a1 = a[(i + 1) * p..(i + 2) * p].as_ptr();
+            for jp in 0..np {
+                let j0 = jp * NR;
+                let w = (n - j0).min(NR);
+                let mask = ((1u16 << w) - 1) as u8;
+                let pb = panels[jp * NR * p..(jp + 1) * NR * p].as_ptr();
+                let mut c0 = _mm512_setzero_pd();
+                let mut c1 = _mm512_setzero_pd();
+                for t in 0..p {
+                    let bv = _mm512_loadu_pd(pb.add(t * NR));
+                    c0 = _mm512_fmadd_pd(_mm512_set1_pd(*a0.add(t)), bv, c0);
+                    c1 = _mm512_fmadd_pd(_mm512_set1_pd(*a1.add(t)), bv, c1);
+                }
+                _mm512_mask_storeu_pd(cptr.0.add(i * n + j0), mask, c0);
+                _mm512_mask_storeu_pd(cptr.0.add((i + 1) * n + j0), mask, c1);
+            }
+            i += 2;
+        }
+        if i < hi {
+            let a0 = a[i * p..(i + 1) * p].as_ptr();
+            for jp in 0..np {
+                let j0 = jp * NR;
+                let w = (n - j0).min(NR);
+                let mask = ((1u16 << w) - 1) as u8;
+                let pb = panels[jp * NR * p..(jp + 1) * NR * p].as_ptr();
+                let mut c0 = _mm512_setzero_pd();
+                for t in 0..p {
+                    let bv = _mm512_loadu_pd(pb.add(t * NR));
+                    c0 = _mm512_fmadd_pd(_mm512_set1_pd(*a0.add(t)), bv, c0);
+                }
+                _mm512_mask_storeu_pd(cptr.0.add(i * n + j0), mask, c0);
+            }
+        }
+    }
+
+    /// Bitwise-equal AVX2 widening f32 axpy: f32 product in 128-bit
+    /// lanes, exact `cvtps_pd` widening, f64 add — per element exactly
+    /// the scalar policy kernel.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn widening_axpy_f32_avx2(alpha: f32, x: &[f32], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let chunks = n / 4 * 4;
+        let av = _mm_set1_ps(alpha);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut t = 0;
+        while t < chunks {
+            let prod = _mm_mul_ps(av, _mm_loadu_ps(xp.add(t)));
+            let wide = _mm256_cvtps_pd(prod);
+            let yv = _mm256_loadu_pd(yp.add(t));
+            _mm256_storeu_pd(yp.add(t), _mm256_add_pd(yv, wide));
+            t += 4;
+        }
+        for j in chunks..n {
+            y[j] += f64::from(alpha * x[j]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// aarch64 bodies.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use crate::linalg::blas::NR;
+    use crate::util::threadpool::SendPtr;
+    use std::arch::aarch64::*;
+
+    /// Bitwise-equal NEON dot: two 128-bit accumulators whose lanes
+    /// reproduce the scalar `acc0..acc3` grouping, reduced in scalar
+    /// order, identical sequential tail.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot_neon(x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let chunks = n / 4 * 4;
+        let xp = x.as_ptr();
+        let yp = y.as_ptr();
+        let mut acc01 = vdupq_n_f64(0.0);
+        let mut acc23 = vdupq_n_f64(0.0);
+        let mut t = 0;
+        while t < chunks {
+            let x01 = vld1q_f64(xp.add(t));
+            let x23 = vld1q_f64(xp.add(t + 2));
+            let y01 = vld1q_f64(yp.add(t));
+            let y23 = vld1q_f64(yp.add(t + 2));
+            acc01 = vaddq_f64(acc01, vmulq_f64(x01, y01));
+            acc23 = vaddq_f64(acc23, vmulq_f64(x23, y23));
+            t += 4;
+        }
+        let mut s = ((vgetq_lane_f64::<0>(acc01) + vgetq_lane_f64::<1>(acc01))
+            + vgetq_lane_f64::<0>(acc23))
+            + vgetq_lane_f64::<1>(acc23);
+        for j in chunks..n {
+            s += x[j] * y[j];
+        }
+        s
+    }
+
+    /// Bitwise-equal NEON axpy (element-independent mul+add).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn axpy_neon(alpha: f64, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let chunks = n / 2 * 2;
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut t = 0;
+        while t < chunks {
+            let xv = vld1q_f64(xp.add(t));
+            let yv = vld1q_f64(yp.add(t));
+            vst1q_f64(yp.add(t), vaddq_f64(yv, vmulq_n_f64(xv, alpha)));
+            t += 2;
+        }
+        for j in chunks..n {
+            y[j] += alpha * x[j];
+        }
+    }
+
+    /// FMA-tier NEON dot (fused steps; 1e-12-pinned, not bitwise).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot_fma_neon(x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let chunks = n / 4 * 4;
+        let xp = x.as_ptr();
+        let yp = y.as_ptr();
+        let mut acc01 = vdupq_n_f64(0.0);
+        let mut acc23 = vdupq_n_f64(0.0);
+        let mut t = 0;
+        while t < chunks {
+            acc01 = vfmaq_f64(acc01, vld1q_f64(xp.add(t)), vld1q_f64(yp.add(t)));
+            acc23 = vfmaq_f64(acc23, vld1q_f64(xp.add(t + 2)), vld1q_f64(yp.add(t + 2)));
+            t += 4;
+        }
+        let mut s = ((vgetq_lane_f64::<0>(acc01) + vgetq_lane_f64::<1>(acc01))
+            + vgetq_lane_f64::<0>(acc23))
+            + vgetq_lane_f64::<1>(acc23);
+        for j in chunks..n {
+            s += x[j] * y[j];
+        }
+        s
+    }
+
+    /// FMA-tier NEON axpy (fused steps; 1e-12-pinned, not bitwise).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn axpy_fma_neon(alpha: f64, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let chunks = n / 2 * 2;
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut t = 0;
+        while t < chunks {
+            let xv = vld1q_f64(xp.add(t));
+            let yv = vld1q_f64(yp.add(t));
+            vst1q_f64(yp.add(t), vfmaq_n_f64(yv, xv, alpha));
+            t += 2;
+        }
+        for j in chunks..n {
+            y[j] += alpha * x[j];
+        }
+    }
+
+    /// Masked tile store: full-width on interior panels, staged through
+    /// a stack buffer on the edge panel.
+    #[target_feature(enable = "neon")]
+    unsafe fn store_masked_neon(
+        dst: *mut f64,
+        w: usize,
+        a: float64x2_t,
+        b: float64x2_t,
+        c: float64x2_t,
+        d: float64x2_t,
+    ) {
+        if w == NR {
+            vst1q_f64(dst, a);
+            vst1q_f64(dst.add(2), b);
+            vst1q_f64(dst.add(4), c);
+            vst1q_f64(dst.add(6), d);
+        } else {
+            let mut buf = [0.0f64; NR];
+            vst1q_f64(buf.as_mut_ptr(), a);
+            vst1q_f64(buf.as_mut_ptr().add(2), b);
+            vst1q_f64(buf.as_mut_ptr().add(4), c);
+            vst1q_f64(buf.as_mut_ptr().add(6), d);
+            std::ptr::copy_nonoverlapping(buf.as_ptr(), dst, w);
+        }
+    }
+
+    /// NEON packed NT microkernel: 2×8 tile on 128-bit FMA lanes (eight
+    /// accumulators per row pair), matching the oracle's structure.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn packed_nt_rows_neon(
+        a: &[f64],
+        p: usize,
+        panels: &[f64],
+        n: usize,
+        lo: usize,
+        hi: usize,
+        cptr: SendPtr,
+    ) {
+        let np = n.div_ceil(NR);
+        let mut i = lo;
+        while i + 2 <= hi {
+            let a0 = a[i * p..(i + 1) * p].as_ptr();
+            let a1 = a[(i + 1) * p..(i + 2) * p].as_ptr();
+            for jp in 0..np {
+                let j0 = jp * NR;
+                let w = (n - j0).min(NR);
+                let pb = panels[jp * NR * p..(jp + 1) * NR * p].as_ptr();
+                let mut c0a = vdupq_n_f64(0.0);
+                let mut c0b = vdupq_n_f64(0.0);
+                let mut c0c = vdupq_n_f64(0.0);
+                let mut c0d = vdupq_n_f64(0.0);
+                let mut c1a = vdupq_n_f64(0.0);
+                let mut c1b = vdupq_n_f64(0.0);
+                let mut c1c = vdupq_n_f64(0.0);
+                let mut c1d = vdupq_n_f64(0.0);
+                for t in 0..p {
+                    let ba = vld1q_f64(pb.add(t * NR));
+                    let bb = vld1q_f64(pb.add(t * NR + 2));
+                    let bc = vld1q_f64(pb.add(t * NR + 4));
+                    let bd = vld1q_f64(pb.add(t * NR + 6));
+                    let x0 = *a0.add(t);
+                    c0a = vfmaq_n_f64(c0a, ba, x0);
+                    c0b = vfmaq_n_f64(c0b, bb, x0);
+                    c0c = vfmaq_n_f64(c0c, bc, x0);
+                    c0d = vfmaq_n_f64(c0d, bd, x0);
+                    let x1 = *a1.add(t);
+                    c1a = vfmaq_n_f64(c1a, ba, x1);
+                    c1b = vfmaq_n_f64(c1b, bb, x1);
+                    c1c = vfmaq_n_f64(c1c, bc, x1);
+                    c1d = vfmaq_n_f64(c1d, bd, x1);
+                }
+                // SAFETY: rows [lo, hi) are disjoint across workers.
+                store_masked_neon(cptr.0.add(i * n + j0), w, c0a, c0b, c0c, c0d);
+                store_masked_neon(cptr.0.add((i + 1) * n + j0), w, c1a, c1b, c1c, c1d);
+            }
+            i += 2;
+        }
+        if i < hi {
+            let a0 = a[i * p..(i + 1) * p].as_ptr();
+            for jp in 0..np {
+                let j0 = jp * NR;
+                let w = (n - j0).min(NR);
+                let pb = panels[jp * NR * p..(jp + 1) * NR * p].as_ptr();
+                let mut ca = vdupq_n_f64(0.0);
+                let mut cb = vdupq_n_f64(0.0);
+                let mut cc = vdupq_n_f64(0.0);
+                let mut cd = vdupq_n_f64(0.0);
+                for t in 0..p {
+                    let x0 = *a0.add(t);
+                    ca = vfmaq_n_f64(ca, vld1q_f64(pb.add(t * NR)), x0);
+                    cb = vfmaq_n_f64(cb, vld1q_f64(pb.add(t * NR + 2)), x0);
+                    cc = vfmaq_n_f64(cc, vld1q_f64(pb.add(t * NR + 4)), x0);
+                    cd = vfmaq_n_f64(cd, vld1q_f64(pb.add(t * NR + 6)), x0);
+                }
+                store_masked_neon(cptr.0.add(i * n + j0), w, ca, cb, cc, cd);
+            }
+        }
+    }
+
+    /// Bitwise-equal NEON widening f32 axpy: f32 product, exact
+    /// widening via `vcvt_f64_f32`, f64 add.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn widening_axpy_f32_neon(alpha: f32, x: &[f32], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let chunks = n / 4 * 4;
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut t = 0;
+        while t < chunks {
+            let prod = vmulq_n_f32(vld1q_f32(xp.add(t)), alpha);
+            let lo = vcvt_f64_f32(vget_low_f32(prod));
+            let hi = vcvt_f64_f32(vget_high_f32(prod));
+            vst1q_f64(yp.add(t), vaddq_f64(vld1q_f64(yp.add(t)), lo));
+            vst1q_f64(yp.add(t + 2), vaddq_f64(vld1q_f64(yp.add(t + 2)), hi));
+            t += 4;
+        }
+        for j in chunks..n {
+            y[j] += f64::from(alpha * x[j]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// The parity-suite shape grid from the issue: every unroll edge of
+    /// the 4-way scalar bodies and the 8-wide tiles.
+    const LENS: [usize; 10] = [0, 1, 2, 3, 7, 8, 9, 31, 33, 65];
+
+    fn randvec(n: usize, rng: &mut Pcg64) -> Vec<f64> {
+        DenseMat::gaussian(1, n.max(1), rng).data()[..n].to_vec()
+    }
+
+    #[test]
+    fn supported_lists_scalar_last_and_active_is_supported() {
+        let sup = supported();
+        assert_eq!(*sup.last().unwrap(), KernelIsa::Scalar);
+        for isa in &sup {
+            assert!(isa.is_supported());
+        }
+        assert!(sup.contains(&detect()));
+        assert!(sup.contains(&active()));
+        // the process-wide choice is stable
+        assert_eq!(active(), active());
+    }
+
+    #[test]
+    fn isa_names_roundtrip() {
+        for isa in [
+            KernelIsa::Scalar,
+            KernelIsa::Avx2,
+            KernelIsa::Avx512,
+            KernelIsa::Neon,
+        ] {
+            assert_eq!(KernelIsa::parse(isa.as_str()), Some(isa));
+            assert_eq!(
+                KernelIsa::parse(&isa.as_str().to_ascii_uppercase()),
+                Some(isa)
+            );
+        }
+        assert_eq!(KernelIsa::parse("sse9"), None);
+    }
+
+    #[test]
+    fn resolve_defaults_to_detection() {
+        assert_eq!(resolve(None), detect());
+        assert_eq!(resolve(Some("")), detect());
+        assert_eq!(resolve(Some("auto")), detect());
+        assert_eq!(resolve(Some("  AUTO ")), detect());
+        assert_eq!(resolve(Some("scalar")), KernelIsa::Scalar);
+    }
+
+    #[test]
+    #[should_panic(expected = "SYMNMF_KERNEL")]
+    fn resolve_rejects_unknown_name() {
+        resolve(Some("sse9"));
+    }
+
+    #[test]
+    fn resolve_fails_loud_on_unsupported_isa() {
+        // Some ISA in the vocabulary is always unsupported on any one
+        // host (avx512 and neon are mutually exclusive architectures).
+        let unsupported = [KernelIsa::Avx512, KernelIsa::Avx2, KernelIsa::Neon]
+            .into_iter()
+            .find(|isa| !isa.is_supported())
+            .unwrap();
+        let err = std::panic::catch_unwind(|| resolve(Some(unsupported.as_str())))
+            .unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(
+            msg.contains("not supported"),
+            "panic should name the unsupported ISA: {msg}"
+        );
+    }
+
+    #[test]
+    fn hostname_is_nonempty() {
+        assert!(!hostname().is_empty());
+    }
+
+    #[test]
+    fn precision_parses_and_defaults() {
+        assert_eq!(Precision::parse("f64"), Some(Precision::F64));
+        assert_eq!(Precision::parse(" F32 "), Some(Precision::F32));
+        assert_eq!(Precision::parse("f16"), None);
+        assert_eq!(Precision::F64.as_str(), "f64");
+        assert_eq!(Precision::F32.as_str(), "f32");
+    }
+
+    /// Bitwise tier: the dispatched dot/axpy reproduce the scalar
+    /// oracle bit-for-bit on every supported ISA at every unroll edge.
+    #[test]
+    fn dot_and_axpy_are_bitwise_equal_to_scalar_on_every_isa() {
+        let mut rng = Pcg64::seed_from_u64(61);
+        for &n in &LENS {
+            let x = randvec(n, &mut rng);
+            let y = randvec(n, &mut rng);
+            let want_dot = blas::dot(&x, &y);
+            let mut want_y = y.clone();
+            blas::axpy(1.75, &x, &mut want_y);
+            for isa in supported() {
+                let got = dot(isa, &x, &y);
+                assert_eq!(
+                    got.to_bits(),
+                    want_dot.to_bits(),
+                    "dot isa={isa:?} n={n}"
+                );
+                let mut got_y = y.clone();
+                axpy(isa, 1.75, &x, &mut got_y);
+                for (a, b) in got_y.iter().zip(&want_y) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "axpy isa={isa:?} n={n}");
+                }
+            }
+        }
+    }
+
+    /// FMA tier: contracted dot/axpy stay within 1e-12 relative of the
+    /// scalar oracle on every supported ISA.
+    #[test]
+    fn fma_dot_and_axpy_match_scalar_to_1e12() {
+        let mut rng = Pcg64::seed_from_u64(62);
+        for &n in &LENS {
+            let x = randvec(n, &mut rng);
+            let y = randvec(n, &mut rng);
+            let want_dot = blas::dot(&x, &y);
+            let mut want_y = y.clone();
+            blas::axpy(-0.37, &x, &mut want_y);
+            for isa in supported() {
+                let got = dot_fma(isa, &x, &y);
+                let scale = 1.0 + want_dot.abs();
+                assert!(
+                    (got - want_dot).abs() < 1e-12 * scale,
+                    "dot_fma isa={isa:?} n={n}: {got} vs {want_dot}"
+                );
+                let mut got_y = y.clone();
+                axpy_fma(isa, -0.37, &x, &mut got_y);
+                for (a, b) in got_y.iter().zip(&want_y) {
+                    assert!(
+                        (a - b).abs() < 1e-12 * (1.0 + b.abs()),
+                        "axpy_fma isa={isa:?} n={n}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The f32 policy kernel is bitwise-identical across ISAs (the
+    /// widening is exact and element-independent).
+    #[test]
+    fn widening_axpy_f32_is_bitwise_equal_across_isas() {
+        let mut rng = Pcg64::seed_from_u64(63);
+        for &n in &LENS {
+            let x: Vec<f32> = randvec(n, &mut rng).iter().map(|&v| v as f32).collect();
+            let y0 = randvec(n, &mut rng);
+            let mut want = y0.clone();
+            widening_axpy_f32(KernelIsa::Scalar, 0.6f32, &x, &mut want);
+            for isa in supported() {
+                let mut got = y0.clone();
+                widening_axpy_f32(isa, 0.6f32, &x, &mut got);
+                for (a, b) in got.iter().zip(&want) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "isa={isa:?} n={n}");
+                }
+            }
+        }
+    }
+
+    /// The staged-f32 GEMMs agree with the f64 kernels to f32 product
+    /// accuracy, and are bitwise-identical across ISAs.
+    #[test]
+    fn f32_gemms_track_f64_and_are_isa_invariant() {
+        let mut rng = Pcg64::seed_from_u64(64);
+        for (m, p, n) in [(1usize, 1usize, 1usize), (3, 7, 2), (9, 31, 8), (33, 9, 7)] {
+            let a = DenseMat::gaussian(m, p, &mut rng);
+            let b = DenseMat::gaussian(p, n, &mut rng);
+            let a32 = a.to_f32();
+            let b32 = b.to_f32();
+
+            let mut want = DenseMat::zeros(m, n);
+            blas::matmul_into(&a, &b, &mut want);
+            let mut got = DenseMat::zeros(m, n);
+            matmul_f32_into(KernelIsa::Scalar, &a32, m, p, &b32, n, &mut got);
+            let err = got.diff_fro(&want);
+            assert!(
+                err < 1e-5 * (1.0 + want.fro_norm()),
+                "matmul_f32 ({m},{p},{n}): err={err}"
+            );
+            for isa in supported() {
+                let mut other = DenseMat::zeros(m, n);
+                matmul_f32_into(isa, &a32, m, p, &b32, n, &mut other);
+                for (x, y) in other.data().iter().zip(got.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "isa={isa:?}");
+                }
+            }
+
+            // Aᵀ·B with A reinterpreted as m×p against a m×n B
+            let b2 = DenseMat::gaussian(m, n, &mut rng);
+            let b2_32 = b2.to_f32();
+            let mut want_tn = DenseMat::zeros(p, n);
+            blas::matmul_tn_into(&a, &b2, &mut want_tn);
+            let mut got_tn = DenseMat::zeros(p, n);
+            matmul_tn_f32_into(KernelIsa::Scalar, &a32, m, p, &b2_32, n, &mut got_tn);
+            let err = got_tn.diff_fro(&want_tn);
+            assert!(
+                err < 1e-5 * (1.0 + want_tn.fro_norm()),
+                "matmul_tn_f32 ({m},{p},{n}): err={err}"
+            );
+            for isa in supported() {
+                let mut other = DenseMat::zeros(p, n);
+                matmul_tn_f32_into(isa, &a32, m, p, &b2_32, n, &mut other);
+                for (x, y) in other.data().iter().zip(got_tn.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "isa={isa:?}");
+                }
+            }
+        }
+    }
+}

@@ -60,6 +60,40 @@ impl PanelBuf {
     }
 }
 
+/// Grow-only f32 staging buffer for the reduced-precision compute path
+/// of the sketched pipelines (`SYMNMF_PRECISION=f32`): f64 factors are
+/// downcast into it before the f32 inner GEMMs, so the steady-state f32
+/// iteration allocates nothing — the f32 twin of [`PanelBuf`].
+#[derive(Debug, Default)]
+pub struct F32Buf {
+    data: Vec<f32>,
+}
+
+impl F32Buf {
+    pub fn new() -> F32Buf {
+        F32Buf { data: Vec::new() }
+    }
+
+    /// Overwrite the buffer with the f32 downcast of `src` and return
+    /// the staged slice. Capacity grows to the largest request and is
+    /// then reused (amortized, geometric — `Vec::resize` never shrinks
+    /// the allocation).
+    pub fn stage(&mut self, src: &[f64]) -> &[f32] {
+        if self.data.len() < src.len() {
+            self.data.resize(src.len(), 0.0);
+        }
+        for (d, &s) in self.data.iter_mut().zip(src) {
+            *d = s as f32;
+        }
+        &self.data[..src.len()]
+    }
+
+    /// Data pointer, for allocation-stability assertions in tests.
+    pub fn as_ptr(&self) -> *const f32 {
+        self.data.as_ptr()
+    }
+}
+
 /// Scratch buffers for the Update(G, Y) rules (BPP / HALS / MU), shared
 /// across rules so one workspace serves whatever `opts.rule` selects:
 ///
@@ -151,6 +185,24 @@ mod tests {
         assert_eq!(buf.packed(512).len(), 512);
         assert_eq!(buf.as_ptr(), ptr, "shrinking request must not reallocate");
         assert_eq!(buf.packed(1024).len(), 1024);
+        assert_eq!(buf.as_ptr(), ptr, "repeat of the high-water mark must not reallocate");
+    }
+
+    /// F32Buf stages the downcast without reallocating on repeat or
+    /// shrinking requests.
+    #[test]
+    fn f32_buf_stages_and_reuses_allocation() {
+        let mut buf = F32Buf::new();
+        let src: Vec<f64> = (0..64).map(|i| i as f64 * 0.5).collect();
+        let staged = buf.stage(&src);
+        assert_eq!(staged.len(), 64);
+        for (s, d) in src.iter().zip(staged) {
+            assert_eq!(*d, *s as f32);
+        }
+        let ptr = buf.as_ptr();
+        assert_eq!(buf.stage(&src[..16]).len(), 16);
+        assert_eq!(buf.as_ptr(), ptr, "shrinking request must not reallocate");
+        assert_eq!(buf.stage(&src).len(), 64);
         assert_eq!(buf.as_ptr(), ptr, "repeat of the high-water mark must not reallocate");
     }
 

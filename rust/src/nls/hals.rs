@@ -27,12 +27,23 @@
 //! parallelizes over row chunks with bitwise-deterministic results, and
 //! needs no scratch buffers at all.
 
+use crate::linalg::simd::{self, KernelIsa};
 use crate::linalg::{blas, DenseMat};
 use crate::util::threadpool::{parallel_for_chunks, SendPtr};
 
 /// One full HALS sweep updating every column of `w` given (G, Y), fully
-/// in place (no scratch, no allocation). `w` stays nonnegative.
+/// in place (no scratch, no allocation). `w` stays nonnegative. Runs on
+/// the process-wide dispatched kernel tier
+/// ([`crate::linalg::simd::active`]).
 pub fn hals_sweep(g: &DenseMat, y: &DenseMat, w: &mut DenseMat) {
+    hals_sweep_isa(simd::active(), g, y, w);
+}
+
+/// [`hals_sweep`] with an explicit kernel tier: the inner `G[i,:]·W[r,:]`
+/// contraction runs on [`simd::dot_fma`] (FMA tier — the Scalar tier is
+/// the historical [`blas::dot`], bitwise). The parity suite pins every
+/// supported tier against the Scalar tier at 1e-12.
+pub fn hals_sweep_isa(isa: KernelIsa, g: &DenseMat, y: &DenseMat, w: &mut DenseMat) {
     let (m, k) = w.shape();
     assert_eq!(g.shape(), (k, k), "hals_sweep: G must be {k}x{k}");
     assert_eq!(y.shape(), (m, k), "hals_sweep: Y must be {m}x{k}");
@@ -55,7 +66,7 @@ pub fn hals_sweep(g: &DenseMat, y: &DenseMat, w: &mut DenseMat) {
                 let grow = &gd[i * k..(i + 1) * k];
                 // Y[r,i] − Σ_{j≠i} G_ij·W[r,j], with the j == i term of
                 // the contiguous dot added back.
-                let num = yrow[i] + gii * wrow[i] - blas::dot(grow, wrow);
+                let num = yrow[i] + gii * wrow[i] - simd::dot_fma(isa, grow, wrow);
                 wrow[i] = (num / gii).max(0.0);
             }
         }
@@ -233,6 +244,38 @@ mod tests {
                     err < 1e-12 * (1.0 + w_ref.fro_norm()),
                     "m={m} k={k}: err={err}"
                 );
+            }
+        }
+    }
+
+    /// The issue's scalar-vs-SIMD parity grid for the dispatched sweep:
+    /// every supported tier vs the forced-Scalar tier at 1e-12 across
+    /// m,k ∈ {1,2,3,7,8,9,31,33,65} (the Scalar tier itself is the
+    /// historical sweep bitwise, which the reference pin above covers).
+    #[test]
+    fn sweep_simd_tiers_match_scalar_oracle() {
+        use crate::linalg::simd::{self, KernelIsa};
+        let mut rng = Pcg64::seed_from_u64(41);
+        for m in [1usize, 2, 3, 7, 8, 9, 31, 33, 65] {
+            for k in [1usize, 2, 3, 7, 8, 9, 31, 33, 65] {
+                let mut h = DenseMat::gaussian(m, k, &mut rng);
+                h.project_nonneg();
+                let mut g = blas::gram(&h);
+                g.add_diag(0.7); // keep G_ii > 0
+                let y = DenseMat::gaussian(m, k, &mut rng);
+                let mut w0 = DenseMat::gaussian(m, k, &mut rng);
+                w0.project_nonneg();
+                let mut want = w0.clone();
+                hals_sweep_isa(KernelIsa::Scalar, &g, &y, &mut want);
+                for isa in simd::supported() {
+                    let mut got = w0.clone();
+                    hals_sweep_isa(isa, &g, &y, &mut got);
+                    let err = got.diff_fro(&want);
+                    assert!(
+                        err < 1e-12 * (1.0 + want.fro_norm()),
+                        "isa={isa:?} m={m} k={k}: err={err}"
+                    );
+                }
             }
         }
     }

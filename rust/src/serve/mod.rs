@@ -36,7 +36,12 @@
 //!   (atomic temp+rename write), and superseded generations are
 //!   garbage-collected. Factor-only **slim** checkpoints
 //!   (`slim_checkpoints`, wire version 2) drop the residual history for
-//!   fleets that stream it through trace sinks instead.
+//!   fleets that stream it through trace sinks instead. Both forms
+//!   record the kernel **ISA** the producing process dispatched
+//!   (`isa` field): resuming a persisted job on a host that dispatches
+//!   a different kernel tier fails loudly instead of silently breaking
+//!   the bitwise contract — force `SYMNMF_KERNEL=<recorded isa>` on the
+//!   new host (if it supports that tier) to migrate a job.
 //! * A per-job streaming trace sink ([`crate::symnmf::trace`]) lives
 //!   across slices (and appends when a job is submitted with a resume
 //!   checkpoint) and flushes per record, so the stitched file's

@@ -185,6 +185,7 @@ mod tests {
                     hybrid_stats: None,
                 })
                 .collect(),
+            isa: Some("scalar".to_string()),
         }
     }
 

@@ -13,8 +13,22 @@
 //! The only difference from LAI-NMF is the projection QQᵀ inside the
 //! Gram matrix (App. B.1 shows the RHS terms coincide) — empirically the
 //! two behave nearly identically, which Table 2 (and our bench) confirms.
+//!
+//! ## Reduced-precision compute (`SYMNMF_PRECISION=f32`)
+//!
+//! The two inner GEMMs of each half-update (QᵀF and B̂ᵀ·(QᵀF)) touch the
+//! m×l sketch operands — the dominant memory traffic of a compressed
+//! iteration. Under [`Precision::F32`] those operands are staged once as
+//! f32 (Q and Bᵀ at setup, the k-wide factors per half-update through a
+//! grow-only [`F32Buf`]) and the products run with f32 multiplies but
+//! **f64 accumulation** (`linalg::simd`'s widening policy); the Gram
+//! matrix, the α-regularization, the NLS update, and the residual /
+//! stopping rule all stay f64. Precision is an option
+//! ([`SymNmfOptions::precision`], env-defaulted), not checkpoint state:
+//! resume with the same options or forfeit bitwise reproduction.
 
-use crate::linalg::{blas, DenseMat, IterWorkspace};
+use crate::linalg::simd::{self, KernelIsa, Precision};
+use crate::linalg::{blas, DenseMat, F32Buf, IterWorkspace};
 use crate::nls::{update_into, UpdateRule};
 use crate::randnla::rrf::{ada_rrf, rrf};
 use crate::randnla::SymOp;
@@ -47,6 +61,14 @@ pub struct CompressedEngine {
     qtf: DenseMat,
     w: DenseMat,
     h: DenseMat,
+    /// compute precision of the two sketch GEMMs (module header)
+    precision: Precision,
+    /// f32 stagings of Q / Bᵀ (empty under [`Precision::F64`])
+    q32: Vec<f32>,
+    bt32: Vec<f32>,
+    /// grow-only per-half-update stagings of the factor and of QᵀF
+    fstage: F32Buf,
+    pstage: F32Buf,
 }
 
 impl CompressedEngine {
@@ -56,9 +78,14 @@ impl CompressedEngine {
         alpha: f64,
         rule: UpdateRule,
         h0: DenseMat,
+        precision: Precision,
     ) -> CompressedEngine {
         let l = q.cols();
         let k = h0.cols();
+        let (q32, bt32) = match precision {
+            Precision::F64 => (Vec::new(), Vec::new()),
+            Precision::F32 => (q.to_f32(), bt.to_f32()),
+        };
         CompressedEngine {
             q,
             bt,
@@ -67,8 +94,40 @@ impl CompressedEngine {
             qtf: DenseMat::zeros(l, k),
             w: h0.clone(),
             h: h0,
+            precision,
+            q32,
+            bt32,
+            fstage: F32Buf::new(),
+            pstage: F32Buf::new(),
         }
     }
+}
+
+/// One compressed half-update's sketch products under [`Precision::F32`]:
+/// stage the k-wide factor, form QᵀF with f32 operands / f64
+/// accumulation, take the (f64) Gram, re-stage QᵀF, and form B̂ᵀ·(QᵀF)
+/// the same way. Free function over explicit fields so the `step` body
+/// can keep its disjoint field borrows.
+#[allow(clippy::too_many_arguments)]
+fn project_f32(
+    isa: KernelIsa,
+    q32: &[f32],
+    bt32: &[f32],
+    m: usize,
+    l: usize,
+    fstage: &mut F32Buf,
+    pstage: &mut F32Buf,
+    f: &DenseMat,
+    qtf: &mut DenseMat,
+    g: &mut DenseMat,
+    y: &mut DenseMat,
+) {
+    let k = f.cols();
+    let sf = fstage.stage(f.data());
+    simd::matmul_tn_f32_into(isa, q32, m, l, sf, k, qtf); // QᵀF, l×k
+    blas::gram_into(qtf, g); // Fᵀ·QQᵀ·F — f64 accumulation
+    let sp = pstage.stage(qtf.data());
+    simd::matmul_f32_into(isa, bt32, m, l, sp, k, y); // (XQ)·(QᵀF)
 }
 
 impl SolverEngine for CompressedEngine {
@@ -83,12 +142,31 @@ impl SolverEngine for CompressedEngine {
     fn step(&mut self, ws: &mut IterWorkspace) -> StepOutcome {
         let mut mm = 0.0;
         let mut solve = 0.0;
+        let isa = simd::active();
+        let (m, l) = self.q.shape();
 
         // --- W update from H ---
         let t = Stopwatch::start();
-        blas::matmul_tn_into(&self.q, &self.h, &mut self.qtf); // QᵀH, l×k
-        blas::gram_into(&self.qtf, &mut ws.g); // Hᵀ·QQᵀ·H
-        blas::matmul_into(&self.bt, &self.qtf, &mut ws.y); // (XQ)·(QᵀH)
+        match self.precision {
+            Precision::F64 => {
+                blas::matmul_tn_into(&self.q, &self.h, &mut self.qtf); // QᵀH, l×k
+                blas::gram_into(&self.qtf, &mut ws.g); // Hᵀ·QQᵀ·H
+                blas::matmul_into(&self.bt, &self.qtf, &mut ws.y); // (XQ)·(QᵀH)
+            }
+            Precision::F32 => project_f32(
+                isa,
+                &self.q32,
+                &self.bt32,
+                m,
+                l,
+                &mut self.fstage,
+                &mut self.pstage,
+                &self.h,
+                &mut self.qtf,
+                &mut ws.g,
+                &mut ws.y,
+            ),
+        }
         mm += t.elapsed_secs();
         ws.g.add_diag(self.alpha);
         ws.y.axpy(self.alpha, &self.h);
@@ -98,9 +176,26 @@ impl SolverEngine for CompressedEngine {
 
         // --- H update from W ---
         let t = Stopwatch::start();
-        blas::matmul_tn_into(&self.q, &self.w, &mut self.qtf);
-        blas::gram_into(&self.qtf, &mut ws.g);
-        blas::matmul_into(&self.bt, &self.qtf, &mut ws.y);
+        match self.precision {
+            Precision::F64 => {
+                blas::matmul_tn_into(&self.q, &self.w, &mut self.qtf);
+                blas::gram_into(&self.qtf, &mut ws.g);
+                blas::matmul_into(&self.bt, &self.qtf, &mut ws.y);
+            }
+            Precision::F32 => project_f32(
+                isa,
+                &self.q32,
+                &self.bt32,
+                m,
+                l,
+                &mut self.fstage,
+                &mut self.pstage,
+                &self.w,
+                &mut self.qtf,
+                &mut ws.g,
+                &mut ws.y,
+            ),
+        }
         mm += t.elapsed_secs();
         ws.g.add_diag(self.alpha);
         ws.y.axpy(self.alpha, &self.w);
@@ -164,7 +259,14 @@ pub fn compressed_symnmf_run<X: SymOp>(
     let h0 = initial_factor(x, opts, &mut rng);
     let mut spec = SolveSpec {
         stages: vec![Stage {
-            engine: Box::new(CompressedEngine::new(q, bt, alpha, opts.rule, h0)),
+            engine: Box::new(CompressedEngine::new(
+                q,
+                bt,
+                alpha,
+                opts.rule,
+                h0,
+                opts.resolved_precision(),
+            )),
             label: format!("Comp-{}", opts.rule.label()),
         }],
         metrics: Metrics::new(xd, true),
@@ -396,6 +498,61 @@ mod tests {
         assert!(res.h.is_nonneg());
         assert!(res.min_residual() < 0.1, "res {}", res.min_residual());
         assert_eq!(res.label, "Comp-HALS");
+    }
+
+    /// Driver-level acceptance for `SYMNMF_PRECISION=f32`: on an SBM
+    /// workload the f32 compute path's best residual tracks the f64
+    /// path's closely — only the two sketch GEMMs dropped precision (f32
+    /// multiplies, f64 accumulation); Gram, update, and stop rule are
+    /// still f64, and the factors stay nonnegative.
+    #[test]
+    fn f32_precision_tracks_f64_residual_on_sbm() {
+        use crate::data::sbm::{generate, SbmParams};
+        let g = generate(&SbmParams::skewed(120, 4, 0.4, 11).with_degrees(12.0, 1.0));
+        let mut opts = SymNmfOptions::new(4)
+            .with_rule(UpdateRule::Hals)
+            .with_seed(3);
+        opts.max_iters = 40;
+        let r64 = compressed_symnmf(&g.adj, &opts.clone().with_precision(Precision::F64));
+        let r32 = compressed_symnmf(&g.adj, &opts.with_precision(Precision::F32));
+        assert!(r32.h.is_nonneg());
+        let gap = (r32.min_residual() - r64.min_residual()).abs();
+        assert!(
+            gap < 5e-3 * r64.min_residual().max(1.0),
+            "f32 residual {} drifted from f64 residual {} (gap {gap})",
+            r32.min_residual(),
+            r64.min_residual()
+        );
+    }
+
+    /// The f32 path is still deterministic and resumable: same options →
+    /// bitwise-identical reruns, and a paused f32 run resumes bitwise
+    /// (the staged f32 operands rebuild deterministically from the f64
+    /// sketch).
+    #[test]
+    fn f32_path_is_deterministic_and_resumes_bitwise() {
+        let x = planted(40, 3, 17);
+        let mut opts = SymNmfOptions::new(3)
+            .with_rule(UpdateRule::Hals)
+            .with_seed(6)
+            .with_precision(Precision::F32);
+        opts.max_iters = 6;
+        let a = compressed_symnmf_run(&x, &opts, &RunControl::unlimited(), None, None);
+        let b = compressed_symnmf_run(&x, &opts, &RunControl::unlimited(), None, None);
+        assert_results_bitwise_eq(&a.result, &b.result, "comp f32 rerun");
+
+        let paused = compressed_symnmf_run(
+            &x,
+            &opts,
+            &RunControl::unlimited().with_max_steps(2),
+            None,
+            None,
+        );
+        assert_eq!(paused.checkpoint.status, RunStatus::Paused);
+        let cp = Checkpoint::parse(&paused.checkpoint.serialize()).expect("roundtrip");
+        let resumed =
+            compressed_symnmf_run(&x, &opts, &RunControl::unlimited(), Some(&cp), None);
+        assert_results_bitwise_eq(&a.result, &resumed.result, "comp f32 resume");
     }
 
     /// App. B.1: Compressed-NMF and LAI-NMF behave nearly identically on

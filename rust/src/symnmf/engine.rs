@@ -53,7 +53,21 @@
 //! kernel-call order, identical stopping decisions. Deadlines and pauses
 //! only ever cut the iteration sequence short — they never perturb the
 //! iterations that do run.
+//!
+//! Since the SIMD dispatch layer (`linalg::simd`) the "fixed process
+//! configuration" includes the active kernel ISA: FMA-tier kernels on
+//! different ISAs round differently, so a checkpoint produced under one
+//! dispatch is only bitwise-resumable under the same dispatch. Every
+//! [`Checkpoint`] therefore records the ISA it was produced under, and
+//! [`run_solver`] refuses to resume under a different one — set
+//! `SYMNMF_KERNEL=<recorded isa>` to force the original kernel (or
+//! accept a non-bitwise continuation by re-running from scratch).
+//! Checkpoints from before the dispatch layer carry no ISA and resume
+//! unconditionally. The same reasoning applies to `SYMNMF_PRECISION`:
+//! options are not checkpointed, so resuming with different opts (f32 vs
+//! f64 compute) is outside the bitwise contract by construction.
 
+use crate::linalg::simd;
 use crate::linalg::{DenseMat, IterWorkspace};
 use crate::symnmf::anls::Metrics;
 use crate::symnmf::metrics::{IterRecord, StopRule, SymNmfResult};
@@ -368,6 +382,11 @@ pub struct Checkpoint {
     pub state: EngineState,
     /// residual history so far
     pub records: Vec<IterRecord>,
+    /// kernel ISA the producing process dispatched (`None` on checkpoints
+    /// from before the SIMD dispatch layer). Resume refuses a mismatch —
+    /// FMA-tier kernels round differently per ISA, so continuing under a
+    /// different dispatch would silently break the bitwise contract.
+    pub isa: Option<String>,
 }
 
 /// Result of one [`run_solver`] call: the (possibly partial) solver
@@ -415,6 +434,16 @@ pub fn run_solver(
     match resume {
         Some(cp) => {
             assert!(cp.stage < nstages, "checkpoint stage {} out of range", cp.stage);
+            if let Some(saved) = cp.isa.as_deref() {
+                let here = simd::active().as_str();
+                assert!(
+                    saved == here,
+                    "checkpoint was produced under kernel ISA '{saved}' but this \
+                     process dispatches '{here}'; bitwise resume requires the \
+                     original kernel — set SYMNMF_KERNEL={saved} (or restart the \
+                     solve from scratch to accept the new dispatch)"
+                );
+            }
             stage = cp.stage;
             stage_iter = cp.stage_iter;
             iter = cp.iter;
@@ -535,6 +564,7 @@ pub fn run_solver(
         stop_stall,
         state: engine.save(),
         records: records.clone(),
+        isa: Some(simd::active().as_str().to_string()),
     };
     let result = SymNmfResult {
         // the ACTIVE stage's label: on completed runs this is the final
@@ -757,6 +787,13 @@ impl Checkpoint {
                     .unwrap_or(Json::Null),
             ),
             ("rng", rng),
+            (
+                "isa",
+                self.isa
+                    .as_ref()
+                    .map(|s| Json::Str(s.clone()))
+                    .unwrap_or(Json::Null),
+            ),
         ];
         if !slim {
             fields.push((
@@ -802,6 +839,16 @@ impl Checkpoint {
                 })
             }
         };
+        // absent or null on pre-dispatch-layer checkpoints: resume then
+        // proceeds without the ISA guard
+        let isa = match j.get("isa") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or_else(|| "isa must be a string or null".to_string())?
+                    .to_string(),
+            ),
+        };
         let records = if version == CHECKPOINT_VERSION_SLIM {
             // factor-only: the history was dropped on purpose (it lives
             // in a trace sink); `iter` alone keeps record numbering
@@ -845,6 +892,7 @@ impl Checkpoint {
                 rng,
             },
             records,
+            isa,
         })
     }
 
@@ -992,10 +1040,12 @@ mod tests {
                     hybrid_stats: Some((0.25, 0.75)),
                 },
             ],
+            isa: Some("scalar".to_string()),
         };
         let text = cp.serialize();
         let back = Checkpoint::parse(&text).expect("parse");
         assert_eq!(back.status, cp.status);
+        assert_eq!(back.isa.as_deref(), Some("scalar"), "ISA survives the round-trip");
         assert_eq!(back.stage, 1);
         assert_eq!(back.stage_iter, 2);
         assert_eq!(back.iter, 2);
@@ -1055,11 +1105,13 @@ mod tests {
                 phase_secs: (0.0, 0.0, 0.0),
                 hybrid_stats: None,
             }],
+            isa: Some(simd::active().as_str().to_string()),
         };
         let text = cp.serialize_slim();
         assert!(!text.contains("records"), "slim form must drop the history");
         let back = Checkpoint::parse(&text).expect("slim parse");
         assert_eq!(back.status, RunStatus::Cancelled);
+        assert_eq!(back.isa, cp.isa, "slim form still records the ISA");
         assert_eq!(back.iter, 4, "global iteration counter survives");
         assert!(back.records.is_empty(), "slim checkpoints carry no records");
         assert_eq!(back.stop_best.to_bits(), cp.stop_best.to_bits());
@@ -1089,6 +1141,7 @@ mod tests {
                 rng: None,
             },
             records: Vec::new(),
+            isa: None, // legacy pre-dispatch-layer checkpoints parse too
         };
         let text = cp.serialize().replacen("\"version\":1", "\"version\":3", 1);
         let err = Checkpoint::parse(&text).expect_err("version 3 must be rejected");
@@ -1096,5 +1149,96 @@ mod tests {
             err.contains("unsupported checkpoint version 3"),
             "error must name the bad version: {err}"
         );
+    }
+
+    /// Minimal do-nothing engine: lets the resume-guard tests drive
+    /// [`run_solver`] without the cost (or numerics) of a real method.
+    struct StaticEngine {
+        h: DenseMat,
+    }
+
+    impl SolverEngine for StaticEngine {
+        fn h(&self) -> &DenseMat {
+            &self.h
+        }
+        fn w(&self) -> &DenseMat {
+            &self.h
+        }
+        fn step(&mut self, _ws: &mut IterWorkspace) -> StepOutcome {
+            StepOutcome::default()
+        }
+        fn save(&self) -> EngineState {
+            EngineState { h: self.h.clone(), w: None, rng: None }
+        }
+        fn load(&mut self, st: &EngineState) {
+            self.h = st.h.clone();
+        }
+    }
+
+    fn static_spec(x: &DenseMat) -> SolveSpec<'_> {
+        let (m, _) = x.shape();
+        SolveSpec {
+            stages: vec![Stage {
+                engine: Box::new(StaticEngine { h: DenseMat::zeros(m, 2) }),
+                label: "static".to_string(),
+            }],
+            metrics: Metrics::new(x, false),
+            setup_secs: 0.0,
+            phases: PhaseTimer::new(),
+        }
+    }
+
+    /// Every checkpoint run_solver produces is stamped with the kernel
+    /// ISA the process dispatched — the serve/resume layers rely on it.
+    #[test]
+    fn run_solver_stamps_active_isa_into_checkpoint() {
+        let x = DenseMat::zeros(4, 4);
+        let opts = SymNmfOptions::new(2);
+        let ctrl = RunControl::unlimited().with_max_steps(0);
+        let mut spec = static_spec(&x);
+        let mut ws = workspace_for(&spec);
+        let run = run_solver(&mut spec, &opts, &ctrl, None, None, &mut ws);
+        assert_eq!(
+            run.checkpoint.isa.as_deref(),
+            Some(simd::active().as_str()),
+            "checkpoint must record the active dispatch"
+        );
+    }
+
+    /// Resuming accepts a matching recorded ISA and (for back-compat)
+    /// a legacy checkpoint that recorded none.
+    #[test]
+    fn resume_accepts_matching_and_legacy_isa() {
+        let x = DenseMat::zeros(4, 4);
+        let opts = SymNmfOptions::new(2);
+        let ctrl = RunControl::unlimited().with_max_steps(0);
+        let mut spec = static_spec(&x);
+        let mut ws = workspace_for(&spec);
+        let run = run_solver(&mut spec, &opts, &ctrl, None, None, &mut ws);
+        let mut cp = run.checkpoint;
+        // matching ISA: the stamp run_solver just produced
+        run_solver(&mut static_spec(&x), &opts, &ctrl, Some(&cp), None, &mut ws);
+        // legacy checkpoint: no ISA recorded → guard is skipped
+        cp.isa = None;
+        run_solver(&mut static_spec(&x), &opts, &ctrl, Some(&cp), None, &mut ws);
+    }
+
+    /// A checkpoint produced under a different dispatch must fail loudly
+    /// on resume — silently continuing would break the bitwise contract.
+    #[test]
+    #[should_panic(expected = "kernel ISA")]
+    fn resume_refuses_checkpoint_from_different_isa() {
+        let x = DenseMat::zeros(4, 4);
+        let opts = SymNmfOptions::new(2);
+        let ctrl = RunControl::unlimited().with_max_steps(0);
+        let mut spec = static_spec(&x);
+        let mut ws = workspace_for(&spec);
+        let run = run_solver(&mut spec, &opts, &ctrl, None, None, &mut ws);
+        let mut cp = run.checkpoint;
+        cp.isa = Some(
+            if simd::active() == simd::KernelIsa::Scalar { "avx2" } else { "scalar" }
+                .to_string(),
+        );
+        run_solver(&mut static_spec(&x), &opts, &ctrl, Some(&cp), None, &mut ws);
     }
 }

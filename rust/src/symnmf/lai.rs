@@ -7,8 +7,15 @@
 //! * **Ada-RRF** — adaptive choice of the power-iteration count q;
 //! * **Iterative Refinement (IR)** — after the LAI iterations converge,
 //!   continue with the true X under the same stopping rule.
+//!
+//! Under `SYMNMF_PRECISION=f32` (or [`SymNmfOptions::precision`]) the
+//! two skinny matmuls of the factored apply run with f32-staged U/V
+//! operands and f64 accumulation — the same policy as the compressed
+//! pipeline (see `compressed`'s module header); everything downstream
+//! (Gram, update, residual, IR over the true X) stays f64.
 
-use crate::linalg::{blas, DenseMat};
+use crate::linalg::simd::{self, Precision};
+use crate::linalg::{blas, DenseMat, F32Buf};
 use crate::randnla::evd::{apx_evd, apx_evd_adaptive, ApxEvd};
 use crate::randnla::SymOp;
 use crate::symnmf::anls::{resolve_alpha, AltEngine, Metrics};
@@ -39,11 +46,20 @@ pub struct LaiOp {
     mean_v: f64,
     /// l×k scratch for Vᵀ·F, reused across `apply_into` calls
     vtf: std::sync::Mutex<DenseMat>,
+    /// compute precision of the two skinny matmuls (module header)
+    precision: Precision,
+    /// f32 stagings of U / V (empty under [`Precision::F64`])
+    u32: Vec<f32>,
+    v32: Vec<f32>,
+    /// grow-only f32 stagings of F and Vᵀ·F, behind the same
+    /// uncontended-Mutex pattern as `vtf` to keep `LaiOp: Sync`
+    stage32: std::sync::Mutex<(F32Buf, F32Buf)>,
 }
 
 impl LaiOp {
     /// Wrap an approximate EVD; `alpha_source` supplies max/mean of the
     /// TRUE X so that α and the init scale match the exact algorithms.
+    /// The apply runs in f64; see [`LaiOp::with_precision`].
     pub fn new<X: SymOp>(evd: &ApxEvd, alpha_source: &X) -> LaiOp {
         LaiOp {
             u: evd.u.clone(),
@@ -52,7 +68,24 @@ impl LaiOp {
             max_v: alpha_source.max_value(),
             mean_v: alpha_source.mean_value(),
             vtf: std::sync::Mutex::new(DenseMat::zeros(0, 0)),
+            precision: Precision::F64,
+            u32: Vec::new(),
+            v32: Vec::new(),
+            stage32: std::sync::Mutex::new((F32Buf::new(), F32Buf::new())),
         }
+    }
+
+    /// Select the apply's compute precision; [`Precision::F32`] stages
+    /// the U/V operands as f32 once, here.
+    pub fn with_precision(mut self, precision: Precision) -> LaiOp {
+        self.precision = precision;
+        let (u32, v32) = match precision {
+            Precision::F64 => (Vec::new(), Vec::new()),
+            Precision::F32 => (self.u.to_f32(), self.v.to_f32()),
+        };
+        self.u32 = u32;
+        self.v32 = v32;
+        self
     }
 }
 
@@ -69,8 +102,23 @@ impl SymOp for LaiOp {
         if vtf.shape() != (l, k) {
             *vtf = DenseMat::zeros(l, k); // first call (or width change) only
         }
-        blas::matmul_tn_into(&self.v, f, &mut *vtf);
-        blas::matmul_into(&self.u, &*vtf, out);
+        match self.precision {
+            Precision::F64 => {
+                blas::matmul_tn_into(&self.v, f, &mut *vtf);
+                blas::matmul_into(&self.u, &*vtf, out);
+            }
+            Precision::F32 => {
+                // staged f32 operands, f64 accumulation (module header)
+                let isa = simd::active();
+                let m = self.u.rows();
+                let mut st = self.stage32.lock().unwrap_or_else(|e| e.into_inner());
+                let (fstage, pstage) = &mut *st;
+                let sf = fstage.stage(f.data());
+                simd::matmul_tn_f32_into(isa, &self.v32, m, l, sf, k, &mut vtf);
+                let sp = pstage.stage(vtf.data());
+                simd::matmul_f32_into(isa, &self.u32, m, l, sp, k, out);
+            }
+        }
     }
 
     fn fro_norm_sq(&self) -> f64 {
@@ -103,7 +151,8 @@ impl SymOp for LaiOp {
 }
 
 /// Build the LAI (Apx-EVD) per the options' power policy, timing it as
-/// setup + MM work.
+/// setup + MM work. The returned operator applies at the options'
+/// resolved compute precision (the Apx-EVD itself is always f64).
 pub fn build_lai<X: SymOp>(
     x: &X,
     opts: &SymNmfOptions,
@@ -118,7 +167,8 @@ pub fn build_lai<X: SymOp>(
     };
     let secs = sw.elapsed_secs();
     phases.add(PHASE_MM, std::time::Duration::from_secs_f64(secs));
-    (LaiOp::new(&evd, x), secs, evd)
+    let op = LaiOp::new(&evd, x).with_precision(opts.resolved_precision());
+    (op, secs, evd)
 }
 
 /// LAI-SymNMF with alternating updates (Alg. LAI-SymNMF); set
@@ -277,6 +327,35 @@ mod tests {
             scratch_ptr,
             "LaiOp scratch must be reused across applies"
         );
+    }
+
+    /// The f32-staged apply tracks the f64 apply to f32-level accuracy
+    /// and is deterministic (bitwise-equal across repeated calls).
+    #[test]
+    fn f32_apply_tracks_f64_and_is_deterministic() {
+        let x = planted(60, 3, 21);
+        let opts = SymNmfOptions::new(3);
+        let mut phases = PhaseTimer::new();
+        let mut rng = Pcg64::seed_from_u64(9);
+        let (lai, _s, _e) = build_lai(&x, &opts, &mut rng, &mut phases);
+        // identical Apx-EVD (same seed), f32 apply tier
+        let mut rng = Pcg64::seed_from_u64(9);
+        let opts32 = opts.clone().with_precision(Precision::F32);
+        let (lai32, _s, _e) = build_lai(&x, &opts32, &mut rng, &mut phases);
+
+        let mut rng = Pcg64::seed_from_u64(33);
+        let f = DenseMat::gaussian(60, 3, &mut rng);
+        let exact = lai.apply(&f);
+        let mut out = DenseMat::zeros(60, 3);
+        lai32.apply_into(&f, &mut out);
+        let rel = exact.diff_fro(&out) / exact.fro_norm();
+        assert!(rel < 1e-4, "f32 apply must track f64: rel={rel}");
+
+        let mut again = DenseMat::zeros(60, 3);
+        lai32.apply_into(&f, &mut again);
+        for (a, b) in out.data().iter().zip(again.data()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "f32 apply must be deterministic");
+        }
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Shared configuration for all SymNMF solvers.
 
+use crate::linalg::Precision;
 use crate::nls::UpdateRule;
 
 /// Options shared by the ANLS/HALS/PGNCG/LAI/LvS drivers. Defaults follow
@@ -38,6 +39,13 @@ pub struct SymNmfOptions {
     /// Used e.g. to study the hybrid sampler along a converged trajectory
     /// (Fig. 6) or to chain solvers.
     pub warm_start: Option<crate::linalg::DenseMat>,
+    /// compute precision of the **sketched** inner GEMMs (Compressed /
+    /// LAI apply only — dense methods, Gram accumulation, and the
+    /// residual/stopping rule always run in f64). `None` defers to the
+    /// `SYMNMF_PRECISION` environment variable (unset → f64). Not part
+    /// of the checkpoint: resuming is only bitwise under identical
+    /// options, and precision is an option like any other.
+    pub precision: Option<Precision>,
 }
 
 /// Power-iteration policy for the range finder.
@@ -88,6 +96,7 @@ impl SymNmfOptions {
             tau: Tau::OneOverS,
             cg_iters: 20,
             warm_start: None,
+            precision: None,
         }
     }
 
@@ -99,6 +108,17 @@ impl SymNmfOptions {
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
+    }
+
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = Some(precision);
+        self
+    }
+
+    /// The compute precision the sketched pipelines should use: the
+    /// explicit option if set, else `SYMNMF_PRECISION` (unset → f64).
+    pub fn resolved_precision(&self) -> Precision {
+        self.precision.unwrap_or_else(Precision::from_env)
     }
 
     /// l = k + ρ, the sketch width.
@@ -137,5 +157,15 @@ mod tests {
     fn samples_floor_is_k_plus_one() {
         let o = SymNmfOptions::new(16);
         assert_eq!(o.effective_samples(10), 17);
+    }
+
+    #[test]
+    fn precision_explicit_option_wins_over_env_default() {
+        let o = SymNmfOptions::new(4);
+        assert!(o.precision.is_none(), "default defers to SYMNMF_PRECISION");
+        let o = o.with_precision(Precision::F32);
+        assert_eq!(o.resolved_precision(), Precision::F32);
+        let o = o.with_precision(Precision::F64);
+        assert_eq!(o.resolved_precision(), Precision::F64);
     }
 }

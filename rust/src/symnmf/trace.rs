@@ -30,6 +30,7 @@
 //! the token between steps, so "cancel after record n" always aborts
 //! before step n+1 regardless of wall clock).
 
+use crate::linalg::simd;
 use crate::symnmf::engine::{CancelToken, TraceSink};
 use crate::symnmf::metrics::IterRecord;
 use crate::util::json::Json;
@@ -161,9 +162,16 @@ impl JsonlSink {
 impl TraceSink for JsonlSink {
     fn on_stage(&mut self, label: &str) {
         self.stage = label.to_string();
+        // the stage line doubles as the slice header: it carries the
+        // kernel ISA the writing process dispatched (`linalg::simd`), so
+        // a stitched trace records which dispatch produced each slice —
+        // a resumed slice on different hardware is visible in the file.
+        // Kept on the existing stage line (not a separate header line) so
+        // the line-count contract of the prefix-durability tests holds.
         let line = Json::obj(vec![
             ("type", Json::Str("stage".to_string())),
             ("label", Json::Str(label.to_string())),
+            ("isa", Json::Str(simd::active().as_str().to_string())),
         ]);
         self.emit(&line);
     }
@@ -207,7 +215,9 @@ pub struct CsvSink {
     error: Option<String>,
 }
 
-/// The [`CsvSink`] column schema.
+/// The [`CsvSink`] column schema. Frozen — downstream plotters parse it
+/// positionally, so the kernel-ISA annotation lives only in the JSONL
+/// stage lines; CSV consumers needing it should trace as JSONL.
 pub const CSV_HEADER: &str =
     "stage,iter,time_secs,residual,proj_grad,mm_secs,solve_secs,sample_secs";
 
@@ -356,6 +366,11 @@ mod tests {
         let stage = Json::parse(lines[0]).expect("stage line");
         assert_eq!(stage.get("type").and_then(Json::as_str), Some("stage"));
         assert_eq!(stage.get("label").and_then(Json::as_str), Some("BPP"));
+        assert_eq!(
+            stage.get("isa").and_then(Json::as_str),
+            Some(simd::active().as_str()),
+            "stage line records the writing process's kernel dispatch"
+        );
         let it = Json::parse(lines[2]).expect("iter line");
         assert_eq!(it.get("iter").and_then(Json::as_usize), Some(1));
         assert_eq!(it.get("stage").and_then(Json::as_str), Some("BPP"));

@@ -17,6 +17,15 @@ Bootstrap behaviour: if the baseline has no measured rows at all (e.g.
 the committed file is the empty bootstrap placeholder produced before
 any machine ran the bench), the check passes with a notice so the first
 CI run can publish real numbers to commit as the next baseline.
+
+Provenance: the bench header records the dispatched kernel `isa` and the
+`hostname` the numbers were measured on. Numbers taken under different
+dispatch (or on a different box) are not comparable — a scalar baseline
+vs an AVX-512 run would "regress" or "improve" by 2-8x without any code
+change. When both files carry a value for a provenance field and the
+values differ, the gate prints a loud WARNING and skips entirely
+(exit 0): cross-host deltas are noise, not regressions. A missing/null
+field on either side gates normally (pre-provenance baselines).
 """
 
 import argparse
@@ -41,15 +50,28 @@ DEFAULT_ALLOW_NOISY = [
 
 
 def load_rows(path):
+    """Returns (rows-by-(op, shape), provenance-header) for a bench file."""
     with open(path) as fh:
         doc = json.load(fh)
     rows = {}
     for rec in doc.get("kernels", []):
         rows[(rec["op"], rec.get("shape", ""))] = rec
-    return rows
+    header = {"isa": doc.get("isa"), "hostname": doc.get("hostname")}
+    return rows, header
 
 
-def main():
+def provenance_mismatch(base_header, cur_header):
+    """Fields where baseline and current both carry a value and disagree."""
+    return [
+        (field, base_header[field], cur_header[field])
+        for field in ("isa", "hostname")
+        if base_header.get(field) is not None
+        and cur_header.get(field) is not None
+        and base_header[field] != cur_header[field]
+    ]
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", required=True, help="committed BENCH_kernels.json")
     ap.add_argument("--current", required=True, help="freshly generated BENCH_kernels.json")
@@ -65,11 +87,24 @@ def main():
         default=0.05,
         help="allowed fractional GFLOP/s drop per gated row (default 5%%)",
     )
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     allow_noisy = {op.strip() for op in args.allow_noisy.split(",") if op.strip()}
-    base = load_rows(args.baseline)
-    cur = load_rows(args.current)
+    base, base_header = load_rows(args.baseline)
+    cur, cur_header = load_rows(args.current)
+
+    mismatched = provenance_mismatch(base_header, cur_header)
+    if mismatched:
+        for field, bval, cval in mismatched:
+            print(
+                f"WARNING: baseline {field}={bval!r} but current run has "
+                f"{field}={cval!r} — these numbers are not comparable; "
+                "SKIPPING the regression gate for this pair. Re-measure "
+                "the baseline under the same dispatch/host to restore "
+                "gating.",
+                file=sys.stderr,
+            )
+        return 0
 
     failures = []
     gated = 0

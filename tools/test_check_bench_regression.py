@@ -1,0 +1,116 @@
+#!/usr/bin/env python3
+"""Fixture tests for the bench regression gate (tools/check_bench_regression.py).
+
+Exercises the gate against synthetic BENCH_kernels.json pairs: a genuine
+same-provenance regression must fail, a cross-ISA/hostname pair must be
+skipped with a loud warning (exit 0), and pre-provenance files (no
+isa/hostname header) must keep gating exactly as before.
+
+    python3 tools/test_check_bench_regression.py
+"""
+
+import io
+import json
+import os
+import sys
+import tempfile
+import unittest
+from contextlib import redirect_stderr, redirect_stdout
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import check_bench_regression as gate  # noqa: E402
+
+
+def bench_doc(rows, isa=None, hostname=None):
+    doc = {"version": 1, "bench": "kernels", "kernels": rows}
+    if isa is not None:
+        doc["isa"] = isa
+    if hostname is not None:
+        doc["hostname"] = hostname
+    return doc
+
+
+def row(op, gflops, secs=0.01, shape="2048x32"):
+    return {"op": op, "shape": shape, "secs_per_iter": secs, "gflops": gflops}
+
+
+class GateFixtureTest(unittest.TestCase):
+    def setUp(self):
+        self.tmp = tempfile.TemporaryDirectory()
+        self.addCleanup(self.tmp.cleanup)
+
+    def write(self, name, doc):
+        path = os.path.join(self.tmp.name, name)
+        with open(path, "w") as fh:
+            json.dump(doc, fh)
+        return path
+
+    def run_gate(self, base_doc, cur_doc):
+        base = self.write("base.json", base_doc)
+        cur = self.write("cur.json", cur_doc)
+        out, err = io.StringIO(), io.StringIO()
+        with redirect_stdout(out), redirect_stderr(err):
+            code = gate.main(["--baseline", base, "--current", cur])
+        return code, out.getvalue(), err.getvalue()
+
+    def test_same_isa_regression_fails(self):
+        base = bench_doc([row("matmul_nt_simd", 20.0)], isa="avx2", hostname="ci-1")
+        cur = bench_doc([row("matmul_nt_simd", 10.0)], isa="avx2", hostname="ci-1")
+        code, _, err = self.run_gate(base, cur)
+        self.assertEqual(code, 1, "a 50% drop under identical provenance must fail")
+        self.assertIn("regressed", err)
+
+    def test_same_isa_within_tolerance_passes(self):
+        base = bench_doc([row("matmul_nt_simd", 20.0)], isa="avx2", hostname="ci-1")
+        cur = bench_doc([row("matmul_nt_simd", 19.5)], isa="avx2", hostname="ci-1")
+        code, out, _ = self.run_gate(base, cur)
+        self.assertEqual(code, 0)
+        self.assertIn("OK", out)
+
+    def test_different_isa_skips_with_warning(self):
+        base = bench_doc([row("matmul_nt_simd", 20.0)], isa="avx512", hostname="ci-1")
+        cur = bench_doc([row("matmul_nt_simd", 5.0)], isa="scalar", hostname="ci-1")
+        code, _, err = self.run_gate(base, cur)
+        self.assertEqual(code, 0, "cross-ISA pairs are noise, not regressions")
+        self.assertIn("WARNING", err)
+        self.assertIn("isa", err)
+        self.assertIn("not comparable", err)
+
+    def test_different_hostname_skips_with_warning(self):
+        base = bench_doc([row("gram_into", 30.0)], isa="avx2", hostname="box-a")
+        cur = bench_doc([row("gram_into", 3.0)], isa="avx2", hostname="box-b")
+        code, _, err = self.run_gate(base, cur)
+        self.assertEqual(code, 0)
+        self.assertIn("WARNING", err)
+        self.assertIn("hostname", err)
+
+    def test_missing_header_gates_normally(self):
+        # pre-provenance baseline (no isa/hostname): the gate must still
+        # catch regressions rather than treat the absence as a mismatch
+        base = bench_doc([row("matmul_nt_packed", 20.0)])
+        cur = bench_doc([row("matmul_nt_packed", 10.0)], isa="avx2", hostname="ci-1")
+        code, _, err = self.run_gate(base, cur)
+        self.assertEqual(code, 1, "null provenance on one side still gates")
+        self.assertIn("regressed", err)
+
+    def test_bootstrap_placeholder_passes(self):
+        base = bench_doc([], isa=None, hostname=None)
+        cur = bench_doc([row("matmul_nt_simd", 20.0)], isa="avx2", hostname="ci-1")
+        code, out, _ = self.run_gate(base, cur)
+        self.assertEqual(code, 0)
+        self.assertIn("bootstrap", out)
+
+    def test_missing_gated_row_fails(self):
+        base = bench_doc(
+            [row("matmul_nt_simd", 20.0), row("gram_into", 30.0, shape="100000x16")],
+            isa="avx2",
+            hostname="ci-1",
+        )
+        cur = bench_doc([row("matmul_nt_simd", 20.0)], isa="avx2", hostname="ci-1")
+        code, _, err = self.run_gate(base, cur)
+        self.assertEqual(code, 1, "a vanished gated row must fail")
+        self.assertIn("missing from the", err)
+
+
+if __name__ == "__main__":
+    unittest.main()
