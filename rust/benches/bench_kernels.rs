@@ -4,9 +4,10 @@
 //! Gram, SpMM (column-tiled vs untiled on wide k), the transpose-free
 //! HALS sweep vs the staged-transpose reference, batched vs serial
 //! multi-seed trials (plus batched under an explicit thread budget),
-//! CholeskyQR + leverage scores, BPP multi-RHS solve, sampled SpMM, and
-//! the PJRT round-trip for the same product — with achieved GF/s against
-//! the 1-core f64 roofline.
+//! CholeskyQR + leverage scores, BPP multi-RHS solve, sampled SpMM, the
+//! out-of-core SymPacked apply vs its resident twin plus operator-cache
+//! hit/miss round trips, and the PJRT round-trip for the same product —
+//! with achieved GF/s against the 1-core f64 roofline.
 //!
 //! Besides the stdout report, emits machine-readable
 //! **`BENCH_kernels.json`** at the repo root (op, shape, secs/iter,
@@ -17,12 +18,16 @@
 use std::rc::Rc;
 use symnmf::coordinator::driver::{run_trials, run_trials_batched};
 use symnmf::coordinator::Method;
-use symnmf::linalg::{blas, qr, simd, DenseMat, KernelIsa, PanelBuf, Precision, SymPacked};
+use symnmf::linalg::{
+    blas, qr, simd, spill, DenseMat, KernelIsa, PanelBuf, Precision, SymPacked, SymPackedSpilled,
+};
 use symnmf::nls::{bpp, hals, UpdateRule};
 use symnmf::randnla::leverage::sample_hybrid;
 use symnmf::randnla::SymOp;
 use symnmf::runtime::{PjrtRuntime, PjrtSymOp};
-use symnmf::serve::{JobSpec, Scheduler, SchedulerConfig};
+use symnmf::serve::{
+    CachedOperator, JobSpec, OpCache, OpCacheConfig, OpKey, Scheduler, SchedulerConfig,
+};
 use symnmf::sparse::CsrMat;
 use symnmf::symnmf::anls::{resolve_alpha, run_alternating_loop, symnmf_anls, Metrics};
 use symnmf::symnmf::compressed::compressed_symnmf;
@@ -197,6 +202,57 @@ fn main() {
         "packed vs full-storage SYMM at m={m2}, k={k2}: {:.2}% time",
         100.0 * r_packedx.median / r_into.median.max(1e-300)
     );
+
+    // --- out-of-core SymPacked: the same product streamed panel-by-panel
+    // from the checksummed spill file — the ratio to the resident SIMD
+    // row is the price of serving a graph that lost its cache residency
+    // (bitwise-identical output, so it is ONLY a time tax)
+    let bench_tmp =
+        std::env::temp_dir().join(format!("symnmf-bench-spill-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&bench_tmp);
+    std::fs::create_dir_all(&bench_tmp).expect("create bench temp dir");
+    let spill_path = bench_tmp.join("bench.sympk");
+    spill::write_spill(&xp, &spill_path).expect("write spill file");
+    let xs = SymPackedSpilled::open(&spill_path).expect("open spill file");
+    let r_spilled = bench(&format!("spilled X·F apply_into ({m2}x{m2}, k={k2})"), 1, 5, || {
+        xs.apply_into(&f2, &mut out2);
+    });
+    println!("{}   {:.2} GF/s", r_spilled.report(), gflops(flops2, r_spilled.median));
+    record(
+        &mut records,
+        "symm_spilled_apply_into",
+        &format!("{m2}x{m2}·{m2}x{k2}"),
+        &r_spilled,
+        flops2,
+    );
+    println!(
+        "spilled vs resident packed SYMM at m={m2}, k={k2}: {:.2}% time",
+        100.0 * r_spilled.median / r_packedx_simd.median.max(1e-300)
+    );
+
+    // --- operator cache: a hit must skip construction entirely (the row
+    // is bookkeeping-only, orders of magnitude under the miss row, which
+    // pays the full SymPacked build)
+    let cache = OpCache::new(OpCacheConfig::new(bench_tmp.join("opcache")));
+    let key = OpKey::of_packed(&xp);
+    drop(cache.pin_or_build(&key, || CachedOperator::Packed(SymPacked::from_dense(&x2))));
+    let r_hit = bench(&format!("opcache pin hit ({m2}x{m2} packed)"), 10, 9, || {
+        std::hint::black_box(&cache.pin_or_build(&key, || unreachable!("hit must not build")));
+    });
+    println!("{}", r_hit.report());
+    record(&mut records, "opcache_hit", &format!("{m2}x{m2} packed"), &r_hit, 0.0);
+    let cache_dir = bench_tmp.join("opcache-miss");
+    let r_miss = bench(&format!("opcache miss + build ({m2}x{m2} packed)"), 1, 5, || {
+        let fresh = OpCache::new(OpCacheConfig::new(cache_dir.clone()));
+        drop(fresh.pin_or_build(&key, || CachedOperator::Packed(SymPacked::from_dense(&x2))));
+    });
+    println!("{}", r_miss.report());
+    record(&mut records, "opcache_miss_build", &format!("{m2}x{m2} packed"), &r_miss, 0.0);
+    println!(
+        "opcache hit vs miss+build: {:.4}% time",
+        100.0 * r_hit.median / r_miss.median.max(1e-300)
+    );
+    let _ = std::fs::remove_dir_all(&bench_tmp);
 
     // --- packed-panel NT GEMM vs the unpacked 2×4 reference ---
     // (the W·Hᵀ reconstruction shape at the acceptance m=2048/k=32)

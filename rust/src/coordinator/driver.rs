@@ -21,7 +21,7 @@ use crate::clustering::ari::adjusted_rand_index;
 use crate::linalg::{DenseMat, SymPacked};
 use crate::nls::UpdateRule;
 use crate::randnla::SymOp;
-use crate::serve::{sanitize_id, JobSpec, Scheduler, SchedulerConfig};
+use crate::serve::{sanitize_id, CachedOperator, JobSpec, OpCache, OpKey, Scheduler, SchedulerConfig};
 use crate::symnmf::anls::symnmf_anls_run;
 use crate::symnmf::compressed::compressed_symnmf_run;
 use crate::symnmf::engine::{Checkpoint, EngineRun, RunControl, TraceSink};
@@ -325,6 +325,48 @@ pub fn run_trials_batched_controlled<X: SymOp + Sync>(
     (aggregate(method.label(), results, labels), checkpoints)
 }
 
+/// [`run_trials_batched`] against a **cached** operator: the fleet does
+/// not borrow X — every trial job pins `key` in the shared [`OpCache`]
+/// per slice (building via `build` only on a cold miss), so many fleets
+/// over many graphs share one resident-bytes budget and the cache may
+/// spill or drop the operator between slices of a running fleet.
+///
+/// Per-seed results are bitwise-identical to [`run_trials_batched`]
+/// over the same operator (a test pins this), whether a trial's slice
+/// was served resident or from the out-of-core tier — the spilled apply
+/// is bitwise-identical to the resident apply (`linalg::spill`).
+pub fn run_trials_cached<F>(
+    method: Method,
+    cache: &std::sync::Arc<OpCache>,
+    key: OpKey,
+    build: F,
+    base: &SymNmfOptions,
+    labels: Option<&[usize]>,
+    trials: usize,
+) -> MethodStats
+where
+    F: Fn() -> CachedOperator + Send + Sync,
+{
+    assert!(trials >= 1);
+    let build = std::sync::Arc::new(build);
+    let mut sched = Scheduler::new(SchedulerConfig::default());
+    let handles: Vec<_> = (0..trials)
+        .map(|t| {
+            let spec = JobSpec::new(format!("trial-{t}"), method, trial_options(base, t));
+            let b = std::sync::Arc::clone(&build);
+            sched
+                .submit_cached(cache, key.clone(), move || b(), spec)
+                .expect("trial job submission cannot fail")
+        })
+        .collect();
+    sched.drain();
+    let results = handles
+        .iter()
+        .map(|h| h.outcome().expect("drained trial job has an outcome").result)
+        .collect();
+    aggregate(method.label(), results, labels)
+}
+
 /// [`run_trials`] with per-trial streaming telemetry: each trial runs as
 /// a serve job whose convergence records stream to
 /// `<dir>/<label>_t<trial>.<ext>` (flushed per record — the curves are
@@ -612,6 +654,86 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Acceptance (PR 7): a fleet against a cached operator is bitwise
+    /// equal to the borrowed-operator fleet, the cache builds X exactly
+    /// once for the whole fleet, and a budget small enough to force
+    /// spill-eviction between slices changes counters but not one bit
+    /// of the results.
+    #[test]
+    fn cached_trials_bitwise_match_batched_and_build_once() {
+        use crate::serve::OpCacheConfig;
+        let (x, labels) = planted(48, 3, 13);
+        let mut opts = SymNmfOptions::new(3);
+        opts.max_iters = 6;
+        let method = Method::Exact(UpdateRule::Hals);
+        let packed = SymPacked::from_dense(&x);
+        let key = OpKey::of_packed(&packed);
+        let plain = run_trials_batched(method, &packed, &opts, Some(&labels), 3);
+
+        let dir = std::env::temp_dir()
+            .join(format!("symnmf-drv-cache-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let check = |stats: &MethodStats, tag: &str| {
+            for (t, (a, b)) in plain.trials.iter().zip(&stats.trials).enumerate() {
+                assert_eq!(a.iters(), b.iters(), "{tag} trial {t}");
+                for (va, vb) in a.h.data().iter().zip(b.h.data()) {
+                    assert_eq!(va.to_bits(), vb.to_bits(), "{tag} trial {t}: H differs");
+                }
+                for (ra, rb) in a.records.iter().zip(&b.records) {
+                    assert_eq!(
+                        ra.residual.to_bits(),
+                        rb.residual.to_bits(),
+                        "{tag} trial {t}: residual differs"
+                    );
+                }
+            }
+        };
+
+        // unbudgeted: 3 trials × 1 slice → one build, two resident hits
+        let cache = std::sync::Arc::new(OpCache::new(OpCacheConfig::new(dir.clone())));
+        let xc = x.clone();
+        let cached = run_trials_cached(
+            method,
+            &cache,
+            key.clone(),
+            move || CachedOperator::Packed(SymPacked::from_dense(&xc)),
+            &opts,
+            Some(&labels),
+            3,
+        );
+        check(&cached, "unbudgeted");
+        let s = cache.stats();
+        assert_eq!(s.misses, 1, "fleet must build X exactly once");
+        assert_eq!(s.hits + s.spilled_hits, 2);
+        assert_eq!(s.evictions, 0);
+
+        // zero budget: the operator is spill-evicted at every unpin;
+        // whether later pins overlap (resident hits) or fault from the
+        // spill file is scheduling-dependent, but the build still runs
+        // once and every result is bitwise unchanged
+        let cache = std::sync::Arc::new(OpCache::new(
+            OpCacheConfig::new(dir.clone()).with_budget_mb(0.0),
+        ));
+        let xc = x.clone();
+        let spilled = run_trials_cached(
+            method,
+            &cache,
+            key,
+            move || CachedOperator::Packed(SymPacked::from_dense(&xc)),
+            &opts,
+            Some(&labels),
+            3,
+        );
+        check(&spilled, "budgeted");
+        let s = cache.stats();
+        assert_eq!(s.misses, 1, "spill-eviction must not force a rebuild");
+        assert!(s.evictions >= 1, "zero budget must evict: {s:?}");
+        assert!(s.spill_writes >= 1, "packed eviction must spill: {s:?}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     /// A fleet under a zero deadline returns every trial's initial

@@ -8,10 +8,12 @@
 //! zero-allocation per-iteration buffer workspace ([`workspace`]) behind
 //! the `apply_into` kernel dispatch protocol, and the packed-triangular
 //! symmetric storage ([`packed`]) that halves the resident footprint of
-//! the dense data matrix. The hot kernels are runtime-dispatched over
-//! explicit SIMD tiers ([`simd`]: AVX-512F/AVX2+FMA/NEON with the
-//! scalar bodies kept as oracles, selected once per process from
-//! `SYMNMF_KERNEL` or feature detection).
+//! the dense data matrix, with an out-of-core tier ([`spill`]) that
+//! streams the same panels from a checksummed on-disk file. The hot
+//! kernels are runtime-dispatched over explicit SIMD tiers ([`simd`]:
+//! AVX-512F/AVX2+FMA/NEON with the scalar bodies kept as oracles,
+//! selected once per process from `SYMNMF_KERNEL` or feature
+//! detection).
 
 pub mod blas;
 pub mod chol;
@@ -20,9 +22,11 @@ pub mod eig;
 pub mod packed;
 pub mod qr;
 pub mod simd;
+pub mod spill;
 pub mod workspace;
 
 pub use dense::DenseMat;
 pub use packed::SymPacked;
+pub use spill::SymPackedSpilled;
 pub use simd::{KernelIsa, Precision};
 pub use workspace::{F32Buf, IterWorkspace, PanelBuf, UpdateScratch};

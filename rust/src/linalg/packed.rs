@@ -58,8 +58,24 @@
 //! weighted twice) and cached, so the SymOp surface stays O(1) where the
 //! dense operator rescans X.
 //!
+//! ## Out-of-core tier
+//!
+//! Because every tile lives at a precomputed offset (`block_off`), the
+//! packed payload is directly spillable: `linalg::spill` serializes it
+//! to a versioned, checksummed panel file (header: dim, block,
+//! packed_len, cached stats; little-endian f64 tiles at
+//! `HEADER_LEN + 8·block_off[p]`), and [`SymPackedSpilled`] streams
+//! tiles back through a small reusable read-buffer ring while driving
+//! the **same** [`tile_pair_apply_slice`] kernel on the **same**
+//! [`pair_pool_accumulate`] harness — which is why the spilled apply is
+//! bitwise-identical to the resident one on every kernel tier. See
+//! `linalg/spill.rs` for the file format, and `serve/opcache.rs` for
+//! the eviction policy that decides when an operator moves to this
+//! tier.
+//!
 //! [`symm_block_pair`]: crate::linalg::blas
 //! [`pair_pool_accumulate`]: crate::linalg::blas
+//! [`SymPackedSpilled`]: crate::linalg::spill::SymPackedSpilled
 
 use crate::linalg::blas::{axpy, pair_pool_accumulate, pair_to_blocks, SYMM_BLOCK};
 use crate::linalg::simd::{self, KernelIsa};
@@ -89,9 +105,11 @@ pub struct SymPacked {
 
 /// Block layout of the packed upper triangle: (nb, per-tile prefix
 /// offsets, total stored elements). One definition shared by every
-/// constructor, so the dense and streaming scatter paths can never
-/// drift apart.
-fn block_layout(m: usize, block: usize) -> (usize, Vec<usize>, usize) {
+/// constructor — and by the spill reader (`linalg::spill`), which
+/// recomputes the layout from the header's (dim, block) and rejects a
+/// file whose recorded `packed_len` disagrees — so the resident,
+/// streaming, and on-disk addressing can never drift apart.
+pub(crate) fn block_layout(m: usize, block: usize) -> (usize, Vec<usize>, usize) {
     let nb = m.div_ceil(block);
     let npairs = nb * (nb + 1) / 2;
     let bdim = |b: usize| (m - b * block).min(block);
@@ -208,7 +226,7 @@ impl SymPacked {
     /// `to_dense()`, so a huge sparse-to-dense promotion never holds the
     /// full m² square array (peak resident: the packed triangle plus the
     /// CSR itself). Bitwise-identical to the densifying path
-    /// ([`SymPacked::from_csr_via_dense`], the pinning oracle): the
+    /// (`from_csr_via_dense`, the test-only pinning oracle): the
     /// scatter writes exactly the entries the dense pack would copy
     /// (upper triangle wins, diagonal-tile lower entries mirrored from
     /// the upper), and the aggregate statistics are accumulated in a
@@ -263,8 +281,10 @@ impl SymPacked {
 
     /// The pre-streaming construction — densify through
     /// [`CsrMat::to_dense`], then pack. Kept as the pinning oracle for
-    /// [`SymPacked::from_csr`]; materializes the full m² array, so use it
-    /// only on shapes where that is acceptable.
+    /// [`SymPacked::from_csr`]; it materializes the full m² array, so it
+    /// is compiled only into the test harness — release builds carry no
+    /// densifying path.
+    #[cfg(test)]
     pub fn from_csr_via_dense(x: &CsrMat) -> SymPacked {
         SymPacked::from_dense(&x.to_dense())
     }
@@ -282,6 +302,19 @@ impl SymPacked {
     /// Stored elements — ≈ m(m + block)/2, vs m² for the full array.
     pub fn packed_len(&self) -> usize {
         self.data.len()
+    }
+
+    /// The packed payload (tiles block-row-major) — what the spill
+    /// writer serializes verbatim.
+    pub(crate) fn payload(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Cached aggregate statistics `(fro_sq, max, mean)`, exposed so the
+    /// spill header can carry them bit for bit (a spilled operator never
+    /// rescans the payload to answer the SymOp stat surface).
+    pub(crate) fn stats(&self) -> (f64, f64, f64) {
+        (self.fro_sq, self.max, self.mean)
     }
 
     /// Rows/cols of block index `b` (edge blocks truncated).
@@ -373,41 +406,62 @@ impl SymPacked {
         jb: usize,
         acc: &mut [f64],
     ) {
-        let block = self.block;
-        let m = self.m;
-        let i0 = ib * block;
-        let i1 = (i0 + block).min(m);
-        let j0 = jb * block;
-        let j1 = (j0 + block).min(m);
-        let bj = j1 - j0;
-        let bd = self.tile(ib, jb);
-        if ib == jb {
-            for i in i0..i1 {
-                let xrow = &bd[(i - i0) * bj..(i - i0 + 1) * bj];
-                let acci = &mut acc[i * k..(i + 1) * k];
-                for (jj, &v) in xrow.iter().enumerate() {
-                    if v != 0.0 {
-                        let j = j0 + jj;
-                        simd::axpy_fma(isa, v, &fd[j * k..(j + 1) * k], acci);
-                    }
-                }
-            }
-            return;
-        }
-        // Off-diagonal tile: i1 <= j0 by construction, so the I-panel
-        // and J-panel of the accumulator can be split and written
-        // simultaneously.
-        let (acc_i, acc_j) = acc.split_at_mut(j0 * k);
+        tile_pair_apply_slice(isa, self.m, self.block, ib, jb, self.tile(ib, jb), fd, k, acc);
+    }
+}
+
+/// Apply one row-major tile (ib, jb) of the packed layout to F,
+/// accumulating into the m×k accumulator — the packed twin of the dense
+/// `symm_block_pair`, hoisted out of [`SymPacked`] so the resident and
+/// spilled operators drive the **one** kernel body: `bd` is the tile
+/// slice wherever it lives (the resident payload, or a just-read spill
+/// ring buffer). Bitwise parity between the two tiers reduces to both
+/// calling this function with identical arguments in the identical
+/// [`pair_pool_accumulate`] slot order.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn tile_pair_apply_slice(
+    isa: KernelIsa,
+    m: usize,
+    block: usize,
+    ib: usize,
+    jb: usize,
+    bd: &[f64],
+    fd: &[f64],
+    k: usize,
+    acc: &mut [f64],
+) {
+    let i0 = ib * block;
+    let i1 = (i0 + block).min(m);
+    let j0 = jb * block;
+    let j1 = (j0 + block).min(m);
+    let bj = j1 - j0;
+    debug_assert_eq!(bd.len(), (i1 - i0) * bj);
+    if ib == jb {
         for i in i0..i1 {
             let xrow = &bd[(i - i0) * bj..(i - i0 + 1) * bj];
-            let fi = &fd[i * k..(i + 1) * k];
-            let acci = &mut acc_i[i * k..(i + 1) * k];
+            let acci = &mut acc[i * k..(i + 1) * k];
             for (jj, &v) in xrow.iter().enumerate() {
                 if v != 0.0 {
                     let j = j0 + jj;
                     simd::axpy_fma(isa, v, &fd[j * k..(j + 1) * k], acci);
-                    simd::axpy_fma(isa, v, fi, &mut acc_j[(j - j0) * k..(j - j0 + 1) * k]);
                 }
+            }
+        }
+        return;
+    }
+    // Off-diagonal tile: i1 <= j0 by construction, so the I-panel
+    // and J-panel of the accumulator can be split and written
+    // simultaneously.
+    let (acc_i, acc_j) = acc.split_at_mut(j0 * k);
+    for i in i0..i1 {
+        let xrow = &bd[(i - i0) * bj..(i - i0 + 1) * bj];
+        let fi = &fd[i * k..(i + 1) * k];
+        let acci = &mut acc_i[i * k..(i + 1) * k];
+        for (jj, &v) in xrow.iter().enumerate() {
+            if v != 0.0 {
+                let j = j0 + jj;
+                simd::axpy_fma(isa, v, &fd[j * k..(j + 1) * k], acci);
+                simd::axpy_fma(isa, v, fi, &mut acc_j[(j - j0) * k..(j - j0 + 1) * k]);
             }
         }
     }

@@ -1,0 +1,733 @@
+//! Out-of-core tier for [`SymPacked`]: a versioned on-disk panel file
+//! plus a streaming operator that faults tiles back on demand.
+//!
+//! The packed block-panel layout (see `linalg::packed`) is contiguous
+//! and offset-addressable — tile p lives at `block_off[p]` — so spilling
+//! is a straight serialization of the payload, and a spilled apply can
+//! address any tile with one positioned read. No mmap, no dependencies:
+//! reads go through `read_exact_at` (pread) into a small reusable
+//! buffer ring.
+//!
+//! ## File format (version 1)
+//!
+//! All integers and float bit patterns little-endian:
+//!
+//! ```text
+//!   offset  size  field
+//!   0       8     magic "SYMPKSPL"
+//!   8       4     format version (u32, = 1)
+//!   12      4     reserved (u32, = 0)
+//!   16      8     dim m (u64)
+//!   24      8     block size (u64)
+//!   32      8     packed_len: stored f64 count (u64)
+//!   40      8     fro_sq bit pattern (‖X‖²_F, cached stat)
+//!   48      8     max bit pattern (max entry, cached stat)
+//!   56      8     mean bit pattern (mean entry, cached stat)
+//!   64      8     FNV-1a 64 checksum over the payload bytes (u64)
+//!   72      8·packed_len   payload: the packed tiles, f64 LE, in
+//!                 block-row-major order — tile p starts at byte
+//!                 72 + 8·block_off[p]
+//! ```
+//!
+//! The cached aggregate statistics ride in the header as raw bit
+//! patterns, so a spilled operator answers the [`SymOp`] stat surface
+//! bitwise-identically to the resident operator without touching the
+//! payload. Files are written via temp + rename (never a torn file at
+//! the final path), and [`SymPackedSpilled::open`] validates magic,
+//! version, layout (the reader recomputes `block_layout` from (dim,
+//! block) and the recorded `packed_len` must match), exact file size
+//! (truncation), and the payload checksum **once at open** — after
+//! that, per-tile reads are trusted and cheap.
+//!
+//! ## Bitwise contract
+//!
+//! [`SymPackedSpilled::apply_blocked_into`] drives the identical
+//! [`tile_pair_apply_slice`] kernel on the identical
+//! [`pair_pool_accumulate`] harness as the resident
+//! [`SymPacked::apply_blocked_into`]; the only difference is where the
+//! tile slice comes from (a ring buffer filled by pread instead of the
+//! resident payload). The result is therefore bitwise-identical to the
+//! resident apply on every `simd::supported()` ISA and under every
+//! thread budget — pinned by the parity tests below.
+//!
+//! [`pair_pool_accumulate`]: crate::linalg::blas::pair_pool_accumulate
+//! [`tile_pair_apply_slice`]: crate::linalg::packed::tile_pair_apply_slice
+
+use std::fs::{self, File};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, MutexGuard};
+
+use crate::linalg::blas::{axpy, pair_pool_accumulate, pair_to_blocks};
+use crate::linalg::packed::{block_layout, tile_pair_apply_slice};
+use crate::linalg::simd::{self, KernelIsa};
+use crate::linalg::{DenseMat, SymPacked};
+use crate::randnla::SymOp;
+use crate::util::threadpool::num_threads;
+
+/// File magic: "SYMPKSPL".
+const MAGIC: [u8; 8] = *b"SYMPKSPL";
+/// Format version this build reads and writes.
+const VERSION: u32 = 1;
+/// Header size in bytes; the payload starts here.
+const HEADER_LEN: usize = 72;
+/// Chunk size (in f64 elements) for streaming writes and checksum scans.
+const IO_CHUNK: usize = 128 * 1024;
+
+/// Streaming FNV-1a 64-bit hash — the zero-dependency content hash used
+/// for both the spill payload checksum and the operator-cache content
+/// keys (`serve::opcache`).
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        self.0 = h;
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn write_f64(&mut self, v: f64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64::new()
+    }
+}
+
+/// Serialize a resident [`SymPacked`] to `path` in the version-1 panel
+/// format, via a same-directory temp file + atomic rename — a reader
+/// never observes a torn file at the final path. The payload checksum
+/// is computed in a first pass over the (memory-resident) payload so the
+/// header can be written up front and the tiles streamed after it.
+pub fn write_spill(sp: &SymPacked, path: &Path) -> Result<(), String> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            fs::create_dir_all(dir)
+                .map_err(|e| format!("spill: create dir {}: {e}", dir.display()))?;
+        }
+    }
+    let data = sp.payload();
+    let mut ck = Fnv64::new();
+    for &v in data {
+        ck.write_f64(v);
+    }
+    let (fro_sq, max, mean) = sp.stats();
+    let mut header = [0u8; HEADER_LEN];
+    header[0..8].copy_from_slice(&MAGIC);
+    header[8..12].copy_from_slice(&VERSION.to_le_bytes());
+    // bytes 12..16 reserved, zero
+    header[16..24].copy_from_slice(&(sp.dim() as u64).to_le_bytes());
+    header[24..32].copy_from_slice(&(sp.block() as u64).to_le_bytes());
+    header[32..40].copy_from_slice(&(data.len() as u64).to_le_bytes());
+    header[40..48].copy_from_slice(&fro_sq.to_le_bytes());
+    header[48..56].copy_from_slice(&max.to_le_bytes());
+    header[56..64].copy_from_slice(&mean.to_le_bytes());
+    header[64..72].copy_from_slice(&ck.finish().to_le_bytes());
+
+    let tmp = path.with_extension(format!("tmp{}", std::process::id()));
+    let res = (|| -> Result<(), String> {
+        let mut f = File::create(&tmp)
+            .map_err(|e| format!("spill: create {}: {e}", tmp.display()))?;
+        f.write_all(&header)
+            .map_err(|e| format!("spill: write header: {e}"))?;
+        let mut buf = Vec::with_capacity(IO_CHUNK.min(data.len().max(1)) * 8);
+        for chunk in data.chunks(IO_CHUNK) {
+            buf.clear();
+            for &v in chunk {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            f.write_all(&buf)
+                .map_err(|e| format!("spill: write payload: {e}"))?;
+        }
+        f.sync_all().map_err(|e| format!("spill: sync: {e}"))?;
+        fs::rename(&tmp, path)
+            .map_err(|e| format!("spill: rename into {}: {e}", path.display()))
+    })();
+    if res.is_err() {
+        let _ = fs::remove_file(&tmp);
+    }
+    res
+}
+
+/// Positioned read that leaves no shared cursor state: pread on unix,
+/// seek_read on windows, and a process-serialized seek+read fallback
+/// elsewhere. Safe to call concurrently on one `&File`.
+fn read_exact_at(file: &File, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
+    #[cfg(unix)]
+    {
+        std::os::unix::fs::FileExt::read_exact_at(file, buf, offset)
+    }
+    #[cfg(windows)]
+    {
+        let mut buf = buf;
+        let mut offset = offset;
+        while !buf.is_empty() {
+            let n = std::os::windows::fs::FileExt::seek_read(file, buf, offset)?;
+            if n == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "spill file shorter than expected",
+                ));
+            }
+            let rest = buf;
+            buf = &mut rest[n..];
+            offset += n as u64;
+        }
+        Ok(())
+    }
+    #[cfg(not(any(unix, windows)))]
+    {
+        use std::io::{Read, Seek, SeekFrom};
+        // no positioned-read primitive: serialize the shared cursor
+        static IO_LOCK: Mutex<()> = Mutex::new(());
+        let _g = IO_LOCK.lock().unwrap();
+        let mut f = file;
+        f.seek(SeekFrom::Start(offset))?;
+        f.read_exact(buf)
+    }
+}
+
+/// One reusable read buffer: raw bytes straight off the pread, plus the
+/// decoded f64 tile. Both grow-only, bounded by the largest tile
+/// (min(block, m)² elements).
+struct RingSlot {
+    bytes: Vec<u8>,
+    vals: Vec<f64>,
+}
+
+/// A [`SymPacked`] whose payload lives on disk: the same block-panel
+/// addressing, but `apply` streams each tile through a small reusable
+/// read-buffer ring instead of indexing resident memory. Construction
+/// ([`SymPackedSpilled::open`]) validates the file fully (magic,
+/// version, layout, size, checksum); after that the operator is
+/// immutable and `Sync` — concurrent pool workers read disjoint tiles
+/// through independent ring slots via positioned reads.
+///
+/// Resident footprint: the `block_off` table plus the ring buffers
+/// (≤ `num_threads() · min(block,m)² · 16` bytes, allocated lazily) —
+/// the payload itself never loads as a whole. The operator cache
+/// (`serve::opcache`) therefore accounts a spilled operator's *payload*
+/// bytes as zero against the resident-X budget and documents the ring
+/// as bounded scratch, like the SYMM accumulator pool.
+pub struct SymPackedSpilled {
+    path: PathBuf,
+    file: File,
+    m: usize,
+    block: usize,
+    nb: usize,
+    /// prefix offsets of each tile in the payload (len = npairs + 1)
+    block_off: Vec<usize>,
+    fro_sq: f64,
+    max: f64,
+    mean: f64,
+    ring: Vec<Mutex<RingSlot>>,
+}
+
+impl std::fmt::Debug for SymPackedSpilled {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SymPackedSpilled")
+            .field("path", &self.path)
+            .field("m", &self.m)
+            .field("block", &self.block)
+            .field("packed_len", &self.packed_len())
+            .finish()
+    }
+}
+
+impl SymPackedSpilled {
+    /// Open and fully validate a version-1 spill file. Every rejection
+    /// names what failed: magic, version, layout, truncation, or
+    /// checksum.
+    pub fn open(path: &Path) -> Result<SymPackedSpilled, String> {
+        let file =
+            File::open(path).map_err(|e| format!("spill: open {}: {e}", path.display()))?;
+        let mut header = [0u8; HEADER_LEN];
+        read_exact_at(&file, &mut header, 0)
+            .map_err(|e| format!("spill: {} too short for header: {e}", path.display()))?;
+        let u64_at = |o: usize| u64::from_le_bytes(header[o..o + 8].try_into().unwrap());
+        if header[0..8] != MAGIC {
+            return Err(format!(
+                "spill: {} is not a SymPacked spill file (bad magic)",
+                path.display()
+            ));
+        }
+        let version = u32::from_le_bytes(header[8..12].try_into().unwrap());
+        if version != VERSION {
+            return Err(format!(
+                "spill: {} has unsupported format version {version} (this build reads {VERSION})",
+                path.display()
+            ));
+        }
+        let m = u64_at(16) as usize;
+        let block = u64_at(24) as usize;
+        let packed_len = u64_at(32) as usize;
+        if block == 0 {
+            return Err(format!("spill: {} header: block size 0", path.display()));
+        }
+        // Size check before the layout allocation: bounds packed_len (and
+        // with it the offset-table allocation below) by the real file.
+        // Saturating: a wrapped product from a hostile header could
+        // collide with the real file length; saturation never can.
+        let want_len = (packed_len as u64)
+            .saturating_mul(8)
+            .saturating_add(HEADER_LEN as u64);
+        let have_len = file
+            .metadata()
+            .map_err(|e| format!("spill: stat {}: {e}", path.display()))?
+            .len();
+        if have_len != want_len {
+            return Err(format!(
+                "spill: {} truncated or oversized: header promises {want_len} bytes, file has {have_len}",
+                path.display()
+            ));
+        }
+        // Every tile holds >= 1 element, so a consistent header satisfies
+        // npairs <= packed_len + 1 — reject before allocating the table.
+        let nb128 = (m as u128).div_ceil(block as u128);
+        if nb128 * (nb128 + 1) / 2 > packed_len as u128 + 1 {
+            return Err(format!(
+                "spill: {} header: layout mismatch (dim {m}, block {block} cannot pack into {packed_len} elements)",
+                path.display()
+            ));
+        }
+        let (nb, block_off, total) = block_layout(m, block);
+        if total != packed_len {
+            return Err(format!(
+                "spill: {} header: layout mismatch (dim {m}, block {block} packs {total} elements, header says {packed_len})",
+                path.display()
+            ));
+        }
+        // Checksum scan — the one full pass over the payload, at open.
+        let mut ck = Fnv64::new();
+        let mut buf = vec![0u8; (IO_CHUNK * 8).min((packed_len * 8).max(1))];
+        let mut off = HEADER_LEN as u64;
+        let mut left = packed_len * 8;
+        while left > 0 {
+            let n = left.min(buf.len());
+            read_exact_at(&file, &mut buf[..n], off)
+                .map_err(|e| format!("spill: read {}: {e}", path.display()))?;
+            ck.write(&buf[..n]);
+            off += n as u64;
+            left -= n;
+        }
+        if ck.finish() != u64_at(64) {
+            return Err(format!(
+                "spill: {} payload checksum mismatch (corrupted spill file)",
+                path.display()
+            ));
+        }
+        let slots = num_threads().max(1);
+        let ring = (0..slots)
+            .map(|_| Mutex::new(RingSlot { bytes: Vec::new(), vals: Vec::new() }))
+            .collect();
+        Ok(SymPackedSpilled {
+            path: path.to_path_buf(),
+            file,
+            m,
+            block,
+            nb,
+            block_off,
+            fro_sq: f64::from_le_bytes(header[40..48].try_into().unwrap()),
+            max: f64::from_le_bytes(header[48..56].try_into().unwrap()),
+            mean: f64::from_le_bytes(header[56..64].try_into().unwrap()),
+            ring,
+        })
+    }
+
+    /// Dimension m.
+    pub fn dim(&self) -> usize {
+        self.m
+    }
+
+    /// Block size of the panel layout.
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Stored (on-disk) elements.
+    pub fn packed_len(&self) -> usize {
+        self.block_off[self.block_off.len() - 1]
+    }
+
+    /// The backing spill file.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Rows/cols of block index `b` (edge blocks truncated).
+    #[inline]
+    fn bdim(&self, b: usize) -> usize {
+        (self.m - b * self.block).min(self.block)
+    }
+
+    /// Grab a ring slot, preferring an uncontended one: scan from
+    /// `p % slots` with try_lock so concurrent pool workers spread over
+    /// the ring, fall back to blocking on the home slot.
+    fn acquire_slot(&self, p: usize) -> MutexGuard<'_, RingSlot> {
+        let n = self.ring.len();
+        for i in 0..n {
+            if let Ok(g) = self.ring[(p + i) % n].try_lock() {
+                return g;
+            }
+        }
+        self.ring[p % n].lock().unwrap()
+    }
+
+    /// Fault tile `p` from disk into the slot's buffers; returns the
+    /// decoded element count. Buffers grow to the largest tile and are
+    /// reused thereafter — steady-state applies allocate nothing.
+    fn read_tile(&self, slot: &mut RingSlot, p: usize) -> usize {
+        let len = self.block_off[p + 1] - self.block_off[p];
+        let nbytes = len * 8;
+        if slot.bytes.len() < nbytes {
+            slot.bytes.resize(nbytes, 0);
+        }
+        if slot.vals.len() < len {
+            slot.vals.resize(len, 0.0);
+        }
+        let off = HEADER_LEN as u64 + 8 * self.block_off[p] as u64;
+        // Validated at open; a failure here is environmental (file
+        // deleted/device gone mid-serve) and cannot be answered with a
+        // wrong result — fail the apply loudly.
+        if let Err(e) = read_exact_at(&self.file, &mut slot.bytes[..nbytes], off) {
+            panic!("spill: read tile {p} of {}: {e}", self.path.display());
+        }
+        for (dst, src) in slot.vals[..len].iter_mut().zip(slot.bytes[..nbytes].chunks_exact(8)) {
+            *dst = f64::from_le_bytes(src.try_into().unwrap());
+        }
+        len
+    }
+
+    /// out = X·F streaming tiles from disk — the spilled twin of
+    /// [`SymPacked::apply_blocked_into`]: identical pair enumeration,
+    /// identical per-tile kernel ([`tile_pair_apply_slice`]), identical
+    /// fixed-order reduction, hence bitwise-identical output.
+    pub fn apply_blocked_into(&self, f: &DenseMat, out: &mut DenseMat) {
+        self.apply_blocked_into_isa(simd::active(), f, out);
+    }
+
+    /// [`apply_blocked_into`](Self::apply_blocked_into) with an explicit
+    /// kernel tier — the parity suite's entry point.
+    pub fn apply_blocked_into_isa(&self, isa: KernelIsa, f: &DenseMat, out: &mut DenseMat) {
+        let m = self.m;
+        let (mf, k) = f.shape();
+        assert_eq!(m, mf, "SymPackedSpilled::apply: X is {m}x{m} but F has {mf} rows");
+        assert_eq!(out.shape(), (m, k), "SymPackedSpilled::apply: output must be {m}x{k}");
+        if m == 0 || k == 0 {
+            out.data_mut().fill(0.0);
+            return;
+        }
+        let nb = self.nb;
+        let npairs = nb * (nb + 1) / 2;
+        let fd = f.data();
+        pair_pool_accumulate(m, k, npairs, out, |p, acc| {
+            let (ib, jb) = pair_to_blocks(p, nb);
+            let mut slot = self.acquire_slot(p);
+            let len = self.read_tile(&mut slot, p);
+            tile_pair_apply_slice(isa, m, self.block, ib, jb, &slot.vals[..len], fd, k, acc);
+        });
+    }
+}
+
+impl SymOp for SymPackedSpilled {
+    fn dim(&self) -> usize {
+        self.m
+    }
+
+    fn apply_into(&self, f: &DenseMat, out: &mut DenseMat) {
+        self.apply_blocked_into(f, out);
+    }
+
+    fn fro_norm_sq(&self) -> f64 {
+        self.fro_sq
+    }
+
+    fn max_value(&self) -> f64 {
+        self.max
+    }
+
+    fn mean_value(&self) -> f64 {
+        self.mean
+    }
+
+    fn sampled_apply_into(
+        &self,
+        f: &DenseMat,
+        samples: &[usize],
+        weights_sq: &[f64],
+        out: &mut DenseMat,
+    ) {
+        // Same walk as SymPacked::sampled_apply_into, with each touched
+        // tile faulted through the ring. A sampled row reads its whole
+        // block-row of tiles — acceptable I/O amplification for the
+        // row-sampled (LvS) path, which is rare on spilled graphs; the
+        // accumulation order is identical to the resident operator, so
+        // the result is bitwise-identical.
+        let k = f.cols();
+        assert_eq!(out.shape(), (self.m, k), "sampled_apply_into shape");
+        let od = out.data_mut();
+        od.fill(0.0);
+        let block = self.block;
+        for (&ir, &w) in samples.iter().zip(weights_sq) {
+            let frow = f.row(ir);
+            let ib = ir / block;
+            let li = ir - ib * block;
+            for jb in 0..self.nb {
+                let j0 = jb * block;
+                let j1 = (j0 + block).min(self.m);
+                if jb < ib {
+                    // mirrored: column li of stored tile (jb, ib)
+                    let p = jb * (2 * self.nb - jb + 1) / 2 + (ib - jb);
+                    let mut slot = self.acquire_slot(p);
+                    let len = self.read_tile(&mut slot, p);
+                    let bd = &slot.vals[..len];
+                    let ld = self.bdim(ib); // cols of tile (jb, ib)
+                    for j in j0..j1 {
+                        let v = bd[(j - j0) * ld + li];
+                        if v != 0.0 {
+                            axpy(w * v, frow, &mut od[j * k..(j + 1) * k]);
+                        }
+                    }
+                } else {
+                    let p = ib * (2 * self.nb - ib + 1) / 2 + (jb - ib);
+                    let mut slot = self.acquire_slot(p);
+                    let len = self.read_tile(&mut slot, p);
+                    let bd = &slot.vals[..len];
+                    let bj = j1 - j0;
+                    let xrow = &bd[li * bj..(li + 1) * bj];
+                    for (jj, &v) in xrow.iter().enumerate() {
+                        if v != 0.0 {
+                            let j = j0 + jj;
+                            axpy(w * v, frow, &mut od[j * k..(j + 1) * k]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+    use crate::util::threadpool::with_thread_budget;
+
+    struct TempDir(PathBuf);
+
+    impl TempDir {
+        fn new(tag: &str) -> TempDir {
+            let d = std::env::temp_dir()
+                .join(format!("symnmf-spill-test-{tag}-{}", std::process::id()));
+            fs::create_dir_all(&d).unwrap();
+            TempDir(d)
+        }
+
+        fn file(&self, name: &str) -> PathBuf {
+            self.0.join(name)
+        }
+    }
+
+    impl Drop for TempDir {
+        fn drop(&mut self) {
+            let _ = fs::remove_dir_all(&self.0);
+        }
+    }
+
+    fn random_symmetric(m: usize, rng: &mut Pcg64) -> DenseMat {
+        let mut x = DenseMat::gaussian(m, m, rng);
+        x.symmetrize();
+        x
+    }
+
+    fn assert_bitwise(a: &DenseMat, b: &DenseMat, ctx: &str) {
+        for (i, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: element {i}");
+        }
+    }
+
+    /// The acceptance pinning: the spilled apply is bitwise-identical to
+    /// the resident apply at m,k ∈ {1,3,7,31,33,65} (edge tiles
+    /// everywhere at block 8) on every supported kernel tier.
+    #[test]
+    fn spilled_apply_bitwise_equals_resident_across_shapes_and_isas() {
+        let dir = TempDir::new("parity");
+        let mut rng = Pcg64::seed_from_u64(11);
+        for m in [1usize, 3, 7, 31, 33, 65] {
+            let x = random_symmetric(m, &mut rng);
+            for block in [8usize, 256] {
+                let sp = SymPacked::from_dense_with_block(&x, block);
+                let path = dir.file(&format!("m{m}-b{block}.sympk"));
+                write_spill(&sp, &path).unwrap();
+                let spilled = SymPackedSpilled::open(&path).unwrap();
+                assert_eq!(spilled.dim(), m);
+                assert_eq!(spilled.block(), block);
+                assert_eq!(spilled.packed_len(), sp.packed_len());
+                for k in [1usize, 3, 7, 31, 33, 65] {
+                    let f = DenseMat::gaussian(m, k, &mut rng);
+                    for isa in simd::supported() {
+                        let mut want = DenseMat::zeros(m, k);
+                        want.fill(-3.0);
+                        sp.apply_blocked_into_isa(isa, &f, &mut want);
+                        let mut got = DenseMat::zeros(m, k);
+                        got.fill(7.0); // stale data must be overwritten
+                        spilled.apply_blocked_into_isa(isa, &f, &mut got);
+                        assert_bitwise(
+                            &want,
+                            &got,
+                            &format!("m={m} k={k} block={block} isa={isa:?}"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Thread budgets exercise concurrent ring traffic and must not
+    /// change a bit (slot pool geometry is pinned; the ring only decides
+    /// which scratch buffer a read lands in).
+    #[test]
+    fn spilled_apply_is_budget_invariant_bitwise() {
+        let dir = TempDir::new("budget");
+        let mut rng = Pcg64::seed_from_u64(12);
+        let m = 300;
+        let x = random_symmetric(m, &mut rng);
+        let f = DenseMat::gaussian(m, 8, &mut rng);
+        let sp = SymPacked::from_dense_with_block(&x, 64);
+        let path = dir.file("budget.sympk");
+        write_spill(&sp, &path).unwrap();
+        let spilled = SymPackedSpilled::open(&path).unwrap();
+        let mut resident = DenseMat::zeros(m, 8);
+        sp.apply_blocked_into(&f, &mut resident);
+        for budget in [1usize, 2, 3] {
+            let mut capped = DenseMat::zeros(m, 8);
+            with_thread_budget(budget, || {
+                spilled.apply_blocked_into(&f, &mut capped);
+            });
+            assert_bitwise(&resident, &capped, &format!("budget={budget}"));
+        }
+    }
+
+    /// The sampled (row-walk) product faults mirrored tiles from disk
+    /// and still equals the resident operator bitwise.
+    #[test]
+    fn spilled_sampled_apply_bitwise_equals_resident() {
+        let dir = TempDir::new("sampled");
+        let mut rng = Pcg64::seed_from_u64(13);
+        let m = 45;
+        let x = random_symmetric(m, &mut rng);
+        let f = DenseMat::gaussian(m, 5, &mut rng);
+        let samples = vec![0usize, 13, 13, 31, 44, 7];
+        let w = vec![0.5, 1.0, 2.0, 0.25, 1.5, 0.75];
+        for block in [8usize, 16, 64] {
+            let sp = SymPacked::from_dense_with_block(&x, block);
+            let path = dir.file(&format!("sampled-b{block}.sympk"));
+            write_spill(&sp, &path).unwrap();
+            let spilled = SymPackedSpilled::open(&path).unwrap();
+            let mut want = DenseMat::zeros(m, 5);
+            SymOp::sampled_apply_into(&sp, &f, &samples, &w, &mut want);
+            let mut got = DenseMat::zeros(m, 5);
+            got.fill(-9.0); // stale data must be overwritten
+            SymOp::sampled_apply_into(&spilled, &f, &samples, &w, &mut got);
+            assert_bitwise(&want, &got, &format!("block={block}"));
+        }
+    }
+
+    /// The cached stats ride the header as bit patterns — the spilled
+    /// operator's SymOp stat surface equals the resident one's exactly.
+    #[test]
+    fn stats_survive_the_header_bitwise() {
+        let dir = TempDir::new("stats");
+        let mut rng = Pcg64::seed_from_u64(14);
+        let x = random_symmetric(65, &mut rng);
+        let sp = SymPacked::from_dense_with_block(&x, 32);
+        let path = dir.file("stats.sympk");
+        write_spill(&sp, &path).unwrap();
+        let spilled = SymPackedSpilled::open(&path).unwrap();
+        assert_eq!(
+            SymOp::fro_norm_sq(&sp).to_bits(),
+            SymOp::fro_norm_sq(&spilled).to_bits()
+        );
+        assert_eq!(SymOp::max_value(&sp).to_bits(), SymOp::max_value(&spilled).to_bits());
+        assert_eq!(SymOp::mean_value(&sp).to_bits(), SymOp::mean_value(&spilled).to_bits());
+    }
+
+    /// Every corruption mode is rejected at open with an error naming
+    /// what failed: magic, version, truncation, layout, checksum.
+    #[test]
+    fn corrupted_spill_files_are_rejected_with_clear_errors() {
+        let dir = TempDir::new("corrupt");
+        let mut rng = Pcg64::seed_from_u64(15);
+        let x = random_symmetric(33, &mut rng);
+        let sp = SymPacked::from_dense_with_block(&x, 8);
+        let good = dir.file("good.sympk");
+        write_spill(&sp, &good).unwrap();
+        let pristine = fs::read(&good).unwrap();
+        // sanity: the pristine file opens
+        SymPackedSpilled::open(&good).unwrap();
+
+        let corrupt = |name: &str, mutate: &dyn Fn(&mut Vec<u8>)| -> String {
+            let p = dir.file(name);
+            let mut bytes = pristine.clone();
+            mutate(&mut bytes);
+            fs::write(&p, &bytes).unwrap();
+            SymPackedSpilled::open(&p).expect_err("corrupted file must be rejected")
+        };
+
+        let e = corrupt("magic.sympk", &|b| b[0] = b'X');
+        assert!(e.contains("magic"), "{e}");
+        let e = corrupt("version.sympk", &|b| b[8] = 99);
+        assert!(e.contains("version 99"), "{e}");
+        let e = corrupt("trunc.sympk", &|b| b.truncate(b.len() - 9));
+        assert!(e.contains("truncated"), "{e}");
+        let e = corrupt("layout.sympk", &|b| b[16..24].copy_from_slice(&34u64.to_le_bytes()));
+        assert!(e.contains("layout mismatch"), "{e}");
+        let last = pristine.len() - 1;
+        let e = corrupt("payload.sympk", &move |b| b[last] ^= 0x40);
+        assert!(e.contains("checksum"), "{e}");
+        // absurd header dims must be rejected before any big allocation
+        let e = corrupt("huge.sympk", &|b| {
+            b[16..24].copy_from_slice(&u64::MAX.to_le_bytes());
+            b[24..32].copy_from_slice(&1u64.to_le_bytes());
+        });
+        assert!(e.contains("layout mismatch"), "{e}");
+    }
+
+    /// FNV-1a reference vectors (the standard test values), so the
+    /// checksum/content-hash primitive itself is pinned.
+    #[test]
+    fn fnv1a_reference_vectors() {
+        let h = Fnv64::new();
+        assert_eq!(h.finish(), 0xcbf2_9ce4_8422_2325);
+        let mut h = Fnv64::new();
+        h.write(b"a");
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+        let mut h = Fnv64::new();
+        h.write(b"foobar");
+        assert_eq!(h.finish(), 0x85944171f73967e8);
+        // chunked writes equal one-shot writes
+        let mut a = Fnv64::new();
+        a.write(b"foo");
+        a.write(b"bar");
+        assert_eq!(a.finish(), h.finish());
+    }
+}

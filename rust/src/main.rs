@@ -13,12 +13,14 @@
 use std::collections::BTreeMap;
 use symnmf::coordinator::driver::{run_trials, Method};
 use symnmf::coordinator::{experiments, report};
-use symnmf::linalg::DenseMat;
+use symnmf::linalg::SymPacked;
 use symnmf::nls::UpdateRule;
 use symnmf::runtime::registry::Registry;
 use symnmf::runtime::PjrtRuntime;
-use symnmf::serve::{sanitize_id, JobHandle, JobSpec, JobStore, Scheduler, SchedulerConfig};
-use symnmf::sparse::CsrMat;
+use symnmf::serve::{
+    sanitize_id, CachedOperator, JobHandle, JobSpec, JobStore, OpCache, OpCacheConfig, OpKey,
+    Scheduler, SchedulerConfig,
+};
 use symnmf::symnmf::options::{SymNmfOptions, Tau};
 use symnmf::symnmf::trace::{num_or_null, TraceFormat};
 use symnmf::util::cli::Args;
@@ -108,13 +110,6 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// One resident workload operator, built once and shared by every job
-/// that references it.
-enum ServeOp {
-    Dense(DenseMat),
-    Sparse(CsrMat),
-}
-
 fn spec_str<'a>(j: &'a Json, key: &str, default: &'a str) -> &'a str {
     j.get(key).and_then(Json::as_str).unwrap_or(default)
 }
@@ -123,27 +118,52 @@ fn spec_usize(j: &Json, key: &str) -> Option<usize> {
     j.get(key).and_then(Json::as_usize)
 }
 
-/// Workload cache key: one operator per (workload, size, data seed).
+/// Workload cache key: one operator per (workload, size, data seed,
+/// storage form). Storage is part of the key because packed and CSR
+/// operators of the same graph are different cache entries with
+/// different eviction behavior (spill vs drop+rebuild).
 fn workload_key(j: &Json) -> Result<String, String> {
     let workload = spec_str(j, "workload", "wos");
     let data_seed = spec_usize(j, "data_seed").unwrap_or(1);
     match workload {
         "wos" => Ok(format!("wos:{}:{data_seed}", spec_usize(j, "docs").unwrap_or(200))),
-        "oag" => Ok(format!("oag:{}:{data_seed}", spec_usize(j, "m").unwrap_or(300))),
+        "oag" => {
+            let storage = spec_str(j, "storage", "csr");
+            if storage != "csr" && storage != "packed" {
+                return Err(format!("unknown storage {storage:?} (csr|packed)"));
+            }
+            Ok(format!(
+                "oag:{}:{data_seed}:{storage}",
+                spec_usize(j, "m").unwrap_or(300)
+            ))
+        }
         other => Err(format!("unknown workload {other:?} (wos|oag)")),
     }
 }
 
-fn build_workload(j: &Json) -> ServeOp {
+/// Build the operator a job line names, in its cacheable storage form:
+/// the WoS dense adjacency is staged as [`SymPacked`] (upper-triangle
+/// block panels — half the resident footprint, spillable under budget
+/// pressure); the OAG sparse adjacency stays CSR unless the line opts
+/// into `"storage": "packed"`. Deterministic per workload key, so an
+/// evicted-and-dropped entry rebuilds to the same content hash.
+fn build_cached_operator(j: &Json) -> CachedOperator {
     let data_seed = spec_usize(j, "data_seed").unwrap_or(1) as u64;
     match spec_str(j, "workload", "wos") {
         "wos" => {
             let docs = spec_usize(j, "docs").unwrap_or(200);
-            ServeOp::Dense(experiments::wos_workload(docs, data_seed).adjacency)
+            CachedOperator::Packed(SymPacked::from_dense(
+                &experiments::wos_workload(docs, data_seed).adjacency,
+            ))
         }
         _ => {
             let m = spec_usize(j, "m").unwrap_or(300);
-            ServeOp::Sparse(experiments::oag_workload(m, data_seed).adj)
+            let adj = experiments::oag_workload(m, data_seed).adj;
+            if spec_str(j, "storage", "csr") == "packed" {
+                CachedOperator::Packed(SymPacked::from_csr(&adj))
+            } else {
+                CachedOperator::Csr(adj)
+            }
         }
     }
 }
@@ -206,6 +226,7 @@ fn job_report_row(h: &JobHandle) -> (Vec<String>, Json) {
         o.result.label.clone(),
         o.status.as_str().to_string(),
         o.slices.to_string(),
+        o.spilled_slices.to_string(),
         o.checkpoint.iter.to_string(),
         format!("{final_res:.6}"),
         format!("{:.3}s", o.checkpoint.clock),
@@ -216,6 +237,7 @@ fn job_report_row(h: &JobHandle) -> (Vec<String>, Json) {
         ("status", Json::Str(o.status.as_str().to_string())),
         ("run_status", Json::Str(o.run_status.as_str().to_string())),
         ("slices", Json::Num(o.slices as f64)),
+        ("spilled_slices", Json::Num(o.spilled_slices as f64)),
         ("steps", Json::Num(o.steps as f64)),
         ("iters", Json::Num(o.checkpoint.iter as f64)),
         // num_or_null: a zero-record job reports NaN/inf residuals, and
@@ -265,14 +287,32 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         return Err("--resume needs --store".to_string());
     }
 
-    // every distinct workload is built once and resident once, shared by
-    // all jobs that name it
-    let mut ops: BTreeMap<String, ServeOp> = BTreeMap::new();
+    // the cross-request operator cache: every distinct workload is
+    // built exactly once (the pre-pass pin below is its one miss); under
+    // a resident-bytes budget (--x-budget-mb / SYMNMF_X_BUDGET_MB),
+    // least-recently-used idle operators spill to disk (packed) or drop
+    // (CSR) and fault back on the next pin
+    let spill_dir = match args.get("spill-dir") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => std::env::temp_dir().join(format!("symnmf-spill-{}", std::process::id())),
+    };
+    let mut cache_cfg = OpCacheConfig::new(spill_dir).budget_from_env();
+    if let Some(mb) = args.get("x-budget-mb") {
+        let mb: f64 = mb
+            .parse()
+            .map_err(|e| format!("--x-budget-mb expects a number, got {mb:?}: {e}"))?;
+        cache_cfg = cache_cfg.with_budget_mb(mb);
+    }
+    let cache = std::sync::Arc::new(OpCache::new(cache_cfg));
+    let mut keys: BTreeMap<String, OpKey> = BTreeMap::new();
     for j in &lines {
-        let key = workload_key(j)?;
-        if !ops.contains_key(&key) {
-            println!("building workload {key}...");
-            ops.insert(key, build_workload(j));
+        let wkey = workload_key(j)?;
+        if !keys.contains_key(&wkey) {
+            println!("building workload {wkey}...");
+            let op = build_cached_operator(j);
+            let opkey = op.key();
+            drop(cache.pin_or_build(&opkey, move || op));
+            keys.insert(wkey, opkey);
         }
     }
 
@@ -306,11 +346,12 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                 spec.name
             ));
         }
-        let key = workload_key(j)?;
-        let h = match ops.get(&key).expect("workload built above") {
-            ServeOp::Dense(x) => sched.submit(x, spec)?,
-            ServeOp::Sparse(x) => sched.submit(x, spec)?,
-        };
+        let wkey = workload_key(j)?;
+        let opkey = keys.get(&wkey).expect("workload keyed above").clone();
+        // the builder regenerates the operator from the job line if the
+        // cache dropped it under budget pressure (CSR eviction)
+        let line = j.clone();
+        let h = sched.submit_cached(&cache, opkey, move || build_cached_operator(&line), spec)?;
         handles.push(h);
     }
 
@@ -330,7 +371,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         }
     }
 
-    let mut table = Table::new(&["Job", "Alg.", "Status", "Slices", "Iters", "Final-Res", "Clock"]);
+    let mut table = Table::new(&[
+        "Job", "Alg.", "Status", "Slices", "Spilled", "Iters", "Final-Res", "Clock",
+    ]);
     let mut reports = Vec::new();
     for h in &handles {
         let (row, json) = job_report_row(h);
@@ -338,9 +381,33 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         reports.push(json);
     }
     println!("{}", table.render());
+    let s = cache.stats();
+    println!(
+        "opcache: {} hits ({} from spill), {} misses, {} evictions, {} spill writes, {} resident bytes",
+        s.hits, s.spilled_hits, s.misses, s.evictions, s.spill_writes, s.resident_bytes
+    );
     if let Some(path) = args.get("report") {
         let doc = Json::obj(vec![
-            ("version", Json::Num(1.0)),
+            ("version", Json::Num(2.0)),
+            (
+                "opcache",
+                Json::obj(vec![
+                    (
+                        "budget_bytes",
+                        match s.budget_bytes {
+                            Some(b) => Json::Num(b as f64),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("resident_bytes", Json::Num(s.resident_bytes as f64)),
+                    ("entries", Json::Num(s.entries as f64)),
+                    ("hits", Json::Num(s.hits as f64)),
+                    ("spilled_hits", Json::Num(s.spilled_hits as f64)),
+                    ("misses", Json::Num(s.misses as f64)),
+                    ("evictions", Json::Num(s.evictions as f64)),
+                    ("spill_writes", Json::Num(s.spill_writes as f64)),
+                ]),
+            ),
             ("jobs", Json::Arr(reports)),
         ]);
         std::fs::write(path, format!("{doc}\n"))
@@ -427,6 +494,7 @@ USAGE:
              [--input graph.mtx --k K]
   symnmf serve --jobs spec.jsonl [--store DIR] [--keep N] [--workers N]
                [--slice-steps N] [--slice-ms MS] [--report out.json]
+               [--x-budget-mb MB] [--spill-dir DIR]
                [--slim] [--resume] [--resume-cancelled]
   symnmf artifacts      list AOT artifacts
   symnmf info           runtime diagnostics
@@ -436,8 +504,19 @@ USAGE:
 SERVE JOB SPEC (one JSON object per line; # comments allowed):
   {\"id\": \"j1\", \"workload\": \"oag\", \"m\": 300, \"data_seed\": 7,
    \"method\": \"hals\", \"seed\": 3, \"max_iters\": 20, \"priority\": 1,
-   \"deadline_ms\": 10000, \"cancel_after\": 4,
+   \"deadline_ms\": 10000, \"cancel_after\": 4, \"storage\": \"packed\",
    \"trace\": \"results/j1.jsonl\", \"trace_format\": \"jsonl\"}
+
+SERVE OPERATOR CACHE:
+  Each distinct (workload, size, data_seed, storage) is built once and
+  shared by every job that names it, under a resident-bytes ceiling set
+  by --x-budget-mb (or SYMNMF_X_BUDGET_MB; the flag wins; unset = no
+  ceiling). Over budget, the least-recently-used idle operator is
+  evicted: packed storage spills to a checksummed panel file under
+  --spill-dir (default: a per-process temp dir) and streams back on
+  demand with bitwise-identical results; CSR storage is dropped and
+  rebuilt on next use. \"storage\": \"packed\" opts an oag graph into
+  packed (spillable) form; wos graphs are always packed.
 
 METHODS:
   bpp hals mu pgncg lai-<rule>[-ir] comp-<rule> lvs-<rule> lai-pgncg[-ir]

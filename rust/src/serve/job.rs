@@ -151,6 +151,10 @@ pub struct JobOutcome {
     pub checkpoint: Checkpoint,
     /// engine slices driven (across cancel/resume)
     pub slices: usize,
+    /// slices whose operator pin was served by the out-of-core tier
+    /// (the `SymPacked` payload streamed from its spill file); always 0
+    /// for jobs submitted against a borrowed operator
+    pub spilled_slices: usize,
     /// engine steps run under this scheduler (excludes a resume
     /// checkpoint's prior iterations)
     pub steps: usize,
@@ -163,6 +167,7 @@ pub(crate) struct JobCore {
     pub(crate) result: Option<SymNmfResult>,
     pub(crate) run_status: Option<RunStatus>,
     pub(crate) slices: usize,
+    pub(crate) spilled_slices: usize,
     pub(crate) steps_used: usize,
     /// latest persisted store generation (0 = none yet)
     pub(crate) gen: u64,
@@ -197,6 +202,7 @@ impl JobInner {
                 result: None,
                 run_status: None,
                 slices: 0,
+                spilled_slices: 0,
                 steps_used: 0,
                 gen: 0,
                 cancel_hook: spec.cancel_after_iters,
@@ -215,6 +221,7 @@ impl JobInner {
             result: core.result.clone()?,
             checkpoint: core.checkpoint.clone()?,
             slices: core.slices,
+            spilled_slices: core.spilled_slices,
             steps: core.steps_used,
         })
     }

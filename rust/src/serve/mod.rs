@@ -56,6 +56,25 @@
 //!   is itself expressed as a fleet of serve jobs, so batch experiments
 //!   and the serving path share this one code path.
 //!
+//! ## The operator cache and the resident-bytes budget
+//!
+//! A resident service holds many graphs; RAM holds fewer. [`OpCache`]
+//! (`serve/opcache.rs`) keeps built `SymPacked`/`CsrMat` operators
+//! across requests, keyed by **content hash** ([`OpKey`]), under an
+//! optional resident-payload ceiling (`--x-budget-mb` /
+//! `SYMNMF_X_BUDGET_MB`). Jobs submitted via
+//! [`Scheduler::submit_cached`] pin their operator **per slice**: a pin
+//! is a refcount that blocks eviction, so eviction only ever happens
+//! between slices. Over budget, the least-recently-touched unpinned
+//! entry is evicted — `SymPacked` **spills** to a checksummed panel
+//! file (`linalg::spill`) and re-pins stream tiles back on demand
+//! (bitwise-identical apply, so the slice/resume contract above is
+//! unaffected); `CsrMat` entries are dropped and rebuilt on the next
+//! pin. Pinned entries can push residency over the ceiling
+//! transiently; the next unpin restores it. Cache counters
+//! ([`CacheStats`]) and per-job spilled-slice counts surface in the
+//! serve JSON report.
+//!
 //! The `symnmf serve` CLI mode (see `main.rs`) submits jobs from a JSONL
 //! spec, drains them to completion, optionally resumes cancelled jobs,
 //! and emits per-job reports.
@@ -65,9 +84,11 @@
 //! [`Checkpoint`]: crate::symnmf::engine::Checkpoint
 
 pub mod job;
+pub mod opcache;
 pub mod scheduler;
 pub mod store;
 
 pub use job::{JobHandle, JobOutcome, JobSpec, JobStatus};
+pub use opcache::{CacheStats, CachedOperator, OpCache, OpCacheConfig, OpKey, OpPin, PinKind};
 pub use scheduler::{Scheduler, SchedulerConfig};
 pub use store::{sanitize_id, JobStore};

@@ -1,0 +1,764 @@
+//! Cross-request operator cache: many graphs, one resident-bytes budget.
+//!
+//! A serve process that rebuilds its `SymPacked`/`CsrMat` operators on
+//! every request is a batch runner; a resident service holds them across
+//! requests. [`OpCache`] is that layer: built operators keyed by
+//! **content hash** ([`OpKey`]: dims + block + FNV-1a 64 over the
+//! payload bytes — `linalg::spill::Fnv64`, zero-dep), refcounted
+//! **pins** so a job mid-slice can never lose its operator, and **LRU
+//! eviction by resident payload bytes** under a configurable ceiling.
+//!
+//! ## Eviction policy
+//!
+//! * The budget comes from [`OpCacheConfig`] (`--x-budget-mb` on the
+//!   serve CLI, or the `SYMNMF_X_BUDGET_MB` env var; MiB). No budget =
+//!   never evict.
+//! * Accounting covers operator **payload** bytes (packed tiles, CSR
+//!   arrays). A spilled operator's payload lives on disk and counts as
+//!   zero; its bounded read-ring scratch (≤ threads · block² · 16 B,
+//!   lazily grown) is documented scratch, like the SYMM accumulator
+//!   pool.
+//! * When an insert or an unpin leaves the cache over budget, the
+//!   least-recently-touched entry that is Ready, unpinned, and still
+//!   resident is evicted, repeatedly, until under budget or nothing is
+//!   evictable. Pinned entries are **never** evicted — concurrent pins
+//!   can push residency over the ceiling transiently; the next unpin
+//!   restores it.
+//! * Eviction is tiered by operator kind: `Packed` **spills** — the
+//!   payload is written once to a content-addressed file
+//!   (`<spill_dir>/<dim>-<block>-<hash>.sympk`, temp + rename, see
+//!   `linalg::spill`) and the entry swaps to a [`SymPackedSpilled`]
+//!   that streams panels back on demand, so a re-pin faults tiles
+//!   instead of rebuilding (and a pre-existing valid spill file is
+//!   reused without rewriting). `Csr` entries are **dropped** and
+//!   rebuilt through the caller's builder on the next pin (CSR payloads
+//!   are cheap to rebuild relative to packing). A spilled entry never
+//!   promotes back to resident (follow-on; see ROADMAP).
+//! * If a spill write fails (disk full), the entry is kept resident,
+//!   marked unspillable, and skipped by future victim scans — the cache
+//!   degrades to over-budget rather than losing an operator.
+//!
+//! Hit/miss/eviction counters ([`CacheStats`]) surface in the serve
+//! JSON report; the serve-smoke CI leg asserts a cache hit skips
+//! operator construction entirely.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::linalg::spill::{write_spill, Fnv64};
+use crate::linalg::{DenseMat, SymPacked, SymPackedSpilled};
+use crate::randnla::SymOp;
+use crate::sparse::CsrMat;
+
+/// Where the cache spills and how much operator payload may stay
+/// resident.
+#[derive(Clone, Debug)]
+pub struct OpCacheConfig {
+    /// Resident payload ceiling in bytes; `None` disables eviction.
+    pub budget_bytes: Option<u64>,
+    /// Directory for spill files (created on first spill).
+    pub spill_dir: PathBuf,
+}
+
+impl OpCacheConfig {
+    /// Unbudgeted cache spilling under `spill_dir`.
+    pub fn new(spill_dir: PathBuf) -> OpCacheConfig {
+        OpCacheConfig { budget_bytes: None, spill_dir }
+    }
+
+    /// Set the ceiling in MiB (the unit of `--x-budget-mb` /
+    /// `SYMNMF_X_BUDGET_MB`).
+    pub fn with_budget_mb(mut self, mb: f64) -> OpCacheConfig {
+        self.budget_bytes = Some((mb * 1024.0 * 1024.0) as u64);
+        self
+    }
+
+    /// Apply `SYMNMF_X_BUDGET_MB` from the environment if set (and
+    /// parseable); explicit configuration wins over the env var.
+    pub fn budget_from_env(mut self) -> OpCacheConfig {
+        if self.budget_bytes.is_none() {
+            if let Ok(s) = std::env::var("SYMNMF_X_BUDGET_MB") {
+                if let Ok(mb) = s.trim().parse::<f64>() {
+                    return self.with_budget_mb(mb);
+                }
+            }
+        }
+        self
+    }
+}
+
+/// Content identity of a built operator: dimensions, panel block size
+/// (0 for CSR storage), and an FNV-1a 64 hash over the payload bytes.
+/// Two sources that build byte-identical operators share one cache
+/// entry — and one spill file, whose name embeds this key.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct OpKey {
+    pub dim: usize,
+    pub block: usize,
+    pub content: u64,
+}
+
+impl OpKey {
+    /// Key of a packed operator: dims, block, and the packed payload.
+    pub fn of_packed(sp: &SymPacked) -> OpKey {
+        let mut h = Fnv64::new();
+        h.write_u64(sp.dim() as u64);
+        h.write_u64(sp.block() as u64);
+        for &v in sp.payload() {
+            h.write_f64(v);
+        }
+        OpKey { dim: sp.dim(), block: sp.block(), content: h.finish() }
+    }
+
+    /// Key of a CSR operator: shape, nnz, and every (col, value) pair in
+    /// row-major order. `block = 0` marks CSR storage, so the same graph
+    /// cached as CSR and as packed are distinct entries.
+    pub fn of_csr(x: &CsrMat) -> OpKey {
+        let mut h = Fnv64::new();
+        h.write_u64(x.rows() as u64);
+        h.write_u64(x.cols() as u64);
+        h.write_u64(x.nnz() as u64);
+        for i in 0..x.rows() {
+            let (cols, vals) = x.row(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                h.write_u64(j as u64);
+                h.write_f64(v);
+            }
+        }
+        OpKey { dim: x.rows(), block: 0, content: h.finish() }
+    }
+
+    /// Spill file name for this key (content-addressed).
+    fn spill_name(&self) -> String {
+        format!("{}-{}-{:016x}.sympk", self.dim, self.block, self.content)
+    }
+}
+
+/// A cache-resident operator in one of its tiers. Implements [`SymOp`],
+/// so a job runs against it unchanged whichever tier it is in when the
+/// slice pins it.
+#[derive(Debug)]
+pub enum CachedOperator {
+    /// Resident packed-triangular storage.
+    Packed(SymPacked),
+    /// Resident sparse storage.
+    Csr(CsrMat),
+    /// Payload on disk; panels fault back through the read ring.
+    Spilled(SymPackedSpilled),
+}
+
+impl CachedOperator {
+    /// The content key of a resident operator (what the CLI and drivers
+    /// register it under). Spilled operators are created internally by
+    /// eviction and already have a key.
+    pub fn key(&self) -> OpKey {
+        match self {
+            CachedOperator::Packed(sp) => OpKey::of_packed(sp),
+            CachedOperator::Csr(x) => OpKey::of_csr(x),
+            CachedOperator::Spilled(s) => panic!(
+                "CachedOperator::key on spilled operator {} (keys are computed at insert, before spilling)",
+                s.path().display()
+            ),
+        }
+    }
+
+    /// Payload bytes counted against the resident budget.
+    pub fn resident_payload_bytes(&self) -> u64 {
+        match self {
+            CachedOperator::Packed(sp) => 8 * sp.packed_len() as u64,
+            CachedOperator::Csr(x) => (16 * x.nnz() + 8 * (x.rows() + 1)) as u64,
+            CachedOperator::Spilled(_) => 0,
+        }
+    }
+
+    /// Is this the out-of-core tier?
+    pub fn is_spilled(&self) -> bool {
+        matches!(self, CachedOperator::Spilled(_))
+    }
+}
+
+impl SymOp for CachedOperator {
+    fn dim(&self) -> usize {
+        match self {
+            CachedOperator::Packed(sp) => SymOp::dim(sp),
+            CachedOperator::Csr(x) => SymOp::dim(x),
+            CachedOperator::Spilled(s) => SymOp::dim(s),
+        }
+    }
+
+    fn apply_into(&self, f: &DenseMat, out: &mut DenseMat) {
+        match self {
+            CachedOperator::Packed(sp) => sp.apply_into(f, out),
+            CachedOperator::Csr(x) => x.apply_into(f, out),
+            CachedOperator::Spilled(s) => s.apply_into(f, out),
+        }
+    }
+
+    fn fro_norm_sq(&self) -> f64 {
+        match self {
+            CachedOperator::Packed(sp) => sp.fro_norm_sq(),
+            CachedOperator::Csr(x) => SymOp::fro_norm_sq(x),
+            CachedOperator::Spilled(s) => SymOp::fro_norm_sq(s),
+        }
+    }
+
+    fn max_value(&self) -> f64 {
+        match self {
+            CachedOperator::Packed(sp) => SymOp::max_value(sp),
+            CachedOperator::Csr(x) => SymOp::max_value(x),
+            CachedOperator::Spilled(s) => SymOp::max_value(s),
+        }
+    }
+
+    fn mean_value(&self) -> f64 {
+        match self {
+            CachedOperator::Packed(sp) => SymOp::mean_value(sp),
+            CachedOperator::Csr(x) => SymOp::mean_value(x),
+            CachedOperator::Spilled(s) => SymOp::mean_value(s),
+        }
+    }
+
+    fn sampled_apply_into(
+        &self,
+        f: &DenseMat,
+        samples: &[usize],
+        weights_sq: &[f64],
+        out: &mut DenseMat,
+    ) {
+        match self {
+            CachedOperator::Packed(sp) => sp.sampled_apply_into(f, samples, weights_sq, out),
+            CachedOperator::Csr(x) => x.sampled_apply_into(f, samples, weights_sq, out),
+            CachedOperator::Spilled(s) => s.sampled_apply_into(f, samples, weights_sq, out),
+        }
+    }
+}
+
+/// How a pin was satisfied — surfaced so callers can account slices
+/// served from the out-of-core tier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PinKind {
+    /// Resident hit: the operator was in memory.
+    Hit,
+    /// Out-of-core hit: the operator streams from its spill file.
+    SpilledHit,
+    /// Miss: the builder ran (first insert, or rebuild of a dropped
+    /// CSR entry).
+    Miss,
+}
+
+/// A refcounted pin on a cache entry: while any pin is live the entry
+/// cannot be evicted. Dropping the pin unpins and re-enforces the
+/// budget — the scheduler pins per slice, so eviction happens **between**
+/// a job's slices, never under one.
+pub struct OpPin<'c> {
+    cache: &'c OpCache,
+    idx: usize,
+    op: Arc<CachedOperator>,
+    kind: PinKind,
+}
+
+impl OpPin<'_> {
+    /// The pinned operator (resident or spilled — both serve `SymOp`).
+    pub fn op(&self) -> &CachedOperator {
+        &self.op
+    }
+
+    /// How this pin was satisfied.
+    pub fn kind(&self) -> PinKind {
+        self.kind
+    }
+
+    /// Is the pinned operator serving from its spill file?
+    pub fn is_spilled(&self) -> bool {
+        self.op.is_spilled()
+    }
+}
+
+impl Drop for OpPin<'_> {
+    fn drop(&mut self) {
+        self.cache.unpin(self.idx);
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum EntryState {
+    /// Pinnable (op may still be `None` if a dropped entry awaits
+    /// rebuild).
+    Ready,
+    /// A thread is building or spilling this entry; pinners wait.
+    Busy,
+}
+
+struct Entry {
+    key: OpKey,
+    op: Option<Arc<CachedOperator>>,
+    state: EntryState,
+    pins: usize,
+    touch: u64,
+    /// A spill attempt failed (e.g. disk full): keep resident, skip in
+    /// victim scans.
+    spill_failed: bool,
+}
+
+struct Inner {
+    entries: Vec<Entry>,
+    index: BTreeMap<OpKey, usize>,
+    clock: u64,
+    resident: u64,
+    hits: u64,
+    spilled_hits: u64,
+    misses: u64,
+    evictions: u64,
+    spill_writes: u64,
+}
+
+/// Counter snapshot for reports and assertions.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Pins served by a resident operator.
+    pub hits: u64,
+    /// Pins served by a spilled operator (no construction, panels
+    /// stream from disk).
+    pub spilled_hits: u64,
+    /// Pins that ran the builder.
+    pub misses: u64,
+    /// Entries moved out of the resident tier (spilled or dropped).
+    pub evictions: u64,
+    /// Spill files written (a reused pre-existing file does not count).
+    pub spill_writes: u64,
+    /// Current resident payload bytes.
+    pub resident_bytes: u64,
+    /// Entries ever inserted (all tiers).
+    pub entries: usize,
+    /// The configured ceiling, if any.
+    pub budget_bytes: Option<u64>,
+}
+
+/// The cross-request operator cache. Shared across scheduler workers as
+/// `Arc<OpCache>`; all state sits behind one mutex (operators are
+/// built and spilled **outside** the lock, with a Busy state + condvar
+/// so concurrent pinners of the same key neither double-build nor
+/// observe a half-evicted entry).
+pub struct OpCache {
+    cfg: OpCacheConfig,
+    inner: Mutex<Inner>,
+    cond: Condvar,
+}
+
+impl OpCache {
+    pub fn new(cfg: OpCacheConfig) -> OpCache {
+        OpCache {
+            cfg,
+            inner: Mutex::new(Inner {
+                entries: Vec::new(),
+                index: BTreeMap::new(),
+                clock: 0,
+                resident: 0,
+                hits: 0,
+                spilled_hits: 0,
+                misses: 0,
+                evictions: 0,
+                spill_writes: 0,
+            }),
+            cond: Condvar::new(),
+        }
+    }
+
+    /// The configured budget, if any.
+    pub fn budget_bytes(&self) -> Option<u64> {
+        self.cfg.budget_bytes
+    }
+
+    /// Pin the operator under `key`, running `build` only if the entry
+    /// is absent or was dropped ([`PinKind::Miss`]). The build runs
+    /// without the cache lock; concurrent pinners of the same key wait
+    /// for it instead of building twice. The returned pin keeps the
+    /// entry unevictable until dropped.
+    pub fn pin_or_build<F>(&self, key: &OpKey, build: F) -> OpPin<'_>
+    where
+        F: FnOnce() -> CachedOperator,
+    {
+        let idx = {
+            let mut g = self.inner.lock().unwrap();
+            loop {
+                match g.index.get(key).copied() {
+                    Some(i) => {
+                        if g.entries[i].state == EntryState::Busy {
+                            g = self.cond.wait(g).unwrap();
+                            continue;
+                        }
+                        if let Some(op) = g.entries[i].op.clone() {
+                            let spilled = op.is_spilled();
+                            if spilled {
+                                g.spilled_hits += 1;
+                            } else {
+                                g.hits += 1;
+                            }
+                            g.clock += 1;
+                            let clock = g.clock;
+                            let e = &mut g.entries[i];
+                            e.pins += 1;
+                            e.touch = clock;
+                            let kind =
+                                if spilled { PinKind::SpilledHit } else { PinKind::Hit };
+                            return OpPin { cache: self, idx: i, op, kind };
+                        }
+                        // dropped entry: this thread rebuilds it
+                        g.entries[i].state = EntryState::Busy;
+                        break i;
+                    }
+                    None => {
+                        let i = g.entries.len();
+                        g.entries.push(Entry {
+                            key: key.clone(),
+                            op: None,
+                            state: EntryState::Busy,
+                            pins: 0,
+                            touch: 0,
+                            spill_failed: false,
+                        });
+                        g.index.insert(key.clone(), i);
+                        break i;
+                    }
+                }
+            }
+        };
+        // Build outside the lock; if the builder panics, release the
+        // Busy state so waiters retry (and become the builder).
+        let guard = BusyGuard { cache: self, idx, armed: true };
+        let op = Arc::new(build());
+        let bytes = op.resident_payload_bytes();
+        std::mem::forget(guard);
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.misses += 1;
+            g.resident += bytes;
+            g.clock += 1;
+            let clock = g.clock;
+            let e = &mut g.entries[idx];
+            e.op = Some(Arc::clone(&op));
+            e.state = EntryState::Ready;
+            e.pins += 1;
+            e.touch = clock;
+        }
+        self.cond.notify_all();
+        self.enforce_budget();
+        OpPin { cache: self, idx, op, kind: PinKind::Miss }
+    }
+
+    fn unpin(&self, idx: usize) {
+        {
+            let mut g = self.inner.lock().unwrap();
+            let e = &mut g.entries[idx];
+            debug_assert!(e.pins > 0, "opcache: unpin without pin");
+            e.pins -= 1;
+        }
+        self.enforce_budget();
+    }
+
+    /// Evict least-recently-touched unpinned resident entries until the
+    /// resident payload fits the budget (or nothing more is evictable).
+    /// Spill I/O runs outside the lock under the victim's Busy state.
+    fn enforce_budget(&self) {
+        let Some(budget) = self.cfg.budget_bytes else { return };
+        loop {
+            // Victim selection under the lock.
+            let (idx, key, op) = {
+                let mut g = self.inner.lock().unwrap();
+                if g.resident <= budget {
+                    return;
+                }
+                let mut victim: Option<(u64, usize)> = None;
+                for (i, e) in g.entries.iter().enumerate() {
+                    let evictable = e.pins == 0
+                        && e.state == EntryState::Ready
+                        && !e.spill_failed
+                        && e.op.as_ref().is_some_and(|op| !op.is_spilled());
+                    if evictable && victim.is_none_or(|(t, _)| e.touch < t) {
+                        victim = Some((e.touch, i));
+                    }
+                }
+                let Some((_, i)) = victim else { return }; // all pinned/spilled
+                g.entries[i].state = EntryState::Busy;
+                (i, g.entries[i].key.clone(), g.entries[i].op.clone().unwrap())
+            };
+            let bytes = op.resident_payload_bytes();
+            match &*op {
+                CachedOperator::Packed(sp) => {
+                    let path = self.cfg.spill_dir.join(key.spill_name());
+                    // Content-addressed: a pre-existing valid file (an
+                    // earlier eviction, or a previous process) is reused
+                    // without rewriting.
+                    let (opened, wrote) = match SymPackedSpilled::open(&path) {
+                        Ok(s) => (Ok(s), false),
+                        Err(_) => (
+                            write_spill(sp, &path).and_then(|()| SymPackedSpilled::open(&path)),
+                            true,
+                        ),
+                    };
+                    let mut g = self.inner.lock().unwrap();
+                    match opened {
+                        Ok(spilled) => {
+                            g.resident -= bytes;
+                            g.evictions += 1;
+                            if wrote {
+                                g.spill_writes += 1;
+                            }
+                            let e = &mut g.entries[idx];
+                            e.op = Some(Arc::new(CachedOperator::Spilled(spilled)));
+                            e.state = EntryState::Ready;
+                        }
+                        Err(err) => {
+                            eprintln!(
+                                "opcache: spill of {} failed ({err}); keeping resident",
+                                key.spill_name()
+                            );
+                            let e = &mut g.entries[idx];
+                            e.spill_failed = true;
+                            e.state = EntryState::Ready;
+                        }
+                    }
+                }
+                CachedOperator::Csr(_) => {
+                    let mut g = self.inner.lock().unwrap();
+                    g.resident -= bytes;
+                    g.evictions += 1;
+                    let e = &mut g.entries[idx];
+                    e.op = None;
+                    e.state = EntryState::Ready;
+                }
+                CachedOperator::Spilled(_) => unreachable!("spilled entries are not victims"),
+            }
+            self.cond.notify_all();
+        }
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> CacheStats {
+        let g = self.inner.lock().unwrap();
+        CacheStats {
+            hits: g.hits,
+            spilled_hits: g.spilled_hits,
+            misses: g.misses,
+            evictions: g.evictions,
+            spill_writes: g.spill_writes,
+            resident_bytes: g.resident,
+            entries: g.entries.len(),
+            budget_bytes: self.cfg.budget_bytes,
+        }
+    }
+}
+
+/// Releases a Busy entry if the builder panics (drop during unwind);
+/// forgotten on the success path.
+struct BusyGuard<'c> {
+    cache: &'c OpCache,
+    idx: usize,
+    armed: bool,
+}
+
+impl Drop for BusyGuard<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            let mut g = self.cache.inner.lock().unwrap();
+            let e = &mut g.entries[self.idx];
+            e.op = None;
+            e.state = EntryState::Ready;
+            drop(g);
+            self.cache.cond.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    struct TempDir(PathBuf);
+
+    impl TempDir {
+        fn new(tag: &str) -> TempDir {
+            let d = std::env::temp_dir()
+                .join(format!("symnmf-opcache-test-{tag}-{}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&d);
+            std::fs::create_dir_all(&d).unwrap();
+            TempDir(d)
+        }
+    }
+
+    impl Drop for TempDir {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.0);
+        }
+    }
+
+    fn packed_fixture(seed: u64, m: usize) -> SymPacked {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let mut x = DenseMat::gaussian(m, m, &mut rng);
+        x.symmetrize();
+        SymPacked::from_dense_with_block(&x, 8)
+    }
+
+    fn csr_fixture(seed: u64, m: usize) -> CsrMat {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let mut trips = Vec::new();
+        for i in 0..m {
+            trips.push((i, i, 2.0));
+            for _ in 0..3 {
+                let j = rng.below(m);
+                let v = 1.0 + rng.uniform();
+                trips.push((i, j, v));
+                if i != j {
+                    trips.push((j, i, v));
+                }
+            }
+        }
+        CsrMat::from_coo(m, m, trips)
+    }
+
+    /// A second pin of the same content never runs the builder — the
+    /// acceptance criterion "a cache hit skips operator construction
+    /// entirely", counter-asserted.
+    #[test]
+    fn hit_skips_construction_entirely() {
+        let dir = TempDir::new("hit");
+        let cache = OpCache::new(OpCacheConfig::new(dir.0.clone()));
+        let builds = AtomicUsize::new(0);
+        let sp = packed_fixture(1, 16);
+        let key = OpKey::of_packed(&sp);
+        let build = || {
+            builds.fetch_add(1, Ordering::SeqCst);
+            CachedOperator::Packed(packed_fixture(1, 16))
+        };
+        {
+            let pin = cache.pin_or_build(&key, build);
+            assert_eq!(pin.kind(), PinKind::Miss);
+        }
+        {
+            let pin = cache.pin_or_build(&key, build);
+            assert_eq!(pin.kind(), PinKind::Hit);
+            assert!(!pin.is_spilled());
+        }
+        assert_eq!(builds.load(Ordering::SeqCst), 1, "hit must not rebuild");
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.evictions), (1, 1, 0));
+        assert_eq!(st.resident_bytes, 8 * sp.packed_len() as u64);
+    }
+
+    /// LRU by touch order: with room for two packed operators, touching
+    /// A before inserting C evicts B (the least recently used), which
+    /// spills and then serves as a spilled hit — bitwise-equal to the
+    /// resident apply.
+    #[test]
+    fn lru_evicts_least_recently_touched_to_spill() {
+        let dir = TempDir::new("lru");
+        let m = 32;
+        let one = 8 * packed_fixture(0, m).packed_len() as u64;
+        let cache = OpCache::new(OpCacheConfig {
+            budget_bytes: Some(2 * one + one / 2),
+            spill_dir: dir.0.clone(),
+        });
+        let mk = |seed: u64| CachedOperator::Packed(packed_fixture(seed, m));
+        let keys: Vec<OpKey> =
+            (0..3).map(|s| OpKey::of_packed(&packed_fixture(s, m))).collect();
+        drop(cache.pin_or_build(&keys[0], || mk(0))); // A
+        drop(cache.pin_or_build(&keys[1], || mk(1))); // B
+        drop(cache.pin_or_build(&keys[0], || mk(0))); // touch A
+        drop(cache.pin_or_build(&keys[2], || mk(2))); // C → evicts B
+        let st = cache.stats();
+        assert_eq!(st.evictions, 1);
+        assert_eq!(st.spill_writes, 1);
+        assert!(st.resident_bytes <= st.budget_bytes.unwrap());
+        // A stayed resident; B comes back as a spilled hit
+        {
+            let pin = cache.pin_or_build(&keys[0], || mk(0));
+            assert_eq!(pin.kind(), PinKind::Hit);
+        }
+        let mut rng = Pcg64::seed_from_u64(9);
+        let f = DenseMat::gaussian(m, 4, &mut rng);
+        let want = {
+            let resident = packed_fixture(1, m);
+            let mut out = DenseMat::zeros(m, 4);
+            resident.apply_blocked_into(&f, &mut out);
+            out
+        };
+        {
+            let pin = cache.pin_or_build(&keys[1], || mk(1));
+            assert_eq!(pin.kind(), PinKind::SpilledHit);
+            let mut got = DenseMat::zeros(m, 4);
+            pin.op().apply_into(&f, &mut got);
+            for (a, b) in want.data().iter().zip(got.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "spilled apply must match resident");
+            }
+        }
+        assert_eq!(cache.stats().misses, 3, "no eviction ever reran a builder");
+    }
+
+    /// A pinned entry is never evicted, even when it alone exceeds the
+    /// budget; dropping the pin evicts it.
+    #[test]
+    fn pinned_entries_survive_budget_pressure() {
+        let dir = TempDir::new("pin");
+        let cache = OpCache::new(OpCacheConfig {
+            budget_bytes: Some(1), // nothing fits
+            spill_dir: dir.0.clone(),
+        });
+        let sp = packed_fixture(5, 24);
+        let key = OpKey::of_packed(&sp);
+        let pin = cache.pin_or_build(&key, || CachedOperator::Packed(packed_fixture(5, 24)));
+        let st = cache.stats();
+        assert_eq!(st.evictions, 0, "pinned entry must not be evicted");
+        assert!(st.resident_bytes > st.budget_bytes.unwrap(), "transiently over budget");
+        assert!(!pin.is_spilled());
+        drop(pin);
+        let st = cache.stats();
+        assert_eq!(st.evictions, 1, "unpin must re-enforce the budget");
+        assert_eq!(st.resident_bytes, 0, "spilled payload counts zero");
+        // pinning again streams from the spill file
+        let pin = cache.pin_or_build(&key, || panic!("must not rebuild"));
+        assert_eq!(pin.kind(), PinKind::SpilledHit);
+    }
+
+    /// CSR entries evict by dropping and rebuild through the caller's
+    /// builder on the next pin.
+    #[test]
+    fn csr_eviction_drops_and_rebuilds() {
+        let dir = TempDir::new("csr");
+        let cache = OpCache::new(OpCacheConfig {
+            budget_bytes: Some(1),
+            spill_dir: dir.0.clone(),
+        });
+        let builds = AtomicUsize::new(0);
+        let x = csr_fixture(7, 20);
+        let key = OpKey::of_csr(&x);
+        let build = || {
+            builds.fetch_add(1, Ordering::SeqCst);
+            CachedOperator::Csr(csr_fixture(7, 20))
+        };
+        drop(cache.pin_or_build(&key, build)); // built, then dropped on unpin
+        let st = cache.stats();
+        assert_eq!((st.evictions, st.spill_writes), (1, 0), "csr drops, never spills");
+        assert_eq!(st.resident_bytes, 0);
+        let pin = cache.pin_or_build(&key, build);
+        assert_eq!(pin.kind(), PinKind::Miss, "dropped entry rebuilds");
+        assert_eq!(builds.load(Ordering::SeqCst), 2);
+    }
+
+    /// No budget → nothing is ever evicted.
+    #[test]
+    fn unbudgeted_cache_never_evicts() {
+        let dir = TempDir::new("nobudget");
+        let cache = OpCache::new(OpCacheConfig::new(dir.0.clone()));
+        for seed in 0..4 {
+            let sp = packed_fixture(seed, 24);
+            let key = OpKey::of_packed(&sp);
+            drop(cache.pin_or_build(&key, move || CachedOperator::Packed(sp)));
+        }
+        let st = cache.stats();
+        assert_eq!((st.misses, st.evictions), (4, 0));
+        assert_eq!(st.entries, 4);
+    }
+}

@@ -25,6 +25,7 @@
 
 use crate::randnla::SymOp;
 use crate::serve::job::{JobHandle, JobInner, JobSpec, JobStatus};
+use crate::serve::opcache::{CachedOperator, OpCache, OpKey};
 use crate::serve::store::JobStore;
 use crate::symnmf::engine::{Checkpoint, EngineRun, RunControl, RunStatus, TraceSink};
 use crate::symnmf::trace::{open_sink, CancelAfterSink};
@@ -92,11 +93,26 @@ struct QueueState {
     running: usize,
 }
 
+/// What one slice hands back to the scheduler: the engine run plus how
+/// the operator was obtained (borrowed, resident-cached, or streamed
+/// from a spill file) — the latter feeds the job's `spilled_slices`
+/// accounting.
+struct SliceRun {
+    run: EngineRun,
+    /// `None`: borrowed operator ([`Scheduler::submit`]). `Some(s)`:
+    /// cache-pinned ([`Scheduler::submit_cached`]), with `s` = the pin
+    /// was served by the out-of-core tier.
+    op_spilled: Option<bool>,
+}
+
 /// One job's solver, type-erased at submission: (slice control, resume
-/// point, trace) → the slice's [`EngineRun`]. Captures the `&'x X`
-/// operator reference, the method, and the options.
+/// point, trace) → the slice's [`SliceRun`]. Captures either the `&'x X`
+/// operator reference (plain submit) or an `Arc<OpCache>` + key +
+/// builder (cached submit — the operator is pinned per slice, so the
+/// cache can evict it **between** slices, never under one), plus the
+/// method and the options.
 type Runner<'x> = Box<
-    dyn Fn(&RunControl, Option<&Checkpoint>, Option<&mut dyn TraceSink>) -> EngineRun
+    dyn Fn(&RunControl, Option<&Checkpoint>, Option<&mut dyn TraceSink>) -> SliceRun
         + Sync
         + 'x,
 >;
@@ -150,6 +166,64 @@ impl<'x> Scheduler<'x> {
         x: &'x X,
         spec: JobSpec,
     ) -> Result<JobHandle, String> {
+        let method = spec.method;
+        let opts = spec.opts.clone();
+        let runner: Runner<'x> = Box::new(
+            move |ctrl: &RunControl,
+                  resume: Option<&Checkpoint>,
+                  trace: Option<&mut dyn TraceSink>| {
+                SliceRun {
+                    run: method.run_controlled_traced(&x, &opts, ctrl, resume, trace),
+                    op_spilled: None,
+                }
+            },
+        );
+        self.submit_runner(spec, runner)
+    }
+
+    /// Submit one job against a **cached** operator: every slice pins
+    /// `key` in the [`OpCache`] (running `build` only if the entry is
+    /// absent or was dropped) and unpins when the slice ends, so the
+    /// cache may evict the operator between slices — to its spill file
+    /// for packed storage — without ever pulling it out from under a
+    /// running solve. Slices served from the out-of-core tier are
+    /// counted in the job's [`JobOutcome::spilled_slices`].
+    ///
+    /// Because the spilled apply is bitwise-identical to the resident
+    /// apply (see `linalg::spill`), a job whose operator is evicted and
+    /// faulted back mid-run still satisfies the slice/resume bitwise
+    /// contract.
+    ///
+    /// [`JobOutcome::spilled_slices`]: crate::serve::job::JobOutcome
+    pub fn submit_cached<F>(
+        &mut self,
+        cache: &Arc<OpCache>,
+        key: OpKey,
+        build: F,
+        spec: JobSpec,
+    ) -> Result<JobHandle, String>
+    where
+        F: Fn() -> CachedOperator + Sync + 'x,
+    {
+        let method = spec.method;
+        let opts = spec.opts.clone();
+        let cache = Arc::clone(cache);
+        let runner: Runner<'x> = Box::new(
+            move |ctrl: &RunControl,
+                  resume: Option<&Checkpoint>,
+                  trace: Option<&mut dyn TraceSink>| {
+                let pin = cache.pin_or_build(&key, &build);
+                SliceRun {
+                    op_spilled: Some(pin.is_spilled()),
+                    run: method.run_controlled_traced(pin.op(), &opts, ctrl, resume, trace),
+                }
+            },
+        );
+        self.submit_runner(spec, runner)
+    }
+
+    /// Shared submission tail: sink, store generation sync, queueing.
+    fn submit_runner(&mut self, spec: JobSpec, runner: Runner<'x>) -> Result<JobHandle, String> {
         if spec.name.is_empty() {
             return Err("job name must be nonempty".to_string());
         }
@@ -170,15 +244,7 @@ impl<'x> Scheduler<'x> {
                 inner.core.lock().unwrap().gen = g;
             }
         }
-        let method = spec.method;
-        let opts = spec.opts;
-        self.runners.push(Box::new(
-            move |ctrl: &RunControl,
-                  resume: Option<&Checkpoint>,
-                  trace: Option<&mut dyn TraceSink>| {
-                method.run_controlled_traced(&x, &opts, ctrl, resume, trace)
-            },
-        ));
+        self.runners.push(runner);
         self.sinks.push(Mutex::new(sink));
         self.jobs.push(Arc::clone(&inner));
         self.enqueue(id, inner.priority, inner.deadline_secs);
@@ -320,7 +386,7 @@ impl<'x> Scheduler<'x> {
             cancel: Some(job.cancel.clone()),
         };
 
-        let run = {
+        let slice = {
             let mut sink_guard = self.sinks[j].lock().unwrap();
             let inner_sink = sink_guard.as_deref_mut().map(|s| s as &mut dyn TraceSink);
             with_thread_budget(inner_width, || match hook {
@@ -344,6 +410,7 @@ impl<'x> Scheduler<'x> {
                 None => (self.runners[j])(&ctrl, resume_cp.as_ref(), inner_sink),
             })
         };
+        let SliceRun { run, op_spilled } = slice;
 
         // persist the new generation before publishing the state — a
         // crash after the store write at worst re-runs one slice
@@ -362,6 +429,9 @@ impl<'x> Scheduler<'x> {
         let st = run.checkpoint.status;
         let mut core = job.core.lock().unwrap();
         core.slices += 1;
+        if op_spilled == Some(true) {
+            core.spilled_slices += 1;
+        }
         core.steps_used += run.checkpoint.iter - start_iter;
         core.gen = gen_now;
         core.run_status = Some(st);

@@ -4,9 +4,12 @@
 //! checkpoints/traces must survive the filesystem round trip.
 
 use symnmf::coordinator::driver::Method;
-use symnmf::linalg::{blas, DenseMat};
+use symnmf::linalg::{blas, DenseMat, SymPacked};
 use symnmf::nls::UpdateRule;
-use symnmf::serve::{JobSpec, JobStatus, JobStore, Scheduler, SchedulerConfig};
+use symnmf::serve::{
+    CachedOperator, JobSpec, JobStatus, JobStore, OpCache, OpCacheConfig, OpKey, Scheduler,
+    SchedulerConfig,
+};
 use symnmf::symnmf::options::{SymNmfOptions, Tau};
 use symnmf::symnmf::trace::TraceFormat;
 use symnmf::symnmf::SymNmfResult;
@@ -302,5 +305,114 @@ fn stitched_trace_stream_equals_uninterrupted_history() {
             "record {i} residual"
         );
     }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// PR-7 acceptance: a concurrent multi-graph serve under a resident-bytes
+/// ceiling smaller than the working set. Two distinct packed graphs share
+/// a cache that can hold only one of them, four sliced jobs churn the
+/// cache (evict → spill → fault back between slices), and every job must
+/// still land **bitwise** on its uninterrupted [`Method::run`] over the
+/// resident operator — plus the ceiling must hold once the fleet drains.
+#[test]
+fn budgeted_multi_graph_serve_is_bitwise_and_holds_the_ceiling() {
+    let dir = std::env::temp_dir()
+        .join(format!("symnmf-serve-it-budget-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).expect("mkdir");
+
+    let graphs: Vec<DenseMat> = vec![planted(48, 3, 71), planted(48, 3, 72)];
+    let packed: Vec<SymPacked> = graphs.iter().map(SymPacked::from_dense).collect();
+    let keys: Vec<OpKey> = packed.iter().map(OpKey::of_packed).collect();
+    assert_ne!(keys[0], keys[1], "distinct graphs must hash distinctly");
+    let op_bytes =
+        CachedOperator::Packed(SymPacked::from_dense(&graphs[0])).resident_payload_bytes();
+
+    let mut opts = SymNmfOptions::new(3).with_seed(4);
+    opts.max_iters = 8;
+    opts.tol = 0.0; // run all 8 iterations: every job takes >= 4 slices
+    let methods = [Method::Exact(UpdateRule::Hals), Method::Exact(UpdateRule::Bpp)];
+    // uninterrupted references over the RESIDENT packed operator: the
+    // spilled tier must reproduce these bits through any eviction schedule
+    let full: Vec<Vec<_>> = (0..2)
+        .map(|g| methods.iter().map(|m| m.run(&packed[g], &opts)).collect())
+        .collect();
+
+    // budget fits exactly one operator — two graphs in flight guarantee
+    // eviction churn between slices
+    let mut cfg = OpCacheConfig::new(dir.clone());
+    cfg.budget_bytes = Some(op_bytes + 1);
+    let cache = std::sync::Arc::new(OpCache::new(cfg));
+
+    let mut sched = Scheduler::new(SchedulerConfig {
+        slice_steps: Some(2),
+        ..SchedulerConfig::default()
+    });
+    let mut handles = Vec::new();
+    for g in 0..2usize {
+        for (mi, method) in methods.iter().enumerate() {
+            let x = graphs[g].clone();
+            let spec = JobSpec::new(format!("g{g}-m{mi}"), *method, opts.clone());
+            let h = sched
+                .submit_cached(
+                    &cache,
+                    keys[g].clone(),
+                    move || CachedOperator::Packed(SymPacked::from_dense(&x)),
+                    spec,
+                )
+                .expect("submit");
+            handles.push((g, mi, h));
+        }
+    }
+    sched.drain();
+
+    // after the drain every pin is released, so the ceiling must hold
+    // and (with two operators built) at least one graph is now on disk
+    let s = cache.stats();
+    assert_eq!(s.misses, 2, "each graph builds exactly once: {s:?}");
+    assert!(s.evictions >= 1, "ceiling must force eviction: {s:?}");
+    assert!(s.spill_writes >= 1, "packed eviction must spill: {s:?}");
+    assert!(
+        s.resident_bytes <= op_bytes + 1,
+        "drained cache must respect the ceiling: {s:?}"
+    );
+
+    // second wave: one more job per graph — whichever graph the first
+    // wave left spilled is now deterministically served from disk
+    for g in 0..2usize {
+        let x = graphs[g].clone();
+        let spec = JobSpec::new(format!("g{g}-w2"), methods[0], opts.clone());
+        let h = sched
+            .submit_cached(
+                &cache,
+                keys[g].clone(),
+                move || CachedOperator::Packed(SymPacked::from_dense(&x)),
+                spec,
+            )
+            .expect("submit wave 2");
+        handles.push((g, 0, h));
+    }
+    sched.drain();
+
+    let mut spilled_slices = 0;
+    for (g, mi, h) in &handles {
+        let o = h.await_result();
+        assert_eq!(o.status, JobStatus::Completed, "g{g}-m{mi}");
+        assert!(o.slices >= 3, "g{g}-m{mi}: sliced run expected, got {}", o.slices);
+        spilled_slices += o.spilled_slices;
+        assert_bitwise(&full[*g][*mi], &o.result, &format!("g{g}-m{mi} budgeted"));
+    }
+
+    let s = cache.stats();
+    assert_eq!(s.misses, 2, "spill-eviction must never force a rebuild: {s:?}");
+    assert!(s.spilled_hits >= 1, "some slice must fault from disk: {s:?}");
+    assert_eq!(
+        spilled_slices as u64, s.spilled_hits,
+        "per-job spilled-slice accounting must match the cache's count"
+    );
+    assert!(
+        s.resident_bytes <= op_bytes + 1,
+        "drained cache must respect the ceiling: {s:?}"
+    );
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -13,10 +13,12 @@ dropping; timing-only rows (gflops == 0, e.g. construction passes like
 `from_csr_streamed`) are gated on secs_per_iter growing by more than the
 allowed fraction.
 
-Bootstrap behaviour: if the baseline has no measured rows at all (e.g.
-the committed file is the empty bootstrap placeholder produced before
-any machine ran the bench), the check passes with a notice so the first
-CI run can publish real numbers to commit as the next baseline.
+Bootstrap behaviour: if the baseline is the bootstrap placeholder (its
+header carries "bootstrap": true, or it simply has no measured rows),
+the check still exits 0 so the first CI run can publish real numbers to
+commit as the next baseline — but it shouts a WARNING to stderr instead
+of passing quietly: a repo whose perf gate has never gated anything
+should look unhealthy in the logs, not green-and-silent.
 
 Provenance: the bench header records the dispatched kernel `isa` and the
 `hostname` the numbers were measured on. Numbers taken under different
@@ -46,6 +48,12 @@ DEFAULT_ALLOW_NOISY = [
     "pack_b_panels_par",
     "pjrt_products",
     "native_products",
+    # I/O-bound: streams the whole packed payload from disk per apply, so
+    # the rate tracks the runner's page cache and storage, not the kernels
+    "symm_spilled_apply_into",
+    # sub-microsecond bookkeeping row (mutex + refcount bump) — pure
+    # timer noise on shared runners; opcache_miss_build stays gated
+    "opcache_hit",
 ]
 
 
@@ -56,7 +64,11 @@ def load_rows(path):
     rows = {}
     for rec in doc.get("kernels", []):
         rows[(rec["op"], rec.get("shape", ""))] = rec
-    header = {"isa": doc.get("isa"), "hostname": doc.get("hostname")}
+    header = {
+        "isa": doc.get("isa"),
+        "hostname": doc.get("hostname"),
+        "bootstrap": bool(doc.get("bootstrap", False)),
+    }
     return rows, header
 
 
@@ -170,11 +182,16 @@ def main(argv=None):
         for r in base.values()
         if r.get("gflops", 0.0) > 0.0 or r.get("secs_per_iter", 0.0) > 0.0
     ]
-    if not measured_base:
+    if base_header.get("bootstrap") or not measured_base:
         print(
-            "NOTICE: baseline has no measured rows (bootstrap placeholder) "
-            "— passing; commit the generated BENCH_kernels.json as the new "
-            "baseline."
+            "WARNING: the committed baseline is a bootstrap placeholder "
+            "with no measured rows — NOTHING WAS GATED on this run. The "
+            "perf gate is green only because it has no baseline to gate "
+            "against. Run `cargo bench --bench bench_kernels` on the "
+            "canonical runner and commit the generated BENCH_kernels.json "
+            "(the bench-regression CI job uploads it as an artifact) to "
+            "arm the gate.",
+            file=sys.stderr,
         )
         return 0
     if not cur:

@@ -93,12 +93,57 @@ class GateFixtureTest(unittest.TestCase):
         self.assertEqual(code, 1, "null provenance on one side still gates")
         self.assertIn("regressed", err)
 
-    def test_bootstrap_placeholder_passes(self):
+    def test_bootstrap_placeholder_passes_but_warns_loudly(self):
         base = bench_doc([], isa=None, hostname=None)
         cur = bench_doc([row("matmul_nt_simd", 20.0)], isa="avx2", hostname="ci-1")
-        code, out, _ = self.run_gate(base, cur)
+        code, _, err = self.run_gate(base, cur)
         self.assertEqual(code, 0)
-        self.assertIn("bootstrap", out)
+        self.assertIn("WARNING", err, "the fallback must shout, not pass quietly")
+        self.assertIn("NOTHING WAS GATED", err)
+
+    def test_bootstrap_header_flag_warns_even_with_rows(self):
+        # a placeholder that somehow carries rows is still a placeholder:
+        # the explicit header flag wins
+        base = bench_doc([row("matmul_nt_simd", 20.0)], isa="avx2", hostname="ci-1")
+        base["bootstrap"] = True
+        cur = bench_doc([row("matmul_nt_simd", 10.0)], isa="avx2", hostname="ci-1")
+        code, _, err = self.run_gate(base, cur)
+        self.assertEqual(code, 0, "a flagged placeholder never hard-fails")
+        self.assertIn("NOTHING WAS GATED", err)
+
+    def test_io_bound_spill_and_hit_rows_are_noisy_not_gated(self):
+        base = bench_doc(
+            [
+                row("symm_spilled_apply_into", 8.0),
+                row("opcache_hit", 0.0, secs=1e-7),
+                row("opcache_miss_build", 0.0, secs=0.02),
+            ],
+            isa="avx2",
+            hostname="ci-1",
+        )
+        cur = bench_doc(
+            [
+                row("symm_spilled_apply_into", 1.0),  # page-cache luck, not a bug
+                row("opcache_hit", 0.0, secs=1e-5),
+                row("opcache_miss_build", 0.0, secs=0.02),
+            ],
+            isa="avx2",
+            hostname="ci-1",
+        )
+        code, out, _ = self.run_gate(base, cur)
+        self.assertEqual(code, 0, "I/O-bound rows must not hard-gate")
+        self.assertIn("skip (noisy)", out)
+
+    def test_opcache_miss_build_stays_time_gated(self):
+        base = bench_doc(
+            [row("opcache_miss_build", 0.0, secs=0.02)], isa="avx2", hostname="ci-1"
+        )
+        cur = bench_doc(
+            [row("opcache_miss_build", 0.0, secs=0.05)], isa="avx2", hostname="ci-1"
+        )
+        code, _, err = self.run_gate(base, cur)
+        self.assertEqual(code, 1, "the miss row pays a real build and stays gated")
+        self.assertIn("regressed", err)
 
     def test_missing_gated_row_fails(self):
         base = bench_doc(
