@@ -609,7 +609,7 @@ fn main() {
             .submit(&srv_x, JobSpec::new("bench", srv_method, srv_opts.clone()))
             .expect("submit");
         sched.drain();
-        std::hint::black_box(h.outcome().expect("drained").result.iters());
+        std::hint::black_box(h.outcome().expect("drained").expect_result().iters());
     });
     println!(
         "{}   ({:.1}% of direct)",
@@ -623,6 +623,21 @@ fn main() {
         &r_sliced,
         0.0,
     );
+
+    // --- unarmed fail-point hit (the crash-safety steady-state tax) ---
+    // SYMNMF_FAILPOINTS is unset in the bench environment, so every hit
+    // is the off path: one relaxed atomic load. 1M scoped hits per rep
+    // keep the measurement above timer noise.
+    let r_fp = bench("failpoint unarmed hit (1M scoped hits)", 2, 9, || {
+        for _ in 0..1_000_000u32 {
+            std::hint::black_box(symnmf::util::failpoint::hit_scoped(
+                "ckpt_save", "bench",
+            ))
+            .expect("unarmed fail point never errors");
+        }
+    });
+    println!("{}", r_fp.report());
+    record(&mut records, "failpoint_unarmed_hit", "1M hits", &r_fp, 0.0);
 
     // --- checkpoint serialize + parse (the job-store hot path) ---
     let big_cp = Checkpoint {

@@ -319,8 +319,8 @@ pub fn run_trials_batched_controlled<X: SymOp + Sync>(
     let mut checkpoints = Vec::with_capacity(trials);
     for h in &handles {
         let o = h.outcome().expect("drained trial job has an outcome");
-        results.push(o.result);
-        checkpoints.push(o.checkpoint);
+        results.push(o.expect_result().clone());
+        checkpoints.push(o.expect_checkpoint().clone());
     }
     (aggregate(method.label(), results, labels), checkpoints)
 }
@@ -362,7 +362,12 @@ where
     sched.drain();
     let results = handles
         .iter()
-        .map(|h| h.outcome().expect("drained trial job has an outcome").result)
+        .map(|h| {
+            h.outcome()
+                .expect("drained trial job has an outcome")
+                .expect_result()
+                .clone()
+        })
         .collect();
     aggregate(method.label(), results, labels)
 }
@@ -401,7 +406,12 @@ pub fn run_trials_streamed<X: SymOp + Sync>(
     sched.drain();
     let results = handles
         .iter()
-        .map(|h| h.outcome().expect("drained job has an outcome").result)
+        .map(|h| {
+            h.outcome()
+                .expect("drained job has an outcome")
+                .expect_result()
+                .clone()
+        })
         .collect();
     Ok(aggregate(method.label(), results, labels))
 }

@@ -17,6 +17,7 @@ use symnmf::linalg::SymPacked;
 use symnmf::nls::UpdateRule;
 use symnmf::runtime::registry::Registry;
 use symnmf::runtime::PjrtRuntime;
+use symnmf::serve::recovery::{self, RecoveryReport, RecoveryScan};
 use symnmf::serve::{
     sanitize_id, CachedOperator, JobHandle, JobSpec, JobStore, OpCache, OpCacheConfig, OpKey,
     Scheduler, SchedulerConfig,
@@ -169,7 +170,15 @@ fn build_cached_operator(j: &Json) -> CachedOperator {
 }
 
 /// Build one job spec from a JSONL line of the `serve --jobs` file.
-fn job_from_spec(j: &Json, store: Option<&JobStore>, resume: bool) -> Result<JobSpec, String> {
+/// `recovery` (the `--recover` pre-pass) wins over `resume`: it already
+/// walked the generations, quarantined corrupt ones, and holds the
+/// newest valid checkpoint per job.
+fn job_from_spec(
+    j: &Json,
+    store: Option<&JobStore>,
+    resume: bool,
+    recovery: Option<&RecoveryScan>,
+) -> Result<JobSpec, String> {
     let id = j
         .get("id")
         .and_then(Json::as_str)
@@ -207,7 +216,18 @@ fn job_from_spec(j: &Json, store: Option<&JobStore>, resume: bool) -> Result<Job
         let format = TraceFormat::parse(spec_str(j, "trace_format", "jsonl"))?;
         spec.trace = Some((std::path::PathBuf::from(path), format));
     }
-    if resume {
+    if let Some(scan) = recovery {
+        match scan.checkpoint_for(&id) {
+            Some((gen, cp)) => {
+                println!(
+                    "  {id}: recovered from persisted generation {gen} (iter {})",
+                    cp.iter
+                );
+                spec.resume = Some(cp.clone());
+            }
+            None => println!("  {id}: no valid persisted generation; restarting cold"),
+        }
+    } else if resume {
         if let Some(store) = store {
             if let Some((gen, cp)) = store.load_latest(&id)? {
                 println!("  {id}: resuming from stored generation {gen} (iter {})", cp.iter);
@@ -220,26 +240,44 @@ fn job_from_spec(j: &Json, store: Option<&JobStore>, resume: bool) -> Result<Job
 
 fn job_report_row(h: &JobHandle) -> (Vec<String>, Json) {
     let o = h.outcome().expect("drained job has an outcome");
-    let final_res = o.result.final_residual();
+    // result/checkpoint are None only for a job whose first slice
+    // panicked (status "failed"): the report degrades to placeholders
+    // instead of refusing to describe the rest of the fleet
+    let label = o
+        .result
+        .as_ref()
+        .map(|r| r.label.clone())
+        .unwrap_or_else(|| "-".to_string());
+    let final_res = o.result.as_ref().map(|r| r.final_residual()).unwrap_or(f64::NAN);
+    let min_res = o.result.as_ref().map(|r| r.min_residual()).unwrap_or(f64::NAN);
+    let iters = o.checkpoint.as_ref().map(|c| c.iter).unwrap_or(0);
+    let clock = o.checkpoint.as_ref().map(|c| c.clock).unwrap_or(0.0);
     let row = vec![
         h.name().to_string(),
-        o.result.label.clone(),
+        label.clone(),
         o.status.as_str().to_string(),
         o.slices.to_string(),
         o.spilled_slices.to_string(),
-        o.checkpoint.iter.to_string(),
+        iters.to_string(),
         format!("{final_res:.6}"),
-        format!("{:.3}s", o.checkpoint.clock),
+        format!("{clock:.3}s"),
+        if o.persist_degraded { "degraded" } else { "ok" }.to_string(),
     ];
     let json = Json::obj(vec![
         ("id", Json::Str(h.name().to_string())),
-        ("label", Json::Str(o.result.label.clone())),
+        ("label", Json::Str(label)),
         ("status", Json::Str(o.status.as_str().to_string())),
-        ("run_status", Json::Str(o.run_status.as_str().to_string())),
+        (
+            "run_status",
+            match o.run_status {
+                Some(rs) => Json::Str(rs.as_str().to_string()),
+                None => Json::Null,
+            },
+        ),
         ("slices", Json::Num(o.slices as f64)),
         ("spilled_slices", Json::Num(o.spilled_slices as f64)),
         ("steps", Json::Num(o.steps as f64)),
-        ("iters", Json::Num(o.checkpoint.iter as f64)),
+        ("iters", Json::Num(iters as f64)),
         // num_or_null: a zero-record job reports NaN/inf residuals, and
         // the in-repo JSON printer would emit them as bare invalid
         // tokens; the hex field stays bitwise-exact either way
@@ -248,8 +286,16 @@ fn job_report_row(h: &JobHandle) -> (Vec<String>, Json) {
             "final_residual_hex",
             Json::Str(format!("{:016x}", final_res.to_bits())),
         ),
-        ("min_residual", num_or_null(o.result.min_residual())),
-        ("clock_secs", Json::Num(o.checkpoint.clock)),
+        ("min_residual", num_or_null(min_res)),
+        ("clock_secs", Json::Num(clock)),
+        ("persist_degraded", Json::Bool(o.persist_degraded)),
+        (
+            "failure",
+            match &o.failure {
+                Some(f) => Json::Str(f.clone()),
+                None => Json::Null,
+            },
+        ),
     ]);
     (row, json)
 }
@@ -286,6 +332,29 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     if resume && store.is_none() {
         return Err("--resume needs --store".to_string());
     }
+    let recover = args.has_flag("recover");
+    if recover && store.is_none() {
+        return Err("--recover needs --store".to_string());
+    }
+    if recover && resume {
+        return Err(
+            "--recover and --resume are mutually exclusive (--recover already \
+             resumes from the newest valid generation, after quarantining \
+             corrupt ones)"
+                .to_string(),
+        );
+    }
+    // --recover pre-pass: scan the whole store BEFORE submitting — walk
+    // every persisted job's generations newest→oldest, quarantine
+    // unparseable files as *.corrupt (renamed, never deleted), and keep
+    // the newest valid checkpoint per job for resubmission below
+    let scan = match (&store, recover) {
+        (Some(s), true) => {
+            println!("recovering from store {:?}...", s.dir());
+            Some(recovery::scan(s)?)
+        }
+        _ => None,
+    };
 
     // the cross-request operator cache: every distinct workload is
     // built exactly once (the pre-pass pin below is its one miss); under
@@ -335,8 +404,16 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let mut sched = Scheduler::new(cfg);
     let mut handles: Vec<JobHandle> = Vec::new();
     let mut seen = std::collections::BTreeSet::new();
+    let mut recovery_report = RecoveryReport::default();
     for j in &lines {
-        let spec = job_from_spec(j, store.as_ref(), resume)?;
+        let spec = job_from_spec(j, store.as_ref(), resume, scan.as_ref())?;
+        if let Some(scan) = &scan {
+            if scan.checkpoint_for(&spec.name).is_some() {
+                recovery_report.jobs_recovered += 1;
+            } else {
+                recovery_report.jobs_cold += 1;
+            }
+        }
         // uniqueness is checked on the SANITIZED id — the store keys
         // checkpoint files by it, so "a.b" and "a b" must not be allowed
         // to share (and GC) one checkpoint lineage
@@ -372,7 +449,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     }
 
     let mut table = Table::new(&[
-        "Job", "Alg.", "Status", "Slices", "Spilled", "Iters", "Final-Res", "Clock",
+        "Job", "Alg.", "Status", "Slices", "Spilled", "Iters", "Final-Res", "Clock", "Persist",
     ]);
     let mut reports = Vec::new();
     for h in &handles {
@@ -381,6 +458,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         reports.push(json);
     }
     println!("{}", table.render());
+    if let Some(scan) = &scan {
+        recovery_report.files_quarantined = scan.files_quarantined();
+        println!("{}", recovery_report.render());
+    }
     let s = cache.stats();
     println!(
         "opcache: {} hits ({} from spill), {} misses, {} evictions, {} spill writes, {} resident bytes",
@@ -388,7 +469,16 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     );
     if let Some(path) = args.get("report") {
         let doc = Json::obj(vec![
-            ("version", Json::Num(2.0)),
+            // version 3: adds the "recovery" object (null outside
+            // --recover) and per-job "persist_degraded" / "failure"
+            ("version", Json::Num(3.0)),
+            (
+                "recovery",
+                match &scan {
+                    Some(_) => recovery_report.to_json(),
+                    None => Json::Null,
+                },
+            ),
             (
                 "opcache",
                 Json::obj(vec![
@@ -495,7 +585,7 @@ USAGE:
   symnmf serve --jobs spec.jsonl [--store DIR] [--keep N] [--workers N]
                [--slice-steps N] [--slice-ms MS] [--report out.json]
                [--x-budget-mb MB] [--spill-dir DIR]
-               [--slim] [--resume] [--resume-cancelled]
+               [--slim] [--resume] [--recover] [--resume-cancelled]
   symnmf artifacts      list AOT artifacts
   symnmf info           runtime diagnostics
   symnmf --features     kernel dispatch diagnostics (detected/forced ISA,
@@ -517,6 +607,28 @@ SERVE OPERATOR CACHE:
   demand with bitwise-identical results; CSR storage is dropped and
   rebuilt on next use. \"storage\": \"packed\" opts an oag graph into
   packed (spillable) form; wos graphs are always packed.
+
+SERVE CRASH SAFETY:
+  --recover (needs --store; excludes --resume) restarts a fleet after a
+  crash: the store is scanned before submission, each job's checkpoint
+  generations are walked newest to oldest, unparseable files are
+  QUARANTINED by renaming to <file>.corrupt (never deleted), and each
+  job resubmits from its newest valid generation — or cold if none
+  parses. Recovered runs are bitwise-identical to uninterrupted ones.
+  Transient checkpoint-save failures are retried a bounded number of
+  times (deterministic, clockless backoff); a save that exhausts the
+  budget degrades persistence — the solve continues in memory and the
+  job reports persist_degraded — instead of failing. A job whose engine
+  panics is isolated: it lands in status \"failed\" (panic message in the
+  report's \"failure\" field) while every other job finishes unaffected.
+
+FAIL POINTS (testing):
+  SYMNMF_FAILPOINTS=site=action[,site=action...] injects deterministic
+  faults; action = err | panic | exit, optionally _once (first hit) or
+  @N (Nth hit, 1-based). Sites: ckpt_save, spill_open, spill_read,
+  spill_write, opcache_build, slice — each also matches a per-key
+  variant like slice:<job id>. exit aborts the process with code 86
+  (crash simulation for --recover tests). Unset = zero overhead.
 
 METHODS:
   bpp hals mu pgncg lai-<rule>[-ir] comp-<rule> lvs-<rule> lai-pgncg[-ir]

@@ -17,7 +17,17 @@ use crate::symnmf::metrics::SymNmfResult;
 use crate::symnmf::options::SymNmfOptions;
 use crate::symnmf::trace::TraceFormat;
 use std::path::PathBuf;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Lock a job-state mutex, recovering the data if a panicking thread
+/// poisoned it. Job state is plain bookkeeping mutated under short
+/// critical sections; the panic that poisoned the lock was isolated by
+/// the scheduler's `catch_unwind`, so the state is consistent and the
+/// conservative poison default (propagate the panic to every reader)
+/// would needlessly take down healthy jobs' handles.
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Everything a client supplies to run one solve as a serve job.
 #[derive(Clone)]
@@ -117,6 +127,10 @@ pub enum JobStatus {
     Completed,
     /// the cancel token fired; resumable from its checkpoint
     Cancelled,
+    /// a slice panicked; the panic message is in
+    /// [`JobOutcome::failure`], and the job is resumable from its last
+    /// good checkpoint (or cold, if no slice ever finished)
+    Failed,
 }
 
 impl JobStatus {
@@ -127,6 +141,7 @@ impl JobStatus {
             JobStatus::Suspended => "suspended",
             JobStatus::Completed => "completed",
             JobStatus::Cancelled => "cancelled",
+            JobStatus::Failed => "failed",
         }
     }
 
@@ -135,21 +150,29 @@ impl JobStatus {
     pub fn is_terminal(&self) -> bool {
         matches!(
             self,
-            JobStatus::Suspended | JobStatus::Completed | JobStatus::Cancelled
+            JobStatus::Suspended
+                | JobStatus::Completed
+                | JobStatus::Cancelled
+                | JobStatus::Failed
         )
     }
 }
 
 /// What a finished (terminal) job hands back: the possibly-partial solver
 /// result, the checkpoint to resume it, and slice accounting.
+///
+/// `run_status`, `result`, and `checkpoint` are `None` only for a
+/// [`JobStatus::Failed`] job whose very first slice panicked — any
+/// completed slice leaves all three behind.
 #[derive(Clone)]
 pub struct JobOutcome {
     pub status: JobStatus,
-    /// how the *last slice* ended
-    pub run_status: RunStatus,
-    pub result: SymNmfResult,
-    pub checkpoint: Checkpoint,
-    /// engine slices driven (across cancel/resume)
+    /// how the *last completed slice* ended
+    pub run_status: Option<RunStatus>,
+    pub result: Option<SymNmfResult>,
+    pub checkpoint: Option<Checkpoint>,
+    /// engine slices driven (across cancel/resume), panicked ones
+    /// included
     pub slices: usize,
     /// slices whose operator pin was served by the out-of-core tier
     /// (the `SymPacked` payload streamed from its spill file); always 0
@@ -158,6 +181,32 @@ pub struct JobOutcome {
     /// engine steps run under this scheduler (excludes a resume
     /// checkpoint's prior iterations)
     pub steps: usize,
+    /// the panic message, for a [`JobStatus::Failed`] job
+    pub failure: Option<String>,
+    /// some checkpoint generation could not be persisted even after the
+    /// bounded retry: the solve finished in memory, but the store may
+    /// lag the state reported here (sticky once set)
+    pub persist_degraded: bool,
+}
+
+impl JobOutcome {
+    /// The solver result; panics (with the job's own failure message,
+    /// if any) when no slice ever finished. Convenience for callers
+    /// that already checked `status` — tests, drivers.
+    pub fn expect_result(&self) -> &SymNmfResult {
+        self.result.as_ref().unwrap_or_else(|| match &self.failure {
+            Some(f) => panic!("job failed before any slice finished: {f}"),
+            None => panic!("job has no result"),
+        })
+    }
+
+    /// The resume checkpoint; panics when no slice ever finished.
+    pub fn expect_checkpoint(&self) -> &Checkpoint {
+        self.checkpoint.as_ref().unwrap_or_else(|| match &self.failure {
+            Some(f) => panic!("job failed before any slice finished: {f}"),
+            None => panic!("job has no checkpoint"),
+        })
+    }
 }
 
 /// Mutable per-job state, behind the job's mutex.
@@ -173,6 +222,10 @@ pub(crate) struct JobCore {
     pub(crate) gen: u64,
     /// the one-shot cancel-after hook; `None` once fired
     pub(crate) cancel_hook: Option<usize>,
+    /// panic message of the slice that failed the job
+    pub(crate) failure: Option<String>,
+    /// a checkpoint save exhausted its retry budget (sticky)
+    pub(crate) persist_degraded: bool,
 }
 
 /// Shared job object: immutable service terms + the mutex-guarded core.
@@ -206,6 +259,8 @@ impl JobInner {
                 steps_used: 0,
                 gen: 0,
                 cancel_hook: spec.cancel_after_iters,
+                failure: None,
+                persist_degraded: false,
             }),
             done: Condvar::new(),
         }
@@ -217,12 +272,14 @@ impl JobInner {
         }
         Some(JobOutcome {
             status: core.status,
-            run_status: core.run_status?,
-            result: core.result.clone()?,
-            checkpoint: core.checkpoint.clone()?,
+            run_status: core.run_status,
+            result: core.result.clone(),
+            checkpoint: core.checkpoint.clone(),
             slices: core.slices,
             spilled_slices: core.spilled_slices,
             steps: core.steps_used,
+            failure: core.failure.clone(),
+            persist_degraded: core.persist_degraded,
         })
     }
 }
@@ -245,7 +302,7 @@ impl JobHandle {
 
     /// Non-blocking status snapshot.
     pub fn poll(&self) -> JobStatus {
-        self.inner.core.lock().unwrap().status
+        lock_recover(&self.inner.core).status
     }
 
     /// Trip the job's cancel token. The engine aborts at the next step
@@ -259,24 +316,28 @@ impl JobHandle {
     /// The latest checkpoint, if any slice has run (or a resume
     /// checkpoint was supplied).
     pub fn checkpoint(&self) -> Option<Checkpoint> {
-        self.inner.core.lock().unwrap().checkpoint.clone()
+        lock_recover(&self.inner.core).checkpoint.clone()
     }
 
     /// Terminal outcome if the job has reached one, without blocking.
     pub fn outcome(&self) -> Option<JobOutcome> {
-        JobInner::outcome_locked(&self.inner.core.lock().unwrap())
+        JobInner::outcome_locked(&lock_recover(&self.inner.core))
     }
 
     /// Block until the job reaches a terminal status (completed,
-    /// suspended, or cancelled — the scheduler must be draining on some
-    /// thread, or have drained already) and return its outcome.
+    /// suspended, cancelled, or failed — the scheduler must be draining
+    /// on some thread, or have drained already) and return its outcome.
     pub fn await_result(&self) -> JobOutcome {
-        let mut core = self.inner.core.lock().unwrap();
+        let mut core = lock_recover(&self.inner.core);
         loop {
             if let Some(o) = JobInner::outcome_locked(&core) {
                 return o;
             }
-            core = self.inner.done.wait(core).unwrap();
+            core = self
+                .inner
+                .done
+                .wait(core)
+                .unwrap_or_else(PoisonError::into_inner);
         }
     }
 }

@@ -75,6 +75,41 @@
 //! ([`CacheStats`]) and per-job spilled-slice counts surface in the
 //! serve JSON report.
 //!
+//! ## Crash safety: fail points, panic isolation, retry, recovery
+//!
+//! The serving layer assumes the process, the disk, and the engines can
+//! all fail mid-flight, and pins what happens next:
+//!
+//! * **Deterministic fault injection** (`util::failpoint`): named sites
+//!   — `ckpt_save`, `spill_open` / `spill_read` / `spill_write`,
+//!   `opcache_build`, `slice` — armed through `SYMNMF_FAILPOINTS`
+//!   (grammar: `site=err|panic|exit[_once|@N]`, comma-separated; every
+//!   site also answers a per-key variant like `slice:<job id>`). Unarmed
+//!   — the production steady state — a site costs one relaxed atomic
+//!   load.
+//! * **Panic-isolated workers**: every slice runs under `catch_unwind`,
+//!   so one job's panicking engine marks *that* job
+//!   [`JobStatus::Failed`] (panic message in [`JobOutcome::failure`])
+//!   while the worker thread and every other job keep running,
+//!   bit-for-bit unaffected. Failed jobs are resumable from their last
+//!   good checkpoint, or cold.
+//! * **Bounded deterministic retry** (`util::retry`): transient
+//!   checkpoint-save and spill-read errors are retried a fixed number of
+//!   times with a yield-counted (clockless) backoff. A save that
+//!   exhausts the budget **degrades persistence** — the solve continues
+//!   in memory and the outcome surfaces
+//!   [`JobOutcome::persist_degraded`] — instead of dying; a spill read
+//!   that exhausts it fails the apply loudly (and panic isolation turns
+//!   that into a Failed job).
+//! * **Restart recovery** ([`recovery`], `symnmf serve --recover`): scan
+//!   the store, walk each job's generations newest → oldest, *quarantine*
+//!   unparseable files by renaming them to `*.corrupt` (never delete),
+//!   and resubmit from the newest valid generation — or cold when none
+//!   parses. Because resumed and fresh runs both reproduce the
+//!   uninterrupted iteration sequence bitwise, a recovered fleet's
+//!   results are bitwise-identical to a never-crashed run (pinned by the
+//!   crash-recovery integration tests and CI leg).
+//!
 //! The `symnmf serve` CLI mode (see `main.rs`) submits jobs from a JSONL
 //! spec, drains them to completion, optionally resumes cancelled jobs,
 //! and emits per-job reports.
@@ -82,13 +117,17 @@
 //! [`RunControl`]: crate::symnmf::engine::RunControl
 //! [`CancelToken`]: crate::symnmf::engine::CancelToken
 //! [`Checkpoint`]: crate::symnmf::engine::Checkpoint
+//! [`JobOutcome::failure`]: job::JobOutcome
+//! [`JobOutcome::persist_degraded`]: job::JobOutcome
 
 pub mod job;
 pub mod opcache;
+pub mod recovery;
 pub mod scheduler;
 pub mod store;
 
 pub use job::{JobHandle, JobOutcome, JobSpec, JobStatus};
 pub use opcache::{CacheStats, CachedOperator, OpCache, OpCacheConfig, OpKey, OpPin, PinKind};
+pub use recovery::{recover_job, RecoveredJob, RecoveryReport, RecoveryScan};
 pub use scheduler::{Scheduler, SchedulerConfig};
 pub use store::{sanitize_id, JobStore};

@@ -427,6 +427,12 @@ impl OpCache {
         // Build outside the lock; if the builder panics, release the
         // Busy state so waiters retry (and become the builder).
         let guard = BusyGuard { cache: self, idx, armed: true };
+        // deterministic builder-crash injection; this site has no error
+        // path, so `err` escalates to a panic — the BusyGuard releases
+        // Busy during the unwind, exactly like a real builder panic
+        if let Err(e) = crate::util::failpoint::hit("opcache_build") {
+            panic!("{e}");
+        }
         let op = Arc::new(build());
         let bytes = op.resident_payload_bytes();
         std::mem::forget(guard);
@@ -745,6 +751,29 @@ mod tests {
         let pin = cache.pin_or_build(&key, build);
         assert_eq!(pin.kind(), PinKind::Miss, "dropped entry rebuilds");
         assert_eq!(builds.load(Ordering::SeqCst), 2);
+    }
+
+    /// The `opcache_build` fail point escalates to a panic in the
+    /// builder slot; the `BusyGuard` releases the Busy entry during the
+    /// unwind, so a later pin of the same key rebuilds cleanly instead
+    /// of deadlocking on a Busy entry whose builder is gone.
+    #[test]
+    fn builder_failpoint_panic_releases_the_busy_entry() {
+        let dir = TempDir::new("fp");
+        let cache = OpCache::new(OpCacheConfig::new(dir.0.clone()));
+        let sp = packed_fixture(3, 16);
+        let key = OpKey::of_packed(&sp);
+        let _fp = crate::util::failpoint::scoped("opcache_build=panic_once");
+        let p = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            cache.pin_or_build(&key, || CachedOperator::Packed(packed_fixture(3, 16)))
+        }))
+        .expect_err("armed fail point must panic before the builder runs");
+        let msg = p.downcast_ref::<String>().expect("string payload");
+        assert!(msg.contains("opcache_build"), "{msg}");
+        // the one-shot injection is spent: the retry pin builds
+        let pin = cache.pin_or_build(&key, || CachedOperator::Packed(packed_fixture(3, 16)));
+        assert_eq!(pin.kind(), PinKind::Miss, "released Busy entry rebuilds");
+        assert!(!pin.is_spilled());
     }
 
     /// No budget → nothing is ever evicted.

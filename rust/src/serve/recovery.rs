@@ -1,0 +1,275 @@
+//! Restart recovery: rebuild a serve fleet from whatever a crashed
+//! process left in its [`JobStore`].
+//!
+//! A crash can interrupt the store at any byte: the atomic temp+rename
+//! discipline in [`JobStore::save`] makes a torn file at a *final* path
+//! unlikely, but not impossible (filesystems without durable rename,
+//! operator error, disk corruption). Recovery therefore trusts nothing:
+//! [`scan`] walks every job id found on disk and, per job, inspects the
+//! generations **newest → oldest**:
+//!
+//! 1. The first generation that parses becomes the job's resume
+//!    checkpoint ([`RecoveredJob::checkpoint`]).
+//! 2. Every newer generation that fails to read or parse is
+//!    **quarantined**: renamed in place to `<file>.corrupt` — never
+//!    deleted, so a post-mortem can inspect exactly what the crash tore.
+//!    The `.corrupt` suffix takes the file out of the store's
+//!    `*.ckpt.json` namespace, so [`JobStore::generations`], GC, and
+//!    future saves all ignore it (and a re-save of the same generation
+//!    number cannot collide with it).
+//! 3. A job none of whose generations parse is reported with no
+//!    checkpoint — the caller restarts it **cold**. Because a fresh
+//!    deterministic run and a checkpoint-resumed run both reproduce the
+//!    uninterrupted iteration sequence bitwise (the engine contract),
+//!    either path converges to the same factors; only the wasted work
+//!    differs.
+//!
+//! The CLI face is `symnmf serve --recover` (see `main.rs`): it scans
+//! the store before submission, resubmits each spec'd job from its
+//! newest valid generation, prints a [`RecoveryReport`], and embeds the
+//! same counts in the version-3 JSON report.
+
+use crate::serve::store::{sanitize_id, JobStore};
+use crate::symnmf::engine::Checkpoint;
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One job's recovery result: the newest parseable generation (if any)
+/// and the corrupt files moved out of the way to reach it.
+pub struct RecoveredJob {
+    /// Sanitized job id, as found in the store's filenames.
+    pub id: String,
+    /// `(generation, checkpoint)` to resume from; `None` → restart cold.
+    pub checkpoint: Option<(u64, Checkpoint)>,
+    /// Final paths of quarantined (renamed, never deleted) generations.
+    pub quarantined: Vec<PathBuf>,
+}
+
+/// Everything a store scan found, keyed for spec-side lookup.
+pub struct RecoveryScan {
+    /// Per-job results, sorted by sanitized id.
+    pub jobs: Vec<RecoveredJob>,
+}
+
+impl RecoveryScan {
+    /// The recovered checkpoint for a *raw* (unsanitized) job id.
+    pub fn checkpoint_for(&self, raw_id: &str) -> Option<&(u64, Checkpoint)> {
+        let id = sanitize_id(raw_id);
+        self.jobs
+            .iter()
+            .find(|j| j.id == id)
+            .and_then(|j| j.checkpoint.as_ref())
+    }
+
+    /// Total quarantined files across all jobs.
+    pub fn files_quarantined(&self) -> usize {
+        self.jobs.iter().map(|j| j.quarantined.len()).sum()
+    }
+}
+
+/// Counts for the operator: how the fleet restarted.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// Jobs resubmitted from a persisted generation.
+    pub jobs_recovered: usize,
+    /// Jobs restarted from scratch (nothing valid on disk).
+    pub jobs_cold: usize,
+    /// Unparseable generation files renamed to `*.corrupt`.
+    pub files_quarantined: usize,
+}
+
+impl RecoveryReport {
+    pub fn render(&self) -> String {
+        format!(
+            "recovery: {} job(s) resumed from persisted checkpoints, \
+             {} restarted cold, {} corrupt file(s) quarantined",
+            self.jobs_recovered, self.jobs_cold, self.files_quarantined
+        )
+    }
+
+    /// The `recovery` object of the version-3 serve JSON report.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("jobs_recovered", Json::Num(self.jobs_recovered as f64)),
+            ("jobs_cold", Json::Num(self.jobs_cold as f64)),
+            ("files_quarantined", Json::Num(self.files_quarantined as f64)),
+        ])
+    }
+}
+
+/// Quarantine name of a generation file: the same path with `.corrupt`
+/// appended — outside the `*.ckpt.json` namespace, same directory (so
+/// the rename never crosses a filesystem).
+fn quarantine_path(path: &Path) -> PathBuf {
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    path.with_file_name(format!("{name}.corrupt"))
+}
+
+/// Recover one job: walk its generations newest → oldest, quarantining
+/// unreadable files, until one parses (or none do). Errors only on an
+/// I/O failure of the quarantine rename itself or of the directory scan
+/// — a corrupt checkpoint is an expected input, not an error.
+pub fn recover_job(store: &JobStore, id: &str) -> Result<RecoveredJob, String> {
+    let gens = store.generations(id)?;
+    let mut quarantined = Vec::new();
+    let mut checkpoint = None;
+    for &gen in gens.iter().rev() {
+        let path = store.path_for(id, gen);
+        let parsed = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {path:?}: {e}"))
+            .and_then(|text| {
+                Checkpoint::parse(&text).map_err(|e| format!("parse {path:?}: {e}"))
+            });
+        match parsed {
+            Ok(cp) => {
+                checkpoint = Some((gen, cp));
+                break;
+            }
+            Err(why) => {
+                let corrupt = quarantine_path(&path);
+                std::fs::rename(&path, &corrupt).map_err(|e| {
+                    format!("quarantine {path:?} -> {corrupt:?}: {e} (file was corrupt: {why})")
+                })?;
+                eprintln!(
+                    "[recover] {id}: generation {gen} unreadable ({why}); \
+                     quarantined as {corrupt:?}"
+                );
+                quarantined.push(corrupt);
+            }
+        }
+    }
+    Ok(RecoveredJob { id: sanitize_id(id), checkpoint, quarantined })
+}
+
+/// Scan the whole store: every job id with at least one generation on
+/// disk is recovered (quarantining as it goes). Ids are discovered from
+/// the filenames, so jobs persisted by a crashed process are found even
+/// if the current spec no longer mentions them.
+pub fn scan(store: &JobStore) -> Result<RecoveryScan, String> {
+    let mut jobs = Vec::new();
+    for id in store.job_ids()? {
+        jobs.push(recover_job(store, &id)?);
+    }
+    Ok(RecoveryScan { jobs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::DenseMat;
+    use crate::symnmf::engine::{EngineState, RunStatus};
+    use crate::util::rng::Pcg64;
+
+    fn tmp_store(name: &str) -> JobStore {
+        let dir = std::env::temp_dir()
+            .join(format!("symnmf-recover-{}-{name}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        JobStore::open(&dir).expect("open store").with_keep(4)
+    }
+
+    fn sample_cp(seed: u64, iters: usize) -> Checkpoint {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        Checkpoint {
+            status: RunStatus::Paused,
+            stage: 0,
+            stage_iter: iters,
+            iter: iters,
+            clock: 0.25,
+            stop_best: 0.5,
+            stop_stall: 0,
+            state: EngineState {
+                h: DenseMat::gaussian(5, 2, &mut rng),
+                w: None,
+                rng: None,
+            },
+            records: Vec::new(),
+            isa: Some("scalar".to_string()),
+        }
+    }
+
+    #[test]
+    fn clean_store_recovers_newest_with_no_quarantine() {
+        let store = tmp_store("clean");
+        store.save("j", 1, &sample_cp(1, 1), true).unwrap();
+        store.save("j", 2, &sample_cp(2, 2), true).unwrap();
+        let r = recover_job(&store, "j").unwrap();
+        let (gen, cp) = r.checkpoint.expect("recovered");
+        assert_eq!((gen, cp.iter), (2, 2));
+        assert!(r.quarantined.is_empty());
+        std::fs::remove_dir_all(store.dir()).ok();
+    }
+
+    #[test]
+    fn corrupt_newest_is_quarantined_not_deleted_and_older_resumes() {
+        let store = tmp_store("corrupt");
+        store.save("j", 1, &sample_cp(1, 1), true).unwrap();
+        store.save("j", 2, &sample_cp(2, 2), true).unwrap();
+        store.save("j", 3, &sample_cp(3, 3), true).unwrap();
+        let g3 = store.path_for("j", 3);
+        let torn = std::fs::read_to_string(&g3).unwrap();
+        std::fs::write(&g3, &torn[..torn.len() / 3]).unwrap();
+        let r = recover_job(&store, "j").unwrap();
+        let (gen, cp) = r.checkpoint.expect("fallback generation");
+        assert_eq!((gen, cp.iter), (2, 2));
+        // quarantined: renamed, never deleted, bytes intact
+        assert_eq!(r.quarantined.len(), 1);
+        assert!(!g3.exists(), "corrupt file must leave the store namespace");
+        let q = &r.quarantined[0];
+        assert!(q.to_string_lossy().ends_with(".corrupt"), "{q:?}");
+        assert_eq!(
+            std::fs::read_to_string(q).unwrap(),
+            torn[..torn.len() / 3],
+            "quarantine preserves the evidence"
+        );
+        // the store no longer sees the quarantined generation
+        assert_eq!(store.generations("j").unwrap(), vec![1, 2]);
+        std::fs::remove_dir_all(store.dir()).ok();
+    }
+
+    #[test]
+    fn all_generations_corrupt_means_cold_restart() {
+        let store = tmp_store("cold");
+        store.save("j", 1, &sample_cp(1, 1), true).unwrap();
+        store.save("j", 2, &sample_cp(2, 2), true).unwrap();
+        for g in [1u64, 2] {
+            std::fs::write(store.path_for("j", g), "not json").unwrap();
+        }
+        let r = recover_job(&store, "j").unwrap();
+        assert!(r.checkpoint.is_none(), "nothing valid: cold restart");
+        assert_eq!(r.quarantined.len(), 2);
+        assert!(store.generations("j").unwrap().is_empty());
+        std::fs::remove_dir_all(store.dir()).ok();
+    }
+
+    #[test]
+    fn scan_covers_every_job_and_report_counts_add_up() {
+        let store = tmp_store("scan");
+        store.save("good", 1, &sample_cp(1, 1), true).unwrap();
+        store.save("torn", 1, &sample_cp(2, 1), true).unwrap();
+        store.save("torn", 2, &sample_cp(3, 2), true).unwrap();
+        std::fs::write(store.path_for("torn", 2), "{{").unwrap();
+        store.save("dead", 1, &sample_cp(4, 1), true).unwrap();
+        std::fs::write(store.path_for("dead", 1), "").unwrap();
+        let scan = scan(&store).unwrap();
+        assert_eq!(scan.jobs.len(), 3);
+        assert_eq!(scan.files_quarantined(), 2);
+        assert_eq!(scan.checkpoint_for("good").map(|(g, _)| *g), Some(1));
+        assert_eq!(scan.checkpoint_for("torn").map(|(g, _)| *g), Some(1));
+        assert!(scan.checkpoint_for("dead").is_none());
+        assert!(scan.checkpoint_for("ghost").is_none());
+        // raw → sanitized lookup goes through sanitize_id
+        assert_eq!(scan.checkpoint_for("go od").map(|(g, _)| *g), None);
+        let report = RecoveryReport {
+            jobs_recovered: 2,
+            jobs_cold: 1,
+            files_quarantined: scan.files_quarantined(),
+        };
+        assert!(report.render().contains("2 job(s) resumed"));
+        let j = report.to_json();
+        assert_eq!(j.get("files_quarantined").and_then(Json::as_usize), Some(2));
+        std::fs::remove_dir_all(store.dir()).ok();
+    }
+}

@@ -24,16 +24,18 @@
 //! every method).
 
 use crate::randnla::SymOp;
-use crate::serve::job::{JobHandle, JobInner, JobSpec, JobStatus};
+use crate::serve::job::{lock_recover, JobHandle, JobInner, JobSpec, JobStatus};
 use crate::serve::opcache::{CachedOperator, OpCache, OpKey};
-use crate::serve::store::JobStore;
+use crate::serve::store::{sanitize_id, JobStore};
 use crate::symnmf::engine::{Checkpoint, EngineRun, RunControl, RunStatus, TraceSink};
 use crate::symnmf::trace::{open_sink, CancelAfterSink};
 use crate::util::threadpool::{current_threads, with_thread_budget};
+use crate::util::{failpoint, retry};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 
 /// Scheduler policy knobs.
 #[derive(Default)]
@@ -227,6 +229,21 @@ impl<'x> Scheduler<'x> {
         if spec.name.is_empty() {
             return Err("job name must be nonempty".to_string());
         }
+        // sanitized-id collision hardening: two DISTINCT raw ids that
+        // sanitize to the same filename would share (and GC) one
+        // checkpoint lineage in the store — reject at submission, store
+        // or not, so the collision can't appear later when a store is
+        // added. (Resubmitting the same raw id is the caller's business.)
+        let sanitized = sanitize_id(&spec.name);
+        for other in &self.jobs {
+            if other.name != spec.name && sanitize_id(&other.name) == sanitized {
+                return Err(format!(
+                    "job id {:?} collides with live job {:?} after sanitization \
+                     (both become {sanitized:?}); checkpoint files would share one lineage",
+                    spec.name, other.name
+                ));
+            }
+        }
         let sink = match &spec.trace {
             // resumed jobs append after the pre-resume prefix on disk;
             // fresh jobs start a fresh file
@@ -241,7 +258,7 @@ impl<'x> Scheduler<'x> {
         // retain the stale pre-resume one
         if let Some(store) = &self.cfg.store {
             if let Some(&g) = store.generations(&inner.name)?.last() {
-                inner.core.lock().unwrap().gen = g;
+                lock_recover(&inner.core).gen = g;
             }
         }
         self.runners.push(runner);
@@ -251,13 +268,15 @@ impl<'x> Scheduler<'x> {
         Ok(JobHandle { inner })
     }
 
-    /// Put a suspended or cancelled job back in the ready queue,
-    /// clearing its cancel flag so the resumed slices can run. (The
-    /// reset is shared: resuming one job of a fleet that shares an
+    /// Put a suspended, cancelled, or failed job back in the ready
+    /// queue, clearing its cancel flag so the resumed slices can run.
+    /// (The reset is shared: resuming one job of a fleet that shares an
     /// external token clears that token.) Resumption opens a fresh
     /// budget epoch: a `max_steps` budget grants that many steps again;
     /// a job suspended on its algorithm-clock deadline re-suspends
     /// immediately unless the caller raised the deadline out of band.
+    /// A failed job restarts from its last good checkpoint (or cold if
+    /// its first slice panicked), with the failure message cleared.
     pub fn resume(&self, handle: &JobHandle) -> Result<(), String> {
         let job = self
             .jobs
@@ -265,11 +284,12 @@ impl<'x> Scheduler<'x> {
             .filter(|j| Arc::ptr_eq(j, &handle.inner))
             .ok_or_else(|| "handle does not belong to this scheduler".to_string())?;
         {
-            let mut core = job.core.lock().unwrap();
+            let mut core = lock_recover(&job.core);
             match core.status {
-                JobStatus::Suspended | JobStatus::Cancelled => {
+                JobStatus::Suspended | JobStatus::Cancelled | JobStatus::Failed => {
                     core.status = JobStatus::Queued;
                     core.steps_used = 0;
+                    core.failure = None;
                 }
                 s => {
                     return Err(format!(
@@ -291,7 +311,7 @@ impl<'x> Scheduler<'x> {
             seq: self.seq.fetch_add(1, AtomicOrdering::Relaxed),
             job,
         };
-        self.queue.lock().unwrap().ready.push(key);
+        lock_recover(&self.queue).ready.push(key);
         self.work.notify_all();
     }
 
@@ -302,7 +322,7 @@ impl<'x> Scheduler<'x> {
     /// no-op, and jobs resumed afterwards need another drain.
     pub fn drain(&self) {
         let nt = current_threads();
-        let pending = self.queue.lock().unwrap().ready.len();
+        let pending = lock_recover(&self.queue).ready.len();
         if pending == 0 {
             return;
         }
@@ -324,7 +344,7 @@ impl<'x> Scheduler<'x> {
     fn worker(&self, inner_width: usize) {
         loop {
             let j = {
-                let mut q = self.queue.lock().unwrap();
+                let mut q = lock_recover(&self.queue);
                 loop {
                     if let Some(key) = q.ready.pop() {
                         q.running += 1;
@@ -335,12 +355,12 @@ impl<'x> Scheduler<'x> {
                         // could requeue — the drain is over
                         return;
                     }
-                    q = self.work.wait(q).unwrap();
+                    q = self.work.wait(q).unwrap_or_else(PoisonError::into_inner);
                 }
             };
             let requeue = self.run_slice(j, inner_width);
             {
-                let mut q = self.queue.lock().unwrap();
+                let mut q = lock_recover(&self.queue);
                 q.running -= 1;
                 if requeue {
                     let job = &self.jobs[j];
@@ -361,7 +381,7 @@ impl<'x> Scheduler<'x> {
     fn run_slice(&self, j: usize, inner_width: usize) -> bool {
         let job = &self.jobs[j];
         let (resume_cp, steps_used, hook, gen) = {
-            let mut core = job.core.lock().unwrap();
+            let mut core = lock_recover(&job.core);
             core.status = JobStatus::Running;
             (core.checkpoint.clone(), core.steps_used, core.cancel_hook, core.gen)
         };
@@ -386,49 +406,96 @@ impl<'x> Scheduler<'x> {
             cancel: Some(job.cancel.clone()),
         };
 
-        let slice = {
-            let mut sink_guard = self.sinks[j].lock().unwrap();
+        // Panic isolation: the engine (and any fail point inside it)
+        // runs under catch_unwind, so one job's panic marks THAT job
+        // Failed instead of tearing down the drain scope and every
+        // other in-flight job with it. The catch sits inside the
+        // thread-budget closure and inside the sink-mutex critical
+        // section, so the unwind never crosses either — no budget
+        // leakage, no poisoned sink lock. Operator pins (`OpPin`) are
+        // owned inside the closure and release via Drop during the
+        // unwind, exactly like the opcache's `BusyGuard`.
+        let caught = {
+            let mut sink_guard = lock_recover(&self.sinks[j]);
             let inner_sink = sink_guard.as_deref_mut().map(|s| s as &mut dyn TraceSink);
-            with_thread_budget(inner_width, || match hook {
-                // the one-shot mid-flight cancellation hook, counting
-                // iterations globally across slices
-                Some(n) if start_iter < n => {
-                    let mut wrap = CancelAfterSink::resuming(
-                        job.cancel.clone(),
-                        n,
-                        start_iter,
-                        inner_sink,
-                    );
-                    (self.runners[j])(&ctrl, resume_cp.as_ref(), Some(&mut wrap))
-                }
-                Some(_) => {
-                    // threshold already satisfied (including n = 0):
-                    // cancel before the first step of this slice
-                    job.cancel.cancel();
-                    (self.runners[j])(&ctrl, resume_cp.as_ref(), inner_sink)
-                }
-                None => (self.runners[j])(&ctrl, resume_cp.as_ref(), inner_sink),
+            with_thread_budget(inner_width, || {
+                catch_unwind(AssertUnwindSafe(|| {
+                    // deterministic crash injection for the recovery
+                    // suite; no error path here, so `err` escalates too
+                    if let Err(e) = failpoint::hit_scoped("slice", &job.name) {
+                        panic!("{e}");
+                    }
+                    match hook {
+                        // the one-shot mid-flight cancellation hook,
+                        // counting iterations globally across slices
+                        Some(n) if start_iter < n => {
+                            let mut wrap = CancelAfterSink::resuming(
+                                job.cancel.clone(),
+                                n,
+                                start_iter,
+                                inner_sink,
+                            );
+                            (self.runners[j])(&ctrl, resume_cp.as_ref(), Some(&mut wrap))
+                        }
+                        Some(_) => {
+                            // threshold already satisfied (including
+                            // n = 0): cancel before the first step
+                            job.cancel.cancel();
+                            (self.runners[j])(&ctrl, resume_cp.as_ref(), inner_sink)
+                        }
+                        None => (self.runners[j])(&ctrl, resume_cp.as_ref(), inner_sink),
+                    }
+                }))
             })
         };
-        let SliceRun { run, op_spilled } = slice;
+        let SliceRun { run, op_spilled } = match caught {
+            Ok(slice) => slice,
+            Err(payload) => {
+                let msg = panic_message(payload);
+                eprintln!("[serve] job {:?} panicked in a slice: {msg}", job.name);
+                let mut core = lock_recover(&job.core);
+                core.slices += 1;
+                core.status = JobStatus::Failed;
+                core.failure = Some(msg);
+                // checkpoint/result/run_status keep their last good
+                // values (the slice that panicked produced none)
+                drop(core);
+                job.done.notify_all();
+                return false;
+            }
+        };
 
         // persist the new generation before publishing the state — a
-        // crash after the store write at worst re-runs one slice
+        // crash after the store write at worst re-runs one slice. A
+        // transiently failing save is retried a bounded, deterministic
+        // number of times; exhausting the budget degrades persistence
+        // (the solve continues in memory) instead of killing the job.
         let mut gen_now = gen;
+        let mut save_degraded = false;
         if let Some(store) = &self.cfg.store {
             gen_now = gen + 1;
-            if let Err(e) =
+            let saved = retry::with_retry(retry::DEFAULT_ATTEMPTS, |_| {
                 store.save(&job.name, gen_now, &run.checkpoint, self.cfg.slim_checkpoints)
-            {
+            });
+            if let Err(e) = saved {
                 // telemetry/persistence loss must not kill the solve
-                eprintln!("[serve] checkpoint save failed for {:?}: {e}", job.name);
+                eprintln!(
+                    "[serve] checkpoint save failed for {:?} after {} attempts: {e}; \
+                     continuing in memory (persistence degraded)",
+                    job.name,
+                    retry::DEFAULT_ATTEMPTS
+                );
                 gen_now = gen;
+                save_degraded = true;
             }
         }
 
         let st = run.checkpoint.status;
-        let mut core = job.core.lock().unwrap();
+        let mut core = lock_recover(&job.core);
         core.slices += 1;
+        if save_degraded {
+            core.persist_degraded = true;
+        }
         if op_spilled == Some(true) {
             core.spilled_slices += 1;
         }
@@ -480,6 +547,21 @@ impl<'x> Scheduler<'x> {
     }
 }
 
+/// Render a caught panic payload for [`JobOutcome::failure`]. Panics
+/// raised by `panic!("...")` carry `&str` or `String`; anything else
+/// (a `panic_any` payload) gets a placeholder rather than being lost.
+///
+/// [`JobOutcome::failure`]: crate::serve::job::JobOutcome
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    match payload.downcast_ref::<&str>() {
+        Some(s) => (*s).to_string(),
+        None => match payload.downcast_ref::<String>() {
+            Some(s) => s.clone(),
+            None => "non-string panic payload".to_string(),
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -517,10 +599,11 @@ mod tests {
         sched.drain();
         let o = h.await_result();
         assert_eq!(o.status, JobStatus::Completed);
-        assert_eq!(o.run_status, RunStatus::Completed);
+        assert_eq!(o.run_status, Some(RunStatus::Completed));
         assert_eq!(o.slices, 1, "no slicing configured: one slice runs it all");
-        assert!(o.result.iters() >= 1);
-        assert!(o.result.h.is_nonneg());
+        assert!(o.expect_result().iters() >= 1);
+        assert!(o.expect_result().h.is_nonneg());
+        assert!(o.failure.is_none() && !o.persist_degraded);
     }
 
     /// Slicing at slice_steps=2 must reproduce the one-shot run bitwise
@@ -542,11 +625,12 @@ mod tests {
         let got = h.await_result();
         assert_eq!(got.status, JobStatus::Completed);
         assert!(got.slices >= 3, "7 iters at 2/slice needs >= 3 slices");
-        assert_eq!(got.result.iters(), full.iters());
-        for (a, b) in full.h.data().iter().zip(got.result.h.data()) {
+        let got_res = got.expect_result();
+        assert_eq!(got_res.iters(), full.iters());
+        for (a, b) in full.h.data().iter().zip(got_res.h.data()) {
             assert_eq!(a.to_bits(), b.to_bits(), "sliced H != one-shot H");
         }
-        for (ra, rb) in full.records.iter().zip(&got.result.records) {
+        for (ra, rb) in full.records.iter().zip(&got_res.records) {
             assert_eq!(ra.residual.to_bits(), rb.residual.to_bits());
         }
     }
@@ -580,12 +664,12 @@ mod tests {
         let o2 = h.await_result();
         assert_eq!(o2.status, JobStatus::Suspended);
         assert_eq!(o2.steps, 2, "fresh epoch grants max_steps again");
-        assert_eq!(o2.checkpoint.iter, 4, "4 iterations done in total");
+        assert_eq!(o2.expect_checkpoint().iter, 4, "4 iterations done in total");
         sched.resume(&h).expect("resume");
         sched.drain();
         let o3 = h.await_result();
         assert_eq!(o3.status, JobStatus::Completed, "6-iter run done in 3 epochs");
-        for (a, b) in full.h.data().iter().zip(o3.result.h.data()) {
+        for (a, b) in full.h.data().iter().zip(o3.expect_result().h.data()) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
     }
@@ -625,7 +709,7 @@ mod tests {
         sched.drain();
         let o1 = h.await_result();
         assert_eq!(o1.status, JobStatus::Cancelled);
-        assert_eq!(o1.result.iters(), 0, "threshold 0 is satisfied at start");
+        assert_eq!(o1.expect_result().iters(), 0, "threshold 0 is satisfied at start");
         sched.resume(&h).expect("resume");
         sched.drain();
         assert_eq!(h.await_result().status, JobStatus::Completed);
@@ -647,15 +731,145 @@ mod tests {
         sched.drain();
         let o1 = h.await_result();
         assert_eq!(o1.status, JobStatus::Cancelled);
-        assert_eq!(o1.run_status, RunStatus::Cancelled);
-        assert_eq!(o1.result.iters(), 0, "no step may run");
-        assert_eq!(o1.checkpoint.iter, 0);
+        assert_eq!(o1.run_status, Some(RunStatus::Cancelled));
+        assert_eq!(o1.expect_result().iters(), 0, "no step may run");
+        assert_eq!(o1.expect_checkpoint().iter, 0);
         sched.resume(&h).expect("resume");
         sched.drain();
         let o2 = h.await_result();
         assert_eq!(o2.status, JobStatus::Completed);
-        for (a, b) in full.h.data().iter().zip(o2.result.h.data()) {
+        for (a, b) in full.h.data().iter().zip(o2.expect_result().h.data()) {
             assert_eq!(a.to_bits(), b.to_bits(), "resumed-from-0 H != full H");
         }
+    }
+
+    /// Satellite: distinct raw ids that sanitize to the same store
+    /// filename are rejected at submission — they would share (and GC)
+    /// one checkpoint lineage.
+    #[test]
+    fn sanitized_id_collision_is_rejected_at_submit() {
+        let x = planted(20, 2, 21);
+        let method = Method::Exact(UpdateRule::Hals);
+        let mut sched = Scheduler::new(SchedulerConfig::default());
+        sched.submit(&x, JobSpec::new("a.b", method, opts(2, 3, 1))).expect("first");
+        let err = sched
+            .submit(&x, JobSpec::new("a b", method, opts(2, 3, 2)))
+            .expect_err("\"a b\" sanitizes to \"a_b\" — same as \"a.b\"");
+        assert!(err.contains("collides") && err.contains("a_b"), "{err}");
+        // the exact same raw id is NOT a sanitization collision
+        sched.submit(&x, JobSpec::new("a.b", method, opts(2, 3, 3))).expect("same raw id");
+        // a clean distinct id still goes through
+        sched.submit(&x, JobSpec::new("c", method, opts(2, 3, 4))).expect("distinct");
+    }
+
+    /// Tentpole: a panicking slice marks the job Failed with the panic
+    /// message, without tearing down the drain; a failed job is
+    /// resumable from its last good checkpoint and then matches the
+    /// uninterrupted run bitwise.
+    #[test]
+    fn panicking_slice_fails_the_job_and_resume_recovers_bitwise() {
+        use crate::util::failpoint;
+        let x = planted(26, 2, 33);
+        let o = opts(2, 6, 5);
+        let method = Method::Exact(UpdateRule::Hals);
+        let full = method
+            .run_controlled(&x, &o, &RunControl::unlimited(), None)
+            .result;
+        let _fp = failpoint::scoped("slice:panicky=panic@2");
+        let mut sched = Scheduler::new(SchedulerConfig {
+            slice_steps: Some(2),
+            ..SchedulerConfig::default()
+        });
+        let h = sched.submit(&x, JobSpec::new("panicky", method, o)).unwrap();
+        sched.drain();
+        let o1 = h.await_result();
+        assert_eq!(o1.status, JobStatus::Failed);
+        let msg = o1.failure.as_deref().expect("failure message");
+        assert!(msg.contains("injected panic"), "{msg}");
+        assert_eq!(o1.slices, 2, "slice 1 good, slice 2 panicked");
+        // the last good checkpoint survives the panic
+        assert_eq!(o1.expect_checkpoint().iter, 2);
+        // resume restarts from it; the @2 trigger is spent, so the job
+        // completes — bitwise equal to the uninterrupted run
+        sched.resume(&h).expect("failed jobs are resumable");
+        sched.drain();
+        let o2 = h.await_result();
+        assert_eq!(o2.status, JobStatus::Completed);
+        assert!(o2.failure.is_none(), "resume clears the failure");
+        for (a, b) in full.h.data().iter().zip(o2.expect_result().h.data()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "resumed-after-panic H != full H");
+        }
+    }
+
+    /// A panic on the very FIRST slice leaves no result/checkpoint —
+    /// the outcome must still be deliverable (await_result returns, no
+    /// hang) with all three payload fields None.
+    #[test]
+    fn first_slice_panic_yields_an_empty_failed_outcome() {
+        use crate::util::failpoint;
+        let x = planted(20, 2, 41);
+        let method = Method::Exact(UpdateRule::Bpp);
+        let _fp = failpoint::scoped("slice:doomed=panic@1");
+        let mut sched = Scheduler::new(SchedulerConfig::default());
+        let h = sched.submit(&x, JobSpec::new("doomed", method, opts(2, 4, 2))).unwrap();
+        sched.drain();
+        let o = h.await_result();
+        assert_eq!(o.status, JobStatus::Failed);
+        assert!(o.result.is_none() && o.checkpoint.is_none() && o.run_status.is_none());
+        assert_eq!(o.slices, 1);
+        // cold resume: runs from scratch to completion
+        sched.resume(&h).expect("resume");
+        sched.drain();
+        assert_eq!(h.await_result().status, JobStatus::Completed);
+    }
+
+    /// Tentpole: a persistently failing checkpoint save exhausts the
+    /// bounded retry and degrades persistence — the solve continues in
+    /// memory and the outcome surfaces `persist_degraded`; a transient
+    /// (single-shot) failure is healed by the retry and does NOT degrade.
+    #[test]
+    fn save_failures_retry_then_degrade_without_killing_the_job() {
+        use crate::util::failpoint;
+        let x = planted(24, 2, 51);
+        let method = Method::Exact(UpdateRule::Hals);
+        let dir = std::env::temp_dir()
+            .join(format!("symnmf-degraded-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let store = JobStore::open(&dir).expect("open store");
+
+        // persistent failure: every save attempt of job "sticky" errors
+        let _fp = failpoint::scoped("ckpt_save:sticky=err");
+        let mut sched = Scheduler::new(SchedulerConfig {
+            slice_steps: Some(2),
+            store: Some(store.clone()),
+            ..SchedulerConfig::default()
+        });
+        let h = sched.submit(&x, JobSpec::new("sticky", method, opts(2, 4, 3))).unwrap();
+        sched.drain();
+        let o = h.await_result();
+        assert_eq!(o.status, JobStatus::Completed, "the solve itself must survive");
+        assert!(o.persist_degraded, "every save failed: degraded");
+        assert!(store.generations("sticky").unwrap().is_empty(), "nothing persisted");
+        // each slice burned the full retry budget deterministically
+        assert_eq!(
+            failpoint::hits("ckpt_save:sticky") as usize,
+            o.slices * crate::util::retry::DEFAULT_ATTEMPTS
+        );
+        drop(_fp);
+
+        // transient failure: only the first attempt errs; retry heals it
+        let _fp = failpoint::scoped("ckpt_save:transient=err_once");
+        let mut sched = Scheduler::new(SchedulerConfig {
+            slice_steps: Some(2),
+            store: Some(store.clone()),
+            ..SchedulerConfig::default()
+        });
+        let h = sched.submit(&x, JobSpec::new("transient", method, opts(2, 4, 3))).unwrap();
+        sched.drain();
+        let o = h.await_result();
+        assert_eq!(o.status, JobStatus::Completed);
+        assert!(!o.persist_degraded, "a healed transient must not degrade");
+        assert!(!store.generations("transient").unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

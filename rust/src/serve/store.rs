@@ -17,6 +17,8 @@
 //! escape the store directory.
 
 use crate::symnmf::engine::Checkpoint;
+use crate::util::failpoint;
+use std::io::Write;
 use std::path::{Path, PathBuf};
 
 /// Map an arbitrary job id onto the store's filename alphabet:
@@ -75,9 +77,10 @@ impl JobStore {
         self.dir.join(JobStore::file_name(id, gen))
     }
 
-    /// Persist one checkpoint generation (atomic: temp + rename), then
-    /// GC generations beyond the retention. `slim` selects the
-    /// factor-only version-2 encoding.
+    /// Persist one checkpoint generation (atomic: temp + rename, with
+    /// the temp file fsynced before the rename so the payload is durable
+    /// when the new name appears), then GC generations beyond the
+    /// retention. `slim` selects the factor-only version-2 encoding.
     pub fn save(
         &self,
         id: &str,
@@ -85,11 +88,24 @@ impl JobStore {
         cp: &Checkpoint,
         slim: bool,
     ) -> Result<PathBuf, String> {
+        failpoint::hit_scoped("ckpt_save", id)?;
         let path = self.path_for(id, gen);
         let tmp = path.with_extension("json.tmp");
         let text = if slim { cp.serialize_slim() } else { cp.serialize() };
-        std::fs::write(&tmp, text).map_err(|e| format!("write {tmp:?}: {e}"))?;
+        (|| -> std::io::Result<()> {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(text.as_bytes())?;
+            // the durability half of the temp+rename contract: the bytes
+            // must be on disk before the rename publishes the name
+            f.sync_all()
+        })()
+        .map_err(|e| format!("write {tmp:?}: {e}"))?;
         std::fs::rename(&tmp, &path).map_err(|e| format!("rename to {path:?}: {e}"))?;
+        // best-effort directory fsync so the rename itself survives a
+        // crash; not every filesystem supports fsync on a directory
+        if let Ok(d) = std::fs::File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
         self.gc(id)?;
         Ok(path)
     }
@@ -115,16 +131,62 @@ impl JobStore {
         Ok(gens)
     }
 
-    /// Load the newest persisted generation, if any.
+    /// Load the newest **parseable** generation, if any: a torn or
+    /// corrupt newest file (e.g. a crash mid-write on a filesystem
+    /// without atomic rename durability) falls back to the next-older
+    /// generation instead of stranding the job. Files are left in place
+    /// — quarantining is [`crate::serve::recovery`]'s job. Errors only
+    /// when generations exist but none parses.
     pub fn load_latest(&self, id: &str) -> Result<Option<(u64, Checkpoint)>, String> {
-        let Some(&gen) = self.generations(id)?.last() else {
-            return Ok(None);
-        };
-        let path = self.path_for(id, gen);
-        let text =
-            std::fs::read_to_string(&path).map_err(|e| format!("read {path:?}: {e}"))?;
-        let cp = Checkpoint::parse(&text).map_err(|e| format!("parse {path:?}: {e}"))?;
-        Ok(Some((gen, cp)))
+        let gens = self.generations(id)?;
+        let mut last_err: Option<String> = None;
+        for &gen in gens.iter().rev() {
+            let path = self.path_for(id, gen);
+            let parsed = std::fs::read_to_string(&path)
+                .map_err(|e| format!("read {path:?}: {e}"))
+                .and_then(|text| {
+                    Checkpoint::parse(&text).map_err(|e| format!("parse {path:?}: {e}"))
+                });
+            match parsed {
+                Ok(cp) => {
+                    if let Some(e) = &last_err {
+                        eprintln!(
+                            "[store] {id}: newest generation unreadable ({e}); \
+                             falling back to generation {gen}"
+                        );
+                    }
+                    return Ok(Some((gen, cp)));
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        match last_err {
+            None => Ok(None),
+            Some(e) => Err(format!("no parseable generation for {id:?}: {e}")),
+        }
+    }
+
+    /// Job ids (sanitized form) with at least one generation on disk —
+    /// the recovery scan's starting set.
+    pub fn job_ids(&self) -> Result<Vec<String>, String> {
+        let suffix = ".ckpt.json";
+        let mut ids = Vec::new();
+        let entries = std::fs::read_dir(&self.dir)
+            .map_err(|e| format!("read store dir {:?}: {e}", self.dir))?;
+        for entry in entries {
+            let entry = entry.map_err(|e| format!("read store dir entry: {e}"))?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(stem) = name.strip_suffix(suffix) else { continue };
+            // strip the trailing ".g<digits>" generation tag
+            let Some((id, gen)) = stem.rsplit_once(".g") else { continue };
+            if !gen.is_empty() && gen.bytes().all(|b| b.is_ascii_digit()) {
+                ids.push(id.to_string());
+            }
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        Ok(ids)
     }
 
     /// Remove superseded generations beyond the retention; returns how
@@ -228,6 +290,61 @@ mod tests {
             store.save("j", gen, &sample_cp(gen, 1), false).expect("save");
         }
         assert_eq!(store.generations("j").unwrap(), vec![4]);
+        std::fs::remove_dir_all(store.dir()).ok();
+    }
+
+    /// Satellite: a torn/truncated newest generation must not strand the
+    /// job — `load_latest` falls back to the next-older parseable one.
+    #[test]
+    fn torn_newest_generation_falls_back_to_older() {
+        let store = tmp_store("torn").with_keep(3);
+        store.save("t", 1, &sample_cp(1, 1), false).expect("save g1");
+        store.save("t", 2, &sample_cp(2, 2), false).expect("save g2");
+        // tear generation 2: keep only the first half of its bytes (a
+        // crash mid-write without the fsync+rename discipline)
+        let g2 = store.path_for("t", 2);
+        let bytes = std::fs::read(&g2).unwrap();
+        std::fs::write(&g2, &bytes[..bytes.len() / 2]).unwrap();
+        let (gen, cp) = store.load_latest("t").unwrap().expect("fallback");
+        assert_eq!(gen, 1, "must fall back past the torn newest generation");
+        assert_eq!(cp.iter, 1);
+        // the torn file is left in place (quarantine is recovery's job)
+        assert!(g2.exists());
+        // truncating EVERY generation leaves nothing to load: that is an
+        // error (generations exist but none parses), not a silent cold start
+        let g1 = store.path_for("t", 1);
+        std::fs::write(&g1, "{").unwrap();
+        let err = store.load_latest("t").expect_err("all torn");
+        assert!(err.contains("no parseable generation"), "{err}");
+        std::fs::remove_dir_all(store.dir()).ok();
+    }
+
+    #[test]
+    fn job_ids_lists_each_job_once() {
+        let store = tmp_store("ids").with_keep(2);
+        store.save("a", 1, &sample_cp(1, 1), false).unwrap();
+        store.save("a", 2, &sample_cp(2, 2), false).unwrap();
+        store.save("b", 1, &sample_cp(3, 1), false).unwrap();
+        // stray files are ignored
+        std::fs::write(store.dir().join("notes.txt"), "x").unwrap();
+        std::fs::write(store.dir().join("c.g0000001x.ckpt.json"), "x").unwrap();
+        assert_eq!(store.job_ids().unwrap(), vec!["a".to_string(), "b".to_string()]);
+        std::fs::remove_dir_all(store.dir()).ok();
+    }
+
+    /// The `ckpt_save` fail point surfaces as a plain save error — the
+    /// scheduler's bounded retry sits on top of exactly this path.
+    #[test]
+    fn ckpt_save_failpoint_injects_an_error() {
+        let _fp = crate::util::failpoint::scoped("ckpt_save:flaky=err_once");
+        let store = tmp_store("fp");
+        let err = store
+            .save("flaky", 1, &sample_cp(1, 1), false)
+            .expect_err("first save must fail");
+        assert!(err.contains("injected error"), "{err}");
+        // the injection is one-shot; the retry heals
+        store.save("flaky", 1, &sample_cp(1, 1), false).expect("second save");
+        assert!(store.load_latest("flaky").unwrap().is_some());
         std::fs::remove_dir_all(store.dir()).ok();
     }
 

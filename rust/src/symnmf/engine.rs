@@ -1151,6 +1151,75 @@ mod tests {
         );
     }
 
+    /// Adversarial inputs at the parse boundary — each rejected with a
+    /// named `Err`, never a panic: truncation at every prefix length,
+    /// duplicated keys, and factor payloads whose hex length disagrees
+    /// with the claimed dimensions (oversized, undersized, or dims
+    /// large enough to overflow the size math).
+    #[test]
+    fn checkpoint_parse_survives_adversarial_inputs() {
+        let mut rng = Pcg64::seed_from_u64(17);
+        let cp = Checkpoint {
+            status: RunStatus::Paused,
+            stage: 0,
+            stage_iter: 1,
+            iter: 1,
+            clock: 0.5,
+            stop_best: 0.5,
+            stop_stall: 0,
+            state: EngineState {
+                h: DenseMat::gaussian(3, 2, &mut rng),
+                w: None,
+                rng: None,
+            },
+            records: vec![IterRecord {
+                iter: 0,
+                time_secs: 0.1,
+                residual: 0.5,
+                proj_grad: None,
+                phase_secs: (0.0, 0.0, 0.0),
+                hybrid_stats: None,
+            }],
+            isa: None,
+        };
+        let text = cp.serialize();
+        assert!(Checkpoint::parse(&text).is_ok(), "fixture must be valid");
+
+        // truncated at EVERY proper prefix: always Err, never panic
+        for cut in 0..text.len() {
+            assert!(
+                Checkpoint::parse(&text[..cut]).is_err(),
+                "prefix of length {cut} must be rejected"
+            );
+        }
+
+        // duplicated key: the JSON layer rejects it by name
+        let dup = text.replacen("\"iter\":1", "\"iter\":1,\"iter\":1", 1);
+        let err = Checkpoint::parse(&dup).expect_err("duplicate key");
+        assert!(err.contains("duplicate key"), "{err}");
+
+        // oversized hex payload: more bits than 16·rows·cols
+        let grow = |t: &str, extra: &str| t.replacen("\"bits\":\"", &format!("\"bits\":\"{extra}"), 1);
+        let err = Checkpoint::parse(&grow(&text, &"0".repeat(16)))
+            .expect_err("oversized payload");
+        assert!(err.contains("mat.bits length"), "{err}");
+        // undersized: claimed dims larger than the payload
+        let small = text.replacen("\"rows\":3", "\"rows\":4", 1);
+        let err = Checkpoint::parse(&small).expect_err("undersized payload");
+        assert!(err.contains("mat.bits length"), "{err}");
+        // hostile dims whose product overflows usize: Err, not an
+        // overflow panic or a giant allocation
+        let huge = text.replacen("\"rows\":3", &format!("\"rows\":{}", u64::MAX / 2), 1);
+        assert!(Checkpoint::parse(&huge).is_err());
+        // non-hex garbage inside the payload (length-preserving, so it
+        // gets past the size check to the hex decode)
+        let start = text.find("\"bits\":\"").unwrap() + "\"bits\":\"".len();
+        let mut junk = text.clone();
+        junk.replace_range(start..start + 16, &"z".repeat(16));
+        let err = Checkpoint::parse(&junk).expect_err("non-hex payload");
+        assert!(err.contains("bad mat hex"), "{err}");
+    }
+
     /// Minimal do-nothing engine: lets the resume-guard tests drive
     /// [`run_solver`] without the cost (or numerics) of a real method.
     struct StaticEngine {

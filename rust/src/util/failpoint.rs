@@ -1,0 +1,354 @@
+//! Deterministic fail-point injection for the crash-safety suite.
+//!
+//! Production code marks named failure sites with [`hit`] (or
+//! [`hit_scoped`] for per-key variants like `slice:<job id>`). A site
+//! does nothing until armed through the `SYMNMF_FAILPOINTS` environment
+//! variable or, in tests, through [`scoped`]. When unarmed, a hit costs
+//! exactly one relaxed atomic load — no locks, no allocation, no clock.
+//!
+//! ## Spec grammar
+//!
+//! ```text
+//!   SYMNMF_FAILPOINTS = site=action [ , site=action ... ]
+//!   action            = kind | kind_once | kind@N
+//!   kind              = err | panic | exit
+//! ```
+//!
+//! * `kind` alone fires on **every** hit of the site.
+//! * `kind@N` fires on the **Nth** hit only (1-based) — hits are counted
+//!   per site for the life of the process (or the [`scoped`] guard).
+//! * `kind_once` is shorthand for `kind@1`.
+//!
+//! Example: `SYMNMF_FAILPOINTS=ckpt_save=err@3,spill_read=err_once,slice=panic@2`
+//! fails the 3rd checkpoint save, fails the first spill-tile read (the
+//! bounded retry then heals it), and panics the 2nd scheduler slice.
+//!
+//! ## Actions
+//!
+//! * `err` — [`hit`] returns `Err` with a message naming the site and
+//!   hit count; the caller's normal error path takes it from there.
+//!   Sites with no error path (e.g. `opcache_build`) escalate `err` to a
+//!   panic and document that.
+//! * `panic` — [`hit`] panics. Under the scheduler's panic isolation
+//!   this marks the owning job `Failed` without killing the drain.
+//! * `exit` — the process exits immediately with code [`EXIT_CODE`],
+//!   simulating a hard crash for restart-recovery tests (no destructors,
+//!   no unwinding — exactly what a crash looks like to the `JobStore`).
+//!
+//! ## Wired sites
+//!
+//! | site            | location                                  | error path |
+//! |-----------------|-------------------------------------------|------------|
+//! | `ckpt_save`     | `JobStore::save` (before the temp write)  | save `Err` |
+//! | `spill_open`    | `SymPackedSpilled::open`                  | open `Err` |
+//! | `spill_read`    | `SymPackedSpilled` tile fault (per attempt) | retried, then panic |
+//! | `spill_write`   | `write_spill`                             | write `Err` |
+//! | `opcache_build` | `OpCache::pin_or_build` (builder slot)    | escalates to panic |
+//! | `slice`         | `Scheduler::run_slice` (inside the catch) | escalates to panic |
+//!
+//! Every site also checks the scoped variant `site:<key>` first (job id
+//! for `ckpt_save`/`slice`), so a test can target one job of a fleet.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Process exit code of the `exit` action — distinctive enough that a
+/// recovery test can assert the abort was the injected one.
+pub const EXIT_CODE: i32 = 86;
+
+const STATE_UNINIT: u8 = 0;
+const STATE_OFF: u8 = 1;
+const STATE_ARMED: u8 = 2;
+
+/// Tri-state so the unarmed fast path is a single relaxed load with no
+/// separate init flag: 0 = env not read yet, 1 = off, 2 = armed.
+static STATE: AtomicU8 = AtomicU8::new(STATE_UNINIT);
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Action {
+    Err,
+    Panic,
+    Exit,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Trigger {
+    /// fire on every hit
+    Every,
+    /// fire on the Nth hit only (1-based)
+    At(u64),
+}
+
+#[derive(Debug)]
+struct Site {
+    action: Action,
+    trigger: Trigger,
+    hits: u64,
+}
+
+fn registry() -> &'static Mutex<HashMap<String, Site>> {
+    static R: OnceLock<Mutex<HashMap<String, Site>>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Lock, recovering from poisoning: the registry holds plain counters,
+/// and a panic-action site unwinds through callers that may re-enter.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+fn parse_spec(spec: &str) -> Result<HashMap<String, Site>, String> {
+    let mut sites = HashMap::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (site, action) = part
+            .split_once('=')
+            .ok_or_else(|| format!("fail point {part:?}: expected site=action"))?;
+        let site = site.trim();
+        if site.is_empty() {
+            return Err(format!("fail point {part:?}: empty site name"));
+        }
+        let action = action.trim();
+        let (kind, trigger) = match action.split_once('@') {
+            Some((k, n)) => {
+                let n: u64 = n
+                    .parse()
+                    .map_err(|e| format!("fail point {site:?}: bad hit count {n:?}: {e}"))?;
+                if n == 0 {
+                    return Err(format!("fail point {site:?}: @N is 1-based, got @0"));
+                }
+                (k, Trigger::At(n))
+            }
+            None => match action.strip_suffix("_once") {
+                Some(k) => (k, Trigger::At(1)),
+                None => (action, Trigger::Every),
+            },
+        };
+        let action = match kind {
+            "err" => Action::Err,
+            "panic" => Action::Panic,
+            "exit" => Action::Exit,
+            other => {
+                return Err(format!(
+                    "fail point {site:?}: unknown action {other:?} \
+                     (err | panic | exit, optionally _once or @N)"
+                ))
+            }
+        };
+        if sites.contains_key(site) {
+            return Err(format!("fail point {site:?} specified twice"));
+        }
+        sites.insert(site.to_string(), Site { action, trigger, hits: 0 });
+    }
+    Ok(sites)
+}
+
+/// Cold path of [`armed`]: read `SYMNMF_FAILPOINTS` once, under the
+/// registry lock (idempotent if several threads race here).
+#[cold]
+fn init_from_env() -> bool {
+    let mut reg = lock(registry());
+    match STATE.load(Ordering::Relaxed) {
+        STATE_OFF => return false,
+        STATE_ARMED => return true,
+        _ => {}
+    }
+    let sites = match std::env::var("SYMNMF_FAILPOINTS") {
+        Ok(v) if !v.trim().is_empty() => match parse_spec(&v) {
+            Ok(s) => s,
+            // a malformed spec means the operator thinks injection is on;
+            // running without it would silently invalidate the test
+            Err(e) => panic!("SYMNMF_FAILPOINTS: {e}"),
+        },
+        _ => HashMap::new(),
+    };
+    let armed = !sites.is_empty();
+    *reg = sites;
+    STATE.store(if armed { STATE_ARMED } else { STATE_OFF }, Ordering::Relaxed);
+    armed
+}
+
+/// Whether any fail point is armed. The steady-state cost — and the
+/// whole cost of an unarmed [`hit`] — is this one relaxed atomic load.
+#[inline]
+pub fn armed() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        STATE_OFF => false,
+        STATE_ARMED => true,
+        _ => init_from_env(),
+    }
+}
+
+/// Mark a failure site. Returns `Err` when an armed `err` action fires;
+/// panics / exits for the other actions; otherwise `Ok(())`.
+#[inline]
+pub fn hit(site: &str) -> Result<(), String> {
+    if !armed() {
+        return Ok(());
+    }
+    hit_armed(site)
+}
+
+/// Mark a failure site with a per-key variant: checks `group:key` first
+/// (its hits counted separately), then the bare `group` site. The
+/// `format!` only runs when some fail point is armed, keeping the
+/// unarmed path allocation-free.
+#[inline]
+pub fn hit_scoped(group: &str, key: &str) -> Result<(), String> {
+    if !armed() {
+        return Ok(());
+    }
+    hit_armed(&format!("{group}:{key}"))?;
+    hit_armed(group)
+}
+
+fn hit_armed(site: &str) -> Result<(), String> {
+    // decide under the lock, act after releasing it — a panic or exit
+    // while holding the registry mutex would poison it for other sites
+    let fired = {
+        let mut reg = lock(registry());
+        let Some(s) = reg.get_mut(site) else { return Ok(()) };
+        s.hits += 1;
+        let fire = match s.trigger {
+            Trigger::Every => true,
+            Trigger::At(n) => s.hits == n,
+        };
+        if !fire {
+            return Ok(());
+        }
+        (s.action, s.hits)
+    };
+    let (action, n) = fired;
+    match action {
+        Action::Err => Err(format!("fail point {site:?} injected error (hit {n})")),
+        Action::Panic => panic!("fail point {site:?} injected panic (hit {n})"),
+        Action::Exit => {
+            eprintln!("fail point {site:?} injected process exit (hit {n})");
+            std::process::exit(EXIT_CODE);
+        }
+    }
+}
+
+/// Hits recorded so far for a site (0 if unknown) — test observability.
+pub fn hits(site: &str) -> u64 {
+    lock(registry()).get(site).map(|s| s.hits).unwrap_or(0)
+}
+
+/// Serializes tests that arm fail points; restores the env-derived
+/// configuration on drop.
+pub struct FailpointsGuard {
+    _serial: MutexGuard<'static, ()>,
+}
+
+/// Arm `spec` for the guard's lifetime (test use). Guards serialize on a
+/// global lock so concurrent tests cannot see each other's injections;
+/// on drop the registry reverts to whatever `SYMNMF_FAILPOINTS` says.
+/// Panics on a malformed spec.
+pub fn scoped(spec: &str) -> FailpointsGuard {
+    static SCOPE_LOCK: Mutex<()> = Mutex::new(());
+    let serial = SCOPE_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let sites = parse_spec(spec).unwrap_or_else(|e| panic!("fail point spec: {e}"));
+    let mut reg = lock(registry());
+    let armed = !sites.is_empty();
+    *reg = sites;
+    STATE.store(if armed { STATE_ARMED } else { STATE_OFF }, Ordering::Relaxed);
+    drop(reg);
+    FailpointsGuard { _serial: serial }
+}
+
+impl Drop for FailpointsGuard {
+    fn drop(&mut self) {
+        let mut reg = lock(registry());
+        reg.clear();
+        // next armed() re-derives from the environment
+        STATE.store(STATE_UNINIT, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_hits_are_free_and_ok() {
+        let _fp = scoped(""); // explicitly empty: off, and serialized
+        assert!(!armed());
+        assert!(hit("anything").is_ok());
+        assert!(hit_scoped("slice", "job-1").is_ok());
+    }
+
+    #[test]
+    fn err_fires_on_the_named_hit_only() {
+        let _fp = scoped("ckpt_save=err@3");
+        assert!(hit("ckpt_save").is_ok());
+        assert!(hit("ckpt_save").is_ok());
+        let e = hit("ckpt_save").expect_err("3rd hit must fail");
+        assert!(e.contains("ckpt_save") && e.contains("hit 3"), "{e}");
+        assert!(hit("ckpt_save").is_ok(), "one-shot trigger: 4th hit passes");
+        assert_eq!(hits("ckpt_save"), 4);
+        assert!(hit("other_site").is_ok(), "unmatched sites never fire");
+    }
+
+    #[test]
+    fn once_is_shorthand_for_at_1_and_bare_fires_every_hit() {
+        let _fp = scoped("a=err_once, b=err");
+        assert!(hit("a").is_err());
+        assert!(hit("a").is_ok());
+        assert!(hit("b").is_err());
+        assert!(hit("b").is_err());
+    }
+
+    #[test]
+    fn scoped_variant_matches_before_the_group_site() {
+        let _fp = scoped("slice:victim=err_once");
+        assert!(hit_scoped("slice", "bystander").is_ok());
+        assert!(hit_scoped("slice", "victim").is_err());
+        assert!(hit_scoped("slice", "victim").is_ok(), "once: disarmed");
+        assert_eq!(hits("slice:victim"), 2);
+        assert_eq!(hits("slice"), 1, "the bare site still counts the pass-through");
+    }
+
+    #[test]
+    fn panic_action_panics_with_the_site_name() {
+        let _fp = scoped("boom=panic_once");
+        let p = std::panic::catch_unwind(|| hit("boom")).expect_err("must panic");
+        let msg = p.downcast_ref::<String>().expect("string payload");
+        assert!(msg.contains("boom") && msg.contains("injected panic"), "{msg}");
+        assert!(hit("boom").is_ok(), "disarmed after firing once");
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected() {
+        for bad in [
+            "no_equals",
+            "s=frobnicate",
+            "s=err@0",
+            "s=err@x",
+            "s=err,s=panic",
+            "=err",
+        ] {
+            assert!(parse_spec(bad).is_err(), "spec {bad:?} must be rejected");
+        }
+        // well-formed corner cases parse
+        assert!(parse_spec("").unwrap().is_empty());
+        assert_eq!(parse_spec("a=exit@5, b=panic").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn guard_drop_restores_the_env_configuration() {
+        {
+            let _fp = scoped("x=err");
+            assert!(hit("x").is_err());
+        }
+        // after the guard: env has no SYMNMF_FAILPOINTS in the test
+        // runner, so the registry re-derives to off (or stays consistent
+        // with the env if the suite was launched with injection on)
+        if std::env::var("SYMNMF_FAILPOINTS").is_err() {
+            assert!(hit("x").is_ok());
+        }
+    }
+}

@@ -222,7 +222,12 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             self.expect(b':')?;
             let val = self.value()?;
-            out.insert(key, val);
+            // reject rather than last-wins: a duplicated key in a
+            // checkpoint or job spec is corruption or tampering, and
+            // silently dropping one value would mask it
+            if out.insert(key.clone(), val).is_some() {
+                return Err(format!("duplicate key {key:?} in object"));
+            }
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
@@ -324,5 +329,16 @@ mod tests {
         assert!(Json::parse("{").is_err());
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("[1] x").is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_object_keys() {
+        let e = Json::parse("{\"a\":1,\"a\":2}").expect_err("duplicate key");
+        assert!(e.contains("duplicate key \"a\""), "{e}");
+        // nested objects are checked too
+        assert!(Json::parse("{\"o\":{\"x\":1,\"x\":1}}").is_err());
+        // distinct keys still parse
+        let j = Json::parse("{\"a\":1,\"b\":2}").unwrap();
+        assert_eq!(j.get("b").and_then(Json::as_usize), Some(2));
     }
 }

@@ -7,8 +7,10 @@
 pub mod bench;
 pub mod cli;
 pub mod error;
+pub mod failpoint;
 pub mod json;
 pub mod propcheck;
+pub mod retry;
 pub mod rng;
 pub mod table;
 pub mod threadpool;

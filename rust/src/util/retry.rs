@@ -1,0 +1,99 @@
+//! Bounded, deterministic retry for transient I/O.
+//!
+//! The serving layer retries checkpoint saves and spill-tile reads a
+//! fixed number of times before degrading. The backoff is counted in
+//! scheduler yields, not wall-clock sleeps: no clock reads and no
+//! randomness, so a run under fail-point injection is exactly
+//! reproducible (the same attempt sequence every time), and the unit
+//! tests never wait on real time.
+
+/// Attempts for the serving layer's transient-I/O sites (checkpoint
+/// save, spill-tile read): the first try plus two retries.
+pub const DEFAULT_ATTEMPTS: usize = 3;
+
+/// Deterministic backoff between attempts: yield the thread
+/// `attempt` times. Grows linearly with the attempt count — enough to
+/// let a competing writer finish on a loaded box — without ever
+/// consulting a clock or an RNG.
+pub fn backoff(attempt: usize) {
+    for _ in 0..attempt {
+        std::thread::yield_now();
+    }
+}
+
+/// Run `f` up to `attempts` times (≥ 1), backing off between failures;
+/// returns the first `Ok` or the **last** error once exhausted. `f`
+/// receives the 1-based attempt number.
+pub fn with_retry<T, E>(
+    attempts: usize,
+    mut f: impl FnMut(usize) -> Result<T, E>,
+) -> Result<T, E> {
+    assert!(attempts >= 1, "with_retry needs at least one attempt");
+    let mut attempt = 1;
+    loop {
+        match f(attempt) {
+            Ok(v) => return Ok(v),
+            Err(e) => {
+                if attempt == attempts {
+                    return Err(e);
+                }
+                backoff(attempt);
+                attempt += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_success_short_circuits() {
+        let mut calls = 0;
+        let r: Result<i32, String> = with_retry(3, |a| {
+            calls += 1;
+            assert_eq!(a, calls);
+            Ok(7)
+        });
+        assert_eq!(r, Ok(7));
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn transient_failures_heal_within_the_budget() {
+        let mut calls = 0;
+        let r: Result<&str, String> = with_retry(3, |a| {
+            calls += 1;
+            if a < 3 {
+                Err(format!("transient {a}"))
+            } else {
+                Ok("recovered")
+            }
+        });
+        assert_eq!(r, Ok("recovered"));
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn exhaustion_returns_the_last_error() {
+        let mut calls = 0;
+        let r: Result<(), String> = with_retry(3, |a| {
+            calls += 1;
+            Err(format!("attempt {a}"))
+        });
+        assert_eq!(r, Err("attempt 3".to_string()));
+        assert_eq!(calls, 3, "bounded: exactly `attempts` calls");
+    }
+
+    #[test]
+    fn single_attempt_means_no_retry() {
+        let mut calls = 0;
+        let r: Result<(), &str> = with_retry(1, |_| {
+            calls += 1;
+            Err("nope")
+        });
+        assert!(r.is_err());
+        assert_eq!(calls, 1);
+    }
+}

@@ -102,7 +102,7 @@ fn every_method_sliced_cancelled_resumed_is_bitwise_exact() {
             assert_eq!(h.poll(), JobStatus::Cancelled, "{what}: cancel hook");
             let mid = h.outcome().expect("cancelled outcome");
             assert_eq!(
-                mid.checkpoint.iter, 3,
+                mid.expect_checkpoint().iter, 3,
                 "{what}: the hook fires after record 3, the engine aborts \
                  before step 4"
             );
@@ -115,7 +115,7 @@ fn every_method_sliced_cancelled_resumed_is_bitwise_exact() {
                 "{what}: needs >= 3 slices, got {}",
                 done.slices
             );
-            assert_bitwise(&full, &done.result, &what);
+            assert_bitwise(&full, done.expect_result(), &what);
         }
     }
 }
@@ -149,7 +149,7 @@ fn store_backed_restart_resumes_bitwise_and_gcs() {
         sched.drain();
         let o = h.await_result();
         assert_eq!(o.status, JobStatus::Suspended);
-        assert_eq!(o.checkpoint.iter, 4);
+        assert_eq!(o.expect_checkpoint().iter, 4);
     }
 
     // the store holds exactly one (GC'd) generation for the job
@@ -180,7 +180,7 @@ fn store_backed_restart_resumes_bitwise_and_gcs() {
         sched.drain();
         let o = h.await_result();
         assert_eq!(o.status, JobStatus::Completed);
-        assert_bitwise(&full, &o.result, "store-backed restart");
+        assert_bitwise(&full, o.expect_result(), "store-backed restart");
     }
     let store = JobStore::open(&dir).expect("final reopen");
     let gens = store.generations("restartable").expect("generations");
@@ -236,14 +236,15 @@ fn slim_store_resumes_factors_bitwise() {
     sched.drain();
     let o = h.await_result();
     assert_eq!(o.status, JobStatus::Completed);
+    let res = o.expect_result();
     // records: only the post-resume tail, globally numbered
-    assert_eq!(o.result.records.first().map(|r| r.iter), Some(3));
+    assert_eq!(res.records.first().map(|r| r.iter), Some(3));
     let tail = &full.records[3..];
-    assert_eq!(o.result.records.len(), tail.len());
-    for (a, b) in tail.iter().zip(&o.result.records) {
+    assert_eq!(res.records.len(), tail.len());
+    for (a, b) in tail.iter().zip(&res.records) {
         assert_eq!(a.residual.to_bits(), b.residual.to_bits(), "slim resume residuals");
     }
-    for (a, b) in full.h.data().iter().zip(o.result.h.data()) {
+    for (a, b) in full.h.data().iter().zip(res.h.data()) {
         assert_eq!(a.to_bits(), b.to_bits(), "slim resume H bits");
     }
     std::fs::remove_dir_all(&dir).ok();
@@ -400,7 +401,7 @@ fn budgeted_multi_graph_serve_is_bitwise_and_holds_the_ceiling() {
         assert_eq!(o.status, JobStatus::Completed, "g{g}-m{mi}");
         assert!(o.slices >= 3, "g{g}-m{mi}: sliced run expected, got {}", o.slices);
         spilled_slices += o.spilled_slices;
-        assert_bitwise(&full[*g][*mi], &o.result, &format!("g{g}-m{mi} budgeted"));
+        assert_bitwise(&full[*g][*mi], o.expect_result(), &format!("g{g}-m{mi} budgeted"));
     }
 
     let s = cache.stats();
@@ -414,5 +415,147 @@ fn budgeted_multi_graph_serve_is_bitwise_and_holds_the_ceiling() {
         s.resident_bytes <= op_bytes + 1,
         "drained cache must respect the ceiling: {s:?}"
     );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// PR-8 acceptance (a): a panic injected into ONE job's slice fails that
+/// job alone. Every other job in the fleet lands bitwise on its
+/// uninjected reference run, and — the `@2` trigger being spent — the
+/// victim resumes from its last good checkpoint to the same bits.
+#[test]
+fn injected_panic_isolates_the_victim_and_spares_the_fleet() {
+    let k = 3usize;
+    let x = planted(30, k, 131);
+    let opts_of = |seed: u64| {
+        let mut o = SymNmfOptions::new(k).with_seed(seed);
+        o.max_iters = 8;
+        o.tol = 0.0; // fixed length: every job takes >= 4 slices
+        o
+    };
+    let method = Method::Exact(UpdateRule::Hals);
+    let names = ["it-iso-a", "it-iso-victim", "it-iso-b"];
+    let seeds = [11u64, 12, 13];
+    let full: Vec<SymNmfResult> =
+        seeds.iter().map(|&s| method.run(&x, &opts_of(s))).collect();
+
+    // per-key arm: only the job literally named it-iso-victim ever
+    // matches "slice:it-iso-victim", so the fleet shares the scheduler
+    // with a live fail point that cannot touch it
+    let _fp = symnmf::util::failpoint::scoped("slice:it-iso-victim=panic@2");
+    let mut sched = Scheduler::new(SchedulerConfig {
+        slice_steps: Some(2),
+        ..SchedulerConfig::default()
+    });
+    let handles: Vec<_> = names
+        .iter()
+        .zip(&seeds)
+        .map(|(n, &s)| sched.submit(&x, JobSpec::new(*n, method, opts_of(s))).expect("submit"))
+        .collect();
+    sched.drain();
+
+    let v1 = handles[1].await_result();
+    assert_eq!(v1.status, JobStatus::Failed, "victim must fail");
+    let msg = v1.failure.as_deref().expect("failure message");
+    assert!(msg.contains("injected panic"), "{msg}");
+    assert_eq!(v1.expect_checkpoint().iter, 2, "slice 1 survived the panic");
+    for &i in &[0usize, 2] {
+        let o = handles[i].await_result();
+        assert_eq!(o.status, JobStatus::Completed, "{} must be unaffected", names[i]);
+        assert!(o.failure.is_none());
+        assert_bitwise(&full[i], o.expect_result(), names[i]);
+    }
+
+    sched.resume(&handles[1]).expect("failed jobs are resumable");
+    sched.drain();
+    let v2 = handles[1].await_result();
+    assert_eq!(v2.status, JobStatus::Completed);
+    assert!(v2.failure.is_none(), "resume clears the failure");
+    assert_bitwise(&full[1], v2.expect_result(), "resumed victim");
+}
+
+/// PR-8 acceptance (b): abort a store-backed drain mid-flight via a fail
+/// point, tear the newest persisted generation on disk, and recover in a
+/// fresh scheduler: the torn file is quarantined (renamed `*.corrupt`,
+/// never deleted), the older generation resumes, and every job's final
+/// factors are bitwise-identical to the uninterrupted run.
+#[test]
+fn crash_recovery_quarantines_and_reproduces_bitwise() {
+    let dir = std::env::temp_dir()
+        .join(format!("symnmf-serve-it-recover-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let x = planted(30, 3, 171);
+    let opts_of = |seed: u64| {
+        let mut o = SymNmfOptions::new(3).with_seed(seed);
+        o.max_iters = 8;
+        o.tol = 0.0;
+        o
+    };
+    let method = Method::Exact(UpdateRule::Hals);
+    let full = [method.run(&x, &opts_of(21)), method.run(&x, &opts_of(22))];
+
+    // session 1: store-backed fleet (keep 2); it-rec-crash "crashes" at
+    // the start of its third slice, it-rec-ok suspends cleanly at step 4
+    {
+        let store = JobStore::open(&dir).expect("open store").with_keep(2);
+        let _fp = symnmf::util::failpoint::scoped("slice:it-rec-crash=panic@3");
+        let mut sched = Scheduler::new(SchedulerConfig {
+            slice_steps: Some(2),
+            store: Some(store),
+            ..SchedulerConfig::default()
+        });
+        let ha = sched
+            .submit(&x, JobSpec::new("it-rec-ok", method, opts_of(21)).with_max_steps(4))
+            .expect("submit");
+        let hb = sched
+            .submit(&x, JobSpec::new("it-rec-crash", method, opts_of(22)))
+            .expect("submit");
+        sched.drain();
+        assert_eq!(ha.await_result().status, JobStatus::Suspended);
+        let ob = hb.await_result();
+        assert_eq!(ob.status, JobStatus::Failed);
+        assert_eq!(ob.expect_checkpoint().iter, 4, "two good slices persisted");
+    }
+
+    // tear the newest generation of it-rec-ok: recovery must quarantine
+    // it and fall back to the older one
+    let store = JobStore::open(&dir).expect("reopen").with_keep(2);
+    let gens = store.generations("it-rec-ok").expect("gens");
+    assert_eq!(gens.len(), 2, "keep=2 retains both slice generations");
+    let newest = store.path_for("it-rec-ok", *gens.last().unwrap());
+    let text = std::fs::read_to_string(&newest).expect("read newest");
+    std::fs::write(&newest, &text[..text.len() / 2]).expect("tear");
+
+    let scan = symnmf::serve::recovery::scan(&store).expect("scan");
+    assert_eq!(scan.files_quarantined(), 1);
+    let rec = scan.jobs.iter().find(|j| j.id == "it-rec-ok").expect("scanned");
+    let q = &rec.quarantined[0];
+    assert!(q.to_string_lossy().ends_with(".corrupt"), "{q:?}");
+    assert!(q.exists(), "quarantined file must be renamed, not deleted");
+    let (gen_ok, cp_ok) = scan.checkpoint_for("it-rec-ok").expect("fallback gen").clone();
+    assert_eq!((gen_ok, cp_ok.iter), (gens[0], 2), "older generation survives");
+    let (_, cp_crash) = scan.checkpoint_for("it-rec-crash").expect("crash gen").clone();
+    assert_eq!(cp_crash.iter, 4, "the crash job recovers its newest generation");
+
+    // session 2: a fresh scheduler (fresh process in real life) resumes
+    // both jobs from their recovered checkpoints and completes bitwise
+    let mut sched = Scheduler::new(SchedulerConfig {
+        store: Some(store),
+        ..SchedulerConfig::default()
+    });
+    let ha = sched
+        .submit(&x, JobSpec::new("it-rec-ok", method, opts_of(21)).with_resume(cp_ok))
+        .expect("submit recovered");
+    let hb = sched
+        .submit(&x, JobSpec::new("it-rec-crash", method, opts_of(22)).with_resume(cp_crash))
+        .expect("submit recovered");
+    sched.drain();
+    for (h, f, what) in [
+        (&ha, &full[0], "recovered it-rec-ok"),
+        (&hb, &full[1], "recovered it-rec-crash"),
+    ] {
+        let o = h.await_result();
+        assert_eq!(o.status, JobStatus::Completed, "{what}");
+        assert_bitwise(f, o.expect_result(), what);
+    }
     std::fs::remove_dir_all(&dir).ok();
 }
