@@ -37,7 +37,9 @@ use symnmf::symnmf::init::initial_factor;
 use symnmf::symnmf::options::SymNmfOptions;
 use symnmf::util::bench::{bench, gflops, BenchResult};
 use symnmf::util::json::Json;
+use symnmf::util::pool::{self, PoolBackend};
 use symnmf::util::rng::Pcg64;
+use symnmf::util::threadpool::num_threads;
 use symnmf::util::timer::PhaseTimer;
 
 /// One record of the JSON report.
@@ -382,6 +384,61 @@ fn main() {
         &r_hals_ref,
         hals_flops,
     );
+
+    // --- dispatch fan-out overhead: persistent pool vs per-call spawn ---
+    // Empty slot bodies, so secs_per_iter IS the dispatch cost. On a
+    // 1-core host both collapse to an inline call and the ratio is ~1;
+    // on multicore the pooled row should beat the scoped row by the
+    // thread spawn+join cost. Pure-overhead timings are scheduler-noisy,
+    // so both rows sit on the regression gate's noisy allowlist.
+    let fan_parts = num_threads();
+    let r_fan_pooled = {
+        let _g = pool::override_backend(PoolBackend::Pooled);
+        bench(&format!("dispatch fan-out pooled (parts={fan_parts})"), 20, 200, || {
+            pool::dispatch_with(PoolBackend::Pooled, fan_parts, &|_| {});
+        })
+    };
+    println!("{}", r_fan_pooled.report());
+    record(&mut records, "pool_fanout_overhead", &format!("parts={fan_parts}"), &r_fan_pooled, 0.0);
+    let r_fan_scoped = bench(&format!("dispatch fan-out scoped (parts={fan_parts})"), 5, 50, || {
+        pool::dispatch_with(PoolBackend::Scoped, fan_parts, &|_| {});
+    });
+    println!("{}", r_fan_scoped.report());
+    record(&mut records, "pool_fanout_scoped_ref", &format!("parts={fan_parts}"), &r_fan_scoped, 0.0);
+    println!(
+        "    fan-out speedup (scoped/pooled): {:.2}x",
+        r_fan_scoped.median / r_fan_pooled.median.max(1e-12)
+    );
+
+    // --- HALS sweep pinned per dispatch backend ---
+    // hals_sweep_simd above runs whatever SYMNMF_POOL says; these two
+    // rows pin each backend so the pooled win (and any regression in it)
+    // is visible regardless of the leg's environment.
+    let mut hw_pooled = hals_w0.clone();
+    let r_hals_pooled = {
+        let _g = pool::override_backend(PoolBackend::Pooled);
+        bench(&format!("HALS sweep pooled ({hm}x{k})"), 2, 9, || {
+            hals::hals_sweep(&hals_g, &hals_y, &mut hw_pooled);
+        })
+    };
+    println!("{}   {:.2} GF/s", r_hals_pooled.report(), gflops(hals_flops, r_hals_pooled.median));
+    record(&mut records, "hals_sweep_pooled", &format!("{hm}x{k}"), &r_hals_pooled, hals_flops);
+    let mut hw_scoped = hals_w0.clone();
+    let r_hals_scoped = {
+        let _g = pool::override_backend(PoolBackend::Scoped);
+        bench(&format!("HALS sweep scoped ({hm}x{k})"), 2, 9, || {
+            hals::hals_sweep(&hals_g, &hals_y, &mut hw_scoped);
+        })
+    };
+    println!("{}   {:.2} GF/s", r_hals_scoped.report(), gflops(hals_flops, r_hals_scoped.median));
+    record(&mut records, "hals_sweep_scoped", &format!("{hm}x{k}"), &r_hals_scoped, hals_flops);
+    println!(
+        "    hals sweep speedup (scoped/pooled): {:.2}x",
+        r_hals_scoped.median / r_hals_pooled.median.max(1e-12)
+    );
+    for (a, b) in hw_pooled.data().iter().zip(hw_scoped.data()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "pooled HALS sweep diverged from scoped");
+    }
 
     // --- compressed solve, f64 vs f32 sketched GEMMs ---
     // Same workload either way; the f32 row shows what staging the inner

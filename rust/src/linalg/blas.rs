@@ -97,6 +97,7 @@
 use crate::linalg::simd::{self, KernelIsa};
 use crate::linalg::workspace::PanelBuf;
 use crate::linalg::DenseMat;
+use crate::util::pool;
 use crate::util::threadpool::{current_threads, num_threads, parallel_for_chunks, SendPtr};
 use std::cell::RefCell;
 
@@ -723,27 +724,27 @@ pub(crate) fn pair_pool_accumulate<F>(
         } else {
             let pptr = SendPtr(pool.as_mut_ptr());
             let body = &pair_body;
-            std::thread::scope(|s| {
-                for w in 0..phys {
-                    s.spawn(move || {
-                        let mut t = w;
-                        while t < nt {
-                            // SAFETY: slot t is touched only by the worker
-                            // with w == t % phys — slots are disjoint.
-                            let acc = unsafe {
-                                std::slice::from_raw_parts_mut(
-                                    pptr.0.add(t * m * k),
-                                    m * k,
-                                )
-                            };
-                            let mut p = t;
-                            while p < npairs {
-                                body(p, acc);
-                                p += nt;
-                            }
-                            t += phys;
-                        }
-                    });
+            // Shared dispatch (persistent pool by default, scoped spawn
+            // under SYMNMF_POOL=scoped): phys worker *slots*, each
+            // walking accumulator slots w, w+phys, … in ascending order.
+            // Slot-to-accumulator assignment depends only on nt and
+            // phys, never on the executor, so both backends — and any
+            // physical thread count the pool actually uses — produce
+            // identical bits.
+            pool::dispatch(phys, &|w| {
+                let mut t = w;
+                while t < nt {
+                    // SAFETY: accumulator slot t is touched only by the
+                    // dispatch slot with w == t % phys — disjoint.
+                    let acc = unsafe {
+                        std::slice::from_raw_parts_mut(pptr.0.add(t * m * k), m * k)
+                    };
+                    let mut p = t;
+                    while p < npairs {
+                        body(p, acc);
+                        p += nt;
+                    }
+                    t += phys;
                 }
             });
         }

@@ -52,7 +52,9 @@
 //! identical pair enumeration, identical per-tile inner loops, and the
 //! identical fixed-order reduction — so for a given process
 //! configuration the packed product equals the dense blocked product to
-//! the last bit, and is invariant under thread budgets. The aggregate
+//! the last bit, and is invariant under thread budgets and under the
+//! dispatch backend (the harness fans out on the shared persistent
+//! pool, see [`crate::util::pool`]). The aggregate
 //! statistics (`fro_norm_sq`, `max_value`, `mean_value`) are computed
 //! once at construction from the stored triangle (off-diagonal tiles
 //! weighted twice) and cached, so the SymOp surface stays O(1) where the

@@ -391,6 +391,7 @@ pub(crate) fn packed_nt_rows_isa(
 /// [`blas::matmul_into`]; every per-element step is the
 /// [`widening_axpy_f32`] policy kernel, so results are identical across
 /// ISAs and deterministic at any thread budget (row-disjoint writes).
+/// The fan-out runs on the shared persistent pool (see [`crate::util::pool`]).
 pub fn matmul_f32_into(
     isa: KernelIsa,
     a: &[f32],

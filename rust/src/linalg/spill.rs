@@ -47,8 +47,10 @@
 //! [`SymPacked::apply_blocked_into`]; the only difference is where the
 //! tile slice comes from (a ring buffer filled by pread instead of the
 //! resident payload). The result is therefore bitwise-identical to the
-//! resident apply on every `simd::supported()` ISA and under every
-//! thread budget — pinned by the parity tests below.
+//! resident apply on every `simd::supported()` ISA, under every
+//! thread budget, and under either dispatch backend of the shared
+//! persistent pool ([`crate::util::pool`]) — pinned by the parity
+//! tests below and by `tests/integration_pool.rs`.
 //!
 //! [`pair_pool_accumulate`]: crate::linalg::blas::pair_pool_accumulate
 //! [`tile_pair_apply_slice`]: crate::linalg::packed::tile_pair_apply_slice

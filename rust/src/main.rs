@@ -469,9 +469,22 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     );
     if let Some(path) = args.get("report") {
         let doc = Json::obj(vec![
-            // version 3: adds the "recovery" object (null outside
-            // --recover) and per-job "persist_degraded" / "failure"
-            ("version", Json::Num(3.0)),
+            // version 4: adds the "pool" dispatch-provenance object
+            // (backend + width; informational only — backend choice
+            // cannot change bits, so nothing validates it on resume).
+            // version 3 added the "recovery" object (null outside
+            // --recover) and per-job "persist_degraded" / "failure".
+            ("version", Json::Num(4.0)),
+            (
+                "pool",
+                Json::obj(vec![
+                    (
+                        "backend",
+                        Json::Str(symnmf::util::pool::active_backend().as_str().to_string()),
+                    ),
+                    ("width", Json::Num(symnmf::util::pool::pool_width() as f64)),
+                ]),
+            ),
             (
                 "recovery",
                 match &scan {
@@ -556,6 +569,19 @@ fn cmd_features() -> Result<(), String> {
         "precision:       {} (SYMNMF_PRECISION, sketched GEMMs only)",
         symnmf::linalg::Precision::from_env().as_str()
     );
+    match std::env::var("SYMNMF_POOL") {
+        Ok(v) if !v.trim().is_empty() => println!("SYMNMF_POOL:     {v} (forced)"),
+        _ => println!("SYMNMF_POOL:     (unset: pooled)"),
+    }
+    println!(
+        "pool backend:    {} (cannot change bits; scoped = per-call spawn oracle)",
+        symnmf::util::pool::active_backend().as_str()
+    );
+    println!(
+        "pool width:      {} (1 submitter + {} persistent symnmf-pool-N workers)",
+        symnmf::util::pool::pool_width(),
+        symnmf::util::pool::pool_width().saturating_sub(1)
+    );
     println!();
     // dot/axpy are the bitwise tier: under AVX-512 they still run the
     // 256-bit lane-grouped bodies so every tier reproduces scalar bits
@@ -589,7 +615,19 @@ USAGE:
   symnmf artifacts      list AOT artifacts
   symnmf info           runtime diagnostics
   symnmf --features     kernel dispatch diagnostics (detected/forced ISA,
-                        per-routine tier; SYMNMF_KERNEL + SYMNMF_PRECISION)
+                        per-routine tier; SYMNMF_KERNEL + SYMNMF_PRECISION
+                        + SYMNMF_POOL backend and pool width)
+
+PARALLEL DISPATCH:
+  SYMNMF_POOL=pooled (default) runs every parallel kernel on persistent
+  symnmf-pool-N workers spawned once per process; =scoped reverts to a
+  fresh std::thread::scope per call (the pinning oracle). The backend
+  can never change results — chunk geometry and accumulator-slot counts
+  derive from the logical width (SYMNMF_THREADS) before the executor is
+  chosen — so it is not recorded in checkpoints and resume never
+  validates it. Serve workers (symnmf-serve-N) submit kernels to the
+  pool under their per-slice thread budget, keeping pool + serve demand
+  at about the machine width.
 
 SERVE JOB SPEC (one JSON object per line; # comments allowed):
   {\"id\": \"j1\", \"workload\": \"oag\", \"m\": 300, \"data_seed\": 7,

@@ -42,7 +42,10 @@ pub fn hals_sweep(g: &DenseMat, y: &DenseMat, w: &mut DenseMat) {
 /// [`hals_sweep`] with an explicit kernel tier: the inner `G[i,:]·W[r,:]`
 /// contraction runs on [`simd::dot_fma`] (FMA tier — the Scalar tier is
 /// the historical [`blas::dot`], bitwise). The parity suite pins every
-/// supported tier against the Scalar tier at 1e-12.
+/// supported tier against the Scalar tier at 1e-12. The row fan-out
+/// executes on the shared persistent pool ([`crate::util::pool`]);
+/// chunk geometry is fixed by the logical width, so the dispatch
+/// backend cannot change bits.
 pub fn hals_sweep_isa(isa: KernelIsa, g: &DenseMat, y: &DenseMat, w: &mut DenseMat) {
     let (m, k) = w.shape();
     assert_eq!(g.shape(), (k, k), "hals_sweep: G must be {k}x{k}");

@@ -11,7 +11,12 @@
 //! the batched trial driver: with `nt = current_threads()` and `w`
 //! workers, each slice runs under [`with_thread_budget`]`(nt / w)`, so
 //! total OS-thread demand stays ≈ `nt` while kernel FP geometry remains
-//! pinned to the logical width (the bitwise guarantee).
+//! pinned to the logical width (the bitwise guarantee). Serve workers
+//! (`symnmf-serve-N`) are thus the *submitters* to the persistent kernel
+//! pool (`symnmf-pool-N`, see [`crate::util::pool`]): their budget keeps
+//! pool width + serve width at ≈ the machine width, and a slice's
+//! `catch_unwind` isolation sees identical panic behavior under either
+//! `SYMNMF_POOL` backend.
 //!
 //! A slice's [`RunControl`] is the *intersection* of the scheduler's
 //! slice granularity ([`SchedulerConfig::slice_steps`] /
@@ -334,9 +339,20 @@ impl<'x> Scheduler<'x> {
             .min(pending)
             .max(1);
         let inner_width = (nt / workers).max(1);
+        // Serve workers are long-lived job loops, not kernel slots, so
+        // they stay scope-spawned (named for profilers) rather than
+        // running on the kernel pool. They coexist with it by budget:
+        // each worker's slices run under `with_thread_budget(inner_width)`,
+        // so `workers × inner_width ≈ nt` bounds the combined demand —
+        // a worker's kernel dispatch either stays inline (inner_width 1)
+        // or occupies at most inner_width pool slots while the other
+        // submitters park on the pool's idle queue.
         std::thread::scope(|s| {
-            for _ in 0..workers {
-                s.spawn(|| self.worker(inner_width));
+            for i in 0..workers {
+                std::thread::Builder::new()
+                    .name(format!("symnmf-serve-{i}"))
+                    .spawn_scoped(s, || self.worker(inner_width))
+                    .expect("spawn serve worker");
             }
         });
     }
@@ -821,6 +837,57 @@ mod tests {
         sched.resume(&h).expect("resume");
         sched.drain();
         assert_eq!(h.await_result().status, JobStatus::Completed);
+    }
+
+    /// Reentrancy: serve workers are plain named threads whose slices
+    /// dispatch kernels to the shared pool — several of them
+    /// concurrently, each inside `with_thread_budget`. A naive pool
+    /// (one that let a busy slot re-submit, or that assumed a single
+    /// submitting thread) would deadlock here; the real one serializes
+    /// submissions and runs nested dispatch inline. The fleet must
+    /// complete under both backends with bitwise-identical factors.
+    #[test]
+    fn kernel_dispatch_inside_pooled_serve_workers_is_backend_invariant() {
+        use crate::util::pool::{self, PoolBackend};
+        let x = planted(40, 3, 11);
+        let run = |backend| {
+            let _g = pool::override_backend(backend);
+            let mut sched = Scheduler::new(SchedulerConfig {
+                slice_steps: Some(2),
+                workers: Some(2),
+                ..SchedulerConfig::default()
+            });
+            let handles: Vec<JobHandle> = (0..3)
+                .map(|i| {
+                    sched
+                        .submit(
+                            &x,
+                            JobSpec::new(
+                                format!("reentrant-{i}"),
+                                Method::Exact(UpdateRule::Hals),
+                                opts(3, 6, 7 + i as u64),
+                            ),
+                        )
+                        .expect("submit")
+                })
+                .collect();
+            sched.drain();
+            handles
+                .iter()
+                .map(|h| {
+                    let o = h.await_result();
+                    assert_eq!(o.status, JobStatus::Completed, "{}", backend.as_str());
+                    o.expect_result().h.clone()
+                })
+                .collect::<Vec<DenseMat>>()
+        };
+        let pooled = run(PoolBackend::Pooled);
+        let scoped = run(PoolBackend::Scoped);
+        for (job, (hp, hs)) in pooled.iter().zip(&scoped).enumerate() {
+            for (a, b) in hp.data().iter().zip(hs.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "job {job}: pooled H != scoped H");
+            }
+        }
     }
 
     /// Tentpole: a persistently failing checkpoint save exhausts the

@@ -133,7 +133,9 @@ impl CsrMat {
 
     /// [`CsrMat::spmm_into`] with an explicit column-panel width
     /// (`panel >= k` disables tiling). Exposed so benchmarks and property
-    /// tests can compare tiled and untiled execution directly.
+    /// tests can compare tiled and untiled execution directly. Row chunks
+    /// are dispatched on the shared persistent pool
+    /// ([`crate::util::pool`]); the backend choice cannot change bits.
     pub fn spmm_into_panels(&self, f: &DenseMat, out: &mut DenseMat, panel: usize) {
         assert_eq!(self.cols, f.rows(), "spmm dims");
         assert_eq!(out.shape(), (self.rows, f.cols()));

@@ -1,6 +1,7 @@
 //! Framework substrates built in-repo (crates.io is unreachable in this
 //! environment; see DESIGN.md §2 "Offline-dependency substitutions"):
-//! a PCG64 PRNG, a scoped thread pool, a tiny CLI parser, a minimal JSON
+//! a PCG64 PRNG, a persistent worker pool (with a scoped-spawn oracle)
+//! behind the data-parallel helpers, a tiny CLI parser, a minimal JSON
 //! reader/writer, ASCII table rendering, timers, and a property-testing
 //! harness used by the test suite.
 
@@ -9,6 +10,7 @@ pub mod cli;
 pub mod error;
 pub mod failpoint;
 pub mod json;
+pub mod pool;
 pub mod propcheck;
 pub mod retry;
 pub mod rng;

@@ -1,0 +1,636 @@
+//! Persistent worker pool behind every parallel kernel dispatch.
+//!
+//! Before this module, `parallel_for_chunks` / `parallel_map_into` and
+//! the SYMM `pair_pool_accumulate` harness opened a fresh
+//! `std::thread::scope` on every call — an OS spawn + join per SYMM tile
+//! pass, per HALS sweep, per SpMM, several times per solver iteration.
+//! At the small-m/small-k sizes where the randomized methods are
+//! cheapest per iteration, that fixed dispatch tax dominates. Here the
+//! workers are spawned **lazily once per process** (total compute width
+//! = [`num_threads`], counting the submitting thread), park on a Condvar
+//! when idle, and receive work via an epoch-stamped broadcast: the
+//! submitter publishes a type-erased job pointer plus a generation
+//! counter under the pool mutex, wakes the workers, runs its own share,
+//! and waits on an atomic countdown — spinning first, parking on a
+//! Condvar only if the tail outlives the spin window, so sub-millisecond
+//! kernels never touch the futex path.
+//!
+//! ## The two backends
+//!
+//! [`dispatch`] routes through one of two interchangeable executors,
+//! selected once per process by `SYMNMF_POOL` (same override idiom as
+//! `SYMNMF_KERNEL`, reported by `symnmf --features`):
+//!
+//! * `pooled` (default) — the persistent pool described above. Worker
+//!   threads are named `symnmf-pool-N` for profilers.
+//! * `scoped` — the historical per-call `std::thread::scope` spawn,
+//!   kept as the pinning oracle. `SYMNMF_POOL=scoped` reverts every
+//!   parallel site in the process, including `pair_pool_accumulate`.
+//!
+//! Backend choice can never change results: both executors run the same
+//! slot closures over the same slot indices, and every caller derives
+//! its geometry (chunk ranges, accumulator-slot counts) from the logical
+//! width before asking for execution. The choice is therefore never
+//! serialized into checkpoints or trace headers — unlike the kernel ISA,
+//! which does change bits and is recorded/validated on resume.
+//!
+//! ## Reentrancy rule
+//!
+//! The pool executes one job at a time, so a dispatch issued from inside
+//! a running slot (nested data parallelism, e.g. a batched trial worker
+//! whose solver calls a kernel) must not re-submit — a naive
+//! implementation would deadlock waiting for workers that are busy
+//! running its caller. Instead, nested dispatch runs **inline**: the
+//! calling slot executes all of the nested call's slots sequentially, in
+//! index order, on its own thread. The nested caller still computes its
+//! chunk geometry from its thread budget exactly as before, so the
+//! partitioning — and therefore every bit of output — matches the scoped
+//! oracle. Distinct submitting threads (e.g. serve workers) are *not*
+//! nested: they serialize on the pool, each submission running at its
+//! budgeted width while the others park.
+//!
+//! ## Panic semantics
+//!
+//! A panicking slot body is caught on the worker, the remaining slots
+//! still run (matching `std::thread::scope`, where sibling spawns are
+//! unaffected by one thread's panic), the pool is left reusable, and the
+//! first captured payload is resent on the submitting thread once the
+//! countdown drains. `catch_unwind` callers — the serve scheduler's
+//! panic isolation — observe exactly what they observed under scoped
+//! spawning.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard, OnceLock};
+
+use super::threadpool::num_threads;
+
+/// How a parallel dispatch is executed. Selection never affects results
+/// — see the module docs — only where the slot closures run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolBackend {
+    /// Persistent `symnmf-pool-N` workers, spawned once per process.
+    Pooled,
+    /// Per-call `std::thread::scope` spawn + join (the pinning oracle).
+    Scoped,
+}
+
+impl PoolBackend {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PoolBackend::Pooled => "pooled",
+            PoolBackend::Scoped => "scoped",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PoolBackend> {
+        match s.to_ascii_lowercase().as_str() {
+            "pooled" => Some(PoolBackend::Pooled),
+            "scoped" => Some(PoolBackend::Scoped),
+            _ => None,
+        }
+    }
+}
+
+/// Resolve `SYMNMF_POOL` once. Unset or empty means `pooled`; anything
+/// else must name a backend, and an unknown name fails loudly (the
+/// `SYMNMF_KERNEL` idiom: a typo must not silently run the default).
+fn env_backend() -> PoolBackend {
+    static ACTIVE: OnceLock<PoolBackend> = OnceLock::new();
+    *ACTIVE.get_or_init(|| match std::env::var("SYMNMF_POOL") {
+        Ok(raw) if !raw.is_empty() => PoolBackend::parse(&raw)
+            .unwrap_or_else(|| panic!("SYMNMF_POOL={raw}: expected scoped|pooled")),
+        _ => PoolBackend::Pooled,
+    })
+}
+
+/// Test/bench override slot: 0 = none (use the env), otherwise the
+/// backend discriminant + 1. Written only under [`override_backend`]'s
+/// serializing guard.
+static OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// The backend every [`dispatch`] call uses: a live [`override_backend`]
+/// guard if one is held, else the process-wide `SYMNMF_POOL` resolution.
+pub fn active_backend() -> PoolBackend {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        1 => PoolBackend::Pooled,
+        2 => PoolBackend::Scoped,
+        _ => env_backend(),
+    }
+}
+
+/// Serializes tests/benches that pin a backend; restores the env-derived
+/// resolution on drop (the `failpoint::scoped` idiom).
+pub struct BackendOverride {
+    _serial: MutexGuard<'static, ()>,
+}
+
+/// Pin the dispatch backend for the guard's lifetime. Guards serialize
+/// on a global lock so concurrent tests cannot see each other's pins;
+/// on drop the process reverts to whatever `SYMNMF_POOL` says. Intended
+/// for the pooled ≡ scoped parity tests and the fan-out benches — the
+/// backend cannot change results, so a concurrent kernel observing the
+/// pin is harmless.
+pub fn override_backend(backend: PoolBackend) -> BackendOverride {
+    static SCOPE_LOCK: Mutex<()> = Mutex::new(());
+    let serial = SCOPE_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let code = match backend {
+        PoolBackend::Pooled => 1,
+        PoolBackend::Scoped => 2,
+    };
+    OVERRIDE.store(code, Ordering::Relaxed);
+    BackendOverride { _serial: serial }
+}
+
+impl Drop for BackendOverride {
+    fn drop(&mut self) {
+        OVERRIDE.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Total compute width of the pooled backend: the submitting thread plus
+/// the persistent workers. Equal to the logical width by construction.
+pub fn pool_width() -> usize {
+    num_threads()
+}
+
+thread_local! {
+    /// True while this thread is executing a dispatch slot (pool workers
+    /// set it for their whole life; submitters set it around their own
+    /// share). Nested dispatch observes it and runs inline.
+    static IN_DISPATCH: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Set `IN_DISPATCH` for a scope, restoring the previous value on drop
+/// (including unwind, so a caught slot panic cannot leak the flag).
+struct DispatchScope(bool);
+
+impl DispatchScope {
+    fn enter() -> DispatchScope {
+        let prev = IN_DISPATCH.with(Cell::get);
+        IN_DISPATCH.with(|f| f.set(true));
+        DispatchScope(prev)
+    }
+}
+
+impl Drop for DispatchScope {
+    fn drop(&mut self) {
+        let prev = self.0;
+        IN_DISPATCH.with(|f| f.set(prev));
+    }
+}
+
+/// A dispatch body: called exactly once per slot index in `0..parts`.
+type Task<'a> = &'a (dyn Fn(usize) + Sync);
+
+/// Run `task(i)` exactly once for every `i in 0..parts`, concurrently up
+/// to the machine width, returning after all slots complete. `parts` is
+/// a *slot count*, not a thread count — callers derive it from logical
+/// geometry and the executor is free to run several slots on one thread
+/// (it does whenever `parts` exceeds the available workers, and for the
+/// whole job when the call is nested inside another dispatch).
+///
+/// If any slot panics, the remaining slots still run and the first
+/// captured panic is rethrown here after all of them finish.
+pub fn dispatch(parts: usize, task: Task) {
+    dispatch_with(active_backend(), parts, task);
+}
+
+/// [`dispatch`] with an explicit backend — the parity tests and fan-out
+/// benches use this to pin one side of a comparison without touching the
+/// process-wide resolution.
+pub fn dispatch_with(backend: PoolBackend, parts: usize, task: Task) {
+    match parts {
+        0 => return,
+        1 => {
+            task(0);
+            return;
+        }
+        _ => {}
+    }
+    if IN_DISPATCH.with(Cell::get) {
+        // Nested dispatch: run inline on the caller's thread (see the
+        // module docs). The geometry `parts` encodes is unchanged.
+        for i in 0..parts {
+            task(i);
+        }
+        return;
+    }
+    match backend {
+        PoolBackend::Scoped => scoped_dispatch(parts, task),
+        PoolBackend::Pooled => global_pool().run(parts, task),
+    }
+}
+
+/// The pinning oracle: one fresh scope thread per slot, exactly the
+/// historical `parallel_for_chunks` shape. Scope join propagates a slot
+/// panic on the submitting thread after all siblings finish.
+fn scoped_dispatch(parts: usize, task: Task) {
+    std::thread::scope(|s| {
+        for i in 0..parts {
+            s.spawn(move || task(i));
+        }
+    });
+}
+
+/// Type-erased job pointer: the submitter's `&dyn Fn` with the lifetime
+/// erased. Valid for the whole job because the submitter does not return
+/// from [`Pool::run`] until the countdown drains.
+#[derive(Clone, Copy)]
+struct JobPtr(*const (dyn Fn(usize) + Sync));
+unsafe impl Send for JobPtr {}
+
+/// Per-job completion block, owned by the submitter's stack frame.
+/// Workers must not touch it after their final `pending` decrement.
+struct Completion {
+    /// Slots not yet finished; the submitter waits for zero.
+    pending: AtomicUsize,
+    /// First captured slot panic, resent on the submitting thread.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+/// Broadcast state, guarded by [`Shared::state`].
+struct State {
+    /// Generation counter, bumped per published job: the stamp workers
+    /// (and tests) use to tell "new job" from a spurious wake.
+    epoch: u64,
+    /// A job is published and its countdown has not yet drained.
+    active: bool,
+    job: Option<JobPtr>,
+    done: Option<CompletionPtr>,
+    /// Total slots of the active job.
+    parts: usize,
+    /// Slots claimed so far (slot 0 is pre-claimed by the submitter).
+    /// Workers — and the submitter, once its own share is done — claim
+    /// the next unclaimed slot, so a descheduled worker never strands
+    /// work: someone else picks the slot up.
+    started: usize,
+}
+
+#[derive(Clone, Copy)]
+struct CompletionPtr(*const Completion);
+unsafe impl Send for CompletionPtr {}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here when no job (or no unclaimed slot) exists.
+    work: Condvar,
+    /// The submitter parks here if the countdown outlives its spin.
+    done_cv: Condvar,
+    /// Queued submitters park here until the active job drains.
+    idle: Condvar,
+}
+
+/// Spin iterations before a waiting submitter falls back to the Condvar.
+/// Covers the tail imbalance of sub-millisecond kernels (the submitter
+/// has already run its own share by the time it starts waiting).
+const SPIN_LIMIT: u32 = 50_000;
+
+struct Pool {
+    shared: &'static Shared,
+}
+
+fn global_pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool::new(num_threads().saturating_sub(1)))
+}
+
+impl Pool {
+    /// Spawn `helpers` persistent workers (the submitter is the
+    /// remaining unit of width). Zero helpers is valid: every slot then
+    /// runs on the submitting thread, which is the 1-core degradation.
+    fn new(helpers: usize) -> Pool {
+        let shared: &'static Shared = Box::leak(Box::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                active: false,
+                job: None,
+                done: None,
+                parts: 0,
+                started: 0,
+            }),
+            work: Condvar::new(),
+            done_cv: Condvar::new(),
+            idle: Condvar::new(),
+        }));
+        for i in 0..helpers {
+            let b = std::thread::Builder::new().name(format!("symnmf-pool-{i}"));
+            // A failed spawn just narrows the pool: slots the missing
+            // worker would have claimed run on the remaining threads.
+            let _ = b.spawn(move || worker_loop(shared));
+        }
+        Pool { shared }
+    }
+
+    fn run(&self, parts: usize, task: Task) {
+        debug_assert!(parts >= 2, "parts <= 1 handled by dispatch_with");
+        let completion = Completion {
+            pending: AtomicUsize::new(parts),
+            panic: Mutex::new(None),
+        };
+        let job = JobPtr(task as *const (dyn Fn(usize) + Sync));
+        let my_epoch;
+        {
+            let mut st = lock(&self.shared.state);
+            // One job at a time: queue behind the active one. Distinct
+            // submitters (serve workers) serialize here while the pool
+            // runs each at its budgeted width.
+            while st.active {
+                st = wait(&self.shared.idle, st);
+            }
+            st.epoch = st.epoch.wrapping_add(1);
+            my_epoch = st.epoch;
+            st.active = true;
+            st.job = Some(job);
+            st.done = Some(CompletionPtr(&completion));
+            st.parts = parts;
+            st.started = 1; // slot 0 is ours
+            self.shared.work.notify_all();
+        }
+        // Run our own share first, then help with any still-unclaimed
+        // slots (covers parts > width and descheduled workers alike).
+        run_slot(self.shared, task, 0, &completion);
+        loop {
+            let slot = {
+                let mut st = lock(&self.shared.state);
+                // The epoch stamp guards against claiming a *successor*
+                // job: if our own slot-0 decrement was the last, a
+                // queued submitter may have installed a new generation
+                // by the time we get back here.
+                if st.active && st.epoch == my_epoch && st.started < st.parts {
+                    let s = st.started;
+                    st.started += 1;
+                    Some(s)
+                } else {
+                    None
+                }
+            };
+            match slot {
+                Some(s) => run_slot(self.shared, task, s, &completion),
+                None => break,
+            }
+        }
+        // Spin-then-park for the helpers' slots.
+        let mut spins = 0u32;
+        loop {
+            if completion.pending.load(Ordering::Acquire) == 0 {
+                break;
+            }
+            if spins < SPIN_LIMIT {
+                spins += 1;
+                std::hint::spin_loop();
+            } else {
+                let mut st = lock(&self.shared.state);
+                while completion.pending.load(Ordering::Acquire) != 0 {
+                    st = wait(&self.shared.done_cv, st);
+                }
+                break;
+            }
+        }
+        let payload = lock(&completion.panic).take();
+        if let Some(p) = payload {
+            resume_unwind(p);
+        }
+    }
+}
+
+fn lock(m: &Mutex<State>) -> MutexGuard<'_, State> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+fn wait<'a>(cv: &Condvar, g: MutexGuard<'a, State>) -> MutexGuard<'a, State> {
+    cv.wait(g).unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Execute one slot, capture a panic into the job's completion block,
+/// and decrement the countdown. The *last* finisher releases the pool
+/// (clears `active`, wakes the parked submitter and any queued ones).
+/// Panic storage happens before the decrement: after it, the completion
+/// block may leave the submitter's stack at any moment.
+fn run_slot(shared: &Shared, task: Task, slot: usize, completion: &Completion) {
+    let _scope = DispatchScope::enter();
+    if let Err(p) = catch_unwind(AssertUnwindSafe(|| task(slot))) {
+        let mut first = lock_panic(&completion.panic);
+        if first.is_none() {
+            *first = Some(p);
+        }
+    }
+    drop(_scope);
+    if completion.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+        let mut st = lock(&shared.state);
+        st.active = false;
+        st.job = None;
+        st.done = None;
+        shared.done_cv.notify_all();
+        shared.idle.notify_all();
+        drop(st);
+    }
+}
+
+#[allow(clippy::type_complexity)]
+fn lock_panic(
+    m: &Mutex<Option<Box<dyn std::any::Any + Send>>>,
+) -> MutexGuard<'_, Option<Box<dyn std::any::Any + Send>>> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Park until a job with an unclaimed slot appears, claim the next slot,
+/// run it, repeat forever. A worker that finishes a slot while its job
+/// still has unclaimed slots claims another — fewer physical threads
+/// than slots is always legal (the budget contract guarantees slot
+/// bodies never require concurrency).
+fn worker_loop(shared: &'static Shared) {
+    loop {
+        let (task, slot, completion) = {
+            let mut st = lock(&shared.state);
+            while !(st.active && st.started < st.parts) {
+                st = wait(&shared.work, st);
+            }
+            let s = st.started;
+            st.started += 1;
+            (st.job.expect("active job has a task"), s, st.done.expect("active job has a completion"))
+        };
+        // SAFETY: the submitter keeps both the closure and the
+        // completion block alive until `pending` drains, and we claimed
+        // a slot before that can happen.
+        let task: Task = unsafe { &*task.0 };
+        let completion: &Completion = unsafe { &*completion.0 };
+        run_slot(shared, task, slot, completion);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    /// A private pool with its own helper threads, so the broadcast
+    /// machinery is exercised cross-thread even on a 1-core host (the
+    /// global pool would have zero helpers there).
+    fn test_pool(helpers: usize) -> Pool {
+        Pool::new(helpers)
+    }
+
+    fn counts(n: usize) -> Vec<AtomicUsize> {
+        (0..n).map(|_| AtomicUsize::new(0)).collect()
+    }
+
+    #[test]
+    fn pooled_runs_every_slot_exactly_once() {
+        let pool = test_pool(3);
+        for parts in [2usize, 3, 4, 7, 16] {
+            let c = counts(parts);
+            pool.run(parts, &|i| {
+                c[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                c.iter().all(|x| x.load(Ordering::Relaxed) == 1),
+                "parts={parts}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_helper_pool_degrades_to_the_submitter() {
+        let pool = test_pool(0);
+        let c = counts(5);
+        pool.run(5, &|i| {
+            c[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(c.iter().all(|x| x.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn epoch_advances_per_job_and_pool_is_reusable() {
+        let pool = test_pool(2);
+        let before = lock(&pool.shared.state).epoch;
+        for _ in 0..10 {
+            pool.run(3, &|_| {});
+        }
+        let after = lock(&pool.shared.state).epoch;
+        assert_eq!(after.wrapping_sub(before), 10, "one epoch per broadcast");
+    }
+
+    /// A panicking slot: remaining slots still run (scope semantics),
+    /// the panic is resent on the submitter, and the pool stays usable.
+    #[test]
+    fn slot_panic_propagates_and_pool_survives() {
+        let pool = test_pool(2);
+        let c = counts(4);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(4, &|i| {
+                c[i].fetch_add(1, Ordering::Relaxed);
+                if i == 1 {
+                    panic!("slot boom");
+                }
+            });
+        }));
+        let p = r.expect_err("slot panic must reach the submitter");
+        let msg = p.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "slot boom");
+        assert!(
+            c.iter().all(|x| x.load(Ordering::Relaxed) == 1),
+            "siblings of a panicked slot must still run"
+        );
+        // reusable afterward
+        let c2 = counts(4);
+        pool.run(4, &|i| {
+            c2[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(c2.iter().all(|x| x.load(Ordering::Relaxed) == 1));
+    }
+
+    /// Nested dispatch from inside a slot runs inline instead of
+    /// re-submitting — a naive pool would deadlock here, with every
+    /// worker busy in the outer job waiting for workers to run the
+    /// inner one.
+    #[test]
+    fn nested_dispatch_runs_inline_not_deadlocking() {
+        let pool = test_pool(2);
+        let inner_runs = AtomicUsize::new(0);
+        pool.run(3, &|_| {
+            // IN_DISPATCH is set on this thread, so this goes inline.
+            dispatch(4, &|_| {
+                inner_runs.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(inner_runs.load(Ordering::Relaxed), 3 * 4);
+    }
+
+    /// Distinct submitting threads serialize on one pool without
+    /// deadlock — the serve-worker scenario.
+    #[test]
+    fn concurrent_submitters_serialize_without_deadlock() {
+        static TOTAL: AtomicUsize = AtomicUsize::new(0);
+        let pool: &'static Pool = Box::leak(Box::new(test_pool(2)));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..20 {
+                        pool.run(3, &|_| {
+                            TOTAL.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(TOTAL.load(Ordering::Relaxed), 4 * 20 * 3);
+    }
+
+    #[test]
+    fn dispatch_with_both_backends_covers_all_slots() {
+        for backend in [PoolBackend::Pooled, PoolBackend::Scoped] {
+            let c = counts(9);
+            dispatch_with(backend, 9, &|i| {
+                c[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                c.iter().all(|x| x.load(Ordering::Relaxed) == 1),
+                "{}",
+                backend.as_str()
+            );
+        }
+    }
+
+    #[test]
+    fn scoped_backend_propagates_a_slot_panic_too() {
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            dispatch_with(PoolBackend::Scoped, 2, &|i| {
+                if i == 1 {
+                    panic!("scoped boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects_garbage() {
+        for b in [PoolBackend::Pooled, PoolBackend::Scoped] {
+            assert_eq!(PoolBackend::parse(b.as_str()), Some(b));
+        }
+        assert_eq!(PoolBackend::parse("POOLED"), Some(PoolBackend::Pooled));
+        assert_eq!(PoolBackend::parse("rayon"), None);
+        assert_eq!(PoolBackend::parse(""), None);
+    }
+
+    #[test]
+    fn override_guard_pins_and_restores() {
+        {
+            let _g = override_backend(PoolBackend::Scoped);
+            assert_eq!(active_backend(), PoolBackend::Scoped);
+        }
+        {
+            let _g = override_backend(PoolBackend::Pooled);
+            assert_eq!(active_backend(), PoolBackend::Pooled);
+        }
+        // back to the env-derived resolution (pooled when unset)
+        assert_eq!(OVERRIDE.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn pool_width_is_the_logical_width() {
+        assert_eq!(pool_width(), num_threads());
+    }
+}

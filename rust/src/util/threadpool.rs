@@ -1,10 +1,19 @@
-//! Scoped data-parallel helpers (rayon is unavailable offline).
+//! Data-parallel helpers (rayon is unavailable offline).
 //!
-//! `parallel_for_chunks` splits an index range into contiguous chunks and
-//! runs them on `std::thread::scope` workers. On a 1-core image it
-//! degrades gracefully to a sequential loop with no thread spawns; on
-//! multicore machines the dense kernels in `linalg::blas`, the CSR SpMM,
-//! and the batched trial driver pick it up.
+//! `parallel_for_chunks` splits an index range into contiguous chunks
+//! and hands them to the process-wide dispatcher in [`crate::util::pool`],
+//! which executes them on one of two backends (`SYMNMF_POOL`):
+//!
+//! * `pooled` (default) — persistent `symnmf-pool-N` workers spawned
+//!   once per process, Condvar-parked when idle, fed by epoch-stamped
+//!   broadcast. No per-call OS spawn/join on the kernel hot path.
+//! * `scoped` — a fresh `std::thread::scope` per call, the historical
+//!   implementation, kept as the pinning oracle.
+//!
+//! On a 1-core image both degrade gracefully to a sequential loop with
+//! no threads at all; on multicore machines the dense kernels in
+//! `linalg::blas`, the CSR SpMM, and the batched trial driver pick the
+//! dispatcher up.
 //!
 //! ## Logical width vs physical width (the thread-budget contract)
 //!
@@ -17,7 +26,9 @@
 //!   function of the process configuration, never of scheduling.
 //! * **Physical width** — [`current_threads`], the logical width capped
 //!   by the innermost [`with_thread_budget`] scope on the calling thread.
-//!   It bounds how many OS threads a parallel construct may spawn.
+//!   It bounds how many OS threads a parallel construct may occupy —
+//!   chunk counts are capped by it, so a budgeted scope's dispatch never
+//!   asks for more slots than its cap.
 //!
 //! The contract that makes the cap harmless: every `parallel_for_chunks`
 //! body computes each index's result independently of the partitioning
@@ -30,12 +41,31 @@
 //! `run_trials_batched` split the machine between trial workers and
 //! inner kernels while staying bitwise identical to the serial driver.
 //!
+//! ## Why the backend cannot change bits
+//!
 //! The worker count is resolved **once per process** (see
-//! [`num_threads`]) and chunk sizes are balanced to within one element,
-//! so the partitioning seen by every kernel is deterministic.
+//! [`num_threads`]), chunk sizes are balanced to within one element, and
+//! every dispatch is expressed as "run these `chunks` slot closures" —
+//! geometry is fixed *before* the executor is chosen. The pooled backend
+//! additionally runs nested dispatch inline on the calling slot (the
+//! reentrancy rule in [`crate::util::pool`]): the nested call's chunk
+//! geometry is still computed from its budget exactly as under scoped
+//! spawning, only the threads it occupies change. Pool choice is
+//! consequently never serialized into checkpoints or trace headers —
+//! unlike the kernel ISA, it cannot change results, so resume never
+//! needs to validate it.
+//!
+//! ## Panic semantics
+//!
+//! Both backends run every chunk even if a sibling chunk panics, and
+//! rethrow the first panic on the submitting thread after all chunks
+//! finish — so `catch_unwind` isolation (the serve scheduler's per-slice
+//! guard) behaves identically under either backend.
 
 use std::cell::Cell;
 use std::sync::OnceLock;
+
+use super::pool;
 
 /// Raw mutable pointer wrapper so disjoint index ranges of one output
 /// buffer can be written from scoped worker threads. Shared by the dense
@@ -43,8 +73,9 @@ use std::sync::OnceLock;
 ///
 /// SAFETY contract for users: every worker must write only through
 /// offsets derived from its own disjoint `(lo, hi)` range, and the
-/// pointee must outlive the parallel call (guaranteed by
-/// `std::thread::scope`).
+/// pointee must outlive the parallel call (guaranteed because
+/// [`pool::dispatch`] does not return until every slot completes, on
+/// either backend).
 #[derive(Clone, Copy)]
 pub(crate) struct SendPtr(pub(crate) *mut f64);
 unsafe impl Send for SendPtr {}
@@ -154,18 +185,15 @@ where
         return;
     }
     let chunks = nt.min(n.div_ceil(min_chunk)).max(1);
-    // Workers inherit an even split of this scope's width (spawned
-    // threads start with fresh thread-locals), so nested parallel
-    // constructs inside `body` cannot oversubscribe a budgeted scope.
+    // Slots run under an even split of this scope's width, so nested
+    // parallel constructs inside `body` cannot oversubscribe a budgeted
+    // scope. Pool workers restore their budget on slot exit, so the cap
+    // never leaks between jobs.
     let child = (nt / chunks).max(1);
-    std::thread::scope(|s| {
-        for c in 0..chunks {
-            let (lo, hi) = chunk_range(n, chunks, c);
-            if lo >= hi {
-                continue;
-            }
-            let body = &body;
-            s.spawn(move || with_thread_budget(child, || body(lo, hi)));
+    pool::dispatch(chunks, &|c| {
+        let (lo, hi) = chunk_range(n, chunks, c);
+        if lo < hi {
+            with_thread_budget(child, || body(lo, hi));
         }
     });
 }
@@ -192,25 +220,24 @@ where
     // inheritance is what keeps a budgeted batched run's total OS-thread
     // demand at ≈ the budget.
     let child = (nt / chunks).max(1);
-    std::thread::scope(|s| {
-        // split_at_mut based partitioning, balanced to within one element;
-        // chunk_range tiles 0..n contiguously, so `lo` is each chunk's
-        // global base index.
-        let mut rest = out;
-        for c in 0..chunks {
-            let (lo, hi) = chunk_range(n, chunks, c);
-            if lo >= hi {
-                continue;
-            }
-            let (head, tail) = rest.split_at_mut(hi - lo);
-            rest = tail;
-            let f = &f;
-            s.spawn(move || {
-                with_thread_budget(child, || {
-                    for (i, slot) in head.iter_mut().enumerate() {
-                        f(lo + i, slot);
-                    }
-                })
+    // Raw-pointer partitioning (balanced to within one element via
+    // chunk_range): a slot closure shared by every worker cannot carry
+    // per-chunk `&mut` slices, so disjointness is by-range instead of
+    // by-split_at_mut. SAFETY: chunk ranges tile 0..n without overlap,
+    // each slot touches only its own range, and `out` outlives the
+    // dispatch (it does not return until every slot completes).
+    struct Base<T>(*mut T);
+    unsafe impl<T: Send> Send for Base<T> {}
+    unsafe impl<T: Sync> Sync for Base<T> {}
+    let base = Base(out.as_mut_ptr());
+    pool::dispatch(chunks, &|c| {
+        let (lo, hi) = chunk_range(n, chunks, c);
+        if lo < hi {
+            with_thread_budget(child, || {
+                for i in lo..hi {
+                    let slot = unsafe { &mut *base.0.add(i) };
+                    f(i, slot);
+                }
             });
         }
     });
@@ -310,6 +337,53 @@ mod tests {
         });
         assert!(r.is_err());
         assert_eq!(current_threads(), full, "budget leaked past unwind");
+    }
+
+    /// The two dispatch backends produce identical output from the
+    /// same construct (here: every index written once with the same
+    /// value) — the geometry is fixed before the executor is chosen.
+    #[test]
+    fn for_chunks_is_backend_invariant() {
+        let run = |backend| {
+            let _g = pool::override_backend(backend);
+            let mut v = vec![0.0f64; 1031];
+            let p = SendPtr(v.as_mut_ptr());
+            parallel_for_chunks(v.len(), 16, |lo, hi| {
+                for i in lo..hi {
+                    unsafe { *p.0.add(i) = (i as f64) * 3.0 + 1.0 };
+                }
+            });
+            v
+        };
+        let pooled = run(pool::PoolBackend::Pooled);
+        let scoped = run(pool::PoolBackend::Scoped);
+        assert_eq!(pooled, scoped);
+        assert!(pooled.iter().enumerate().all(|(i, &x)| x == (i as f64) * 3.0 + 1.0));
+    }
+
+    /// Nested parallelism (a map_into body that itself runs
+    /// parallel_for_chunks) covers every index under both backends —
+    /// on the pooled side this exercises the inline reentrancy path
+    /// that a naive pool would deadlock on.
+    #[test]
+    fn nested_constructs_cover_indices_on_both_backends() {
+        for backend in [pool::PoolBackend::Pooled, pool::PoolBackend::Scoped] {
+            let _g = pool::override_backend(backend);
+            let mut out = vec![0usize; 13];
+            parallel_map_into(&mut out, 1, |i, slot| {
+                let counts: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+                parallel_for_chunks(64, 4, |lo, hi| {
+                    for j in lo..hi {
+                        counts[j].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+                assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+                *slot = i + 100;
+            });
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i + 100, "{}", backend.as_str());
+            }
+        }
     }
 
     /// Under a budget the parallel constructs still cover every index

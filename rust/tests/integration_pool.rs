@@ -1,0 +1,294 @@
+//! Dispatch-backend acceptance: every kernel entry point and every
+//! end-to-end method must produce **bitwise identical** results under
+//! `SYMNMF_POOL=pooled` (persistent workers) and `SYMNMF_POOL=scoped`
+//! (per-call spawn, the pinning oracle). The backend only chooses where
+//! slot closures execute — chunk geometry and accumulator-slot counts
+//! are derived from the logical width before the executor is picked —
+//! so any bit of divergence here is a pool bug, not an FP tolerance
+//! question.
+
+use std::path::PathBuf;
+
+use symnmf::coordinator::driver::Method;
+use symnmf::linalg::{blas, simd, DenseMat, SymPacked, SymPackedSpilled};
+use symnmf::nls::{hals, UpdateRule};
+use symnmf::sparse::CsrMat;
+use symnmf::symnmf::engine::RunControl;
+use symnmf::symnmf::options::{SymNmfOptions, Tau};
+use symnmf::util::pool::{self, PoolBackend};
+use symnmf::util::rng::Pcg64;
+
+/// The shape sweep from the issue: covers the degenerate (1), the
+/// sub-microkernel (3, 7), and both sides of every tile boundary
+/// (31/33 around 32, 65 past 64).
+const SIZES: [usize; 6] = [1, 3, 7, 31, 33, 65];
+
+/// Run `f` once under each backend and return both results.
+fn both<T>(f: impl Fn() -> T) -> (T, T) {
+    let pooled = {
+        let _g = pool::override_backend(PoolBackend::Pooled);
+        f()
+    };
+    let scoped = {
+        let _g = pool::override_backend(PoolBackend::Scoped);
+        f()
+    };
+    (pooled, scoped)
+}
+
+fn assert_mats_bitwise(a: &DenseMat, b: &DenseMat, what: &str) {
+    assert_eq!(a.shape(), b.shape(), "{what}: shape");
+    for (i, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i}");
+    }
+}
+
+fn planted(m: usize, k: usize, seed: u64) -> DenseMat {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let h = DenseMat::uniform(m, k, 1.0, &mut rng);
+    let mut x = blas::matmul_nt(&h, &h);
+    x.symmetrize();
+    x
+}
+
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> TempDir {
+        let d = std::env::temp_dir()
+            .join(format!("symnmf-pool-test-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        TempDir(d)
+    }
+    fn file(&self, name: &str) -> PathBuf {
+        self.0.join(name)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+#[test]
+fn matmul_nt_packed_is_backend_invariant_per_isa() {
+    for isa in simd::supported() {
+        for m in SIZES {
+            for k in SIZES {
+                let mut rng = Pcg64::seed_from_u64(0xA11CE + (m * 67 + k) as u64);
+                let a = DenseMat::gaussian(m, k, &mut rng);
+                let b = DenseMat::gaussian(m + 2, k, &mut rng);
+                let (p, s) = both(|| {
+                    let mut c = DenseMat::zeros(m, m + 2);
+                    blas::matmul_nt_into_packed_isa(isa, &a, &b, &mut c);
+                    c
+                });
+                assert_mats_bitwise(&p, &s, &format!("matmul_nt {isa:?} m={m} k={k}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn gram_is_backend_invariant_per_isa() {
+    for isa in simd::supported() {
+        for m in SIZES {
+            for k in SIZES {
+                let mut rng = Pcg64::seed_from_u64(0x6AA + (m * 67 + k) as u64);
+                let f = DenseMat::gaussian(m, k, &mut rng);
+                let (p, s) = both(|| {
+                    let mut g = DenseMat::zeros(k, k);
+                    blas::gram_into_isa(isa, &f, &mut g);
+                    g
+                });
+                assert_mats_bitwise(&p, &s, &format!("gram {isa:?} m={m} k={k}"));
+            }
+        }
+    }
+}
+
+/// Blocked SYMM with a small block so the pair-pool harness actually
+/// fans out (m=65, block=8 → 81 block pairs over `num_threads()`
+/// accumulator slots).
+#[test]
+fn blocked_symm_is_backend_invariant_per_isa() {
+    for isa in simd::supported() {
+        for m in SIZES {
+            for k in SIZES {
+                let x = planted(m, k.min(m), 0xB10C + (m * 67 + k) as u64);
+                let mut rng = Pcg64::seed_from_u64(0xF + (m + k) as u64);
+                let f = DenseMat::gaussian(m, k, &mut rng);
+                let (p, s) = both(|| {
+                    let mut out = DenseMat::zeros(m, k);
+                    blas::symm_tall_into_blocked_isa(isa, &x, &f, &mut out, 8);
+                    out
+                });
+                assert_mats_bitwise(&p, &s, &format!("symm {isa:?} m={m} k={k}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn sympacked_apply_is_backend_invariant_per_isa() {
+    for isa in simd::supported() {
+        for m in SIZES {
+            for k in SIZES {
+                let x = planted(m, k.min(m), 0x9ACD + (m * 67 + k) as u64);
+                let sp = SymPacked::from_dense_with_block(&x, 8);
+                let mut rng = Pcg64::seed_from_u64(0x5EED + (m + k) as u64);
+                let f = DenseMat::gaussian(m, k, &mut rng);
+                let (p, s) = both(|| {
+                    let mut out = DenseMat::zeros(m, k);
+                    sp.apply_blocked_into_isa(isa, &f, &mut out);
+                    out
+                });
+                assert_mats_bitwise(&p, &s, &format!("sympacked {isa:?} m={m} k={k}"));
+            }
+        }
+    }
+}
+
+/// The out-of-core tier reuses the same pair harness; one spilled
+/// operator per (isa) at the largest shape keeps the I/O bounded.
+#[test]
+fn spilled_apply_is_backend_invariant_per_isa() {
+    let dir = TempDir::new("spill-parity");
+    let m = 65;
+    for isa in simd::supported() {
+        for k in [1usize, 7, 33] {
+            let x = planted(m, k, 0x0C0DE + k as u64);
+            let sp = SymPacked::from_dense_with_block(&x, 8);
+            let path = dir.file(&format!("x-{:?}-{k}.spill", isa));
+            symnmf::linalg::spill::write_spill(&sp, &path).expect("write spill");
+            let spilled = SymPackedSpilled::open(&path).expect("open spill");
+            let mut rng = Pcg64::seed_from_u64(0xD15C + k as u64);
+            let f = DenseMat::gaussian(m, k, &mut rng);
+            let (p, s) = both(|| {
+                let mut out = DenseMat::zeros(m, k);
+                spilled.apply_blocked_into_isa(isa, &f, &mut out);
+                out
+            });
+            assert_mats_bitwise(&p, &s, &format!("spilled {isa:?} k={k}"));
+        }
+    }
+}
+
+#[test]
+fn hals_sweep_is_backend_invariant_per_isa() {
+    for isa in simd::supported() {
+        for m in SIZES {
+            for k in SIZES {
+                let mut rng = Pcg64::seed_from_u64(0x4A15 + (m * 67 + k) as u64);
+                let h = DenseMat::uniform(m, k, 1.0, &mut rng);
+                let g = blas::matmul_tn(&h, &h);
+                let y = DenseMat::uniform(m, k, 1.0, &mut rng);
+                let w0 = DenseMat::uniform(m, k, 1.0, &mut rng);
+                let (p, s) = both(|| {
+                    let mut w = w0.clone();
+                    hals::hals_sweep_isa(isa, &g, &y, &mut w);
+                    w
+                });
+                assert_mats_bitwise(&p, &s, &format!("hals {isa:?} m={m} k={k}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn csr_spmm_is_backend_invariant() {
+    for m in SIZES {
+        for k in SIZES {
+            let mut rng = Pcg64::seed_from_u64(0xC52 + (m * 67 + k) as u64);
+            // ~30% dense symmetric pattern
+            let mut trips = Vec::new();
+            for i in 0..m {
+                for j in i..m {
+                    let v = rng.uniform();
+                    if v < 0.3 {
+                        trips.push((i, j, v));
+                        if i != j {
+                            trips.push((j, i, v));
+                        }
+                    }
+                }
+            }
+            let x = CsrMat::from_coo(m, m, trips);
+            let f = DenseMat::gaussian(m, k, &mut rng);
+            let (p, s) = both(|| {
+                let mut out = DenseMat::zeros(m, k);
+                x.spmm_into(&f, &mut out);
+                out
+            });
+            assert_mats_bitwise(&p, &s, &format!("spmm m={m} k={k}"));
+        }
+    }
+}
+
+/// Thread budgets are scheduling-only on either backend: the same SYMM
+/// (the one kernel whose FP order depends on a worker count — its
+/// accumulator slots are pinned to the logical width) must produce the
+/// same bits at full width, under `with_thread_budget(1)`, and under a
+/// nested budget, pooled and scoped alike.
+#[test]
+fn thread_budget_is_bitwise_invariant_on_both_backends() {
+    use symnmf::util::threadpool::with_thread_budget;
+    let m = 65;
+    let k = 7;
+    let x = planted(m, k, 0xB0D6E7);
+    let mut rng = Pcg64::seed_from_u64(0xF00D);
+    let f = DenseMat::gaussian(m, k, &mut rng);
+    let apply = || {
+        let mut out = DenseMat::zeros(m, k);
+        blas::symm_tall_into_blocked_isa(simd::active(), &x, &f, &mut out, 8);
+        out
+    };
+    let (p_full, s_full) = both(apply);
+    assert_mats_bitwise(&p_full, &s_full, "budget full width");
+    let (p_one, s_one) = both(|| with_thread_budget(1, apply));
+    let (p_nest, s_nest) = both(|| with_thread_budget(2, || with_thread_budget(3, apply)));
+    for (got, what) in [
+        (&p_one, "pooled budget=1"),
+        (&s_one, "scoped budget=1"),
+        (&p_nest, "pooled nested budget"),
+        (&s_nest, "scoped nested budget"),
+    ] {
+        assert_mats_bitwise(got, &p_full, what);
+    }
+}
+
+/// End-to-end: one representative of every engine family, solved to
+/// completion under each backend, pinned bitwise on factors and
+/// residual history.
+#[test]
+fn methods_end_to_end_are_backend_invariant() {
+    let x = planted(40, 3, 77);
+    let methods = [
+        Method::Exact(UpdateRule::Hals),
+        Method::Exact(UpdateRule::Bpp),
+        Method::Lai { rule: UpdateRule::Hals, refine: false },
+        Method::Comp(UpdateRule::Hals),
+        Method::Lvs { rule: UpdateRule::Hals, tau: Tau::OneOverS },
+        Method::Pgncg,
+    ];
+    for method in methods {
+        let mut o = SymNmfOptions::new(3).with_seed(11);
+        o.max_iters = 5;
+        let (p, s) = both(|| {
+            method
+                .run_controlled(&x, &o, &RunControl::unlimited(), None)
+                .result
+        });
+        assert_eq!(p.iters(), s.iters(), "{}", method.label());
+        assert_mats_bitwise(&p.h, &s.h, &format!("{} H", method.label()));
+        for (i, (ra, rb)) in p.records.iter().zip(&s.records).enumerate() {
+            assert_eq!(
+                ra.residual.to_bits(),
+                rb.residual.to_bits(),
+                "{} residual at iter {i}",
+                method.label()
+            );
+        }
+    }
+}

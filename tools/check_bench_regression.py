@@ -57,6 +57,12 @@ DEFAULT_ALLOW_NOISY = [
     # nanoseconds-per-hit atomic load loop — tracks CPU frequency
     # scaling on shared runners, not any code path we gate
     "failpoint_unarmed_hit",
+    # empty-body dispatch fan-out: microseconds of pure scheduler +
+    # futex behavior, entirely at the mercy of a shared runner's load
+    # (the pooled-beats-scoped claim is asserted by eye via the printed
+    # ratio, not gated)
+    "pool_fanout_overhead",
+    "pool_fanout_scoped_ref",
 ]
 
 
