@@ -22,7 +22,9 @@ use symnmf::linalg::{
     blas, qr, simd, spill, DenseMat, KernelIsa, PanelBuf, Precision, SymPacked, SymPackedSpilled,
 };
 use symnmf::nls::{bpp, hals, UpdateRule};
-use symnmf::randnla::leverage::sample_hybrid;
+use symnmf::linalg::workspace::SampleWorkspace;
+use symnmf::randnla::leverage::{sample_hybrid, sample_hybrid_ws};
+use symnmf::randnla::op::{sampled_apply_dense_isa, sampled_apply_dense_serial};
 use symnmf::randnla::SymOp;
 use symnmf::runtime::{PjrtRuntime, PjrtSymOp};
 use symnmf::serve::{
@@ -737,7 +739,7 @@ fn main() {
     let w_sq = sm.weights_sq();
     let mut samp_out = DenseMat::zeros(n, k);
     let r = bench(&format!("sampled spmm (s={s})"), 2, 9, || {
-        sp.sampled_spmm_sym_into(&fs, &sm.indices, &w_sq, &mut samp_out);
+        sp.sampled_spmm_sym_into(&fs, &sm.indices, w_sq, &mut samp_out);
     });
     println!("{}", r.report());
     record(&mut records, "sampled_spmm_into", &format!("s={s}"), &r, 0.0);
@@ -748,6 +750,79 @@ fn main() {
     });
     println!("{}", r.report());
     record(&mut records, "leverage_scores", &format!("{n}x{k}"), &r, 0.0);
+
+    // --- LvS sampled apply: chunked parallel kernels vs their retained
+    // serial scalar oracles. The two are bitwise-equal by construction
+    // (gather-over-chunks, see randnla::op), so the printed ratio is the
+    // pure parallel+SIMD win on this box. ---
+    let isa = simd::active();
+    let s2 = m2 / 20;
+    let smd = sample_hybrid(&qr::leverage_scores(&f2), s2, 1.0 / s2 as f64, &mut rng);
+    let mut lvs_out = DenseMat::zeros(m2, k2);
+    let r_par = bench(&format!("LvS sampled apply dense ({m2}², s={s2})"), 2, 9, || {
+        sampled_apply_dense_isa(isa, &x2, &f2, &smd.indices, smd.weights_sq(), &mut lvs_out);
+    });
+    let r_ser = bench("LvS sampled apply dense (serial oracle)", 2, 9, || {
+        sampled_apply_dense_serial(&x2, &f2, &smd.indices, smd.weights_sq(), &mut lvs_out);
+    });
+    println!("{}", r_par.report());
+    println!(
+        "LvS sampled apply dense: parallel vs serial oracle {:.2}% time",
+        100.0 * r_par.median / r_ser.median.max(1e-300)
+    );
+    record(
+        &mut records,
+        "lvs_sampled_apply_dense",
+        &format!("{m2}²,s={s2}"),
+        &r_par,
+        0.0,
+    );
+
+    let r_par = bench(&format!("LvS sampled apply packed ({m2}², s={s2})"), 2, 9, || {
+        xp.sampled_apply_into_isa(isa, &f2, &smd.indices, smd.weights_sq(), &mut lvs_out);
+    });
+    let r_ser = bench("LvS sampled apply packed (serial oracle)", 2, 9, || {
+        xp.sampled_apply_into_serial(&f2, &smd.indices, smd.weights_sq(), &mut lvs_out);
+    });
+    println!("{}", r_par.report());
+    println!(
+        "LvS sampled apply packed: parallel vs serial oracle {:.2}% time",
+        100.0 * r_par.median / r_ser.median.max(1e-300)
+    );
+    record(
+        &mut records,
+        "lvs_sampled_apply_packed",
+        &format!("{m2}²,s={s2}"),
+        &r_par,
+        0.0,
+    );
+
+    let r_par = bench(&format!("LvS sampled apply csr (s={s})"), 2, 9, || {
+        sp.sampled_spmm_sym_into_isa(isa, &fs, &sm.indices, w_sq, &mut samp_out);
+    });
+    let r_ser = bench("LvS sampled apply csr (serial oracle)", 2, 9, || {
+        sp.sampled_spmm_sym_into_serial(&fs, &sm.indices, w_sq, &mut samp_out);
+    });
+    println!("{}", r_par.report());
+    println!(
+        "LvS sampled apply csr: parallel vs serial oracle {:.2}% time",
+        100.0 * r_par.median / r_ser.median.max(1e-300)
+    );
+    record(&mut records, "lvs_sampled_apply_csr", &format!("s={s}"), &r_par, 0.0);
+
+    // --- allocation-free sampling pipeline (leverage scores + hybrid
+    // sampler, all buffers persistent — one LvS half-step's sampling
+    // phase after warm-up) ---
+    let mut sw = SampleWorkspace::new(n, k, s);
+    let mut rng_sb = Pcg64::seed_from_u64(9);
+    qr::leverage_scores_via_chol_into(&h, &mut sw);
+    sample_hybrid_ws(s, 1.0 / s as f64, &mut rng_sb, &mut sw); // warm-up
+    let r_sb = bench(&format!("LvS sample build ({n}x{k}, s={s})"), 2, 9, || {
+        qr::leverage_scores_via_chol_into(&h, &mut sw);
+        std::hint::black_box(sample_hybrid_ws(s, 1.0 / s as f64, &mut rng_sb, &mut sw));
+    });
+    println!("{}", r_sb.report());
+    record(&mut records, "lvs_sample_build", &format!("{n}x{k},s={s}"), &r_sb, 0.0);
 
     // --- BPP multi-RHS (the Solve bar of Fig. 3) ---
     let g = {

@@ -12,6 +12,19 @@ pub fn cholesky_upper(a: &DenseMat) -> Result<DenseMat, String> {
     let n = a.rows();
     assert_eq!(a.rows(), a.cols());
     let mut r = DenseMat::zeros(n, n);
+    cholesky_upper_into(a, &mut r)?;
+    Ok(r)
+}
+
+/// [`cholesky_upper`] into a pre-allocated n×n output (fully
+/// overwritten, lower triangle zeroed) — the allocation-free form the
+/// per-iteration leverage-score path uses. Same loop, same arithmetic:
+/// bitwise-identical to the allocating form.
+pub fn cholesky_upper_into(a: &DenseMat, r: &mut DenseMat) -> Result<(), String> {
+    let n = a.rows();
+    assert_eq!(a.rows(), a.cols());
+    assert_eq!(r.shape(), (n, n), "cholesky_upper_into shape");
+    r.data_mut().fill(0.0);
     for i in 0..n {
         for j in i..n {
             let mut sum = a.at(i, j);
@@ -30,25 +43,40 @@ pub fn cholesky_upper(a: &DenseMat) -> Result<DenseMat, String> {
             }
         }
     }
-    Ok(r)
+    Ok(())
 }
 
 /// Cholesky with diagonal jitter retry: A + εI for growing ε. Returns the
 /// factor and the jitter actually used. LvS-SymNMF calls this on HᵀH
 /// which can be numerically semidefinite early in the iteration.
 pub fn cholesky_upper_jittered(a: &DenseMat) -> (DenseMat, f64) {
-    if let Ok(r) = cholesky_upper(a) {
-        return (r, 0.0);
+    let mut r = DenseMat::zeros(a.rows(), a.cols());
+    let mut scratch = DenseMat::zeros(a.rows(), a.cols());
+    let eps = cholesky_upper_jittered_into(a, &mut scratch, &mut r);
+    (r, eps)
+}
+
+/// [`cholesky_upper_jittered`] into pre-allocated n×n buffers: `scratch`
+/// holds the jittered copy A + εI on retries, `r` receives the factor.
+/// Identical attempt sequence and arithmetic to the allocating form.
+pub fn cholesky_upper_jittered_into(
+    a: &DenseMat,
+    scratch: &mut DenseMat,
+    r: &mut DenseMat,
+) -> f64 {
+    if cholesky_upper_into(a, r).is_ok() {
+        return 0.0;
     }
+    assert_eq!(scratch.shape(), a.shape(), "cholesky jitter scratch shape");
     let scale = (0..a.rows()).map(|i| a.at(i, i)).fold(0.0f64, f64::max).max(1e-300);
     let mut eps = scale * 1e-14;
     loop {
-        let mut aj = a.clone();
+        scratch.data_mut().copy_from_slice(a.data());
         for i in 0..a.rows() {
-            *aj.at_mut(i, i) += eps;
+            *scratch.at_mut(i, i) += eps;
         }
-        if let Ok(r) = cholesky_upper(&aj) {
-            return (r, eps);
+        if cholesky_upper_into(scratch, r).is_ok() {
+            return eps;
         }
         eps *= 10.0;
         assert!(eps.is_finite(), "cholesky jitter diverged");
@@ -150,6 +178,30 @@ mod tests {
         let (r, eps) = cholesky_upper_jittered(&a);
         assert!(eps > 0.0);
         assert_eq!(r.shape(), (2, 2));
+    }
+
+    /// The into-forms reproduce the allocating forms bitwise, including
+    /// the jitter-retry path on an indefinite input and stale-output
+    /// overwrite.
+    #[test]
+    fn into_forms_match_allocating_bitwise() {
+        let mut rng = Pcg64::seed_from_u64(21);
+        let a = random_spd(7, &mut rng);
+        let r_alloc = cholesky_upper(&a).unwrap();
+        let mut r_into = DenseMat::gaussian(7, 7, &mut rng); // stale garbage
+        cholesky_upper_into(&a, &mut r_into).unwrap();
+        for (x, y) in r_alloc.data().iter().zip(r_into.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let indef = DenseMat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]);
+        let (rj, eps) = cholesky_upper_jittered(&indef);
+        let mut scratch = DenseMat::zeros(2, 2);
+        let mut rj_into = DenseMat::zeros(2, 2);
+        let eps_into = cholesky_upper_jittered_into(&indef, &mut scratch, &mut rj_into);
+        assert_eq!(eps.to_bits(), eps_into.to_bits());
+        for (x, y) in rj.data().iter().zip(rj_into.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! (App. E), leverage-score row norms (Eq. 2.10), sampled-row gathers
 //! (Eq. 2.11) — touches contiguous memory.
 
+use crate::linalg::simd;
 use crate::util::rng::Pcg64;
 
 /// Dense row-major matrix of f64.
@@ -191,16 +192,18 @@ impl DenseMat {
     /// Scaled row gather into a pre-allocated output (hot-path form for
     /// the LvS workspace). `out` is resized to `idx.len()` rows; as long
     /// as its initial capacity covers the largest sample count (the
-    /// workspace pre-sizes it to s×k), no reallocation happens.
+    /// workspace pre-sizes it to s×k), no reallocation happens. The
+    /// per-row scale-copy runs on the fused bitwise-tier
+    /// [`simd::scale_into`] kernel (IEEE multiplication commutes, so the
+    /// vectorized `s·v` is bit-identical to the scalar `v·s`).
     pub fn gather_rows_scaled_into(&self, idx: &[usize], scale: &[f64], out: &mut DenseMat) {
         assert_eq!(idx.len(), scale.len());
         assert_eq!(out.cols, self.cols, "gather_rows_scaled_into column mismatch");
         out.rows = idx.len();
         out.data.resize(idx.len() * self.cols, 0.0);
+        let isa = simd::active();
         for (r, (&i, &s)) in idx.iter().zip(scale.iter()).enumerate() {
-            for (o, &v) in out.row_mut(r).iter_mut().zip(self.row(i)) {
-                *o = v * s;
-            }
+            simd::scale_into(isa, s, self.row(i), out.row_mut(r));
         }
     }
 

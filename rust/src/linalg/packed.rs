@@ -84,6 +84,7 @@ use crate::linalg::simd::{self, KernelIsa};
 use crate::linalg::DenseMat;
 use crate::randnla::SymOp;
 use crate::sparse::CsrMat;
+use crate::util::threadpool::{parallel_for_chunks, SendPtr};
 
 /// Packed-triangular symmetric matrix in block-panel layout (see the
 /// module header for the index math). Implements [`SymOp`], so every
@@ -497,12 +498,26 @@ impl SymOp for SymPacked {
         weights_sq: &[f64],
         out: &mut DenseMat,
     ) {
-        // Same accumulation as the dense operator (X·SᵀS·F =
-        // Σ_r w_r · x_{:,i_r} ⊗ F[i_r,:]): per sample, walk row i_r of X
-        // in ascending j. Tiles left of the diagonal tile are mirrored —
-        // column li of the stored tile (jb, ib), the only strided access
-        // in the layout; the diagonal tile and the tiles to its right
-        // give the row contiguously.
+        self.sampled_apply_into_isa(simd::active(), f, samples, weights_sq, out);
+    }
+}
+
+impl SymPacked {
+    /// Serial scalar oracle for the sampled product. Same accumulation
+    /// as the dense operator (X·SᵀS·F = Σ_r w_r · x_{:,i_r} ⊗ F[i_r,:]):
+    /// per sample, walk row i_r of X in ascending j. Tiles left of the
+    /// diagonal tile are mirrored — column li of the stored tile
+    /// (jb, ib), the only strided access in the layout; the diagonal
+    /// tile and the tiles to its right give the row contiguously.
+    /// Retained verbatim as the pinning reference for
+    /// [`SymPacked::sampled_apply_into_isa`].
+    pub fn sampled_apply_into_serial(
+        &self,
+        f: &DenseMat,
+        samples: &[usize],
+        weights_sq: &[f64],
+        out: &mut DenseMat,
+    ) {
         let k = f.cols();
         assert_eq!(out.shape(), (self.m, k), "sampled_apply_into shape");
         let od = out.data_mut();
@@ -537,6 +552,71 @@ impl SymOp for SymPacked {
                 }
             }
         }
+    }
+
+    /// Parallel, ISA-dispatched sampled product — the scatter of
+    /// [`SymPacked::sampled_apply_into_serial`] reformulated as a gather
+    /// over disjoint block-row chunks (see `randnla::op` module docs).
+    /// Each worker owns the output rows of block-rows
+    /// `jb ∈ [cb_lo, cb_hi)` and walks all samples in order, visiting
+    /// only the tiles whose column range intersects its chunk with the
+    /// identical mirrored-tile index math; per output element the
+    /// accumulation order matches the serial oracle exactly, so the
+    /// result is bitwise-identical at any thread count.
+    pub fn sampled_apply_into_isa(
+        &self,
+        isa: KernelIsa,
+        f: &DenseMat,
+        samples: &[usize],
+        weights_sq: &[f64],
+        out: &mut DenseMat,
+    ) {
+        let k = f.cols();
+        assert_eq!(out.shape(), (self.m, k), "sampled_apply_into shape");
+        assert_eq!(samples.len(), weights_sq.len(), "samples/weights length");
+        let block = self.block;
+        let fd = f.data();
+        let optr = SendPtr(out.data_mut().as_mut_ptr());
+        parallel_for_chunks(self.nb, 1, move |cb_lo, cb_hi| {
+            let lo = cb_lo * block;
+            let hi = (cb_hi * block).min(self.m);
+            // SAFETY: chunks hand out disjoint block-row ranges, so each
+            // worker touches a disjoint slice of `out`.
+            let od = unsafe {
+                std::slice::from_raw_parts_mut(optr.0.add(lo * k), (hi - lo) * k)
+            };
+            od.fill(0.0);
+            for (&ir, &w) in samples.iter().zip(weights_sq) {
+                let frow = &fd[ir * k..(ir + 1) * k];
+                let ib = ir / block;
+                let li = ir - ib * block;
+                for jb in cb_lo..cb_hi {
+                    let j0 = jb * block;
+                    let j1 = (j0 + block).min(self.m);
+                    if jb < ib {
+                        let bd = self.tile(jb, ib);
+                        let ld = self.bdim(ib); // cols of tile (jb, ib)
+                        for j in j0..j1 {
+                            let v = bd[(j - j0) * ld + li];
+                            if v != 0.0 {
+                                let o = (j - lo) * k;
+                                simd::axpy(isa, w * v, frow, &mut od[o..o + k]);
+                            }
+                        }
+                    } else {
+                        let bd = self.tile(ib, jb);
+                        let bj = j1 - j0;
+                        let xrow = &bd[li * bj..(li + 1) * bj];
+                        for (jj, &v) in xrow.iter().enumerate() {
+                            if v != 0.0 {
+                                let o = (j0 + jj - lo) * k;
+                                simd::axpy(isa, w * v, frow, &mut od[o..o + k]);
+                            }
+                        }
+                    }
+                }
+            }
+        });
     }
 }
 

@@ -7,6 +7,7 @@
 //! CholeskyQR is the fast path, Householder the stable fallback and test
 //! oracle.
 
+use crate::linalg::workspace::SampleWorkspace;
 use crate::linalg::{blas, chol, DenseMat};
 
 /// Thin QR via CholeskyQR: G = FᵀF = RᵀR, Q = F·R⁻¹. Cost O(mk²).
@@ -154,6 +155,45 @@ pub fn leverage_scores_via_chol(f: &DenseMat) -> Vec<f64> {
     out
 }
 
+/// [`leverage_scores_via_chol`] threaded through the persistent sample
+/// workspace: the Gram, the jitter scratch, the Cholesky factor, the
+/// k-sized substitution buffer and the score vector all live in `ws`, so
+/// the per-iteration call performs no heap allocation once the buffers
+/// are warm (the k×k mats re-shape only if k changes). Identical FP
+/// order to the allocating form — the scores land in `ws.leverage`
+/// bitwise-equal.
+pub fn leverage_scores_via_chol_into(f: &DenseMat, ws: &mut SampleWorkspace) {
+    let (m, k) = f.shape();
+    if ws.chol_g.shape() != (k, k) {
+        ws.chol_g = DenseMat::zeros(k, k);
+        ws.chol_scratch = DenseMat::zeros(k, k);
+        ws.chol_r = DenseMat::zeros(k, k);
+    }
+    if ws.z.len() != k {
+        ws.z.clear();
+        ws.z.resize(k, 0.0);
+    }
+    blas::gram_into(f, &mut ws.chol_g);
+    let _eps = chol::cholesky_upper_jittered_into(&ws.chol_g, &mut ws.chol_scratch, &mut ws.chol_r);
+    let r = &ws.chol_r;
+    let z = &mut ws.z;
+    let out = &mut ws.leverage;
+    out.clear();
+    out.reserve(m);
+    for i in 0..m {
+        let fi = f.row(i);
+        // solve Rᵀ z = f_i (forward substitution; Rᵀ is lower-triangular)
+        for a in 0..k {
+            let mut v = fi[a];
+            for b in 0..a {
+                v -= r.at(b, a) * z[b];
+            }
+            z[a] = v / r.at(a, a);
+        }
+        out.push(blas::dot(&z[..], &z[..]));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -246,6 +286,24 @@ mod tests {
                 }
             },
         );
+    }
+
+    /// The workspace-threaded leverage scores are bitwise-equal to the
+    /// allocating oracle, including across reuse of one warm workspace
+    /// at a different m (grow-only buffers).
+    #[test]
+    fn leverage_scores_into_matches_allocating_bitwise() {
+        let mut rng = Pcg64::seed_from_u64(31);
+        let mut ws = SampleWorkspace::new(0, 0, 0); // cold: must warm up lazily
+        for (m, k) in [(40usize, 4usize), (9, 3), (65, 4)] {
+            let f = DenseMat::gaussian(m, k, &mut rng);
+            let want = leverage_scores_via_chol(&f);
+            leverage_scores_via_chol_into(&f, &mut ws);
+            assert_eq!(ws.leverage.len(), want.len());
+            for (a, b) in ws.leverage.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "m={m} k={k}");
+            }
+        }
     }
 
     #[test]

@@ -277,6 +277,29 @@ pub fn axpy(isa: KernelIsa, alpha: f64, x: &[f64], y: &mut [f64]) {
     blas::axpy(alpha, x, y)
 }
 
+/// Dispatched scaled copy `out[j] = alpha * x[j]` — the fused
+/// scaled-gather kernel behind `DenseMat::gather_rows_scaled_into` (the
+/// S·F row rescale of Eq. 2.11). A single element-independent multiply,
+/// so every SIMD variant is **bitwise-equal** to the scalar body.
+#[inline]
+pub fn scale_into(isa: KernelIsa, alpha: f64, x: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(x.len(), out.len());
+    #[cfg(target_arch = "x86_64")]
+    if matches!(isa, KernelIsa::Avx2 | KernelIsa::Avx512) {
+        // SAFETY: caller contract as in [`dot`].
+        return unsafe { x86::scale_into_avx2(alpha, x, out) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if isa == KernelIsa::Neon {
+        // SAFETY: as above.
+        return unsafe { neon::scale_into_neon(alpha, x, out) };
+    }
+    let _ = isa;
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = alpha * v;
+    }
+}
+
 /// The f32-tier policy kernel: `y[j] += f64(alpha * x[j])` — f32
 /// product, exact widening, f64 accumulate. Element-independent, so the
 /// SIMD variants are **bitwise-equal** to the scalar body.
@@ -508,6 +531,26 @@ mod x86 {
         }
         for j in chunks..n {
             y[j] += alpha * x[j];
+        }
+    }
+
+    /// Bitwise-equal AVX2 scaled copy (element-independent multiply).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn scale_into_avx2(alpha: f64, x: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(x.len(), out.len());
+        let n = x.len();
+        let chunks = n / 4 * 4;
+        let av = _mm256_set1_pd(alpha);
+        let xp = x.as_ptr();
+        let op = out.as_mut_ptr();
+        let mut t = 0;
+        while t < chunks {
+            let xv = _mm256_loadu_pd(xp.add(t));
+            _mm256_storeu_pd(op.add(t), _mm256_mul_pd(av, xv));
+            t += 4;
+        }
+        for j in chunks..n {
+            out[j] = alpha * x[j];
         }
     }
 
@@ -845,6 +888,25 @@ mod neon {
         }
     }
 
+    /// Bitwise-equal NEON scaled copy (element-independent multiply).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn scale_into_neon(alpha: f64, x: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(x.len(), out.len());
+        let n = x.len();
+        let chunks = n / 2 * 2;
+        let xp = x.as_ptr();
+        let op = out.as_mut_ptr();
+        let mut t = 0;
+        while t < chunks {
+            let xv = vld1q_f64(xp.add(t));
+            vst1q_f64(op.add(t), vmulq_n_f64(xv, alpha));
+            t += 2;
+        }
+        for j in chunks..n {
+            out[j] = alpha * x[j];
+        }
+    }
+
     /// FMA-tier NEON dot (fused steps; 1e-12-pinned, not bitwise).
     #[target_feature(enable = "neon")]
     pub(super) unsafe fn dot_fma_neon(x: &[f64], y: &[f64]) -> f64 {
@@ -1128,6 +1190,29 @@ mod tests {
                 axpy(isa, 1.75, &x, &mut got_y);
                 for (a, b) in got_y.iter().zip(&want_y) {
                     assert_eq!(a.to_bits(), b.to_bits(), "axpy isa={isa:?} n={n}");
+                }
+            }
+        }
+    }
+
+    /// Bitwise tier: the scaled copy reproduces the scalar body
+    /// bit-for-bit on every supported ISA at every unroll edge, and
+    /// fully overwrites stale output.
+    #[test]
+    fn scale_into_is_bitwise_equal_to_scalar_on_every_isa() {
+        let mut rng = Pcg64::seed_from_u64(65);
+        for &n in &LENS {
+            let x = randvec(n, &mut rng);
+            let mut want = vec![f64::NAN; n];
+            scale_into(KernelIsa::Scalar, -2.3, &x, &mut want);
+            for (w, &v) in want.iter().zip(&x) {
+                assert_eq!(w.to_bits(), (-2.3 * v).to_bits());
+            }
+            for isa in supported() {
+                let mut got = vec![f64::NAN; n]; // stale garbage
+                scale_into(isa, -2.3, &x, &mut got);
+                for (a, b) in got.iter().zip(&want) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "scale isa={isa:?} n={n}");
                 }
             }
         }

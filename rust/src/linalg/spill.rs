@@ -66,7 +66,7 @@ use crate::linalg::simd::{self, KernelIsa};
 use crate::linalg::{DenseMat, SymPacked};
 use crate::randnla::SymOp;
 use crate::util::retry;
-use crate::util::threadpool::num_threads;
+use crate::util::threadpool::{num_threads, parallel_for_chunks, SendPtr};
 
 /// File magic: "SYMPKSPL".
 const MAGIC: [u8; 8] = *b"SYMPKSPL";
@@ -503,12 +503,26 @@ impl SymOp for SymPackedSpilled {
         weights_sq: &[f64],
         out: &mut DenseMat,
     ) {
-        // Same walk as SymPacked::sampled_apply_into, with each touched
-        // tile faulted through the ring. A sampled row reads its whole
-        // block-row of tiles — acceptable I/O amplification for the
-        // row-sampled (LvS) path, which is rare on spilled graphs; the
-        // accumulation order is identical to the resident operator, so
-        // the result is bitwise-identical.
+        self.sampled_apply_into_isa(simd::active(), f, samples, weights_sq, out);
+    }
+}
+
+impl SymPackedSpilled {
+    /// Serial scalar oracle for the sampled product. Same walk as
+    /// [`SymPacked::sampled_apply_into_serial`], with each touched tile
+    /// faulted through the ring. A sampled row reads its whole block-row
+    /// of tiles — acceptable I/O amplification for the row-sampled (LvS)
+    /// path, which is rare on spilled graphs; the accumulation order is
+    /// identical to the resident operator, so the result is
+    /// bitwise-identical. Retained verbatim as the pinning reference for
+    /// [`SymPackedSpilled::sampled_apply_into_isa`].
+    pub fn sampled_apply_into_serial(
+        &self,
+        f: &DenseMat,
+        samples: &[usize],
+        weights_sq: &[f64],
+        out: &mut DenseMat,
+    ) {
         let k = f.cols();
         assert_eq!(out.shape(), (self.m, k), "sampled_apply_into shape");
         let od = out.data_mut();
@@ -550,6 +564,77 @@ impl SymOp for SymPackedSpilled {
                 }
             }
         }
+    }
+
+    /// Parallel, ISA-dispatched sampled product — the scatter of
+    /// [`SymPackedSpilled::sampled_apply_into_serial`] reformulated as a
+    /// gather over disjoint block-row chunks (see `randnla::op` module
+    /// docs), tiles faulted through the ring from inside each chunk (the
+    /// Mutex ring is safe under concurrent faulting — workers spread
+    /// over the slots via `acquire_slot`). Per output element the
+    /// accumulation order matches the serial oracle exactly, so the
+    /// result is bitwise-identical at any thread count.
+    pub fn sampled_apply_into_isa(
+        &self,
+        isa: KernelIsa,
+        f: &DenseMat,
+        samples: &[usize],
+        weights_sq: &[f64],
+        out: &mut DenseMat,
+    ) {
+        let k = f.cols();
+        assert_eq!(out.shape(), (self.m, k), "sampled_apply_into shape");
+        assert_eq!(samples.len(), weights_sq.len(), "samples/weights length");
+        let block = self.block;
+        let fd = f.data();
+        let optr = SendPtr(out.data_mut().as_mut_ptr());
+        parallel_for_chunks(self.nb, 1, move |cb_lo, cb_hi| {
+            let lo = cb_lo * block;
+            let hi = (cb_hi * block).min(self.m);
+            // SAFETY: chunks hand out disjoint block-row ranges, so each
+            // worker touches a disjoint slice of `out`.
+            let od = unsafe {
+                std::slice::from_raw_parts_mut(optr.0.add(lo * k), (hi - lo) * k)
+            };
+            od.fill(0.0);
+            for (&ir, &w) in samples.iter().zip(weights_sq) {
+                let frow = &fd[ir * k..(ir + 1) * k];
+                let ib = ir / block;
+                let li = ir - ib * block;
+                for jb in cb_lo..cb_hi {
+                    let j0 = jb * block;
+                    let j1 = (j0 + block).min(self.m);
+                    if jb < ib {
+                        // mirrored: column li of stored tile (jb, ib)
+                        let p = jb * (2 * self.nb - jb + 1) / 2 + (ib - jb);
+                        let mut slot = self.acquire_slot(p);
+                        let len = self.read_tile(&mut slot, p);
+                        let bd = &slot.vals[..len];
+                        let ld = self.bdim(ib); // cols of tile (jb, ib)
+                        for j in j0..j1 {
+                            let v = bd[(j - j0) * ld + li];
+                            if v != 0.0 {
+                                let o = (j - lo) * k;
+                                simd::axpy(isa, w * v, frow, &mut od[o..o + k]);
+                            }
+                        }
+                    } else {
+                        let p = ib * (2 * self.nb - ib + 1) / 2 + (jb - ib);
+                        let mut slot = self.acquire_slot(p);
+                        let len = self.read_tile(&mut slot, p);
+                        let bd = &slot.vals[..len];
+                        let bj = j1 - j0;
+                        let xrow = &bd[li * bj..(li + 1) * bj];
+                        for (jj, &v) in xrow.iter().enumerate() {
+                            if v != 0.0 {
+                                let o = (j0 + jj - lo) * k;
+                                simd::axpy(isa, w * v, frow, &mut od[o..o + k]);
+                            }
+                        }
+                    }
+                }
+            }
+        });
     }
 }
 

@@ -26,6 +26,7 @@
 //! [`gram_into`]: crate::linalg::blas::gram_into
 
 use crate::linalg::DenseMat;
+use crate::util::rng::AliasTable;
 
 /// Reusable packing target for the tile-major B panels of the packed NT
 /// microkernel (see the `linalg::blas` header): capacity grows to the
@@ -116,6 +117,81 @@ impl UpdateScratch {
     }
 }
 
+/// Persistent buffers of the LvS sampling pipeline (leverage scores →
+/// hybrid draw → rescale weights), so `LvsEngine::step` allocates
+/// nothing once warm: the leverage/residual vectors and the alias table
+/// are grow-only, the CholeskyQR scratch is k×k-fixed, and the sample
+/// index/scale/weight outputs are capacity-pinned at the budget s. The
+/// only warmup allocation is the first alias-table rebuild (its size is
+/// data-dependent); everything after iteration one is reuse.
+#[derive(Debug)]
+pub struct SampleWorkspace {
+    /// m leverage scores l_i = ‖R⁻ᵀ f_i‖² (grow-only)
+    pub leverage: Vec<f64>,
+    /// k×k Gram FᵀF of the CholeskyQR leverage pass
+    pub chol_g: DenseMat,
+    /// k×k jitter scratch (holds A + εI on Cholesky retries)
+    pub chol_scratch: DenseMat,
+    /// k×k upper Cholesky factor R
+    pub chol_r: DenseMat,
+    /// k-sized forward-substitution buffer
+    pub z: Vec<f64>,
+    /// rebuildable alias table for the random draw
+    pub table: AliasTable,
+    /// m residual weights (leverage with deterministic rows zeroed)
+    pub resid: Vec<f64>,
+    /// deterministically included row indices (θ-mass rows of §4.2)
+    pub det: Vec<usize>,
+    /// sampled row indices i_r (deterministic rows first)
+    pub indices: Vec<usize>,
+    /// rescale factors c_r
+    pub scales: Vec<f64>,
+    /// squared rescale factors c_r² — the `sampled_apply_into` weights
+    pub weights_sq: Vec<f64>,
+}
+
+impl SampleWorkspace {
+    /// Buffers for an m×k factor under sample budget `s`; `s == 0`
+    /// (non-sampling drivers) holds no allocation at all — every buffer
+    /// is grow-only, so a zero-sized workspace still works, it just
+    /// warms up lazily.
+    pub fn new(m: usize, k: usize, s: usize) -> SampleWorkspace {
+        let (m, k, s) = if s == 0 { (0, 0, 0) } else { (m, k, s) };
+        SampleWorkspace {
+            leverage: Vec::with_capacity(m),
+            chol_g: DenseMat::zeros(k, k),
+            chol_scratch: DenseMat::zeros(k, k),
+            chol_r: DenseMat::zeros(k, k),
+            z: vec![0.0; k],
+            table: AliasTable::empty(),
+            resid: Vec::with_capacity(m),
+            det: Vec::with_capacity(m),
+            indices: Vec::with_capacity(s),
+            scales: Vec::with_capacity(s),
+            weights_sq: Vec::with_capacity(s),
+        }
+    }
+
+    /// Data pointers of every buffer (see [`IterWorkspace::buffer_ptrs`]).
+    pub fn buffer_ptrs(&self) -> Vec<*const f64> {
+        let [tp, ta] = self.table.buffer_ptrs();
+        vec![
+            self.leverage.as_ptr(),
+            self.chol_g.data().as_ptr(),
+            self.chol_scratch.data().as_ptr(),
+            self.chol_r.data().as_ptr(),
+            self.z.as_ptr(),
+            tp,
+            ta,
+            self.resid.as_ptr(),
+            self.det.as_ptr() as *const f64,
+            self.indices.as_ptr() as *const f64,
+            self.scales.as_ptr(),
+            self.weights_sq.as_ptr(),
+        ]
+    }
+}
+
 /// All per-iteration buffers of one SymNMF solve, sized once up front.
 #[derive(Debug)]
 pub struct IterWorkspace {
@@ -134,6 +210,8 @@ pub struct IterWorkspace {
     pub sf: DenseMat,
     /// Update(G, Y) rule scratch
     pub update: UpdateScratch,
+    /// LvS sampling pipeline buffers (empty for non-sampling drivers)
+    pub sample: SampleWorkspace,
 }
 
 impl IterWorkspace {
@@ -151,6 +229,7 @@ impl IterWorkspace {
             xh: DenseMat::zeros(m, k),
             sf: DenseMat::zeros(s, k),
             update: UpdateScratch::new(m, k),
+            sample: SampleWorkspace::new(m, k, s),
         }
     }
 
@@ -158,14 +237,16 @@ impl IterWorkspace {
     /// these before a run and assert equality after: any per-iteration
     /// reallocation or buffer replacement moves at least one of them.
     pub fn buffer_ptrs(&self) -> Vec<*const f64> {
-        vec![
+        let mut ptrs = vec![
             self.y.data().as_ptr(),
             self.g.data().as_ptr(),
             self.g2.data().as_ptr(),
             self.xh.data().as_ptr(),
             self.sf.data().as_ptr(),
             self.update.out.data().as_ptr(),
-        ]
+        ];
+        ptrs.extend(self.sample.buffer_ptrs());
+        ptrs
     }
 }
 
@@ -215,6 +296,19 @@ mod tests {
         assert_eq!(ws.xh.shape(), (20, 4));
         assert_eq!(ws.sf.shape(), (7, 4));
         assert_eq!(ws.update.out.shape(), (20, 4));
-        assert_eq!(ws.buffer_ptrs().len(), 6);
+        assert_eq!(ws.sample.chol_g.shape(), (4, 4));
+        assert_eq!(ws.sample.chol_r.shape(), (4, 4));
+        assert_eq!(ws.sample.z.len(), 4);
+        assert_eq!(ws.buffer_ptrs().len(), 18);
+    }
+
+    /// Without a sample budget the sampling pipeline holds no buffers
+    /// (the non-LvS drivers must not pay for it).
+    #[test]
+    fn zero_budget_sample_workspace_is_empty() {
+        let ws = IterWorkspace::new(20, 4);
+        assert_eq!(ws.sample.chol_g.shape(), (0, 0));
+        assert_eq!(ws.sample.leverage.capacity(), 0);
+        assert_eq!(ws.sample.z.len(), 0);
     }
 }

@@ -5,6 +5,7 @@
 //! A sampling matrix is stored implicitly as (row indices, rescale
 //! factors): S·A is a scaled row gather, never a matmul.
 
+use crate::linalg::workspace::SampleWorkspace;
 use crate::util::rng::{AliasTable, Pcg64};
 
 /// Implicit row-sampling-and-rescaling matrix S ∈ R^{s×m}.
@@ -15,6 +16,9 @@ pub struct SampleMatrix {
     /// rescale factor c_r (1/√(s·p_i) for random rows, 1 for
     /// deterministically included rows)
     pub scales: Vec<f64>,
+    /// squared scales c_r², cached at construction (read twice per LvS
+    /// iteration — once per half-step's `sampled_apply_into`)
+    weights_sq: Vec<f64>,
     /// number of deterministically included rows (they come first)
     pub num_deterministic: usize,
     /// leverage mass θ = Σ_{i∈deterministic} l_i captured deterministically
@@ -22,6 +26,17 @@ pub struct SampleMatrix {
 }
 
 impl SampleMatrix {
+    /// Assemble from indices/scales, caching the squared scales.
+    pub fn new(
+        indices: Vec<usize>,
+        scales: Vec<f64>,
+        num_deterministic: usize,
+        theta: f64,
+    ) -> SampleMatrix {
+        let weights_sq = scales.iter().map(|c| c * c).collect();
+        SampleMatrix { indices, scales, weights_sq, num_deterministic, theta }
+    }
+
     pub fn len(&self) -> usize {
         self.indices.len()
     }
@@ -30,9 +45,11 @@ impl SampleMatrix {
         self.indices.is_empty()
     }
 
-    /// Squared scales c_r², the weights of X·SᵀS·F accumulation.
-    pub fn weights_sq(&self) -> Vec<f64> {
-        self.scales.iter().map(|c| c * c).collect()
+    /// Squared scales c_r², the weights of X·SᵀS·F accumulation —
+    /// computed once at construction, borrowed (not re-allocated) per
+    /// call.
+    pub fn weights_sq(&self) -> &[f64] {
+        &self.weights_sq
     }
 
     /// Fraction of samples taken deterministically (paper Fig. 6a).
@@ -63,7 +80,7 @@ pub fn sample_standard(leverage: &[f64], s: usize, rng: &mut Pcg64) -> SampleMat
             1.0 / (s as f64 * p).sqrt()
         })
         .collect();
-    SampleMatrix { indices, scales, num_deterministic: 0, theta: 0.0 }
+    SampleMatrix::new(indices, scales, 0, 0.0)
 }
 
 /// Hybrid sampling (§4.2): rows with normalized leverage p_i = l_i/k ≥ τ
@@ -141,7 +158,92 @@ pub fn sample_hybrid(
             }
         }
     }
-    SampleMatrix { indices, scales, num_deterministic: s_d, theta }
+    SampleMatrix::new(indices, scales, s_d, theta)
+}
+
+/// [`sample_hybrid`] over the workspace's leverage buffer
+/// (`ws.leverage`), writing the draw into the persistent
+/// `ws.indices`/`ws.scales`/`ws.weights_sq` buffers — zero heap
+/// allocation once the alias table is warm. Returns
+/// `(num_deterministic, theta)`.
+///
+/// The control flow and, critically, the **RNG draw sequence** are
+/// identical to the allocating form (alias-table construction consumes
+/// no randomness; each random slot is exactly one `below` + one
+/// `uniform`), so a solver switched to this path resumes existing
+/// checkpoints bitwise. Differences are bookkeeping-only: the
+/// normalizer k = Σ l_i is summed directly (same left-to-right order as
+/// the table's cached total), and the residual zeroing iterates the
+/// deterministic list instead of hashing it.
+pub fn sample_hybrid_ws(
+    s: usize,
+    tau: f64,
+    rng: &mut Pcg64,
+    ws: &mut SampleWorkspace,
+) -> (usize, f64) {
+    assert!(!ws.leverage.is_empty());
+    let k: f64 = ws.leverage.iter().sum();
+    assert!(k > 0.0, "alias table needs positive total weight");
+    ws.det.clear();
+    let mut theta = 0.0;
+    for (i, &l) in ws.leverage.iter().enumerate() {
+        if l / k >= tau {
+            ws.det.push(i);
+            theta += l;
+        }
+    }
+    // Never spend the whole budget deterministically: keep at least one
+    // random slot unless every row is deterministic.
+    if ws.det.len() >= s && s > 0 {
+        // keep the top (s-1) by leverage
+        let lev = &ws.leverage;
+        ws.det.sort_by(|&a, &b| lev[b].partial_cmp(&lev[a]).unwrap());
+        ws.det.truncate(s.saturating_sub(1));
+        theta = ws.det.iter().map(|&i| lev[i]).sum();
+    }
+    let s_d = ws.det.len();
+    let s_r = s - s_d;
+
+    ws.indices.clear();
+    ws.indices.extend_from_slice(&ws.det);
+    ws.scales.clear();
+    ws.scales.resize(s_d, 1.0);
+
+    if s_r > 0 {
+        let xi: f64 = k - theta;
+        if ws.det.is_empty() {
+            // no deterministic rows: the residual distribution IS the
+            // leverage distribution (θ = 0, ξ = k).
+            if xi > 1e-300 {
+                ws.table.rebuild(&ws.leverage);
+                for _ in 0..s_r {
+                    let i = ws.table.sample(rng);
+                    let p = ws.leverage[i] / xi; // renormalized p̃_i
+                    ws.indices.push(i);
+                    ws.scales.push(1.0 / (s_r as f64 * p).sqrt());
+                }
+            }
+        } else {
+            // residual weights over the non-deterministic rows
+            ws.resid.clear();
+            ws.resid.extend_from_slice(&ws.leverage);
+            for &i in &ws.det {
+                ws.resid[i] = 0.0;
+            }
+            if xi > 1e-300 && ws.resid.iter().any(|&w| w > 0.0) {
+                ws.table.rebuild(&ws.resid);
+                for _ in 0..s_r {
+                    let i = ws.table.sample(rng);
+                    let p = ws.leverage[i] / xi; // renormalized p̃_i
+                    ws.indices.push(i);
+                    ws.scales.push(1.0 / (s_r as f64 * p).sqrt());
+                }
+            }
+        }
+    }
+    ws.weights_sq.clear();
+    ws.weights_sq.extend(ws.scales.iter().map(|c| c * c));
+    (s_d, theta)
 }
 
 /// Number of samples Theorem 2.1 prescribes:
@@ -240,6 +342,64 @@ mod tests {
         let sm = sample_hybrid(&lev, 10, 1e-9, &mut rng);
         assert!(sm.len() <= 10);
         assert!(sm.num_deterministic < 10);
+    }
+
+    /// The workspace sampler reproduces the allocating sampler exactly —
+    /// indices, scales, cached squared weights, stats, AND the RNG
+    /// end-state (same draw count) — across every control-flow regime:
+    /// pure random (τ = 1), hybrid with deterministic rows, and the
+    /// deterministic-budget guard. One warm workspace is reused across
+    /// all regimes to pin buffer-reuse transparency.
+    #[test]
+    fn sample_hybrid_ws_matches_allocating_bitwise() {
+        let mut rng = Pcg64::seed_from_u64(6);
+        let q = orthonormal(300, 4, &mut rng);
+        let mut lev = qr::leverage_scores_from_q(&q);
+        // spike two rows so the hybrid regime has deterministic picks
+        lev[13] += 2.0;
+        lev[99] += 1.5;
+        let uniform = vec![0.01; 300];
+        let mut ws = SampleWorkspace::new(300, 4, 64);
+        for (weights, s, tau) in [
+            (&lev, 64usize, 1.0),          // pure random
+            (&lev, 64, 1.0 / 64.0),        // hybrid
+            (&uniform, 10, 1e-9),          // budget guard: all rows cross τ
+            (&lev, 64, 1.0 / 64.0),        // reuse after shrink
+        ] {
+            let mut rng_a = Pcg64::seed_from_u64(777);
+            let mut rng_b = Pcg64::seed_from_u64(777);
+            let sm = sample_hybrid(weights, s, tau, &mut rng_a);
+            ws.leverage.clear();
+            ws.leverage.extend_from_slice(weights);
+            let (nd, theta) = sample_hybrid_ws(s, tau, &mut rng_b, &mut ws);
+            assert_eq!(sm.indices, ws.indices, "s={s} tau={tau}");
+            assert_eq!(sm.num_deterministic, nd);
+            assert_eq!(sm.theta.to_bits(), theta.to_bits());
+            assert_eq!(sm.scales.len(), ws.scales.len());
+            for (a, b) in sm.scales.iter().zip(&ws.scales) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            for (a, b) in sm.weights_sq().iter().zip(&ws.weights_sq) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            assert_eq!(rng_a.state(), rng_b.state(), "draw sequences must match");
+        }
+    }
+
+    /// weights_sq is cached at construction and equals the squares of
+    /// the scales (the former per-call allocation).
+    #[test]
+    fn weights_sq_is_cached_square_of_scales() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        let q = orthonormal(100, 3, &mut rng);
+        let lev = qr::leverage_scores_from_q(&q);
+        let sm = sample_standard(&lev, 30, &mut rng);
+        let p1 = sm.weights_sq().as_ptr();
+        let p2 = sm.weights_sq().as_ptr();
+        assert_eq!(p1, p2, "repeated calls must borrow the same buffer");
+        for (w, c) in sm.weights_sq().iter().zip(&sm.scales) {
+            assert_eq!(w.to_bits(), (c * c).to_bits());
+        }
     }
 
     #[test]

@@ -27,9 +27,35 @@
 //! The allocating [`SymOp::apply`] / [`SymOp::sampled_apply`] remain as
 //! thin default wrappers for setup-phase and test callers. Backends must
 //! fully overwrite `out` (accumulating backends zero it first).
+//!
+//! ## Sampled apply: gather reformulation and bitwise contract
+//!
+//! The LvS sampled product X·SᵀS·F is, per sample r, a rank-1 scatter
+//! `out[j,:] += w_r·X[j,i_r]·F[i_r,:]`. Parallelizing the scatter
+//! directly would race on output rows, and atomics or per-thread
+//! partials would change the floating-point summation order. Instead
+//! every parallel backend reformulates it as a **gather over disjoint
+//! output-row chunks**: each [`crate::util::pool`] worker owns a
+//! j-range `[lo,hi)` and accumulates the contributions of *all* samples
+//! into its own rows, walking samples in submission order with j
+//! ascending inside each sample — exactly the order of the serial loop
+//! restricted to that range. Per output element the partial sums
+//! therefore arrive in an identical sequence, so the parallel kernels
+//! are **bitwise-equal to serial by construction** at any thread count,
+//! on either `SYMNMF_POOL` backend, for every dispatched ISA (the
+//! per-row axpy routes through the bitwise tier of
+//! [`crate::linalg::simd`], itself pinned to the scalar loop). Each
+//! backend retains its serial loop as a pinning oracle —
+//! [`sampled_apply_dense_serial`], `CsrMat::sampled_spmm_sym_into_serial`,
+//! `SymPacked::sampled_apply_into_serial`,
+//! `SymPackedSpilled::sampled_apply_into_serial` — and the
+//! `integration_lvs_parity` suite asserts bit equality across the full
+//! ISA × pool × backend matrix.
 
+use crate::linalg::simd::{self, KernelIsa};
 use crate::linalg::{blas, DenseMat};
 use crate::sparse::CsrMat;
+use crate::util::threadpool::{parallel_for_chunks, SendPtr};
 
 /// A symmetric linear operator X ∈ R^{m×m} accessed via block products.
 pub trait SymOp {
@@ -144,24 +170,79 @@ impl SymOp for DenseMat {
         weights_sq: &[f64],
         out: &mut DenseMat,
     ) {
-        // X·SᵀS·F = Σ_r w_r · x_{:,i_r} ⊗ F[i_r,:]; with X symmetric the
-        // column x_{:,i_r} is row i_r, so this is a scaled row gather —
-        // the "copying large portions of a large dense data matrix" cost
-        // the paper calls out in §5.1.1.
-        let k = f.cols();
-        assert_eq!(out.shape(), (self.rows(), k), "sampled_apply_into shape");
-        let od = out.data_mut();
-        od.fill(0.0);
-        for (&ir, &w) in samples.iter().zip(weights_sq) {
-            let xrow = self.row(ir);
-            let frow = f.row(ir);
-            for (j, &xv) in xrow.iter().enumerate() {
-                if xv != 0.0 {
-                    blas::axpy(w * xv, frow, &mut od[j * k..(j + 1) * k]);
-                }
+        sampled_apply_dense_isa(simd::active(), self, f, samples, weights_sq, out);
+    }
+}
+
+/// Serial scalar oracle for the dense sampled product X·SᵀS·F:
+/// sample-major scatter with j ascending inside each sample. Retained
+/// verbatim as the pinning reference for [`sampled_apply_dense_isa`].
+///
+/// X·SᵀS·F = Σ_r w_r · x_{:,i_r} ⊗ F[i_r,:]; with X symmetric the
+/// column x_{:,i_r} is row i_r, so this is a scaled row gather — the
+/// "copying large portions of a large dense data matrix" cost the paper
+/// calls out in §5.1.1.
+pub fn sampled_apply_dense_serial(
+    x: &DenseMat,
+    f: &DenseMat,
+    samples: &[usize],
+    weights_sq: &[f64],
+    out: &mut DenseMat,
+) {
+    let k = f.cols();
+    assert_eq!(out.shape(), (x.rows(), k), "sampled_apply_into shape");
+    let od = out.data_mut();
+    od.fill(0.0);
+    for (&ir, &w) in samples.iter().zip(weights_sq) {
+        let xrow = x.row(ir);
+        let frow = f.row(ir);
+        for (j, &xv) in xrow.iter().enumerate() {
+            if xv != 0.0 {
+                blas::axpy(w * xv, frow, &mut od[j * k..(j + 1) * k]);
             }
         }
     }
+}
+
+/// Parallel, ISA-dispatched dense sampled product — the scatter of
+/// [`sampled_apply_dense_serial`] reformulated as a gather over disjoint
+/// output-row chunks (module docs). Each worker owns `j ∈ [lo,hi)` and
+/// walks all samples in order, reading the contiguous segment
+/// `X[i_r, lo..hi]` (X symmetric ⇒ X[j,i_r] = X[i_r,j]), so the
+/// per-element accumulation order matches the serial oracle exactly and
+/// the result is bitwise-identical at any thread count.
+pub fn sampled_apply_dense_isa(
+    isa: KernelIsa,
+    x: &DenseMat,
+    f: &DenseMat,
+    samples: &[usize],
+    weights_sq: &[f64],
+    out: &mut DenseMat,
+) {
+    let m = x.rows();
+    let k = f.cols();
+    assert_eq!(x.cols(), m, "sampled_apply expects square X");
+    assert_eq!(out.shape(), (m, k), "sampled_apply_into shape");
+    assert_eq!(samples.len(), weights_sq.len(), "samples/weights length");
+    let xd = x.data();
+    let fd = f.data();
+    let optr = SendPtr(out.data_mut().as_mut_ptr());
+    parallel_for_chunks(m, 64, move |lo, hi| {
+        // SAFETY: chunks hand out disjoint [lo,hi) row ranges, so each
+        // worker touches a disjoint slice of `out`.
+        let od =
+            unsafe { std::slice::from_raw_parts_mut(optr.0.add(lo * k), (hi - lo) * k) };
+        od.fill(0.0);
+        for (&ir, &w) in samples.iter().zip(weights_sq) {
+            let frow = &fd[ir * k..(ir + 1) * k];
+            let xseg = &xd[ir * m + lo..ir * m + hi];
+            for (j, &xv) in xseg.iter().enumerate() {
+                if xv != 0.0 {
+                    simd::axpy(isa, w * xv, frow, &mut od[j * k..(j + 1) * k]);
+                }
+            }
+        }
+    });
 }
 
 impl SymOp for CsrMat {

@@ -5,6 +5,7 @@
 //! same symmetry (row i ≡ column i), which makes both the SpMM X·F and
 //! the LvS sampled products row-gather-friendly.
 
+use crate::linalg::simd::{self, KernelIsa};
 use crate::linalg::DenseMat;
 use crate::util::threadpool::{parallel_for_chunks, SendPtr};
 
@@ -204,10 +205,25 @@ impl CsrMat {
     }
 
     /// [`CsrMat::sampled_spmm_sym`] into a pre-allocated output (fully
-    /// overwritten) — the LvS hot-path form. The scatter accumulation is
-    /// column-panel tiled on wide k like [`CsrMat::spmm_into`]; per-entry
-    /// accumulation order is unchanged, so tiling is bitwise-neutral.
+    /// overwritten) — the LvS hot-path form. Dispatches to the parallel
+    /// ISA-routed kernel; bitwise-pinned to the serial oracle.
     pub fn sampled_spmm_sym_into(
+        &self,
+        f: &DenseMat,
+        samples: &[usize],
+        weights: &[f64],
+        out: &mut DenseMat,
+    ) {
+        self.sampled_spmm_sym_into_isa(simd::active(), f, samples, weights, out);
+    }
+
+    /// Serial scalar oracle for the sampled product: sample-major
+    /// scatter, columns ascending inside each sample, column-panel tiled
+    /// on wide k like [`CsrMat::spmm_into`] (per-entry accumulation
+    /// order is unchanged, so tiling is bitwise-neutral). Retained
+    /// verbatim as the pinning reference for
+    /// [`CsrMat::sampled_spmm_sym_into_isa`].
+    pub fn sampled_spmm_sym_into_serial(
         &self,
         f: &DenseMat,
         samples: &[usize],
@@ -243,6 +259,66 @@ impl CsrMat {
             }
             c0 = c1;
         }
+    }
+
+    /// Parallel, ISA-dispatched sampled product — the scatter of
+    /// [`CsrMat::sampled_spmm_sym_into_serial`] reformulated as a gather
+    /// over disjoint output-row chunks (see `randnla::op` module docs).
+    /// Each worker owns rows `[lo,hi)` and walks all samples in order,
+    /// binary-searching the sampled row's sorted column slice down to
+    /// the entries landing in its range; per output element the
+    /// accumulation order matches the serial oracle exactly, so the
+    /// result is bitwise-identical at any thread count.
+    pub fn sampled_spmm_sym_into_isa(
+        &self,
+        isa: KernelIsa,
+        f: &DenseMat,
+        samples: &[usize],
+        weights: &[f64],
+        out: &mut DenseMat,
+    ) {
+        assert_eq!(self.rows, self.cols, "sampled_spmm_sym needs symmetric X");
+        assert_eq!(samples.len(), weights.len());
+        let k = f.cols();
+        assert_eq!(out.shape(), (self.rows, k), "sampled_spmm_sym_into shape");
+        let fd = f.data();
+        let optr = SendPtr(out.data_mut().as_mut_ptr());
+        parallel_for_chunks(self.rows, 256, move |lo, hi| {
+            // SAFETY: chunks hand out disjoint [lo,hi) row ranges, so
+            // each worker touches a disjoint slice of `out`.
+            let od = unsafe {
+                std::slice::from_raw_parts_mut(optr.0.add(lo * k), (hi - lo) * k)
+            };
+            od.fill(0.0);
+            if k <= SPMM_PANEL {
+                for (&ir, &w) in samples.iter().zip(weights) {
+                    let frow = &fd[ir * k..(ir + 1) * k];
+                    let (cols, vals) = self.row(ir);
+                    let a = cols.partition_point(|&j| j < lo);
+                    let b = cols.partition_point(|&j| j < hi);
+                    for (&j, &v) in cols[a..b].iter().zip(&vals[a..b]) {
+                        let o = (j - lo) * k;
+                        simd::axpy(isa, w * v, frow, &mut od[o..o + k]);
+                    }
+                }
+                return;
+            }
+            let mut c0 = 0;
+            while c0 < k {
+                let c1 = (c0 + SPMM_PANEL).min(k);
+                for (&ir, &w) in samples.iter().zip(weights) {
+                    let fseg = &fd[ir * k + c0..ir * k + c1];
+                    let (cols, vals) = self.row(ir);
+                    let a = cols.partition_point(|&j| j < lo);
+                    let b = cols.partition_point(|&j| j < hi);
+                    for (&j, &v) in cols[a..b].iter().zip(&vals[a..b]) {
+                        let o = (j - lo) * k;
+                        simd::axpy(isa, w * v, fseg, &mut od[o + c0..o + c1]);
+                    }
+                }
+                c0 = c1;
+            }
+        });
     }
 
     /// Dense copy (tests / small problems only).

@@ -16,9 +16,10 @@
 //! renormalized probabilities — the paper shows τ = 1 (pure random) gives
 //! no speedup while τ = 1/s makes the method competitive (§5.2, Fig. 2).
 
-use crate::linalg::{blas, DenseMat, IterWorkspace};
+use crate::linalg::workspace::SampleWorkspace;
+use crate::linalg::{blas, qr, DenseMat, IterWorkspace};
 use crate::nls::{update_into, UpdateRule};
-use crate::randnla::leverage::{sample_hybrid, SampleMatrix};
+use crate::randnla::leverage::{sample_hybrid, sample_hybrid_ws, SampleMatrix};
 use crate::randnla::SymOp;
 use crate::symnmf::anls::{resolve_alpha, Metrics};
 use crate::symnmf::engine::{
@@ -36,9 +37,29 @@ use crate::util::timer::{PhaseTimer, Stopwatch, PHASE_MM, PHASE_SAMPLING, PHASE_
 /// One leverage-score sampling step for a factor F (Alg. LvS-SymNMF
 /// lines 4–7): CholeskyQR leverage scores → hybrid sampling matrix.
 /// Uses the Q-free formulation (leverage_scores_via_chol, §Perf).
+/// Allocating form, retained for the frozen reference loop
+/// ([`lvs_symnmf_ws`]); the engine hot path runs [`sample_factor_ws`].
 fn sample_factor(f: &DenseMat, s: usize, tau: f64, rng: &mut Pcg64) -> SampleMatrix {
-    let lev = crate::linalg::qr::leverage_scores_via_chol(f);
+    let lev = qr::leverage_scores_via_chol(f);
     sample_hybrid(&lev, s, tau, rng)
+}
+
+/// [`sample_factor`] threaded through the persistent [`SampleWorkspace`]:
+/// scores land in `sw.leverage`, the sampling matrix in
+/// `sw.indices`/`sw.scales`/`sw.weights_sq` — zero heap allocation once
+/// the buffers are warm. The RNG draw sequence is identical to the
+/// allocating form (pinned by `sample_hybrid_ws_matches_allocating_bitwise`),
+/// so checkpoints taken by either path resume bitwise on the other.
+/// Returns (num_deterministic, θ).
+fn sample_factor_ws(
+    f: &DenseMat,
+    s: usize,
+    tau: f64,
+    rng: &mut Pcg64,
+    sw: &mut SampleWorkspace,
+) -> (usize, f64) {
+    qr::leverage_scores_via_chol_into(f, sw);
+    sample_hybrid_ws(s, tau, rng, sw)
 }
 
 /// The §5 label of an LvS configuration, shared by the engine wrapper
@@ -103,14 +124,30 @@ impl SolverEngine for LvsEngine<'_> {
         let mut t_sample = 0.0;
 
         // --- sample on H, update W (lines 4–10) ---
+        // The sampler runs through the persistent workspace
+        // (`ws.sample`): scores, Cholesky scratch, alias table and the
+        // sampling matrix are all reused buffers, so the steady-state
+        // step allocates nothing. Per-half-step stats are captured into
+        // locals before the second half-step overwrites the buffers.
         let t = Stopwatch::start();
-        let sm_h = sample_factor(&self.h, self.s, self.tau, &mut self.rng);
-        self.h.gather_rows_scaled_into(&sm_h.indices, &sm_h.scales, &mut ws.sf);
+        let (nd_h, theta_h) =
+            sample_factor_ws(&self.h, self.s, self.tau, &mut self.rng, &mut ws.sample);
+        self.h
+            .gather_rows_scaled_into(&ws.sample.indices, &ws.sample.scales, &mut ws.sf);
         t_sample += t.elapsed_secs();
+        let det_frac_h = if ws.sample.indices.is_empty() {
+            0.0
+        } else {
+            nd_h as f64 / ws.sample.indices.len() as f64
+        };
 
         let t = Stopwatch::start();
-        self.x
-            .sampled_apply_into(&self.h, &sm_h.indices, &sm_h.weights_sq(), &mut ws.y);
+        self.x.sampled_apply_into(
+            &self.h,
+            &ws.sample.indices,
+            &ws.sample.weights_sq,
+            &mut ws.y,
+        );
         ws.y.axpy(self.alpha, &self.h);
         blas::gram_into(&ws.sf, &mut ws.g);
         t_mm += t.elapsed_secs();
@@ -121,13 +158,24 @@ impl SolverEngine for LvsEngine<'_> {
 
         // --- sample on W, update H (lines 11–17) ---
         let t = Stopwatch::start();
-        let sm_w = sample_factor(&self.w, self.s, self.tau, &mut self.rng);
-        self.w.gather_rows_scaled_into(&sm_w.indices, &sm_w.scales, &mut ws.sf);
+        let (nd_w, theta_w) =
+            sample_factor_ws(&self.w, self.s, self.tau, &mut self.rng, &mut ws.sample);
+        self.w
+            .gather_rows_scaled_into(&ws.sample.indices, &ws.sample.scales, &mut ws.sf);
         t_sample += t.elapsed_secs();
+        let det_frac_w = if ws.sample.indices.is_empty() {
+            0.0
+        } else {
+            nd_w as f64 / ws.sample.indices.len() as f64
+        };
 
         let t = Stopwatch::start();
-        self.x
-            .sampled_apply_into(&self.w, &sm_w.indices, &sm_w.weights_sq(), &mut ws.y);
+        self.x.sampled_apply_into(
+            &self.w,
+            &ws.sample.indices,
+            &ws.sample.weights_sq,
+            &mut ws.y,
+        );
         ws.y.axpy(self.alpha, &self.w);
         blas::gram_into(&ws.sf, &mut ws.g);
         t_mm += t.elapsed_secs();
@@ -136,9 +184,8 @@ impl SolverEngine for LvsEngine<'_> {
         update_into(self.rule, &ws.g, &ws.y, &mut self.h, &mut ws.update);
         t_solve += t.elapsed_secs();
 
-        let det_frac =
-            0.5 * (sm_h.deterministic_fraction() + sm_w.deterministic_fraction());
-        let theta_over_k = 0.5 * (sm_h.theta + sm_w.theta) / k as f64;
+        let det_frac = 0.5 * (det_frac_h + det_frac_w);
+        let theta_over_k = 0.5 * (theta_h + theta_w) / k as f64;
         StepOutcome {
             mm_secs: t_mm,
             solve_secs: t_solve,
@@ -255,7 +302,7 @@ pub fn lvs_symnmf_ws<X: SymOp>(
         t_sample += t.elapsed_secs();
 
         let t = Stopwatch::start();
-        x.sampled_apply_into(&h, &sm_h.indices, &sm_h.weights_sq(), &mut ws.y);
+        x.sampled_apply_into(&h, &sm_h.indices, sm_h.weights_sq(), &mut ws.y);
         ws.y.axpy(alpha, &h);
         blas::gram_into(&ws.sf, &mut ws.g);
         t_mm += t.elapsed_secs();
@@ -271,7 +318,7 @@ pub fn lvs_symnmf_ws<X: SymOp>(
         t_sample += t.elapsed_secs();
 
         let t = Stopwatch::start();
-        x.sampled_apply_into(&w, &sm_w.indices, &sm_w.weights_sq(), &mut ws.y);
+        x.sampled_apply_into(&w, &sm_w.indices, sm_w.weights_sq(), &mut ws.y);
         ws.y.axpy(alpha, &w);
         blas::gram_into(&ws.sf, &mut ws.g);
         t_mm += t.elapsed_secs();
@@ -369,6 +416,36 @@ mod tests {
             before,
             "LvS workspace buffers moved during the update loop"
         );
+    }
+
+    /// Tentpole acceptance: after one warm-up step, `LvsEngine::step`
+    /// performs zero heap allocation — every workspace buffer pointer,
+    /// including the sampling pipeline's (leverage scores, Cholesky
+    /// scratch, alias table, indices/scales/weights), survives further
+    /// steps unchanged.
+    #[test]
+    fn engine_step_is_allocation_free_after_warmup() {
+        let x = planted_sparse(96, 4, 11);
+        let mut rng = Pcg64::seed_from_u64(5);
+        let h0 = init_factor(&x, 4, &mut rng);
+        let xo: &dyn SymOp = &x;
+        let s = 48;
+        let mut eng = LvsEngine::new(
+            xo,
+            0.1,
+            UpdateRule::Hals,
+            s,
+            1.0 / s as f64,
+            Pcg64::seed_from_u64(23),
+            h0,
+        );
+        let mut ws = IterWorkspace::with_samples(96, 4, s);
+        eng.step(&mut ws); // warm-up: grow-only buffers reach steady size
+        let before = ws.buffer_ptrs();
+        for _ in 0..3 {
+            eng.step(&mut ws);
+        }
+        assert_eq!(ws.buffer_ptrs(), before, "LvS step allocated after warm-up");
     }
 
     /// Acceptance: the engine wrapper is bitwise-identical to the frozen

@@ -138,6 +138,7 @@ impl Pcg64 {
 /// distribution p_i = l_i(A)/k; Walker's alias method makes each draw O(1)
 /// after O(m) setup, which matters because the sampler runs every iteration
 /// of LvS-SymNMF.
+#[derive(Clone, Debug)]
 pub struct AliasTable {
     prob: Vec<f64>,
     alias: Vec<usize>,
@@ -146,19 +147,68 @@ pub struct AliasTable {
     /// (the leverage-score rescale factors of Eq. 2.11) read it from
     /// here instead of re-summing the weight vector per call site.
     total: f64,
+    /// Worklist scratch reused by [`AliasTable::rebuild`] — grow-only,
+    /// always drained back to empty, so a rebuilt table of the same (or
+    /// smaller) size allocates nothing.
+    small: Vec<usize>,
+    large: Vec<usize>,
 }
 
 impl AliasTable {
     /// Build from (unnormalized) nonnegative weights. Panics if all zero.
     pub fn new(weights: &[f64]) -> Self {
+        let mut t = AliasTable {
+            prob: Vec::new(),
+            alias: Vec::new(),
+            total: 0.0,
+            small: Vec::new(),
+            large: Vec::new(),
+        };
+        t.rebuild(weights);
+        t
+    }
+
+    /// Buffer-less placeholder for persistent workspaces: holds no
+    /// allocation until the first [`AliasTable::rebuild`]. Drawing from
+    /// an empty table panics (zero-length `below`), matching the
+    /// fail-loud policy — a sampler must rebuild before sampling.
+    pub fn empty() -> Self {
+        AliasTable {
+            prob: Vec::new(),
+            alias: Vec::new(),
+            total: 0.0,
+            small: Vec::new(),
+            large: Vec::new(),
+        }
+    }
+
+    /// Data pointers of the internal buffers, for allocation-stability
+    /// assertions in tests (the zero-allocation sampler protocol).
+    pub fn buffer_ptrs(&self) -> [*const f64; 2] {
+        [self.prob.as_ptr(), self.alias.as_ptr() as *const f64]
+    }
+
+    /// Rebuild the table in place for a new weight vector, reusing every
+    /// buffer (the per-iteration path of the LvS sampler). Arithmetic and
+    /// worklist order are identical to [`AliasTable::new`], so a rebuilt
+    /// table is bitwise-indistinguishable from a fresh one — same `prob`,
+    /// same `alias`, same draw sequence for the same RNG state.
+    pub fn rebuild(&mut self, weights: &[f64]) {
         let n = weights.len();
         assert!(n > 0);
         let total: f64 = weights.iter().sum();
         assert!(total > 0.0, "alias table needs positive total weight");
-        let mut prob: Vec<f64> = weights.iter().map(|w| w * n as f64 / total).collect();
-        let mut alias = vec![0usize; n];
-        let mut small: Vec<usize> = Vec::with_capacity(n);
-        let mut large: Vec<usize> = Vec::with_capacity(n);
+        self.total = total;
+        self.prob.clear();
+        self.prob.extend(weights.iter().map(|w| w * n as f64 / total));
+        self.alias.clear();
+        self.alias.resize(n, 0);
+        let prob = &mut self.prob;
+        let alias = &mut self.alias;
+        let small = &mut self.small;
+        let large = &mut self.large;
+        small.clear();
+        large.clear();
         for (i, &p) in prob.iter().enumerate() {
             if p < 1.0 {
                 small.push(i);
@@ -179,7 +229,8 @@ impl AliasTable {
         for &i in small.iter().chain(large.iter()) {
             prob[i] = 1.0;
         }
-        AliasTable { prob, alias, total }
+        small.clear();
+        large.clear();
     }
 
     /// Σ of the construction weights (the row-probability normalizer),
@@ -205,6 +256,18 @@ impl AliasTable {
     /// Draw `s` indices with replacement.
     pub fn sample_many(&self, rng: &mut Pcg64, s: usize) -> Vec<usize> {
         (0..s).map(|_| self.sample(rng)).collect()
+    }
+
+    /// Draw `s` indices with replacement into a reused buffer — the
+    /// allocation-free form of [`AliasTable::sample_many`] (identical
+    /// draw sequence: each draw consumes exactly one `below` and one
+    /// `uniform`).
+    pub fn sample_many_into(&self, rng: &mut Pcg64, s: usize, out: &mut Vec<usize>) {
+        out.clear();
+        out.reserve(s);
+        for _ in 0..s {
+            out.push(self.sample(rng));
+        }
     }
 }
 
@@ -315,6 +378,45 @@ mod tests {
             let got = counts[i] as f64 / n as f64;
             assert!((got - expect).abs() < 0.01, "i={i} got={got} expect={expect}");
         }
+    }
+
+    /// Rebuilding a warm table produces the same table and draw stream
+    /// as a fresh build — rebuild is bitwise-transparent to samplers.
+    #[test]
+    fn alias_rebuild_matches_fresh_build_bitwise() {
+        let first = [4.0, 0.25, 1.5, 0.0, 2.25, 9.0, 0.5];
+        let second = [0.75, 3.0, 0.125]; // shrink: buffers must re-size down
+        let third = [1.0; 12]; // grow past both
+        let mut warm = AliasTable::new(&first);
+        for weights in [&second[..], &third[..], &first[..]] {
+            warm.rebuild(weights);
+            let fresh = AliasTable::new(weights);
+            assert_eq!(warm.total().to_bits(), fresh.total().to_bits());
+            assert_eq!(warm.alias, fresh.alias);
+            assert_eq!(warm.prob.len(), fresh.prob.len());
+            for (a, b) in warm.prob.iter().zip(&fresh.prob) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            let mut ra = Pcg64::seed_from_u64(23);
+            let mut rb = Pcg64::seed_from_u64(23);
+            for _ in 0..64 {
+                assert_eq!(warm.sample(&mut ra), fresh.sample(&mut rb));
+            }
+        }
+    }
+
+    /// The into-form draws the identical index sequence and leaves the
+    /// RNG in the identical state as the allocating form.
+    #[test]
+    fn sample_many_into_matches_sample_many() {
+        let table = AliasTable::new(&[1.0, 3.0, 0.5, 5.5, 2.0]);
+        let mut ra = Pcg64::seed_from_u64(31);
+        let mut rb = Pcg64::seed_from_u64(31);
+        let alloc = table.sample_many(&mut ra, 97);
+        let mut reused = vec![123usize; 4]; // stale contents must be cleared
+        table.sample_many_into(&mut rb, 97, &mut reused);
+        assert_eq!(alloc, reused);
+        assert_eq!(ra.state(), rb.state(), "draw counts must match");
     }
 
     #[test]

@@ -1,0 +1,284 @@
+//! LvS sampled-apply parity acceptance: the parallel, ISA-dispatched
+//! sampled product X·SᵀS·F must be **bitwise identical** to the retained
+//! serial scalar oracle on every backend (dense, CSR, packed, spilled),
+//! for every `simd::supported()` ISA, under both `SYMNMF_POOL` dispatch
+//! backends — the gather-over-chunks reformulation (see `randnla::op`)
+//! preserves the serial per-element accumulation order by construction,
+//! so any bit of divergence is a kernel bug, not an FP tolerance
+//! question. Plus the end-to-end contract: LvS checkpoints resume
+//! bitwise and the sampler's RNG draw sequence is unchanged by the
+//! workspace-threaded sampling pipeline.
+
+use std::path::PathBuf;
+
+use symnmf::linalg::{blas, simd, DenseMat, IterWorkspace, SymPacked, SymPackedSpilled};
+use symnmf::nls::UpdateRule;
+use symnmf::randnla::op::{sampled_apply_dense_isa, sampled_apply_dense_serial};
+use symnmf::sparse::CsrMat;
+use symnmf::symnmf::engine::{Checkpoint, RunControl, RunStatus};
+use symnmf::symnmf::lvs::{lvs_symnmf_run, lvs_symnmf_ws};
+use symnmf::symnmf::metrics::SymNmfResult;
+use symnmf::symnmf::options::{SymNmfOptions, Tau};
+use symnmf::util::pool::{self, PoolBackend};
+use symnmf::util::rng::Pcg64;
+
+/// The shape sweep from the issue: covers the degenerate (1), the
+/// sub-microkernel (3, 7), and both sides of every tile boundary
+/// (31/33 around 32, 65 past 64 — and past the SPMM column panel).
+const SIZES: [usize; 6] = [1, 3, 7, 31, 33, 65];
+
+/// Run `f` once under each dispatch backend and return both results.
+fn both<T>(f: impl Fn() -> T) -> (T, T) {
+    let pooled = {
+        let _g = pool::override_backend(PoolBackend::Pooled);
+        f()
+    };
+    let scoped = {
+        let _g = pool::override_backend(PoolBackend::Scoped);
+        f()
+    };
+    (pooled, scoped)
+}
+
+fn assert_mats_bitwise(a: &DenseMat, b: &DenseMat, what: &str) {
+    assert_eq!(a.shape(), b.shape(), "{what}: shape");
+    for (i, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i}");
+    }
+}
+
+/// Dense symmetric test matrix with exact zeros sprinkled in, so the
+/// `xv != 0.0` skip branch of the kernels is exercised.
+fn planted(m: usize, k: usize, seed: u64) -> DenseMat {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let h = DenseMat::uniform(m, k, 1.0, &mut rng);
+    let mut x = blas::matmul_nt(&h, &h);
+    x.symmetrize();
+    for i in 0..m {
+        for j in i..m {
+            if rng.uniform() < 0.2 {
+                x.set(i, j, 0.0);
+                x.set(j, i, 0.0);
+            }
+        }
+    }
+    x
+}
+
+/// Sparse symmetric matrix (~30% fill) mirroring the dense generator.
+fn planted_csr(m: usize, seed: u64) -> CsrMat {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut trips = Vec::new();
+    for i in 0..m {
+        for j in i..m {
+            let v = rng.uniform();
+            if v < 0.3 {
+                trips.push((i, j, v));
+                if i != j {
+                    trips.push((j, i, v));
+                }
+            }
+        }
+    }
+    CsrMat::from_coo(m, m, trips)
+}
+
+/// A sample list with repeats (the hybrid sampler draws with
+/// replacement) and non-uniform positive weights.
+fn sample_list(m: usize, s: usize, rng: &mut Pcg64) -> (Vec<usize>, Vec<f64>) {
+    let indices: Vec<usize> = (0..s).map(|_| rng.below(m)).collect();
+    let weights: Vec<f64> = (0..s).map(|_| 0.25 + rng.uniform()).collect();
+    (indices, weights)
+}
+
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> TempDir {
+        let d = std::env::temp_dir()
+            .join(format!("symnmf-lvs-parity-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        TempDir(d)
+    }
+    fn file(&self, name: &str) -> PathBuf {
+        self.0.join(name)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+#[test]
+fn dense_sampled_apply_parallel_matches_serial_per_isa() {
+    for isa in simd::supported() {
+        for m in SIZES {
+            for k in SIZES {
+                let mut rng = Pcg64::seed_from_u64(0xD5A + (m * 67 + k) as u64);
+                let x = planted(m, k.min(m), 0xD0 + (m * 67 + k) as u64);
+                let f = DenseMat::gaussian(m, k, &mut rng);
+                let s = m.div_ceil(2) + 1;
+                let (idx, w) = sample_list(m, s, &mut rng);
+                let mut want = DenseMat::zeros(m, k);
+                want.fill(f64::NAN); // oracle must fully overwrite
+                sampled_apply_dense_serial(&x, &f, &idx, &w, &mut want);
+                let (p, sc) = both(|| {
+                    let mut out = DenseMat::zeros(m, k);
+                    out.fill(f64::NAN);
+                    sampled_apply_dense_isa(isa, &x, &f, &idx, &w, &mut out);
+                    out
+                });
+                assert_mats_bitwise(&p, &want, &format!("dense pooled {isa:?} m={m} k={k}"));
+                assert_mats_bitwise(&sc, &want, &format!("dense scoped {isa:?} m={m} k={k}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn csr_sampled_apply_parallel_matches_serial_per_isa() {
+    for isa in simd::supported() {
+        for m in SIZES {
+            for k in SIZES {
+                let mut rng = Pcg64::seed_from_u64(0xC5A + (m * 67 + k) as u64);
+                let x = planted_csr(m, 0xC0 + (m * 67 + k) as u64);
+                let f = DenseMat::gaussian(m, k, &mut rng);
+                let s = m.div_ceil(2) + 1;
+                let (idx, w) = sample_list(m, s, &mut rng);
+                let mut want = DenseMat::zeros(m, k);
+                want.fill(f64::NAN);
+                x.sampled_spmm_sym_into_serial(&f, &idx, &w, &mut want);
+                let (p, sc) = both(|| {
+                    let mut out = DenseMat::zeros(m, k);
+                    out.fill(f64::NAN);
+                    x.sampled_spmm_sym_into_isa(isa, &f, &idx, &w, &mut out);
+                    out
+                });
+                assert_mats_bitwise(&p, &want, &format!("csr pooled {isa:?} m={m} k={k}"));
+                assert_mats_bitwise(&sc, &want, &format!("csr scoped {isa:?} m={m} k={k}"));
+            }
+        }
+    }
+}
+
+/// Block size 8 on the SIZES sweep exercises single-tile, edge-tile and
+/// multi-block-row layouts, including mirrored (jb < ib) reads.
+#[test]
+fn packed_sampled_apply_parallel_matches_serial_per_isa() {
+    for isa in simd::supported() {
+        for m in SIZES {
+            for k in SIZES {
+                let mut rng = Pcg64::seed_from_u64(0xBA + (m * 67 + k) as u64);
+                let x = planted(m, k.min(m), 0xB0 + (m * 67 + k) as u64);
+                let sp = SymPacked::from_dense_with_block(&x, 8);
+                let f = DenseMat::gaussian(m, k, &mut rng);
+                let s = m.div_ceil(2) + 1;
+                let (idx, w) = sample_list(m, s, &mut rng);
+                let mut want = DenseMat::zeros(m, k);
+                want.fill(f64::NAN);
+                sp.sampled_apply_into_serial(&f, &idx, &w, &mut want);
+                let (p, sc) = both(|| {
+                    let mut out = DenseMat::zeros(m, k);
+                    out.fill(f64::NAN);
+                    sp.sampled_apply_into_isa(isa, &f, &idx, &w, &mut out);
+                    out
+                });
+                assert_mats_bitwise(&p, &want, &format!("packed pooled {isa:?} m={m} k={k}"));
+                assert_mats_bitwise(&sc, &want, &format!("packed scoped {isa:?} m={m} k={k}"));
+            }
+        }
+    }
+}
+
+/// The out-of-core tier faults tiles through the Mutex ring from inside
+/// concurrent chunks; one spilled operator per k at the largest shape
+/// keeps the I/O bounded.
+#[test]
+fn spilled_sampled_apply_parallel_matches_serial_per_isa() {
+    let dir = TempDir::new("sampled");
+    let m = 65;
+    for k in [1usize, 7, 33] {
+        let x = planted(m, k, 0x5B11 + k as u64);
+        let sp = SymPacked::from_dense_with_block(&x, 8);
+        let path = dir.file(&format!("x-{k}.spill"));
+        symnmf::linalg::spill::write_spill(&sp, &path).expect("write spill");
+        let spilled = SymPackedSpilled::open(&path).expect("open spill");
+        let mut rng = Pcg64::seed_from_u64(0x5B12 + k as u64);
+        let f = DenseMat::gaussian(m, k, &mut rng);
+        let (idx, w) = sample_list(m, 40, &mut rng);
+        let mut want = DenseMat::zeros(m, k);
+        want.fill(f64::NAN);
+        spilled.sampled_apply_into_serial(&f, &idx, &w, &mut want);
+        for isa in simd::supported() {
+            let (p, sc) = both(|| {
+                let mut out = DenseMat::zeros(m, k);
+                out.fill(f64::NAN);
+                spilled.sampled_apply_into_isa(isa, &f, &idx, &w, &mut out);
+                out
+            });
+            assert_mats_bitwise(&p, &want, &format!("spilled pooled {isa:?} k={k}"));
+            assert_mats_bitwise(&sc, &want, &format!("spilled scoped {isa:?} k={k}"));
+        }
+    }
+}
+
+fn assert_runs_bitwise(a: &SymNmfResult, b: &SymNmfResult, what: &str) {
+    assert_eq!(a.iters(), b.iters(), "{what}: iteration count");
+    assert_mats_bitwise(&a.h, &b.h, &format!("{what}: H"));
+    assert_mats_bitwise(&a.w, &b.w, &format!("{what}: W"));
+    for (i, (ra, rb)) in a.records.iter().zip(&b.records).enumerate() {
+        assert_eq!(
+            ra.residual.to_bits(),
+            rb.residual.to_bits(),
+            "{what}: residual at iter {i}"
+        );
+        assert_eq!(ra.hybrid_stats, rb.hybrid_stats, "{what}: hybrid stats at iter {i}");
+    }
+}
+
+/// End-to-end contract of the allocation-free sampling pipeline: the
+/// engine run equals the frozen allocating reference loop bitwise (the
+/// RNG draw sequence is unchanged — same leverage scores, same alias
+/// draws), and an interrupted run resumes from its checkpoint onto the
+/// identical trajectory AND the identical final RNG state, on both
+/// dispatch backends.
+#[test]
+fn lvs_end_to_end_checkpoint_resume_and_rng_stream_unchanged() {
+    let x = planted_csr(90, 0xE2E);
+    let mut opts = SymNmfOptions::new(3).with_rule(UpdateRule::Hals).with_seed(41);
+    opts.max_iters = 6;
+    opts.samples = Some(45);
+    opts.tau = Tau::OneOverS;
+
+    // Engine ≡ frozen reference loop (allocating sampler): pins the
+    // workspace sampler's draw stream to the legacy one.
+    let s = opts.effective_samples(90);
+    let mut ws = IterWorkspace::with_samples(90, 3, s);
+    let oracle = lvs_symnmf_ws(&x, &opts, &mut ws);
+    let full = lvs_symnmf_run(&x, &opts, &RunControl::unlimited(), None, None);
+    assert_runs_bitwise(&oracle, &full.result, "engine vs reference");
+
+    let (full_p, full_s) = both(|| {
+        lvs_symnmf_run(&x, &opts, &RunControl::unlimited(), None, None)
+    });
+    assert_runs_bitwise(&full_p.result, &full_s.result, "full pooled vs scoped");
+
+    // Interrupt after 2 steps, serialize, resume: bitwise trajectory and
+    // identical final sampler RNG state — the stream a pre-existing
+    // checkpoint replays is exactly the stream the new pipeline draws.
+    let paused =
+        lvs_symnmf_run(&x, &opts, &RunControl::unlimited().with_max_steps(2), None, None);
+    assert_eq!(paused.checkpoint.status, RunStatus::Paused);
+    let cp = Checkpoint::parse(&paused.checkpoint.serialize()).expect("roundtrip");
+    let (res_p, res_s) =
+        both(|| lvs_symnmf_run(&x, &opts, &RunControl::unlimited(), Some(&cp), None));
+    assert_runs_bitwise(&full.result, &res_p.result, "resume pooled");
+    assert_runs_bitwise(&full.result, &res_s.result, "resume scoped");
+    assert_eq!(
+        full.checkpoint.state.rng, res_p.checkpoint.state.rng,
+        "resumed run must end on the identical sampler RNG state"
+    );
+    assert_eq!(full.checkpoint.state.rng, res_s.checkpoint.state.rng);
+}

@@ -63,6 +63,17 @@ DEFAULT_ALLOW_NOISY = [
     # ratio, not gated)
     "pool_fanout_overhead",
     "pool_fanout_scoped_ref",
+    # short sampled products (s = m/20 rows): wall time swings with pool
+    # scheduling on shared runners; the parallel-vs-serial-oracle ratio
+    # is printed for the eye, and bitwise parity is what the test suite
+    # gates
+    "lvs_sampled_apply_dense",
+    "lvs_sampled_apply_csr",
+    "lvs_sampled_apply_packed",
+    # sub-millisecond sampling pipeline (leverage scores + alias draws),
+    # dominated by RNG and branchy alias-table walks — timer noise on
+    # shared runners
+    "lvs_sample_build",
 ]
 
 
